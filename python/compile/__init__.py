@@ -1,0 +1,5 @@
+"""Build-time python package: L1 Pallas kernels, L2 JAX models, AOT emitter.
+
+Never imported at runtime -- ``make artifacts`` runs ``compile.aot`` once
+and the rust coordinator consumes ``artifacts/*.hlo.txt`` via PJRT.
+"""

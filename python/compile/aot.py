@@ -1,0 +1,150 @@
+"""AOT emitter: lower every L2 entry point to HLO *text* + a manifest.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 (the version behind the rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is lowered for a *fixed* shape configuration; the rust
+runtime pads batches to the artifact's shape (gamma=0 padding rows are
+no-ops by construction, see model.py).  ``artifacts/manifest.txt`` lists
+one artifact per line as space-separated ``key=value`` pairs; the rust
+side (``rust/src/runtime/registry.rs``) parses exactly this format.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (with return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, "float32")
+
+
+def build_specs():
+    """(name, fn, example_args, manifest_extras) for every artifact.
+
+    Shape menu:
+      * pairwise over the gradient-proxy dims the experiments use:
+        d=22 (ijcnn1), d=54 (covtype), d=784 (mnist feats), d=3072
+        (cifar feats), d=10 (deep last-layer proxy); block sizes m=256
+        (tests/small classes) and m=1024 (bulk blocks).
+      * logreg grad/margins at b=256 and b=1024 for d=22/54.
+      * MLP grad/logits/proxy for the paper's MNIST net (784-100-10) and
+        the cifar-proxy net (3072-128-10), b=256.
+    """
+    specs = []
+
+    for d in (10, 22, 54, 784, 3072):
+        for m in (256, 1024):
+            specs.append(
+                (
+                    f"pairwise_d{d}_m{m}",
+                    model.pairwise,
+                    (f32(m, d), f32(m, d)),
+                    {"kind": "pairwise", "d": d, "m": m, "n": m},
+                )
+            )
+
+    for d in (22, 54):
+        for b in (256, 1024):
+            specs.append(
+                (
+                    f"logreg_grad_d{d}_b{b}",
+                    model.logreg_loss_grad,
+                    (f32(d), f32(b, d), f32(b), f32(b), f32()),
+                    {"kind": "logreg_grad", "d": d, "b": b},
+                )
+            )
+            specs.append(
+                (
+                    f"logreg_grad_jnp_d{d}_b{b}",
+                    model.logreg_loss_grad_jnp,
+                    (f32(d), f32(b, d), f32(b), f32(b), f32()),
+                    {"kind": "logreg_grad_jnp", "d": d, "b": b},
+                )
+            )
+            specs.append(
+                (
+                    f"logreg_margins_d{d}_b{b}",
+                    model.logreg_margins,
+                    (f32(d), f32(b, d)),
+                    {"kind": "logreg_margins", "d": d, "b": b},
+                )
+            )
+
+    for d, h, c in ((784, 100, 10), (3072, 128, 10)):
+        b = 256
+        p = (f32(d, h), f32(h), f32(h, c), f32(c))
+        specs.append(
+            (
+                f"mlp_grad_d{d}_h{h}_c{c}_b{b}",
+                model.mlp_loss_grad,
+                p + (f32(b, d), f32(b, c), f32(b), f32()),
+                {"kind": "mlp_grad", "d": d, "h": h, "c": c, "b": b},
+            )
+        )
+        specs.append(
+            (
+                f"mlp_logits_d{d}_h{h}_c{c}_b{b}",
+                model.mlp_logits,
+                p + (f32(b, d),),
+                {"kind": "mlp_logits", "d": d, "h": h, "c": c, "b": b},
+            )
+        )
+        specs.append(
+            (
+                f"mlp_proxy_d{d}_h{h}_c{c}_b{b}",
+                model.mlp_last_layer_proxy,
+                p + (f32(b, d), f32(b, c)),
+                {"kind": "mlp_proxy", "d": d, "h": h, "c": c, "b": b},
+            )
+        )
+
+    return specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, ex_args, extras in build_specs():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in extras.items())
+        manifest_lines.append(f"name={name} file={fname} {kv}")
+        print(f"  lowered {name:<36s} {len(text):>9d} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

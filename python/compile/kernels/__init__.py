@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for CRAIG's compute hot-spots.
+
+``pairwise``     -- tiled pairwise squared-distance (selection hot path).
+``logreg_grad``  -- fused weighted logistic-regression batch gradient.
+``ref``          -- pure-jnp oracles used by pytest/hypothesis.
+"""
+
+from compile.kernels.logreg_grad import logreg_loss_grad_data
+from compile.kernels.pairwise import pairwise_sqdist
+
+__all__ = ["pairwise_sqdist", "logreg_loss_grad_data"]

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: tiled pairwise squared-Euclidean distance.
+
+This is the selection hot-spot of CRAIG: facility location needs the
+``n x n`` matrix ``d_ij = ||x_i - x_j||^2`` over gradient-proxy features
+(Eq. 9 / Eq. 16 of the paper).  The kernel uses the MXU-friendly
+decomposition
+
+    ||a - b||^2 = ||a||^2 + ||b||^2 - 2 <a, b>
+
+so the dominant term is a ``(TM x D) @ (D x TN)`` matmul that maps onto the
+TPU systolic array; the norm terms are cheap VPU element-wise work.
+
+BlockSpec schedule (the HBM<->VMEM plan): grid step ``(i, j)`` holds one
+``(TM, D)`` row-tile of ``x``, one ``(TN, D)`` row-tile of ``y`` and the
+``(TM, TN)`` output tile in VMEM.  For the largest shipped shape
+(D=3072, TM=TN=128) that is ``2*128*3072*4 + 128*128*4 = 3.2 MB`` -- well
+under the ~16 MB VMEM budget, leaving room for double buffering.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see DESIGN.md
+SectionHardware-Adaptation for the TPU performance estimate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairwise_kernel(x_ref, y_ref, o_ref):
+    """One (TM, TN) output tile of the squared-distance matrix."""
+    x = x_ref[...]  # (TM, D) in VMEM
+    y = y_ref[...]  # (TN, D) in VMEM
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (TM, 1)
+    yn = jnp.sum(y * y, axis=1, keepdims=True).T  # (1, TN)
+    # dot_general with contraction on D: the MXU term.
+    gram = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Clamp tiny negatives from cancellation: distances are >= 0.
+    o_ref[...] = jnp.maximum(xn + yn - 2.0 * gram, 0.0)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def pairwise_sqdist(x, y, *, tile_m: int = 128, tile_n: int = 128):
+    """Pairwise squared Euclidean distances via the tiled Pallas kernel.
+
+    Args:
+      x: ``(M, D)`` float array.
+      y: ``(N, D)`` float array.
+      tile_m / tile_n: output tile sizes (VMEM blocking).
+
+    Returns:
+      ``(M, N)`` float32 array with ``out[i, j] = ||x[i] - y[j]||^2``.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    mp, np_ = _round_up(m, tile_m), _round_up(n, tile_n)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    yp = jnp.pad(y, ((0, np_ - n), (0, 0)))
+    out = pl.pallas_call(
+        _pairwise_kernel,
+        grid=(mp // tile_m, np_ // tile_n),
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness signal).
+
+No pallas imports here: these are straight-line jnp implementations that
+pytest/hypothesis compare against the kernels and that double as the "L2
+without L1" fallback when debugging lowering issues.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist_ref(x, y):
+    """``out[i, j] = ||x[i] - y[j]||^2`` by explicit broadcasting."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def logreg_loss_grad_data_ref(w, x, y, gamma):
+    """Weighted data-term loss/grad of L2-logistic regression (no reg)."""
+    w = jnp.asarray(w, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    gamma = jnp.asarray(gamma, jnp.float32)
+    margin = y * (x @ w)
+    loss = jnp.sum(gamma * jnp.logaddexp(0.0, -margin))
+    coef = -gamma * y / (1.0 + jnp.exp(margin))
+    grad = coef @ x
+    return loss, grad

@@ -1,0 +1,123 @@
+"""L2: the paper's training objectives as JAX functions (build-time only).
+
+Everything here is jitted and AOT-lowered once by ``aot.py``; the rust
+coordinator executes the resulting HLO through PJRT and Python never runs
+on the request path.
+
+Conventions shared with the rust runtime (``rust/src/runtime``):
+
+* All floats are f32; labels for logistic regression are in {-1, +1};
+  classification labels are one-hot ``(B, C)`` matrices.
+* ``gamma`` is the CRAIG per-element weight vector (Algorithm 1, line 8).
+  Executables return *gamma-weighted sums* so that a rust optimizer step
+  ``w -= alpha * grad`` implements the paper's Eq. (20) update over a
+  minibatch of coreset elements.  Padding rows carry ``gamma = 0`` and
+  therefore vanish.
+* Regularization: the paper's per-component ``f_i = l_i + 0.5*lam*||w||^2``
+  means the weighted sum carries ``sum(gamma) * lam`` on the regularizer;
+  we take ``lam`` as a runtime scalar input so one artifact serves every
+  regularization setting.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.logreg_grad import logreg_loss_grad_data
+from compile.kernels.pairwise import pairwise_sqdist
+
+# ---------------------------------------------------------------------------
+# Logistic regression (Sec. 5.1):  f_i = ln(1+exp(-y_i w.x_i)) + lam/2 ||w||^2
+# ---------------------------------------------------------------------------
+
+
+def logreg_loss_grad(w, x, y, gamma, lam):
+    """Gamma-weighted summed loss and gradient (data term via the L1 kernel).
+
+    Returns ``(loss_sum, grad)``; ``grad`` has shape ``(D,)``.
+    """
+    loss, grad = logreg_loss_grad_data(w, x, y, gamma)
+    sg = jnp.sum(gamma)
+    loss = loss + 0.5 * lam * sg * jnp.dot(w, w)
+    grad = grad + lam * sg * w
+    return (loss, grad)
+
+
+def logreg_loss_grad_jnp(w, x, y, gamma, lam):
+    """Pure-jnp twin of ``logreg_loss_grad`` (same math, no Pallas).
+
+    §Perf L2 iteration: on the *CPU* PJRT plugin the interpret-mode
+    Pallas grid loop costs ~3x over XLA's own fusion of the jnp version,
+    so we ship both; the rust runtime prefers the ``_jnp`` artifact on
+    CPU while the Pallas kernel remains the TPU-structured hot path.
+    """
+    margin = y * (x @ w)
+    loss = jnp.sum(gamma * jnp.logaddexp(0.0, -margin))
+    coef = -gamma * y * jax.nn.sigmoid(-margin)
+    grad = coef @ x
+    sg = jnp.sum(gamma)
+    return (loss + 0.5 * lam * sg * jnp.dot(w, w), grad + lam * sg * w)
+
+
+def logreg_margins(w, x):
+    """Raw margins ``x @ w`` -- rust computes loss/error-rate from these."""
+    return (x @ w,)
+
+
+# ---------------------------------------------------------------------------
+# 2-layer MLP (Sec. 5.2, MNIST net): D -> H sigmoid -> C softmax, L2 reg.
+# ---------------------------------------------------------------------------
+
+
+def _mlp_forward(w1, b1, w2, b2, x):
+    z1 = x @ w1 + b1  # (B, H)
+    a1 = jax.nn.sigmoid(z1)
+    logits = a1 @ w2 + b2  # (B, C)
+    return logits
+
+
+def _mlp_weighted_loss(params, x, y1h, gamma, lam):
+    w1, b1, w2, b2 = params
+    logits = _mlp_forward(w1, b1, w2, b2, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.sum(y1h * logp, axis=-1)  # (B,)
+    sg = jnp.sum(gamma)
+    reg = 0.5 * lam * sg * (jnp.sum(w1 * w1) + jnp.sum(w2 * w2))
+    return jnp.sum(gamma * ce) + reg
+
+
+def mlp_loss_grad(w1, b1, w2, b2, x, y1h, gamma, lam):
+    """Gamma-weighted summed CE loss + grads for all four param tensors."""
+    loss, grads = jax.value_and_grad(_mlp_weighted_loss)(
+        (w1, b1, w2, b2), x, y1h, gamma, lam
+    )
+    g1, gb1, g2, gb2 = grads
+    return (loss, g1, gb1, g2, gb2)
+
+
+def mlp_logits(w1, b1, w2, b2, x):
+    """Forward pass only -- rust computes accuracy/test loss from logits."""
+    return (_mlp_forward(w1, b1, w2, b2, x),)
+
+
+def mlp_last_layer_proxy(w1, b1, w2, b2, x, y1h):
+    """CRAIG deep gradient proxy (Sec. 3.4): softmax(z_L) - y, shape (B, C).
+
+    For softmax + CE the gradient of the loss w.r.t. the last layer's input
+    is exactly ``p - y``; pairwise distances between these vectors bound
+    the full gradient distances (Eq. 16).  No backward pass needed.
+    """
+    logits = _mlp_forward(w1, b1, w2, b2, x)
+    p = jax.nn.softmax(logits, axis=-1)
+    return (p - y1h,)
+
+
+# ---------------------------------------------------------------------------
+# Selection hot-spot: the pairwise distance executable is just the L1 kernel.
+# ---------------------------------------------------------------------------
+
+
+def pairwise(x, y):
+    """Tiled pairwise squared-distance (the facility-location input)."""
+    return (pairwise_sqdist(x, y),)

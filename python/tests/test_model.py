@@ -1,0 +1,92 @@
+"""L2 model correctness: MLP grads vs finite differences, proxy identity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _mlp_problem(seed, b=16, d=20, h=8, c=4):
+    k = jax.random.split(jax.random.PRNGKey(seed), 6)
+    w1 = jax.random.normal(k[0], (d, h), jnp.float32) * 0.3
+    b1 = jax.random.normal(k[1], (h,), jnp.float32) * 0.1
+    w2 = jax.random.normal(k[2], (h, c), jnp.float32) * 0.3
+    b2 = jax.random.normal(k[3], (c,), jnp.float32) * 0.1
+    x = jax.random.normal(k[4], (b, d), jnp.float32)
+    labels = jax.random.randint(k[5], (b,), 0, c)
+    y1h = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    gamma = jnp.ones((b,), jnp.float32)
+    return (w1, b1, w2, b2), x, y1h, gamma
+
+
+class TestMlp:
+    def test_grad_shapes(self):
+        p, x, y, g = _mlp_problem(0)
+        loss, g1, gb1, g2, gb2 = model.mlp_loss_grad(*p, x, y, g, jnp.float32(1e-4))
+        assert loss.shape == ()
+        assert g1.shape == p[0].shape and gb1.shape == p[1].shape
+        assert g2.shape == p[2].shape and gb2.shape == p[3].shape
+
+    def test_grad_finite_difference(self):
+        p, x, y, g = _mlp_problem(1, b=8, d=6, h=5, c=3)
+        lam = jnp.float32(0.01)
+        _, g1, gb1, g2, gb2 = model.mlp_loss_grad(*p, x, y, g, lam)
+
+        def loss_at(p):
+            return model.mlp_loss_grad(*p, x, y, g, lam)[0]
+
+        eps = 1e-3
+        # Spot-check a few coordinates of each tensor against central diffs.
+        for t_idx, grad in ((0, g1), (2, g2)):
+            t = p[t_idx]
+            for idx in [(0, 0), (1, 2)]:
+                tp = [q for q in p]
+                tp[t_idx] = t.at[idx].add(eps)
+                lp = loss_at(tp)
+                tp[t_idx] = t.at[idx].add(-eps)
+                lm = loss_at(tp)
+                fd = (lp - lm) / (2 * eps)
+                np.testing.assert_allclose(grad[idx], fd, rtol=2e-2, atol=2e-3)
+
+    def test_gamma_scaling(self):
+        # Doubling every gamma doubles the data term of loss and grads.
+        p, x, y, g = _mlp_problem(2)
+        lam = jnp.float32(0.0)
+        l1, g1, *_ = model.mlp_loss_grad(*p, x, y, g, lam)
+        l2, g2, *_ = model.mlp_loss_grad(*p, x, y, 2.0 * g, lam)
+        np.testing.assert_allclose(l2, 2.0 * l1, rtol=1e-5)
+        np.testing.assert_allclose(g2, 2.0 * g1, rtol=1e-4, atol=1e-6)
+
+    def test_proxy_is_p_minus_y(self):
+        p, x, y, _ = _mlp_problem(3)
+        (proxy,) = model.mlp_last_layer_proxy(*p, x, y)
+        (logits,) = model.mlp_logits(*p, x)
+        expect = jax.nn.softmax(logits, axis=-1) - y
+        np.testing.assert_allclose(proxy, expect, atol=1e-6)
+        # Rows sum to zero: softmax sums to 1, one-hot sums to 1.
+        np.testing.assert_allclose(proxy.sum(axis=-1), np.zeros(x.shape[0]), atol=1e-5)
+
+    def test_proxy_matches_last_layer_grad(self):
+        # d(CE)/d(logits) == p - y exactly; check against autodiff.
+        p, x, y, _ = _mlp_problem(4, b=4, d=5, h=3, c=3)
+        w1, b1, w2, b2 = p
+
+        def ce(logits):
+            return -jnp.sum(y * jax.nn.log_softmax(logits, axis=-1))
+
+        z1 = x @ w1 + b1
+        a1 = jax.nn.sigmoid(z1)
+        logits = a1 @ w2 + b2
+        glogits = jax.grad(ce)(logits)
+        (proxy,) = model.mlp_last_layer_proxy(*p, x, y)
+        np.testing.assert_allclose(proxy, glogits, atol=1e-5)
+
+
+class TestLogregMargins:
+    def test_margins(self):
+        k = jax.random.PRNGKey(0)
+        w = jax.random.normal(k, (13,), jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (40, 13), jnp.float32)
+        (m,) = model.logreg_margins(w, x)
+        np.testing.assert_allclose(m, x @ w, rtol=1e-6)

@@ -1,0 +1,132 @@
+//! Figure 1: loss residual & test error of SGD / SVRG / SAGA on covtype
+//! — 10% CRAIG vs 10% random vs full data.
+//!
+//! Protocol matches the paper: each (method × mode) cell is separately
+//! lr-tuned by pilot runs, curves are residual/error vs time, and the
+//! headline is the speedup to reach CRAIG's final residual.  Paper
+//! numbers for reference: 2.75x (SGD), 4.5x (SVRG), 2.5x (SAGA) at 10%.
+//!
+//! Accounting note (also EXPERIMENTS.md): optimization time and the
+//! one-off selection cost are reported separately. Selection is O(n²/C)
+//! while an epoch is O(n); at the paper's n=581k the selection amortizes
+//! over training, at testbed n it does not — the *training* speedup is
+//! the scale-invariant quantity.
+
+use craig::coreset::{Budget, NativePairwise, SelectorConfig};
+use craig::csv_row;
+use craig::data::synthetic;
+use craig::metrics::CsvWriter;
+use craig::optim::LrSchedule;
+use craig::rng::Rng;
+use craig::trainer::convergence::solve_reference;
+use craig::trainer::convex::{train_logreg, tune_a0, ConvexConfig, IgMethod};
+use craig::trainer::SubsetMode;
+
+fn scale() -> f64 {
+    std::env::var("CRAIG_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = (12_000 as f64 * scale()) as usize;
+    let epochs = 15;
+    let frac = 0.1;
+    println!("== fig1_convex: covtype-like n={n}, subsets {}%, {epochs} epochs ==", frac * 100.0);
+
+    let ds = synthetic::covtype_like(n, 0);
+    let mut rng = Rng::new(0);
+    let (train, test) = ds.stratified_split(0.5, &mut rng);
+    let y_train = train.signed_labels();
+    let mut prob = craig::model::LogReg::new(train.x.clone(), y_train, 1e-5);
+    let f_star = solve_reference(&mut prob, 3000, 1e-7).f_star;
+    println!("reference optimum f* = {f_star:.6} (line-search GD)");
+
+    let dir = craig::bench::results_dir();
+    let mut csv = CsvWriter::create(
+        &dir.join("fig1_convex.csv"),
+        &["method", "mode", "epoch", "train_s", "select_s", "loss_residual", "test_err"],
+    )?;
+
+    let candidates = [1.0f32, 0.5, 0.2, 0.1, 0.05, 0.02];
+    println!(
+        "\n{:<6} {:<7} {:>6} {:>12} {:>9} {:>9} {:>9}",
+        "method", "mode", "a0", "residual", "test-err", "train(s)", "select(s)"
+    );
+    for method in [IgMethod::Sgd, IgMethod::Svrg, IgMethod::Saga] {
+        let mut per_mode = Vec::new();
+        for (tag, subset) in [
+            ("full", SubsetMode::Full),
+            (
+                "craig",
+                SubsetMode::Craig {
+                    cfg: SelectorConfig { budget: Budget::Fraction(frac), ..Default::default() },
+                    reselect_every: 0,
+                },
+            ),
+            ("random", SubsetMode::Random { budget: Budget::Fraction(frac), reselect_every: 0, seed: 5 }),
+        ] {
+            let base = ConvexConfig {
+                method,
+                epochs,
+                lam: 1e-5,
+                seed: 1,
+                subset,
+                ..Default::default()
+            };
+            let a0 = tune_a0(&train, &test, &base, &candidates, 5, &mut NativePairwise)?;
+            let cfg = ConvexConfig {
+                schedule: LrSchedule::ExpDecay { a0, b: 0.9 },
+                ..base
+            };
+            let mut eng = NativePairwise;
+            let h = train_logreg(&train, &test, &cfg, &mut eng)?;
+            for r in &h.records {
+                csv.row(&csv_row![
+                    method.name(),
+                    tag,
+                    r.epoch,
+                    r.train_s,
+                    r.select_s,
+                    (r.train_loss - f_star).max(0.0),
+                    r.test_metric
+                ])?;
+            }
+            let last = h.last();
+            println!(
+                "{:<6} {:<7} {:>6} {:>12.6} {:>9.4} {:>9.3} {:>9.3}",
+                method.name(),
+                tag,
+                a0,
+                (last.train_loss - f_star).max(0.0),
+                last.test_metric,
+                last.train_s,
+                last.select_s
+            );
+            per_mode.push(h);
+        }
+        // Headline: training time for full to reach CRAIG's final residual.
+        let craig_h = &per_mode[1];
+        let target = (craig_h.last().train_loss - f_star).max(1e-6) * 1.02;
+        match (
+            per_mode[0].train_time_to_loss(f_star, target),
+            craig_h.train_time_to_loss(f_star, target),
+        ) {
+            (Some(tf), Some(tc)) => println!(
+                "  -> {}: CRAIG training speedup to equal residual = {:.2}x (paper: {})",
+                method.name(),
+                tf / tc.max(1e-9),
+                match method {
+                    IgMethod::Sgd => "2.75x",
+                    IgMethod::Svrg => "4.5x",
+                    IgMethod::Saga => "2.5x",
+                }
+            ),
+            _ => println!(
+                "  -> {}: full data never reached CRAIG's residual within {epochs} epochs",
+                method.name()
+            ),
+        }
+    }
+    csv.flush()?;
+    println!("\nseries -> target/bench_results/fig1_convex.csv");
+    Ok(())
+}

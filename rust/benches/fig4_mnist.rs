@@ -1,0 +1,86 @@
+//! Figure 4: MNIST 2-layer net (100 hidden sigmoid, softmax out,
+//! λ=1e-4, lr 1e-2, batch 10): 50% CRAIG subsets reselected per epoch vs
+//! random-50% vs full — training loss and test accuracy vs wall-clock.
+//!
+//! Paper shape: CRAIG reaches the full-data accuracy 2–3x faster and
+//! generalizes slightly better than full-data training.
+
+use craig::coreset::{Budget, NativePairwise, SelectorConfig};
+use craig::csv_row;
+use craig::data::synthetic;
+use craig::metrics::CsvWriter;
+use craig::optim::schedules::Warmup;
+use craig::optim::LrSchedule;
+use craig::rng::Rng;
+use craig::trainer::neural::{train_mlp, NeuralConfig};
+use craig::trainer::SubsetMode;
+
+fn main() -> anyhow::Result<()> {
+    let n = 4_000;
+    let epochs = 10;
+    println!("== fig4_mnist: mnist-like n={n}, 2-layer MLP, 50% subsets ==");
+    let ds = synthetic::mnist_like(n, 0);
+    let mut rng = Rng::new(0);
+    let (train, test) = ds.stratified_split(0.8, &mut rng);
+
+    let mk = |subset| NeuralConfig {
+        hidden: 100,
+        epochs,
+        batch_size: 10,
+        lam: 1e-4,
+        schedule: Warmup { warmup_epochs: 0, inner: LrSchedule::Const { a0: 1e-2 } },
+        momentum: false,
+        seed: 1,
+        subset,
+    };
+
+    let dir = craig::bench::results_dir();
+    let mut csv = CsvWriter::create(
+        &dir.join("fig4_mnist.csv"),
+        &["mode", "epoch", "wall_s", "train_loss", "test_acc"],
+    )?;
+    println!("\n{:<8} {:>11} {:>10} {:>10}", "mode", "train-loss", "test-acc", "wall(s)");
+    let mut finals = Vec::new();
+    for (tag, subset) in [
+        ("full", SubsetMode::Full),
+        (
+            "craig",
+            SubsetMode::Craig {
+                cfg: SelectorConfig { budget: Budget::Fraction(0.5), ..Default::default() },
+                reselect_every: 1,
+            },
+        ),
+        ("random", SubsetMode::Random { budget: Budget::Fraction(0.5), reselect_every: 1, seed: 3 }),
+    ] {
+        let mut eng = NativePairwise;
+        let h = train_mlp(&train, &test, &mk(subset), &mut eng)?;
+        for r in &h.records {
+            csv.row(&csv_row![tag, r.epoch, r.select_s + r.train_s, r.train_loss, r.test_metric])?;
+        }
+        let last = h.last();
+        println!(
+            "{:<8} {:>11.5} {:>10.4} {:>9.2}s",
+            tag,
+            last.train_loss,
+            last.test_metric,
+            last.select_s + last.train_s
+        );
+        finals.push((tag, last.test_metric, last.select_s + last.train_s, h.clone()));
+    }
+    csv.flush()?;
+
+    // Speedup to the accuracy CRAIG ends at.
+    let craig_acc = finals[1].1;
+    let t_craig = finals[1].3.records.iter().find(|r| r.test_metric >= craig_acc).map(|r| r.select_s + r.train_s);
+    let t_full = finals[0].3.records.iter().find(|r| r.test_metric >= craig_acc).map(|r| r.select_s + r.train_s);
+    match (t_full, t_craig) {
+        (Some(tf), Some(tc)) => println!(
+            "\nCRAIG speedup to {:.3} accuracy: {:.2}x (paper: 2–3x)",
+            craig_acc,
+            tf / tc.max(1e-9)
+        ),
+        _ => println!("\nfull run never reached CRAIG's final accuracy — CRAIG generalized better (paper observes the same)"),
+    }
+    println!("series -> target/bench_results/fig4_mnist.csv");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Figure 6 (quantified): how the selected subset evolves over training.
+//!
+//! The paper shows CIFAR10 exemplar images at epochs 1/100/200 and
+//! observes that semantic redundancy drops as training proceeds. We
+//! report the measurable counterparts at the start / middle / end of
+//! training: within-subset nearest-neighbour distance in proxy space
+//! (redundancy ↓ ⇒ this ↑), coverage distance, and weight concentration.
+
+use craig::coreset::{self, diagnostics, Budget, NativePairwise, SelectorConfig};
+use craig::csv_row;
+use craig::data::synthetic;
+use craig::metrics::CsvWriter;
+use craig::model::{GradOracle, Mlp, MlpParams, MlpShape};
+use craig::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n = 1_500;
+    let epochs = 15;
+    println!("== fig6_subset_evolution: mnist-like n={n}, proxies across training ==");
+    let ds = synthetic::mnist_like(n, 0);
+    let shape = MlpShape { d: ds.d(), h: 64, c: ds.num_classes };
+    let y1h = ds.one_hot();
+    let mut mlp = Mlp::new(shape, ds.x.clone(), y1h, 1e-4);
+    let mut rng = Rng::new(1);
+    let mut params = MlpParams::init(shape, &mut rng);
+
+    let all: Vec<usize> = (0..ds.n()).collect();
+    let gamma = vec![1.0f32; ds.n()];
+    let mut grad = vec![0.0f32; shape.num_params()];
+
+    let dir = craig::bench::results_dir();
+    let mut csv = CsvWriter::create(
+        &dir.join("fig6_subset_evolution.csv"),
+        &["epoch", "redundancy_nn_dist", "coverage_dist", "weight_gini", "subset_size"],
+    )?;
+    println!(
+        "\n{:>6} {:>16} {:>12} {:>12} {:>6}",
+        "epoch", "nn-dist(↑=less", "coverage", "γ-gini", "|S|"
+    );
+    println!("{:>6} {:>16} {:>12} {:>12} {:>6}", "", "redundant)", "", "", "");
+
+    let checkpoints = [0usize, epochs / 2, epochs - 1];
+    let mut batch_order: Vec<usize> = (0..ds.n()).collect();
+    for epoch in 0..epochs {
+        if checkpoints.contains(&epoch) {
+            // Select 5% on current-proxy features and report its geometry.
+            let proxies = mlp.proxy_features(&params, &all);
+            let cfg = SelectorConfig { budget: Budget::Fraction(0.05), ..Default::default() };
+            let mut eng = NativePairwise;
+            let res = coreset::select(&proxies, &ds.y, ds.num_classes, &cfg, &mut eng);
+            let stats = diagnostics::subset_stats(&proxies, &res.coreset);
+            println!(
+                "{:>6} {:>16.4} {:>12.4} {:>12.3} {:>6}",
+                epoch + 1,
+                stats.redundancy_nn_dist,
+                stats.coverage_dist,
+                stats.weight_gini,
+                stats.size
+            );
+            csv.row(&csv_row![
+                epoch + 1,
+                stats.redundancy_nn_dist,
+                stats.coverage_dist,
+                stats.weight_gini,
+                stats.size
+            ])?;
+        }
+        // One epoch of plain SGD on everything (the observed model).
+        rng.shuffle(&mut batch_order);
+        for chunk in batch_order.chunks(32) {
+            let gam = vec![1.0f32; chunk.len()];
+            mlp.loss_grad_at(&params, chunk, &gam, &mut grad);
+            craig::linalg::axpy(-0.05 / chunk.len() as f32, &grad, &mut params);
+        }
+        let _ = &gamma;
+    }
+    csv.flush()?;
+    println!("\npaper observation: subsets early in training contain semantic");
+    println!("redundancy (low nn-dist, uniform γ); later subsets spread out to");
+    println!("harder, more diverse exemplars (nn-dist ↑).");
+    println!("series -> target/bench_results/fig6_subset_evolution.csv");
+    Ok(())
+}

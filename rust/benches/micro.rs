@@ -1,0 +1,153 @@
+//! Micro-benchmarks for the §Perf pass: per-layer hot-path costs.
+//!
+//! * L1/runtime: pairwise artifact execution vs native blocked rust, by
+//!   block size; PJRT dispatch overhead (tiny executable round-trip).
+//! * L3 selection: lazy vs naive vs stochastic greedy (time and gain
+//!   evaluations) on clustered data.
+//! * L3 training: weighted batch gradient (native vs XLA), SAGA/SVRG
+//!   step latency, feeder throughput.
+
+use craig::bench::{bench, report, results_dir, BenchConfig};
+use craig::coreset::{lazy_greedy, naive_greedy, stochastic_greedy, DenseSim, StopRule};
+use craig::coreset::{PairwiseEngine, WeightedCoreset};
+use craig::csv_row;
+use craig::data::synthetic;
+use craig::linalg::{self, Matrix};
+use craig::metrics::CsvWriter;
+use craig::model::{GradOracle, LogReg};
+use craig::optim::Saga;
+use craig::pipeline::BatchFeeder;
+use craig::rng::Rng;
+use craig::runtime::{Runtime, XlaLogReg, XlaPairwise};
+
+fn clustered(n: usize, d: usize, clusters: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let c = i % clusters;
+        for j in 0..d {
+            data.push((c * 7 + j) as f32 * 0.3 + r.normal32(0.0, 0.1));
+        }
+    }
+    Matrix::from_vec(n, d, data)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig { warmup_iters: 2, measure_iters: 8, ..Default::default() };
+    let mut rows = CsvWriter::create(
+        &results_dir().join("micro.csv"),
+        &["bench", "mean_s", "std_s", "throughput_note"],
+    )?;
+    let mut emit = |r: &craig::bench::BenchResult, note: String| {
+        report(r);
+        let _ = rows.row(&csv_row![r.name, r.mean_s, r.std_s, note]);
+    };
+
+    println!("== micro: L3 greedy engines (n=2000, r=200, clustered) ==");
+    let x = clustered(2000, 16, 20, 0);
+    let sim = DenseSim::from_features(&x);
+    let r_lazy = bench("greedy/lazy", &cfg, |_| lazy_greedy(&sim, StopRule::Budget(200)));
+    let lazy_evals = lazy_greedy(&sim, StopRule::Budget(200)).evaluations;
+    emit(&r_lazy, format!("{lazy_evals} evals"));
+    let cfg_naive = BenchConfig { warmup_iters: 1, measure_iters: 3, ..Default::default() };
+    let r_naive = bench("greedy/naive", &cfg_naive, |_| naive_greedy(&sim, StopRule::Budget(200)));
+    let naive_evals = naive_greedy(&sim, StopRule::Budget(200)).evaluations;
+    emit(&r_naive, format!("{naive_evals} evals"));
+    let r_stoch = bench("greedy/stochastic", &cfg, |i| {
+        let mut rng = Rng::new(i as u64);
+        stochastic_greedy(&sim, StopRule::Budget(200), 0.05, &mut rng)
+    });
+    emit(&r_stoch, String::new());
+    println!(
+        "  lazy speedup over naive: {:.1}x time, {:.1}x evals\n",
+        r_naive.mean_s / r_lazy.mean_s,
+        naive_evals as f64 / lazy_evals as f64
+    );
+
+    println!("== micro: pairwise distance engines ==");
+    let mut rng = Rng::new(1);
+    for &(m, d) in &[(256usize, 54usize), (1024, 54), (1024, 784)] {
+        let a = Matrix::from_vec(m, d, rng.normal_vec(m * d, 0.0, 1.0));
+        let r_native = bench(&format!("pairwise/native_{m}x{d}"), &cfg, |_| {
+            linalg::pairwise_sqdist(&a, &a)
+        });
+        let gflops = (2.0 * (m * m * d) as f64) / 1e9;
+        emit(&r_native, format!("{:.2} GFLOP/s", gflops / r_native.mean_s));
+        if Runtime::available() {
+            let rt = Runtime::load_default_shared()?;
+            let mut eng = XlaPairwise::new(rt);
+            let _ = eng.sqdist(&a, &a); // compile outside the timer
+            let r_xla = bench(&format!("pairwise/xla_{m}x{d}"), &cfg, |_| eng.sqdist(&a, &a));
+            emit(&r_xla, format!("{:.2} GFLOP/s", gflops / r_xla.mean_s));
+        }
+    }
+    println!();
+
+    println!("== micro: logreg gradient (batch=1024, d=54) ==");
+    let ds = synthetic::covtype_like(1024, 2);
+    let y = ds.signed_labels();
+    let mut prob = LogReg::new(ds.x.clone(), y.clone(), 1e-5);
+    let w = Rng::new(3).normal_vec(54, 0.0, 0.1);
+    let idx: Vec<usize> = (0..1024).collect();
+    let gam = vec![1.0f32; 1024];
+    let mut g = vec![0.0f32; 54];
+    let r_native = bench("logreg_grad/native_b1024", &cfg, |_| {
+        prob.loss_grad_at(&w, &idx, &gam, &mut g)
+    });
+    emit(&r_native, format!("{:.0} ex/s", 1024.0 / r_native.mean_s));
+    if Runtime::available() {
+        let rt = Runtime::load_default_shared()?;
+        let mut xo = XlaLogReg::new(rt, ds.x.clone(), y, 1e-5)?;
+        let mut g2 = vec![0.0f32; 54];
+        let _ = xo.loss_grad_at(&w, &idx, &gam, &mut g2); // compile
+        let r_xla = bench("logreg_grad/xla_b1024", &cfg, |_| {
+            xo.loss_grad_at(&w, &idx, &gam, &mut g2)
+        });
+        emit(&r_xla, format!("{:.0} ex/s", 1024.0 / r_xla.mean_s));
+    }
+    println!();
+
+    println!("== micro: PJRT dispatch overhead (margins artifact, d=22 b=256) ==");
+    if Runtime::available() {
+        let rt = Runtime::load_default_shared()?;
+        let wl = xla::Literal::vec1(&vec![0.1f32; 22]);
+        let xl = xla::Literal::vec1(&vec![0.1f32; 256 * 22])
+            .reshape(&[256, 22])
+            .unwrap();
+        rt.borrow_mut().exec("logreg_margins_d22_b256", &[wl.clone(), xl.clone()])?; // compile
+        let r_dispatch = bench("runtime/dispatch_overhead", &cfg, |_| {
+            rt.borrow_mut()
+                .exec("logreg_margins_d22_b256", &[wl.clone(), xl.clone()])
+                .unwrap()
+        });
+        emit(&r_dispatch, format!("{:.0} exec/s", 1.0 / r_dispatch.mean_s));
+    } else {
+        println!("  (skipped: artifacts missing)");
+    }
+    println!();
+
+    println!("== micro: SAGA step latency + feeder throughput ==");
+    let mut w2 = vec![0.0f32; 54];
+    let mut saga = Saga::new(&prob, &idx, &gam, &w2);
+    let r_saga = bench("saga/step", &cfg, |i| {
+        for k in 0..1024 {
+            saga.step(&prob, k, idx[k], gam[k], &mut w2, 1e-4 / (i + 1) as f32);
+        }
+    });
+    emit(&r_saga, format!("{:.0} steps/s", 1024.0 / r_saga.mean_s));
+
+    let coreset = WeightedCoreset {
+        indices: (0..2000).collect(),
+        gamma: vec![1.0; 2000],
+        assignment: Vec::new(),
+    };
+    let r_feed = bench("pipeline/feeder_epoch", &cfg, |i| {
+        let feeder = BatchFeeder::spawn(coreset.clone(), 1, 32, 8, i as u64);
+        feeder.iter().count()
+    });
+    emit(&r_feed, format!("{:.0} batches/s", (2000.0 / 32.0) / r_feed.mean_s));
+
+    rows.flush()?;
+    println!("\nresults -> target/bench_results/micro.csv");
+    Ok(())
+}

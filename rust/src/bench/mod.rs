@@ -1,0 +1,139 @@
+//! Bench substrate ("criterion-lite"): warmup + timed iterations with
+//! mean/std/median reporting, since the offline registry has no
+//! `criterion`.  All `benches/fig*.rs` targets are `harness = false`
+//! binaries built on this module; each prints the paper-figure series it
+//! regenerates and mirrors it into `target/bench_results/<name>.csv`.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::Summary;
+
+/// Configuration for a measurement.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap on total measure time; iterations stop early past this.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            measure_iters: 10,
+            max_total: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean_s
+    }
+}
+
+/// Measure `f`, returning timing stats. `f` receives the iteration index
+/// (so it can rotate inputs) and should return a value that is consumed
+/// via `std::hint::black_box` to defeat dead-code elimination.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut(usize) -> T) -> BenchResult {
+    for i in 0..cfg.warmup_iters {
+        std::hint::black_box(f(i));
+    }
+    let mut s = Summary::keeping_samples();
+    let started = Instant::now();
+    for i in 0..cfg.measure_iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f(i));
+        s.add(t0.elapsed().as_secs_f64());
+        if started.elapsed() > cfg.max_total && s.count() >= 3 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: s.count() as usize,
+        mean_s: s.mean(),
+        std_s: s.std(),
+        median_s: s.median().unwrap_or(s.mean()),
+        min_s: s.min(),
+    }
+}
+
+/// Pretty-print a result line (aligned, humanized units).
+pub fn report(r: &BenchResult) {
+    println!(
+        "  {:<44} {:>12} ± {:>10}  (median {:>12}, n={})",
+        r.name,
+        humanize(r.mean_s),
+        humanize(r.std_s),
+        humanize(r.median_s),
+        r.iters
+    );
+}
+
+/// Humanize a duration in seconds.
+pub fn humanize(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Standard location for bench CSV outputs.
+pub fn results_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("target/bench_results");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let cfg = BenchConfig { warmup_iters: 1, measure_iters: 5, max_total: Duration::from_secs(5) };
+        let r = bench("sleep", &cfg, |_| std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0015, "{}", r.mean_s);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.mean_s + r.std_s * 3.0 + 1e-3);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(humanize(2.5), "2.500 s");
+        assert_eq!(humanize(0.0025), "2.500 ms");
+        assert_eq!(humanize(2.5e-6), "2.500 µs");
+        assert!(humanize(3e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn throughput() {
+        let r = BenchResult {
+            name: "t".into(),
+            iters: 1,
+            mean_s: 0.5,
+            std_s: 0.0,
+            median_s: 0.5,
+            min_s: 0.5,
+        };
+        assert_eq!(r.throughput(100.0), 200.0);
+    }
+}

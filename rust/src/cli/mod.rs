@@ -1,0 +1,270 @@
+//! Command-line argument parsing substrate (no `clap` offline).
+//!
+//! Supports the launcher's needs: subcommands, `--flag`, `--opt value`,
+//! `--opt=value`, repeated options, positional arguments, and generated
+//! usage text.  Strict by default: unknown options are errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declarative option spec.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    /// Takes a value (`--opt v`) vs boolean flag (`--opt`).
+    pub takes_value: bool,
+    pub repeated: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn opt_all(&self, name: &str) -> &[String] {
+        self.opts.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.opt(name).ok_or_else(|| anyhow::anyhow!("missing required --{name}"))
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} '{s}': {e}")),
+        }
+    }
+}
+
+/// One subcommand definition.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, repeated: false, help, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: true,
+            repeated: false,
+            help,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: false, repeated: false, help, default: None });
+        self
+    }
+
+    pub fn repeated(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, repeated: true, help, default: None });
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse this command's argument list (after the subcommand token).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        // Seed defaults.
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                out.opts.insert(spec.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .find(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name} for '{}'", self.name))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= argv.len() {
+                                bail!("--{name} expects a value");
+                            }
+                            argv[i].clone()
+                        }
+                    };
+                    let entry = out.opts.entry(name.to_string()).or_default();
+                    if !spec.repeated {
+                        entry.clear();
+                    }
+                    entry.push(val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("flag --{name} does not take a value");
+                    }
+                    out.flags.insert(name.to_string(), true);
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("  {} — {}\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <v>" } else { "" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("      --{}{val:<8} {}{def}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+/// Top-level application: dispatches `argv[1]` to a subcommand.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nCOMMANDS:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&c.usage());
+        }
+        s
+    }
+
+    /// Returns `(command_name, parsed_args)` or prints usage on help.
+    pub fn dispatch(&self, argv: &[String]) -> Result<(&'static str, Args)> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+            bail!("{}", self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == argv[0])
+            .ok_or_else(|| anyhow::anyhow!("unknown command '{}'\n\n{}", argv[0], self.usage()))?;
+        if argv.iter().any(|a| a == "--help") {
+            bail!("{}", cmd.usage());
+        }
+        Ok((cmd.name, cmd.parse(&argv[1..])?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("dataset", "dataset name")
+            .opt_default("epochs", "10", "epoch count")
+            .flag("verbose", "chatty")
+            .repeated("size", "subset size (repeatable)")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positionals() {
+        let a = cmd()
+            .parse(&s(&["--dataset", "covtype", "--verbose", "out.csv"]))
+            .unwrap();
+        assert_eq!(a.opt("dataset"), Some("covtype"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+        assert_eq!(a.opt("epochs"), Some("10")); // default
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cmd().parse(&s(&["--epochs=25"])).unwrap();
+        assert_eq!(a.parse_opt::<usize>("epochs", 0).unwrap(), 25);
+    }
+
+    #[test]
+    fn repeated_opts_accumulate() {
+        let a = cmd().parse(&s(&["--size", "0.1", "--size", "0.2"])).unwrap();
+        assert_eq!(a.opt_all("size"), &["0.1", "0.2"]);
+    }
+
+    #[test]
+    fn non_repeated_last_wins() {
+        let a = cmd().parse(&s(&["--dataset", "a", "--dataset", "b"])).unwrap();
+        assert_eq!(a.opt("dataset"), Some("b"));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(cmd().parse(&s(&["--nope"])).is_err());
+        assert!(cmd().parse(&s(&["--dataset"])).is_err()); // missing value
+        assert!(cmd().parse(&s(&["--verbose=x"])).is_err()); // flag w/ value
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App { name: "craig", about: "coresets", commands: vec![cmd()] };
+        let (name, a) = app.dispatch(&s(&["train", "--dataset", "x"])).unwrap();
+        assert_eq!(name, "train");
+        assert_eq!(a.opt("dataset"), Some("x"));
+        assert!(app.dispatch(&s(&["bogus"])).is_err());
+        assert!(app.dispatch(&s(&[])).is_err());
+    }
+
+    #[test]
+    fn parse_opt_error_mentions_name() {
+        let a = cmd().parse(&s(&["--epochs", "abc"])).unwrap();
+        let err = a.parse_opt::<usize>("epochs", 0).unwrap_err().to_string();
+        assert!(err.contains("epochs"), "{err}");
+    }
+}

@@ -1,0 +1,314 @@
+//! Configuration substrate: a TOML-subset parser + typed accessors.
+//!
+//! No `serde`/`toml` in the offline registry, so we implement the subset
+//! the launcher needs: `[section]` headers, `key = value` pairs with
+//! string / integer / float / boolean / homogeneous-array values, `#`
+//! comments, and dotted lookup (`section.key`).  Good error messages with
+//! line numbers; unknown keys are preserved so callers can validate
+//! against a schema (see [`Config::require_known`]).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Flat `section.key → value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(tok: &str, lineno: usize) -> Result<Value> {
+    let t = tok.trim();
+    if t.starts_with('"') {
+        if !t.ends_with('"') || t.len() < 2 {
+            bail!("line {lineno}: unterminated string {t}");
+        }
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    bail!("line {lineno}: cannot parse value '{t}' (quote strings)")
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = match raw.find('#') {
+                // Only strip comments outside of strings (simple heuristic:
+                // a '#' after an unclosed quote stays).
+                Some(pos) if raw[..pos].matches('"').count() % 2 == 0 => &raw[..pos],
+                _ => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {lineno}: bad section header '{line}'");
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {lineno}: empty section name");
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {lineno}: expected 'key = value'"))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {lineno}: empty key");
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let vt = v.trim();
+            let value = if vt.starts_with('[') {
+                if !vt.ends_with(']') {
+                    bail!("line {lineno}: unterminated array");
+                }
+                let inner = &vt[1..vt.len() - 1];
+                let items: Result<Vec<Value>> = inner
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(|s| parse_scalar(s, lineno))
+                    .collect();
+                Value::Array(items?)
+            } else {
+                parse_scalar(vt, lineno)?
+            };
+            if values.insert(full_key.clone(), value).is_some() {
+                bail!("line {lineno}: duplicate key '{full_key}'");
+            }
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    /// Insert/override a value (CLI `--set section.key=value` overrides).
+    /// Values that don't parse as int/float/bool are taken as bare
+    /// strings — CLI ergonomics, unlike the file syntax which requires
+    /// quotes.
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<()> {
+        let v = parse_scalar(raw, 0).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.values.insert(key.to_string(), v);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Ok(s),
+            Some(v) => bail!("config key '{key}' is {v:?}, expected string"),
+            None => bail!("missing config key '{key}'"),
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64> {
+        match self.get(key) {
+            Some(Value::Int(i)) => Ok(*i),
+            Some(v) => bail!("config key '{key}' is {v:?}, expected int"),
+            None => bail!("missing config key '{key}'"),
+        }
+    }
+
+    pub fn float(&self, key: &str) -> Result<f64> {
+        match self.get(key) {
+            Some(Value::Float(x)) => Ok(*x),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(v) => bail!("config key '{key}' is {v:?}, expected float"),
+            None => bail!("missing config key '{key}'"),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(v) => bail!("config key '{key}' is {v:?}, expected bool"),
+            None => bail!("missing config key '{key}'"),
+        }
+    }
+
+    /// Typed getters with defaults.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str(key).map(str::to_string).unwrap_or_else(|_| default.to_string())
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
+    }
+
+    pub fn floats(&self, key: &str) -> Result<Vec<f64>> {
+        match self.get(key) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(x) => Ok(*x),
+                    Value::Int(i) => Ok(*i as f64),
+                    other => bail!("array element {other:?} in '{key}' is not numeric"),
+                })
+                .collect(),
+            Some(v) => bail!("config key '{key}' is {v:?}, expected array"),
+            None => bail!("missing config key '{key}'"),
+        }
+    }
+
+    /// Validate that every present key is one of `known` — catches typos
+    /// in experiment configs before a multi-minute run starts.
+    pub fn require_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.values.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!(
+                    "unknown config key '{k}'; known keys: {}",
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig1"
+[data]
+dataset = "covtype"   # synthetic stand-in
+n = 20000
+frac = 0.5
+[select]
+enabled = true
+sizes = [0.1, 0.2, 0.3]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name").unwrap(), "fig1");
+        assert_eq!(c.str("data.dataset").unwrap(), "covtype");
+        assert_eq!(c.int("data.n").unwrap(), 20000);
+        assert_eq!(c.float("data.frac").unwrap(), 0.5);
+        assert!(c.bool("select.enabled").unwrap());
+        assert_eq!(c.floats("select.sizes").unwrap(), vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let c = Config::parse("x = 3\n").unwrap();
+        assert_eq!(c.float("x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("missing", 7), 7);
+        assert_eq!(c.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = Config::parse("a = 1\nb 2\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = Config::parse("x = @@@\n").unwrap_err().to_string();
+        assert!(err.contains("@@@"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(Config::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn unknown_key_validation() {
+        let c = Config::parse("a = 1\nzz = 2\n").unwrap();
+        assert!(c.require_known(&["a"]).is_err());
+        assert!(c.require_known(&["a", "zz"]).is_ok());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse("a = 1\n").unwrap();
+        c.set("a", "5").unwrap();
+        assert_eq!(c.int("a").unwrap(), 5);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = Config::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(c.str("s").unwrap(), "a#b");
+    }
+}

@@ -1,0 +1,139 @@
+//! Coreset diagnostics (the quantitative face of Figure 6).
+//!
+//! Fig. 6 is qualitative — images picked at epochs 1/100/200 showing
+//! that semantic redundancy drops as training proceeds.  We report the
+//! measurable counterparts: within-subset redundancy (mean nearest-
+//! neighbour distance inside S — higher ⇒ less redundant), coverage
+//! (mean distance from data to S), cluster-coverage counts, and the
+//! weight-distribution concentration (Gini).
+
+use crate::linalg::{self, Matrix};
+
+use super::weights::WeightedCoreset;
+
+/// Summary statistics of a selected subset in a feature space.
+#[derive(Clone, Debug)]
+pub struct SubsetStats {
+    /// Mean over S of the distance to the nearest *other* selected point.
+    /// Rising across training epochs = falling semantic redundancy (6a→6c).
+    pub redundancy_nn_dist: f64,
+    /// Mean over all points of the distance to the nearest selected point
+    /// (lower = better coverage of the data distribution).
+    pub coverage_dist: f64,
+    /// Gini coefficient of the γ weights (0 = uniform clusters,
+    /// → 1 = one element serves almost everything).
+    pub weight_gini: f64,
+    /// Subset size.
+    pub size: usize,
+}
+
+/// Compute stats for `coreset` against the feature matrix it was
+/// selected from (rows = all points, coreset indices index into it).
+pub fn subset_stats(features: &Matrix, coreset: &WeightedCoreset) -> SubsetStats {
+    let s = &coreset.indices;
+    let size = s.len();
+
+    // Redundancy: nearest-neighbour distance within S.
+    let mut nn_sum = 0.0f64;
+    if size > 1 {
+        for (a, &i) in s.iter().enumerate() {
+            let mut best = f32::INFINITY;
+            for (b, &j) in s.iter().enumerate() {
+                if a != b {
+                    best = best.min(linalg::sqdist(features.row(i), features.row(j)));
+                }
+            }
+            nn_sum += (best.max(0.0).sqrt()) as f64;
+        }
+        nn_sum /= size as f64;
+    }
+
+    // Coverage: distance from every point to nearest selected.
+    let mut cov_sum = 0.0f64;
+    for i in 0..features.rows {
+        let mut best = f32::INFINITY;
+        for &j in s {
+            best = best.min(linalg::sqdist(features.row(i), features.row(j)));
+        }
+        cov_sum += (best.max(0.0).sqrt()) as f64;
+    }
+    cov_sum /= features.rows.max(1) as f64;
+
+    SubsetStats {
+        redundancy_nn_dist: nn_sum,
+        coverage_dist: cov_sum,
+        weight_gini: gini(&coreset.gamma),
+        size,
+    }
+}
+
+/// Gini coefficient of a nonnegative weight vector.
+pub fn gini(w: &[f32]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let sum: f64 = v.iter().sum();
+    if sum <= 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 = v
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i as f64 + 1.0) * x)
+        .sum();
+    (2.0 * weighted) / (n * sum) - (n + 1.0) / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::{self, Budget, NativePairwise, SelectorConfig};
+    use crate::data::synthetic;
+
+    #[test]
+    fn gini_uniform_is_zero_concentrated_near_one() {
+        assert!(gini(&[1.0, 1.0, 1.0, 1.0]).abs() < 1e-9);
+        let g = gini(&[0.0, 0.0, 0.0, 100.0]);
+        assert!(g > 0.7, "{g}");
+        assert_eq!(gini(&[]), 0.0);
+    }
+
+    #[test]
+    fn craig_covers_better_than_random() {
+        let ds = synthetic::covtype_like(400, 0);
+        let cfg = SelectorConfig {
+            budget: Budget::Fraction(0.05),
+            ..Default::default()
+        };
+        let mut eng = NativePairwise;
+        let craig = coreset::select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+        let cs = subset_stats(&ds.x, &craig.coreset);
+        let mut rng = crate::rng::Rng::new(1);
+        let rand = coreset::random_baseline(400, &ds.y, 2, &Budget::Fraction(0.05), true, &mut rng);
+        let rs = subset_stats(&ds.x, &rand);
+        assert_eq!(cs.size, rs.size);
+        assert!(
+            cs.coverage_dist <= rs.coverage_dist,
+            "CRAIG coverage {} should beat random {}",
+            cs.coverage_dist,
+            rs.coverage_dist
+        );
+    }
+
+    #[test]
+    fn singleton_stats() {
+        let ds = synthetic::covtype_like(50, 1);
+        let wc = coreset::WeightedCoreset {
+            indices: vec![3],
+            gamma: vec![50.0],
+            assignment: Vec::new(),
+        };
+        let s = subset_stats(&ds.x, &wc);
+        assert_eq!(s.size, 1);
+        assert_eq!(s.redundancy_nn_dist, 0.0); // no other selected point
+        assert!(s.coverage_dist > 0.0);
+    }
+}

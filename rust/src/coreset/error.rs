@@ -1,0 +1,143 @@
+//! Gradient-estimation error measurement (Figure 2).
+//!
+//! CRAIG's promise is `‖Σ_{i∈V} ∇f_i(w) − Σ_{j∈S} γ_j ∇f_j(w)‖ ≤ ε` for
+//! all `w` (Eq. 2).  This module measures the left-hand side empirically
+//! by sampling parameter points, for both CRAIG and random-baseline
+//! subsets, and reports values normalized by the largest full-gradient
+//! norm — exactly the quantities plotted in Fig. 2.
+
+use crate::linalg;
+use crate::model::GradOracle;
+use crate::rng::Rng;
+
+use super::weights::WeightedCoreset;
+
+/// One sampled comparison point.
+#[derive(Clone, Debug)]
+pub struct ErrorSample {
+    /// ‖full − weighted-subset‖ at the sampled w.
+    pub error: f32,
+    /// ‖full‖ at the sampled w (for normalization).
+    pub full_norm: f32,
+}
+
+/// Sample `num_w` random parameter vectors (Gaussian of scale `w_scale`)
+/// and measure the gradient-estimation error of the given coreset at
+/// each. Returns one [`ErrorSample`] per sampled point.
+pub fn gradient_error_samples(
+    oracle: &mut dyn GradOracle,
+    coreset: &WeightedCoreset,
+    num_w: usize,
+    w_scale: f32,
+    rng: &mut Rng,
+) -> Vec<ErrorSample> {
+    let d = oracle.dim();
+    let n = oracle.num_examples();
+    let full_idx: Vec<usize> = (0..n).collect();
+    let ones = vec![1.0f32; n];
+    let mut g_full = vec![0.0f32; d];
+    let mut g_sub = vec![0.0f32; d];
+    let mut out = Vec::with_capacity(num_w);
+    for _ in 0..num_w {
+        let w = rng.normal_vec(d, 0.0, w_scale);
+        oracle.loss_grad_at(&w, &full_idx, &ones, &mut g_full);
+        oracle.loss_grad_at(&w, &coreset.indices, &coreset.gamma, &mut g_sub);
+        let mut diff = 0.0f32;
+        for j in 0..d {
+            let e = g_full[j] - g_sub[j];
+            diff += e * e;
+        }
+        out.push(ErrorSample { error: diff.sqrt(), full_norm: linalg::norm2(&g_full) });
+    }
+    out
+}
+
+/// Summary of Fig. 2's series: normalized mean/max error.
+#[derive(Clone, Debug)]
+pub struct ErrorSummary {
+    pub mean_normalized: f64,
+    pub max_normalized: f64,
+}
+
+/// Normalize by the largest sampled full-gradient norm (paper protocol).
+pub fn summarize(samples: &[ErrorSample]) -> ErrorSummary {
+    let max_norm = samples
+        .iter()
+        .map(|s| s.full_norm)
+        .fold(f32::MIN_POSITIVE, f32::max) as f64;
+    let normalized: Vec<f64> = samples.iter().map(|s| s.error as f64 / max_norm).collect();
+    ErrorSummary {
+        mean_normalized: normalized.iter().sum::<f64>() / normalized.len().max(1) as f64,
+        max_normalized: normalized.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::{self, Budget, NativePairwise, SelectorConfig};
+    use crate::data::synthetic;
+    use crate::model::LogReg;
+
+    fn setup(n: usize) -> (LogReg, Vec<u32>) {
+        let ds = synthetic::covtype_like(n, 0);
+        let y = ds.signed_labels();
+        let labels = ds.y.clone();
+        (LogReg::new(ds.x, y, 1e-5), labels)
+    }
+
+    #[test]
+    fn full_coreset_has_zero_error() {
+        let (mut lr, _) = setup(100);
+        let n = lr.num_examples();
+        let full = WeightedCoreset {
+            indices: (0..n).collect(),
+            gamma: vec![1.0; n],
+            assignment: Vec::new(),
+        };
+        let mut rng = Rng::new(1);
+        let samples = gradient_error_samples(&mut lr, &full, 5, 0.1, &mut rng);
+        for s in samples {
+            assert!(s.error < 1e-3, "error {}", s.error);
+        }
+    }
+
+    #[test]
+    fn craig_beats_random_on_gradient_error() {
+        let (mut lr, labels) = setup(600);
+        let x = lr.x.clone();
+        let cfg = SelectorConfig {
+            budget: Budget::Fraction(0.1),
+            ..Default::default()
+        };
+        let mut eng = NativePairwise;
+        let craig = coreset::select(&x, &labels, 2, &cfg, &mut eng);
+        let mut rng = Rng::new(2);
+        // Average several random baselines (the transparent green lines).
+        let mut rand_mean = 0.0;
+        for seed in 0..5 {
+            let mut r2 = Rng::new(seed);
+            let rb = coreset::random_baseline(600, &labels, 2, &Budget::Fraction(0.1), true, &mut r2);
+            let s = gradient_error_samples(&mut lr, &rb, 8, 0.1, &mut rng);
+            rand_mean += summarize(&s).mean_normalized;
+        }
+        rand_mean /= 5.0;
+        let craig_samples = gradient_error_samples(&mut lr, &craig.coreset, 8, 0.1, &mut rng);
+        let craig_err = summarize(&craig_samples).mean_normalized;
+        assert!(
+            craig_err < rand_mean,
+            "CRAIG normalized error {craig_err:.4} should beat random {rand_mean:.4}"
+        );
+    }
+
+    #[test]
+    fn summarize_normalizes_by_max_norm() {
+        let samples = vec![
+            ErrorSample { error: 1.0, full_norm: 2.0 },
+            ErrorSample { error: 2.0, full_norm: 4.0 },
+        ];
+        let s = summarize(&samples);
+        assert!((s.mean_normalized - (0.25 + 0.5) / 2.0).abs() < 1e-9);
+        assert!((s.max_normalized - 0.5).abs() < 1e-9);
+    }
+}

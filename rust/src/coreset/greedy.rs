@@ -1,0 +1,316 @@
+//! Greedy maximization of the facility-location objective.
+//!
+//! Three engines behind one interface:
+//! * [`naive_greedy`] — recompute every gain each round, O(n²) per pick;
+//!   the correctness reference.
+//! * [`lazy_greedy`] — Minoux's accelerated greedy with a max-heap of
+//!   stale upper bounds; identical output to naive greedy, usually ~10×
+//!   fewer gain evaluations on clustered data (measured by
+//!   `benches/micro_greedy.rs`).
+//! * [`stochastic_greedy`] — Mirzasoleiman et al. (2015): each round
+//!   evaluates a random subsample of size `(n/r)·ln(1/δ)`, giving a
+//!   `(1 − 1/e − δ)` guarantee in O(n·ln(1/δ)) total evaluations.
+//!
+//! Stopping is governed by [`StopRule`]: the paper's budgeted dual
+//! (Eq. 14, fixed `r`) or the submodular-cover form (Eq. 12, target ε).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::facility::FacilityLocation;
+use super::sim::SimilaritySource;
+use crate::rng::Rng;
+
+/// When to stop adding elements.
+#[derive(Clone, Copy, Debug)]
+pub enum StopRule {
+    /// Select exactly `r` elements (Eq. 14).
+    Budget(usize),
+    /// Select until the certified estimation error `L(S) ≤ ε` (Eq. 12),
+    /// with a hard cap to stay bounded on adversarial inputs.
+    Cover { epsilon: f64, max_size: usize },
+}
+
+/// Result of a greedy run.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// Selected indices in greedy order (first = largest marginal gain;
+    /// the paper's Sec. 3.2 ordering argument).
+    pub order: Vec<usize>,
+    /// Realized marginal gain of each pick.
+    pub gains: Vec<f64>,
+    /// Final objective value F(S).
+    pub f_value: f64,
+    /// Certified estimation-error bound ε = L({s0}) − F(S) (Eq. 15).
+    pub epsilon: f64,
+    /// Number of gain evaluations performed (perf diagnostics).
+    pub evaluations: usize,
+}
+
+fn done<S: SimilaritySource + ?Sized>(
+    rule: &StopRule,
+    fl: &FacilityLocation<'_, S>,
+    picked: usize,
+) -> bool {
+    match *rule {
+        StopRule::Budget(r) => picked >= r.min(fl.n()),
+        StopRule::Cover { epsilon, max_size } => {
+            picked >= max_size.min(fl.n()) || fl.epsilon() <= epsilon
+        }
+    }
+}
+
+/// Reference implementation: full gain recomputation each round.
+pub fn naive_greedy<S: SimilaritySource + ?Sized>(sim: &S, rule: StopRule) -> Selection {
+    let n = sim.n();
+    let mut fl = FacilityLocation::new(sim);
+    let mut in_set = vec![false; n];
+    let mut order = Vec::new();
+    let mut gains = Vec::new();
+    let mut evals = 0usize;
+    while !done(&rule, &fl, order.len()) {
+        let mut best = (usize::MAX, f64::NEG_INFINITY);
+        for e in 0..n {
+            if in_set[e] {
+                continue;
+            }
+            let g = fl.gain(e);
+            evals += 1;
+            if g > best.1 {
+                best = (e, g);
+            }
+        }
+        if best.0 == usize::MAX {
+            break;
+        }
+        let realized = fl.add(best.0);
+        in_set[best.0] = true;
+        order.push(best.0);
+        gains.push(realized);
+    }
+    let epsilon = fl.epsilon();
+    Selection { order, gains, f_value: fl.value(), epsilon, evaluations: evals }
+}
+
+/// Heap entry: (stale upper bound on gain, element, round it was scored).
+struct HeapEntry {
+    bound: f64,
+    elem: usize,
+    round: usize,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound && self.elem == other.elem
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap by bound; tie-break on element id for determinism.
+        self.bound
+            .partial_cmp(&other.bound)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.elem.cmp(&self.elem))
+    }
+}
+
+/// Minoux lazy greedy: submodularity makes cached gains valid upper
+/// bounds, so an entry whose cached score was computed *this* round is
+/// exactly its gain and can be taken without re-scoring the rest.
+pub fn lazy_greedy<S: SimilaritySource + ?Sized>(sim: &S, rule: StopRule) -> Selection {
+    let n = sim.n();
+    let mut fl = FacilityLocation::new(sim);
+    let mut heap = BinaryHeap::with_capacity(n);
+    let mut evals = 0usize;
+    // Round 0: score everything once.
+    for e in 0..n {
+        let g = fl.gain(e);
+        evals += 1;
+        heap.push(HeapEntry { bound: g, elem: e, round: 0 });
+    }
+    let mut order = Vec::new();
+    let mut gains = Vec::new();
+    let mut round = 0usize;
+    while !done(&rule, &fl, order.len()) {
+        let top = match heap.pop() {
+            Some(t) => t,
+            None => break,
+        };
+        if top.round == round {
+            // Fresh score ⇒ top really is the argmax this round.
+            let realized = fl.add(top.elem);
+            order.push(top.elem);
+            gains.push(realized);
+            round += 1;
+        } else {
+            // Stale: re-score and reinsert.
+            let g = fl.gain(top.elem);
+            evals += 1;
+            heap.push(HeapEntry { bound: g, elem: top.elem, round });
+        }
+    }
+    let epsilon = fl.epsilon();
+    Selection { order, gains, f_value: fl.value(), epsilon, evaluations: evals }
+}
+
+/// Stochastic greedy (a.k.a. "lazier than lazy"): per round, evaluate a
+/// uniform subsample of the remaining candidates.  `delta` tunes the
+/// sample size `s = ceil((n/r)·ln(1/delta))`.
+pub fn stochastic_greedy<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    rule: StopRule,
+    delta: f64,
+    rng: &mut Rng,
+) -> Selection {
+    let n = sim.n();
+    let r_hint = match rule {
+        StopRule::Budget(r) => r.max(1),
+        StopRule::Cover { max_size, .. } => max_size.clamp(1, n),
+    };
+    let sample = (((n as f64 / r_hint as f64) * (1.0 / delta).ln()).ceil() as usize)
+        .clamp(1, n);
+    let mut fl = FacilityLocation::new(sim);
+    let mut in_set = vec![false; n];
+    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut order = Vec::new();
+    let mut gains = Vec::new();
+    let mut evals = 0usize;
+    while !done(&rule, &fl, order.len()) && !remaining.is_empty() {
+        // Sample without replacement from remaining (partial shuffle).
+        let k = sample.min(remaining.len());
+        for t in 0..k {
+            let j = rng.range(t, remaining.len());
+            remaining.swap(t, j);
+        }
+        let mut best = (usize::MAX, f64::NEG_INFINITY);
+        for &e in &remaining[..k] {
+            let g = fl.gain(e);
+            evals += 1;
+            if g > best.1 {
+                best = (e, g);
+            }
+        }
+        if best.0 == usize::MAX {
+            break;
+        }
+        let realized = fl.add(best.0);
+        in_set[best.0] = true;
+        order.push(best.0);
+        gains.push(realized);
+        remaining.retain(|&e| !in_set[e]);
+    }
+    let epsilon = fl.epsilon();
+    Selection { order, gains, f_value: fl.value(), epsilon, evaluations: evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sim::DenseSim;
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    fn sim(n: usize, d: usize, seed: u64) -> DenseSim {
+        let mut r = Rng::new(seed);
+        let x = Matrix::from_vec(n, d, r.normal_vec(n * d, 0.0, 1.0));
+        DenseSim::from_features(&x)
+    }
+
+    #[test]
+    fn lazy_equals_naive() {
+        for seed in 0..5 {
+            let s = sim(40, 5, seed);
+            let a = naive_greedy(&s, StopRule::Budget(10));
+            let b = lazy_greedy(&s, StopRule::Budget(10));
+            assert_eq!(a.order, b.order, "seed {seed}");
+            assert!((a.f_value - b.f_value).abs() < 1e-6);
+            assert!(b.evaluations <= a.evaluations, "lazy must not do more work");
+        }
+    }
+
+    #[test]
+    fn greedy_beats_random_on_objective() {
+        let s = sim(60, 4, 7);
+        let g = lazy_greedy(&s, StopRule::Budget(6));
+        let mut rng = Rng::new(0);
+        let mut fl = FacilityLocation::new(&s);
+        let mut worse = 0;
+        for _ in 0..20 {
+            let rand_set = rng.sample_indices(60, 6);
+            if fl.eval_set(&rand_set) <= g.f_value + 1e-9 {
+                worse += 1;
+            }
+        }
+        assert!(worse >= 19, "greedy should beat ~all random sets, beat {worse}/20");
+    }
+
+    #[test]
+    fn gains_are_nonincreasing() {
+        // Greedy marginal gains are monotone nonincreasing (submodularity).
+        let s = sim(50, 6, 8);
+        let g = lazy_greedy(&s, StopRule::Budget(20));
+        for w in g.gains.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6, "gains must not increase: {w:?}");
+        }
+    }
+
+    #[test]
+    fn cover_mode_reaches_epsilon() {
+        let s = sim(30, 3, 9);
+        let mut fl = FacilityLocation::new(&s);
+        let target = 0.25 * fl.l_s0();
+        let g = lazy_greedy(&s, StopRule::Cover { epsilon: target, max_size: 30 });
+        assert!(g.epsilon <= target + 1e-6);
+        // And it should not massively overshoot (stops at first satisfying size).
+        let g_minus = &g.order[..g.order.len() - 1];
+        let f_prev = fl.eval_set(g_minus);
+        assert!(fl.l_s0() - f_prev > target - 1e-6, "one fewer element must not satisfy ε");
+    }
+
+    #[test]
+    fn budget_clamps_to_n() {
+        let s = sim(10, 2, 10);
+        let g = lazy_greedy(&s, StopRule::Budget(50));
+        assert_eq!(g.order.len(), 10);
+        assert!(g.epsilon.abs() < 1e-3, "selecting all ⇒ ε≈0");
+    }
+
+    #[test]
+    fn stochastic_gets_close_to_lazy() {
+        let s = sim(80, 5, 11);
+        let exact = lazy_greedy(&s, StopRule::Budget(8));
+        let mut rng = Rng::new(1);
+        let st = stochastic_greedy(&s, StopRule::Budget(8), 0.05, &mut rng);
+        assert_eq!(st.order.len(), 8);
+        assert!(
+            st.f_value >= 0.85 * exact.f_value,
+            "stochastic {} vs exact {}",
+            st.f_value,
+            exact.f_value
+        );
+        assert!(st.evaluations < exact.evaluations);
+    }
+
+    #[test]
+    fn selection_order_deterministic() {
+        let s = sim(30, 4, 12);
+        let a = lazy_greedy(&s, StopRule::Budget(5));
+        let b = lazy_greedy(&s, StopRule::Budget(5));
+        assert_eq!(a.order, b.order);
+    }
+
+    #[test]
+    fn epsilon_formula_consistent() {
+        let s = sim(25, 4, 13);
+        let g = lazy_greedy(&s, StopRule::Budget(5));
+        let mut fl = FacilityLocation::new(&s);
+        let f = fl.eval_set(&g.order);
+        assert!((g.epsilon - (fl.l_s0() - f)).abs() < 1e-6);
+    }
+}

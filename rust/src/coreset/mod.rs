@@ -1,0 +1,348 @@
+//! The CRAIG coreset-selection engine (the paper's core contribution).
+//!
+//! Pipeline: gradient-proxy features → pairwise distances (L1 Pallas
+//! kernel via [`crate::runtime`], or the native twin) → similarities →
+//! facility-location greedy ([`greedy`]) → per-element weights
+//! ([`weights`]).  Classification tasks select **per class** (the Eq. 9
+//! bounds only hold between same-label points; Sec. 5's protocol) and
+//! merge, preserving class ratios.
+
+pub mod diagnostics;
+pub mod error;
+pub mod facility;
+pub mod greedy;
+pub mod sim;
+pub mod weights;
+
+pub use facility::FacilityLocation;
+pub use greedy::{lazy_greedy, naive_greedy, stochastic_greedy, Selection, StopRule};
+pub use sim::{BlockedSim, DenseSim, SimilaritySource};
+pub use weights::WeightedCoreset;
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Which greedy engine to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    Naive,
+    Lazy,
+    /// Stochastic greedy with subsampling parameter δ.
+    Stochastic { delta: f64 },
+}
+
+/// Selection budget in user terms.
+#[derive(Clone, Copy, Debug)]
+pub enum Budget {
+    /// Fraction of each class (the paper's "10% subset").
+    Fraction(f64),
+    /// Absolute per-run element count, split across classes
+    /// proportionally to class size.
+    Count(usize),
+    /// Submodular-cover mode: certify estimation error ≤ ε per class.
+    Cover { epsilon: f64 },
+}
+
+/// Full selector configuration.
+#[derive(Clone, Debug)]
+pub struct SelectorConfig {
+    pub method: Method,
+    pub budget: Budget,
+    /// Select per class and merge (true for every paper experiment).
+    pub per_class: bool,
+    /// Seed for stochastic greedy.
+    pub seed: u64,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        SelectorConfig {
+            method: Method::Lazy,
+            budget: Budget::Fraction(0.1),
+            per_class: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Abstraction over how pairwise squared distances are computed: the
+/// native blocked path or the AOT Pallas artifact through PJRT.
+pub trait PairwiseEngine {
+    fn sqdist(&mut self, x: &Matrix, y: &Matrix) -> Matrix;
+
+    /// Self-distances `sqdist(x, x)` — backends may exploit symmetry
+    /// (the native engine computes only the upper triangle, §Perf).
+    fn sqdist_self(&mut self, x: &Matrix) -> Matrix {
+        self.sqdist(x, x)
+    }
+
+    /// Human-readable backend name for logs.
+    fn name(&self) -> &'static str {
+        "unknown"
+    }
+}
+
+/// Native (pure-rust) pairwise engine.
+pub struct NativePairwise;
+
+impl PairwiseEngine for NativePairwise {
+    fn sqdist(&mut self, x: &Matrix, y: &Matrix) -> Matrix {
+        crate::linalg::pairwise_sqdist(x, y)
+    }
+
+    fn sqdist_self(&mut self, x: &Matrix) -> Matrix {
+        crate::linalg::pairwise_sqdist_self(x)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Outcome of a full CRAIG selection run.
+#[derive(Clone, Debug)]
+pub struct CoresetResult {
+    /// Merged, dataset-coordinate coreset.
+    pub coreset: WeightedCoreset,
+    /// Per-class subset sizes (empty when `per_class` is off).
+    pub class_sizes: Vec<usize>,
+    /// Sum of certified ε over classes (Eq. 15 per class, summed via the
+    /// triangle inequality).
+    pub epsilon: f64,
+    /// Total facility-location value across classes.
+    pub f_value: f64,
+    /// Gain-evaluation count (selection cost diagnostics).
+    pub evaluations: usize,
+}
+
+fn run_greedy<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    method: Method,
+    rule: StopRule,
+    rng: &mut Rng,
+) -> Selection {
+    match method {
+        Method::Naive => naive_greedy(sim, rule),
+        Method::Lazy => lazy_greedy(sim, rule),
+        Method::Stochastic { delta } => stochastic_greedy(sim, rule, delta, rng),
+    }
+}
+
+fn class_rule(budget: &Budget, class_n: usize, total_n: usize) -> StopRule {
+    match *budget {
+        Budget::Fraction(f) => {
+            let r = ((class_n as f64) * f).round().max(1.0) as usize;
+            StopRule::Budget(r.min(class_n))
+        }
+        Budget::Count(total) => {
+            let share = ((total as f64) * (class_n as f64) / (total_n as f64))
+                .round()
+                .max(1.0) as usize;
+            StopRule::Budget(share.min(class_n))
+        }
+        Budget::Cover { epsilon } => StopRule::Cover {
+            // Split the ε budget proportionally to class size.
+            epsilon: epsilon * (class_n as f64) / (total_n as f64),
+            max_size: class_n,
+        },
+    }
+}
+
+/// Select a weighted coreset from `features` (one row per example).
+///
+/// * `labels`/`num_classes`: when `cfg.per_class` is set, selection runs
+///   independently inside every class and the merged coreset preserves
+///   class ratios. Pass `num_classes = 1` for unconditional selection.
+/// * `engine`: pairwise-distance backend (native or XLA).
+pub fn select(
+    features: &Matrix,
+    labels: &[u32],
+    num_classes: usize,
+    cfg: &SelectorConfig,
+    engine: &mut dyn PairwiseEngine,
+) -> CoresetResult {
+    assert_eq!(features.rows, labels.len());
+    let n = features.rows;
+    let mut rng = Rng::new(cfg.seed);
+
+    let groups: Vec<Vec<usize>> = if cfg.per_class && num_classes > 1 {
+        let mut g = vec![Vec::new(); num_classes];
+        for (i, &c) in labels.iter().enumerate() {
+            g[c as usize].push(i);
+        }
+        g.retain(|v| !v.is_empty());
+        g
+    } else {
+        vec![(0..n).collect()]
+    };
+
+    let mut parts = Vec::with_capacity(groups.len());
+    let mut class_sizes = Vec::with_capacity(groups.len());
+    let mut epsilon = 0.0f64;
+    let mut f_value = 0.0f64;
+    let mut evaluations = 0usize;
+
+    for idx in &groups {
+        let class_x = features.gather_rows(idx);
+        let sq = engine.sqdist_self(&class_x);
+        let sim = DenseSim::from_sqdist(sq);
+        let rule = class_rule(&cfg.budget, idx.len(), n);
+        let sel = run_greedy(&sim, cfg.method, rule, &mut rng);
+        let wc = WeightedCoreset::compute(&sim, &sel.order);
+        class_sizes.push(sel.order.len());
+        epsilon += sel.epsilon;
+        f_value += sel.f_value;
+        evaluations += sel.evaluations;
+        parts.push(wc.lift(idx));
+    }
+
+    CoresetResult {
+        coreset: WeightedCoreset::merge(&parts),
+        class_sizes,
+        epsilon,
+        f_value,
+        evaluations,
+    }
+}
+
+/// Uniformly random weighted baseline: `r` points, each weighted `n/r`
+/// (how SGD implicitly weights a random batch) — the paper's "random"
+/// curve in every figure. Stratified per class like `select`.
+pub fn random_baseline(
+    n: usize,
+    labels: &[u32],
+    num_classes: usize,
+    budget: &Budget,
+    per_class: bool,
+    rng: &mut Rng,
+) -> WeightedCoreset {
+    let groups: Vec<Vec<usize>> = if per_class && num_classes > 1 {
+        let mut g = vec![Vec::new(); num_classes];
+        for (i, &c) in labels.iter().enumerate() {
+            g[c as usize].push(i);
+        }
+        g.retain(|v| !v.is_empty());
+        g
+    } else {
+        vec![(0..n).collect()]
+    };
+    let mut indices = Vec::new();
+    let mut gamma = Vec::new();
+    for idx in &groups {
+        let r = match class_rule(budget, idx.len(), n) {
+            StopRule::Budget(r) => r,
+            StopRule::Cover { max_size, .. } => max_size.min(idx.len()),
+        };
+        let picks = rng.sample_indices(idx.len(), r);
+        let w = idx.len() as f32 / r as f32;
+        for p in picks {
+            indices.push(idx[p]);
+            gamma.push(w);
+        }
+    }
+    WeightedCoreset { indices, gamma, assignment: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn per_class_selection_preserves_ratio() {
+        let ds = synthetic::ijcnn1_like(2000, 0);
+        let cfg = SelectorConfig {
+            budget: Budget::Fraction(0.1),
+            ..Default::default()
+        };
+        let mut eng = NativePairwise;
+        let res = select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+        let counts = ds.class_counts();
+        // Each class contributes ≈10%.
+        assert_eq!(res.class_sizes.len(), 2);
+        for (sz, &cn) in res.class_sizes.iter().zip(&counts) {
+            let expect = (cn as f64 * 0.1).round() as usize;
+            assert_eq!(*sz, expect.max(1));
+        }
+        // Weights over the merged coreset sum to n.
+        let total: f32 = res.coreset.gamma.iter().sum();
+        assert_eq!(total as usize, 2000);
+    }
+
+    #[test]
+    fn count_budget_splits_proportionally() {
+        let ds = synthetic::covtype_like(1000, 1);
+        let cfg = SelectorConfig {
+            budget: Budget::Count(100),
+            ..Default::default()
+        };
+        let mut eng = NativePairwise;
+        let res = select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+        let total: usize = res.class_sizes.iter().sum();
+        assert!((98..=102).contains(&total), "total {total}");
+    }
+
+    #[test]
+    fn cover_budget_certifies_epsilon() {
+        let ds = synthetic::covtype_like(300, 2);
+        // Ask for a loose ε: should need well under all points.
+        let mut eng = NativePairwise;
+        let full_eps = {
+            // ε with 1 point per class ≈ upper bound scale.
+            let cfg = SelectorConfig {
+                budget: Budget::Fraction(0.004),
+                ..Default::default()
+            };
+            select(&ds.x, &ds.y, 2, &cfg, &mut eng).epsilon
+        };
+        let target = full_eps * 0.5;
+        let cfg = SelectorConfig {
+            budget: Budget::Cover { epsilon: target },
+            ..Default::default()
+        };
+        let res = select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+        assert!(res.epsilon <= target + 1e-6);
+        assert!(res.coreset.indices.len() < 300);
+    }
+
+    #[test]
+    fn stochastic_method_runs_and_respects_budget() {
+        let ds = synthetic::covtype_like(500, 3);
+        let cfg = SelectorConfig {
+            method: Method::Stochastic { delta: 0.1 },
+            budget: Budget::Fraction(0.05),
+            per_class: true,
+            seed: 9,
+        };
+        let mut eng = NativePairwise;
+        let res = select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+        let total: usize = res.class_sizes.iter().sum();
+        assert!((23..=27).contains(&total), "≈5% of 500, got {total}");
+    }
+
+    #[test]
+    fn random_baseline_weights_sum_to_n() {
+        let ds = synthetic::covtype_like(400, 4);
+        let mut rng = Rng::new(0);
+        let wc = random_baseline(400, &ds.y, 2, &Budget::Fraction(0.1), true, &mut rng);
+        let total: f32 = wc.gamma.iter().sum();
+        assert!((total - 400.0).abs() < 1.0, "total weight {total}");
+        assert_eq!(wc.indices.len(), 40);
+        // Distinct indices.
+        let set: std::collections::HashSet<_> = wc.indices.iter().collect();
+        assert_eq!(set.len(), 40);
+    }
+
+    #[test]
+    fn unconditional_selection_when_single_class() {
+        let ds = synthetic::covtype_like(200, 5);
+        let labels = vec![0u32; 200];
+        let cfg = SelectorConfig {
+            budget: Budget::Count(15),
+            ..Default::default()
+        };
+        let mut eng = NativePairwise;
+        let res = select(&ds.x, &labels, 1, &cfg, &mut eng);
+        assert_eq!(res.coreset.indices.len(), 15);
+    }
+}

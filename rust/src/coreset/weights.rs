@@ -1,0 +1,155 @@
+//! Per-element weights γ_j (Algorithm 1, line 8): each data point is
+//! assigned to its most-similar coreset element; `γ_j = |C_j|` is the
+//! size of element j's cluster and becomes its step-size multiplier in
+//! the weighted IG update (Eq. 20).
+
+use super::sim::SimilaritySource;
+
+/// Assignment of every point to a coreset element plus the weights.
+#[derive(Clone, Debug)]
+pub struct WeightedCoreset {
+    /// Selected indices (greedy order preserved).
+    pub indices: Vec<usize>,
+    /// `gamma[k]` = number of points assigned to `indices[k]`. Sums to n.
+    pub gamma: Vec<f32>,
+    /// `assignment[i]` = position k into `indices` serving point i.
+    pub assignment: Vec<usize>,
+}
+
+impl WeightedCoreset {
+    /// Compute assignments/weights for a selected set over a similarity
+    /// source. O(n·|S|).
+    pub fn compute<S: SimilaritySource + ?Sized>(sim: &S, indices: &[usize]) -> Self {
+        assert!(!indices.is_empty(), "empty coreset");
+        let n = sim.n();
+        let mut best_sim = vec![f32::NEG_INFINITY; n];
+        let mut assignment = vec![0usize; n];
+        let mut scratch = vec![0.0f32; n];
+        for (k, &j) in indices.iter().enumerate() {
+            let col: &[f32] = match sim.sim_col_ref(j) {
+                Some(c) => c,
+                None => {
+                    sim.sim_col(j, &mut scratch);
+                    &scratch
+                }
+            };
+            for i in 0..n {
+                if col[i] > best_sim[i] {
+                    best_sim[i] = col[i];
+                    assignment[i] = k;
+                }
+            }
+        }
+        let mut gamma = vec![0.0f32; indices.len()];
+        for &k in &assignment {
+            gamma[k] += 1.0;
+        }
+        WeightedCoreset { indices: indices.to_vec(), gamma, assignment }
+    }
+
+    /// Number of source points this coreset covers.
+    pub fn covered(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Largest weight γ_max (appears in the Thm 1/2 neighbourhood radius).
+    pub fn gamma_max(&self) -> f32 {
+        self.gamma.iter().cloned().fold(0.0, f32::max)
+    }
+
+    /// Re-map local indices through `global[local]` (per-class selection
+    /// runs on a class-local similarity matrix; this lifts the result
+    /// back to dataset coordinates).
+    pub fn lift(&self, global: &[usize]) -> WeightedCoreset {
+        WeightedCoreset {
+            indices: self.indices.iter().map(|&j| global[j]).collect(),
+            gamma: self.gamma.clone(),
+            assignment: self.assignment.clone(),
+        }
+    }
+
+    /// Merge per-class coresets into one (dataset-coordinate) coreset.
+    /// Assignments are dropped (they index class-local positions).
+    pub fn merge(parts: &[WeightedCoreset]) -> WeightedCoreset {
+        let mut indices = Vec::new();
+        let mut gamma = Vec::new();
+        for p in parts {
+            indices.extend_from_slice(&p.indices);
+            gamma.extend_from_slice(&p.gamma);
+        }
+        let n: usize = parts.iter().map(|p| p.covered()).sum();
+        WeightedCoreset { indices, gamma, assignment: Vec::with_capacity(n.min(1)) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sim::DenseSim;
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    fn sim_from(n: usize, d: usize, seed: u64) -> (DenseSim, Matrix) {
+        let mut r = Rng::new(seed);
+        let x = Matrix::from_vec(n, d, r.normal_vec(n * d, 0.0, 1.0));
+        (DenseSim::from_features(&x), x)
+    }
+
+    #[test]
+    fn weights_sum_to_n() {
+        let (s, _) = sim_from(40, 4, 0);
+        let wc = WeightedCoreset::compute(&s, &[3, 11, 25]);
+        let total: f32 = wc.gamma.iter().sum();
+        assert_eq!(total, 40.0);
+        assert!(wc.gamma.iter().all(|&g| g >= 0.0));
+    }
+
+    #[test]
+    fn selected_points_assign_to_themselves() {
+        let (s, _) = sim_from(30, 5, 1);
+        let picks = [2usize, 9, 20];
+        let wc = WeightedCoreset::compute(&s, &picks);
+        for (k, &j) in picks.iter().enumerate() {
+            assert_eq!(wc.assignment[j], k, "point {j} must be served by itself");
+            assert!(wc.gamma[k] >= 1.0);
+        }
+    }
+
+    #[test]
+    fn assignment_is_nearest_in_metric() {
+        let (s, x) = sim_from(25, 3, 2);
+        let picks = [0usize, 12, 24];
+        let wc = WeightedCoreset::compute(&s, &picks);
+        for i in 0..25 {
+            let assigned = picks[wc.assignment[i]];
+            let d_assigned = crate::linalg::sqdist(x.row(i), x.row(assigned));
+            for &j in &picks {
+                let dj = crate::linalg::sqdist(x.row(i), x.row(j));
+                assert!(d_assigned <= dj + 1e-4, "point {i}: {assigned} vs {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn singleton_coreset_takes_all_weight() {
+        let (s, _) = sim_from(17, 2, 3);
+        let wc = WeightedCoreset::compute(&s, &[5]);
+        assert_eq!(wc.gamma, vec![17.0]);
+        assert!(wc.assignment.iter().all(|&k| k == 0));
+        assert_eq!(wc.gamma_max(), 17.0);
+    }
+
+    #[test]
+    fn lift_and_merge() {
+        let (s, _) = sim_from(10, 2, 4);
+        let wc = WeightedCoreset::compute(&s, &[1, 4]);
+        let global: Vec<usize> = (100..110).collect();
+        let lifted = wc.lift(&global);
+        assert_eq!(lifted.indices, vec![101, 104]);
+        assert_eq!(lifted.gamma, wc.gamma);
+        let merged = WeightedCoreset::merge(&[lifted.clone(), lifted]);
+        assert_eq!(merged.indices.len(), 4);
+        let total: f32 = merged.gamma.iter().sum();
+        assert_eq!(total, 20.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Dataset substrate: the in-memory dataset model, stratified splits,
+//! normalization, plus [`synthetic`] generators standing in for the
+//! paper's four datasets and a [`libsvm`] parser so the genuine files
+//! drop in when available (see DESIGN.md §3 for the substitution table).
+
+pub mod libsvm;
+pub mod synthetic;
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// A labelled dense dataset. Labels are class ids `0..num_classes`; for
+/// binary problems the logistic-regression convention maps class 0 → −1
+/// and class 1 → +1 (see [`Dataset::signed_labels`]).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `(n, d)` feature matrix, row per example.
+    pub x: Matrix,
+    /// Class id per example, in `0..num_classes`.
+    pub y: Vec<u32>,
+    pub num_classes: usize,
+    /// Human-readable provenance (generator name or file path).
+    pub source: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// ±1 labels for binary problems (class 1 → +1, class 0 → −1).
+    pub fn signed_labels(&self) -> Vec<f32> {
+        assert_eq!(self.num_classes, 2, "signed labels need a binary task");
+        self.y.iter().map(|&c| if c == 1 { 1.0 } else { -1.0 }).collect()
+    }
+
+    /// One-hot label matrix `(n, num_classes)`.
+    pub fn one_hot(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n(), self.num_classes);
+        for (i, &c) in self.y.iter().enumerate() {
+            m.set(i, c as usize, 1.0);
+        }
+        m
+    }
+
+    /// Indices of every class: `out[c]` lists examples with label `c`.
+    pub fn class_indices(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.num_classes];
+        for (i, &c) in self.y.iter().enumerate() {
+            out[c as usize].push(i);
+        }
+        out
+    }
+
+    /// Restrict to a subset of rows (keeps labels aligned).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.gather_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            num_classes: self.num_classes,
+            source: format!("{}[subset:{}]", self.source, idx.len()),
+        }
+    }
+
+    /// Class-stratified train/test split: each class is split with the
+    /// same ratio so class balance is preserved (the paper's covtype
+    /// protocol splits the training file in half).
+    pub fn stratified_split(&self, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut train_idx = Vec::new();
+        let mut test_idx = Vec::new();
+        for mut idx in self.class_indices() {
+            rng.shuffle(&mut idx);
+            let k = ((idx.len() as f64) * train_frac).round() as usize;
+            train_idx.extend_from_slice(&idx[..k]);
+            test_idx.extend_from_slice(&idx[k..]);
+        }
+        rng.shuffle(&mut train_idx);
+        rng.shuffle(&mut test_idx);
+        (self.subset(&train_idx), self.subset(&test_idx))
+    }
+
+    /// Scale every feature into `[0, 1]` (min-max, per column), the
+    /// paper's MNIST/CIFAR normalization. No-ops on constant columns.
+    pub fn normalize_unit_interval(&mut self) {
+        let (n, d) = (self.n(), self.d());
+        for j in 0..d {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for i in 0..n {
+                let v = self.x.get(i, j);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let span = hi - lo;
+            if span > 0.0 {
+                for i in 0..n {
+                    let v = self.x.get(i, j);
+                    self.x.set(i, j, (v - lo) / span);
+                }
+            }
+        }
+    }
+
+    /// Scale every row to unit L2 norm (makes Eq. 9's `‖x_i‖ ≤ 1`
+    /// precondition hold so feature distances bound gradient distances).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n() {
+            let r = self.x.row_mut(i);
+            let nrm = crate::linalg::norm2(r);
+            if nrm > 0.0 {
+                for v in r.iter_mut() {
+                    *v /= nrm;
+                }
+            }
+        }
+    }
+
+    /// Per-class counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_classes];
+        for &y in &self.y {
+            c[y as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        // 6 points, 2 classes, 2 dims.
+        Dataset {
+            x: Matrix::from_vec(6, 2, vec![0., 0., 1., 0., 0., 1., 5., 5., 6., 5., 5., 6.]),
+            y: vec![0, 0, 0, 1, 1, 1],
+            num_classes: 2,
+            source: "toy".into(),
+        }
+    }
+
+    #[test]
+    fn signed_labels_map() {
+        let d = toy();
+        assert_eq!(d.signed_labels(), vec![-1., -1., -1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn one_hot_rows_sum_to_one() {
+        let d = toy();
+        let oh = d.one_hot();
+        for i in 0..d.n() {
+            assert_eq!(oh.row(i).iter().sum::<f32>(), 1.0);
+            assert_eq!(oh.get(i, d.y[i] as usize), 1.0);
+        }
+    }
+
+    #[test]
+    fn class_indices_partition() {
+        let d = toy();
+        let ci = d.class_indices();
+        assert_eq!(ci[0], vec![0, 1, 2]);
+        assert_eq!(ci[1], vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn subset_keeps_alignment() {
+        let d = toy();
+        let s = d.subset(&[3, 0]);
+        assert_eq!(s.y, vec![1, 0]);
+        assert_eq!(s.x.row(0), &[5., 5.]);
+    }
+
+    #[test]
+    fn stratified_split_preserves_ratio() {
+        let d = toy();
+        let mut rng = Rng::new(0);
+        let (tr, te) = d.stratified_split(2.0 / 3.0, &mut rng);
+        assert_eq!(tr.n(), 4);
+        assert_eq!(te.n(), 2);
+        assert_eq!(tr.class_counts(), vec![2, 2]);
+        assert_eq!(te.class_counts(), vec![1, 1]);
+    }
+
+    #[test]
+    fn normalize_unit_interval_bounds() {
+        let mut d = toy();
+        d.normalize_unit_interval();
+        for v in &d.x.data {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut d = toy();
+        d.normalize_rows();
+        for i in 0..d.n() {
+            let n = crate::linalg::norm2(d.x.row(i));
+            if n > 0.0 {
+                assert!((n - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+}

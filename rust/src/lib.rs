@@ -1,0 +1,46 @@
+//! # CRAIG — Coresets for Data-efficient Training of Machine Learning Models
+//!
+//! A production-grade reproduction of Mirzasoleiman, Bilmes & Leskovec,
+//! *"Coresets for Data-efficient Training of Machine Learning Models"*
+//! (ICML 2020), built as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the submodular
+//!   coreset-selection engine ([`coreset`]), the weighted incremental
+//!   gradient optimizer family ([`optim`]), the training/reselection loop
+//!   ([`trainer`]) and the streaming selection pipeline ([`pipeline`]).
+//! * **L2** — the paper's objectives (logistic regression, the MNIST MLP)
+//!   written in JAX, AOT-lowered once to HLO text (`python/compile/`).
+//! * **L1** — Pallas kernels for the compute hot-spots (tiled pairwise
+//!   distances, fused logreg gradient), lowered into the same HLO.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (the `xla`
+//! crate); python never runs on the request path.  Every XLA-backed
+//! computation has a pure-rust twin in [`model`], used for cross-checking
+//! and for registry-less unit tests.
+//!
+//! Substrates ([`rng`], [`linalg`], [`data`], [`config`], [`cli`],
+//! [`metrics`], [`bench`], [`prop`], [`util`]) are implemented from
+//! scratch: the build environment's offline registry carries only the
+//! `xla` + `anyhow` dependency closure.
+//!
+//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
+//! the reproduction of every figure.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coreset;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod pipeline;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod trainer;
+pub mod util;
+
+/// Crate version, surfaced by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,409 @@
+//! `craig` — the L3 coordinator CLI / launcher.
+//!
+//! Subcommands:
+//! * `info`         — environment, artifact registry, dataset summaries.
+//! * `select`       — run CRAIG selection, print coreset stats, dump CSV.
+//! * `train`        — convex experiment (logreg; SGD/SAGA/SVRG ×
+//!                    full/craig/random), per-epoch CSV trace.
+//! * `train-mlp`    — neural experiment with per-epoch reselection.
+//! * `grad-error`   — Fig. 2 gradient-estimation error measurement.
+//!
+//! Every run is reproducible from `--seed`; all randomness flows from it.
+
+use anyhow::Result;
+
+use craig::cli::{App, Args, Command};
+use craig::coreset::{self, Budget, Method, NativePairwise, PairwiseEngine, SelectorConfig};
+use craig::data::{synthetic, Dataset};
+use craig::metrics::CsvWriter;
+use craig::optim::LrSchedule;
+use craig::rng::Rng;
+use craig::runtime::{Runtime, XlaPairwise};
+use craig::trainer::convex::{train_logreg, ConvexConfig, IgMethod};
+use craig::trainer::neural::{train_mlp, NeuralConfig};
+use craig::trainer::SubsetMode;
+use craig::csv_row;
+
+fn app() -> App {
+    App {
+        name: "craig",
+        about: "Coresets for Data-efficient Training (ICML 2020) — rust+JAX+Pallas reproduction",
+        commands: vec![
+            Command::new("info", "show environment, artifacts and dataset stats")
+                .opt_default("dataset", "covtype", "dataset to summarize")
+                .opt_default("n", "2000", "synthetic dataset size"),
+            Command::new("select", "run CRAIG coreset selection")
+                .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
+                .opt_default("n", "10000", "synthetic dataset size")
+                .opt_default("fraction", "0.1", "subset fraction per class")
+                .opt_default("method", "lazy", "lazy|naive|stochastic")
+                .opt_default("seed", "0", "rng seed")
+                .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
+                .opt("out", "CSV path for the selected coreset"),
+            Command::new("train", "convex experiment: logreg on full/craig/random")
+                .opt_default("dataset", "covtype", "dataset name")
+                .opt_default("n", "10000", "synthetic dataset size")
+                .opt_default("mode", "craig", "full|craig|random")
+                .opt_default("fraction", "0.1", "subset fraction")
+                .opt_default("method", "sgd", "sgd|saga|svrg")
+                .opt_default("epochs", "20", "epoch count")
+                .opt_default("batch", "10", "minibatch size (sgd)")
+                .opt_default("lam", "1e-5", "L2 regularization")
+                .opt_default("schedule", "exp:0.5:0.9", "lr schedule spec")
+                .opt_default("seed", "0", "rng seed")
+                .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
+                .opt("out", "CSV path for the epoch trace"),
+            Command::new("train-mlp", "neural experiment with per-epoch reselection")
+                .opt_default("dataset", "mnist", "dataset name")
+                .opt_default("n", "2000", "synthetic dataset size")
+                .opt_default("mode", "craig", "full|craig|random")
+                .opt_default("fraction", "0.5", "subset fraction")
+                .opt_default("reselect", "1", "reselect every R epochs")
+                .opt_default("epochs", "10", "epoch count")
+                .opt_default("hidden", "100", "hidden units")
+                .opt_default("lr", "0.01", "constant learning rate")
+                .opt_default("seed", "0", "rng seed")
+                .opt("out", "CSV path for the epoch trace"),
+            Command::new("run", "run an experiment described by a config file")
+                .opt("config", "path to a TOML-subset experiment config")
+                .repeated("set", "override: --set key=value (repeatable)"),
+            Command::new("grad-error", "measure gradient-estimation error (Fig. 2)")
+                .opt_default("dataset", "covtype", "dataset name")
+                .opt_default("n", "4000", "synthetic dataset size")
+                .opt_default("fraction", "0.1", "subset fraction")
+                .opt_default("samples", "10", "sampled parameter points")
+                .opt_default("seed", "0", "rng seed"),
+        ],
+    }
+}
+
+fn load_dataset(a: &Args) -> Result<Dataset> {
+    let name = a.opt("dataset").unwrap_or("covtype");
+    let n: usize = a.parse_opt("n", 2000)?;
+    let seed: u64 = a.parse_opt("seed", 0)?;
+    synthetic::by_name(name, n, seed)
+}
+
+/// Resolve the pairwise backend; `auto` = XLA when artifacts exist.
+fn make_engine(spec: &str) -> Result<Box<dyn PairwiseEngine>> {
+    match spec {
+        "native" => Ok(Box::new(NativePairwise)),
+        "xla" => {
+            let rt = Runtime::load_default_shared()?;
+            Ok(Box::new(XlaPairwise::new(rt)))
+        }
+        "auto" => {
+            if Runtime::available() {
+                let rt = Runtime::load_default_shared()?;
+                Ok(Box::new(XlaPairwise::new(rt)))
+            } else {
+                eprintln!("note: artifacts/ not found, using native pairwise engine");
+                Ok(Box::new(NativePairwise))
+            }
+        }
+        other => anyhow::bail!("unknown engine '{other}' (native|xla|auto)"),
+    }
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    match s {
+        "lazy" => Ok(Method::Lazy),
+        "naive" => Ok(Method::Naive),
+        "stochastic" => Ok(Method::Stochastic { delta: 0.05 }),
+        other => anyhow::bail!("unknown selection method '{other}'"),
+    }
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    println!("craig v{} — CRAIG reproduction (ICML 2020)", craig::VERSION);
+    println!("artifacts: {}", if Runtime::available() { "present" } else { "MISSING (run `make artifacts`)" });
+    if Runtime::available() {
+        let rt = Runtime::load(&Runtime::default_dir())?;
+        println!("  registry entries: {}", rt.registry().len());
+        for kind in ["pairwise", "logreg_grad", "logreg_margins", "mlp_grad", "mlp_logits", "mlp_proxy"] {
+            let c = rt.registry().by_kind(kind).count();
+            println!("    {kind:<16} {c}");
+        }
+    }
+    let ds = load_dataset(a)?;
+    println!("dataset: {} n={} d={} classes={:?}", ds.source, ds.n(), ds.d(), ds.class_counts());
+    Ok(())
+}
+
+fn cmd_select(a: &Args) -> Result<()> {
+    let ds = load_dataset(a)?;
+    let frac: f64 = a.parse_opt("fraction", 0.1)?;
+    let seed: u64 = a.parse_opt("seed", 0)?;
+    let cfg = SelectorConfig {
+        method: parse_method(a.opt("method").unwrap_or("lazy"))?,
+        budget: Budget::Fraction(frac),
+        per_class: true,
+        seed,
+    };
+    let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
+    let t0 = std::time::Instant::now();
+    let res = coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, engine.as_mut());
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "selected {} / {} points ({}) in {:.2}s  [engine={}, evals={}]",
+        res.coreset.indices.len(),
+        ds.n(),
+        ds.source,
+        dt,
+        engine.name(),
+        res.evaluations
+    );
+    println!("  per-class sizes: {:?}", res.class_sizes);
+    println!("  certified epsilon (Eq. 15): {:.4}", res.epsilon);
+    println!("  gamma_max: {}", res.coreset.gamma_max());
+    let stats = coreset::diagnostics::subset_stats(&ds.x, &res.coreset);
+    println!(
+        "  coverage={:.4} redundancy={:.4} weight-gini={:.3}",
+        stats.coverage_dist, stats.redundancy_nn_dist, stats.weight_gini
+    );
+    if let Some(path) = a.opt("out") {
+        let mut w = CsvWriter::create(std::path::Path::new(path), &["index", "gamma"])?;
+        for (i, g) in res.coreset.indices.iter().zip(&res.coreset.gamma) {
+            w.row(&csv_row![i, g])?;
+        }
+        w.flush()?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+fn subset_mode(a: &Args, frac: f64, reselect: usize, seed: u64) -> Result<SubsetMode> {
+    Ok(match a.opt("mode").unwrap_or("craig") {
+        "full" => SubsetMode::Full,
+        "craig" => SubsetMode::Craig {
+            cfg: SelectorConfig { budget: Budget::Fraction(frac), seed, ..Default::default() },
+            reselect_every: reselect,
+        },
+        "random" => SubsetMode::Random {
+            budget: Budget::Fraction(frac),
+            reselect_every: reselect,
+            seed,
+        },
+        other => anyhow::bail!("unknown mode '{other}' (full|craig|random)"),
+    })
+}
+
+fn write_history(path: &str, h: &craig::trainer::History) -> Result<()> {
+    let mut w = CsvWriter::create(
+        std::path::Path::new(path),
+        &["epoch", "train_loss", "test_metric", "lr", "select_s", "train_s", "grad_evals", "distinct_points"],
+    )?;
+    for r in &h.records {
+        w.row(&csv_row![
+            r.epoch,
+            r.train_loss,
+            r.test_metric,
+            r.lr,
+            r.select_s,
+            r.train_s,
+            r.grad_evals,
+            r.distinct_points_used
+        ])?;
+    }
+    w.flush()?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let ds = load_dataset(a)?;
+    let seed: u64 = a.parse_opt("seed", 0)?;
+    let mut rng = Rng::new(seed);
+    let (train, test) = ds.stratified_split(0.5, &mut rng);
+    let frac: f64 = a.parse_opt("fraction", 0.1)?;
+    let cfg = ConvexConfig {
+        method: IgMethod::parse(a.opt("method").unwrap_or("sgd"))?,
+        schedule: LrSchedule::parse(a.opt("schedule").unwrap_or("exp:0.5:0.9"))?,
+        epochs: a.parse_opt("epochs", 20)?,
+        batch_size: a.parse_opt("batch", 10)?,
+        lam: a.parse_opt("lam", 1e-5f32)?,
+        seed,
+        subset: subset_mode(a, frac, 0, seed)?,
+    };
+    let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
+    let h = train_logreg(&train, &test, &cfg, engine.as_mut())?;
+    println!(
+        "mode={} method={} subset={}  final: loss={:.5} test_err={:.4}  select={:.2}s train={:.2}s",
+        cfg.subset.tag(),
+        cfg.method.name(),
+        h.subset_size,
+        h.last().train_loss,
+        h.last().test_metric,
+        h.last().select_s,
+        h.last().train_s
+    );
+    if let Some(p) = a.opt("out") {
+        write_history(p, &h)?;
+    }
+    Ok(())
+}
+
+fn cmd_train_mlp(a: &Args) -> Result<()> {
+    let ds = load_dataset(a)?;
+    let seed: u64 = a.parse_opt("seed", 0)?;
+    let mut rng = Rng::new(seed);
+    let (train, test) = ds.stratified_split(0.8, &mut rng);
+    let frac: f64 = a.parse_opt("fraction", 0.5)?;
+    let reselect: usize = a.parse_opt("reselect", 1)?;
+    let lr: f32 = a.parse_opt("lr", 0.01f32)?;
+    let cfg = NeuralConfig {
+        hidden: a.parse_opt("hidden", 100)?,
+        epochs: a.parse_opt("epochs", 10)?,
+        schedule: craig::optim::schedules::Warmup {
+            warmup_epochs: 0,
+            inner: LrSchedule::Const { a0: lr },
+        },
+        seed,
+        subset: subset_mode(a, frac, reselect, seed)?,
+        ..Default::default()
+    };
+    let mut engine: Box<dyn PairwiseEngine> = Box::new(NativePairwise);
+    let h = train_mlp(&train, &test, &cfg, engine.as_mut())?;
+    println!(
+        "mode={} subset={}  final: loss={:.5} test_acc={:.4}  select={:.2}s train={:.2}s",
+        cfg.subset.tag(),
+        h.subset_size,
+        h.last().train_loss,
+        h.last().test_metric,
+        h.last().select_s,
+        h.last().train_s
+    );
+    if let Some(p) = a.opt("out") {
+        write_history(p, &h)?;
+    }
+    Ok(())
+}
+
+/// Config-file driven experiment (the launcher path): see
+/// `configs/fig1_sgd.toml` for the schema.
+fn cmd_run(a: &Args) -> Result<()> {
+    let path = a.req("config")?;
+    let mut cfg = craig::config::Config::load(std::path::Path::new(path))?;
+    for ov in a.opt_all("set") {
+        let (k, v) = ov
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{ov}'"))?;
+        cfg.set(k, v)?;
+    }
+    cfg.require_known(&[
+        "name",
+        "data.dataset",
+        "data.n",
+        "data.train_frac",
+        "data.seed",
+        "train.mode",
+        "train.method",
+        "train.fraction",
+        "train.epochs",
+        "train.batch",
+        "train.lam",
+        "train.schedule",
+        "train.reselect_every",
+        "out.csv",
+    ])?;
+
+    let ds = synthetic::by_name(
+        &cfg.str_or("data.dataset", "covtype"),
+        cfg.int_or("data.n", 10_000) as usize,
+        cfg.int_or("data.seed", 0) as u64,
+    )?;
+    let seed = cfg.int_or("data.seed", 0) as u64;
+    let mut rng = Rng::new(seed);
+    let (train, test) = ds.stratified_split(cfg.float_or("data.train_frac", 0.5), &mut rng);
+
+    let frac = cfg.float_or("train.fraction", 0.1);
+    let reselect = cfg.int_or("train.reselect_every", 0) as usize;
+    let mode = match cfg.str_or("train.mode", "craig").as_str() {
+        "full" => SubsetMode::Full,
+        "craig" => SubsetMode::Craig {
+            cfg: SelectorConfig { budget: Budget::Fraction(frac), seed, ..Default::default() },
+            reselect_every: reselect,
+        },
+        "random" => SubsetMode::Random {
+            budget: Budget::Fraction(frac),
+            reselect_every: reselect,
+            seed,
+        },
+        other => anyhow::bail!("train.mode '{other}' (full|craig|random)"),
+    };
+    let tcfg = ConvexConfig {
+        method: IgMethod::parse(&cfg.str_or("train.method", "sgd"))?,
+        schedule: LrSchedule::parse(&cfg.str_or("train.schedule", "exp:0.5:0.9"))?,
+        epochs: cfg.int_or("train.epochs", 20) as usize,
+        batch_size: cfg.int_or("train.batch", 10) as usize,
+        lam: cfg.float_or("train.lam", 1e-5) as f32,
+        seed,
+        subset: mode,
+    };
+    let mut engine = make_engine("auto")?;
+    let h = train_logreg(&train, &test, &tcfg, engine.as_mut())?;
+    println!(
+        "[{}] mode={} method={} subset={} final: loss={:.5} test_err={:.4} ({:.2}s select, {:.2}s train)",
+        cfg.str_or("name", "experiment"),
+        tcfg.subset.tag(),
+        tcfg.method.name(),
+        h.subset_size,
+        h.last().train_loss,
+        h.last().test_metric,
+        h.last().select_s,
+        h.last().train_s,
+    );
+    if let Ok(out) = cfg.str("out.csv") {
+        write_history(out, &h)?;
+    }
+    Ok(())
+}
+
+fn cmd_grad_error(a: &Args) -> Result<()> {
+    let ds = load_dataset(a)?;
+    let frac: f64 = a.parse_opt("fraction", 0.1)?;
+    let samples: usize = a.parse_opt("samples", 10)?;
+    let seed: u64 = a.parse_opt("seed", 0)?;
+    let y = ds.signed_labels();
+    let mut prob = craig::model::LogReg::new(ds.x.clone(), y, 1e-5);
+    let cfg = SelectorConfig { budget: Budget::Fraction(frac), seed, ..Default::default() };
+    let mut eng = NativePairwise;
+    let res = coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+    let mut rng = Rng::new(seed ^ 0xE44);
+    let craig_s =
+        coreset::error::gradient_error_samples(&mut prob, &res.coreset, samples, 0.1, &mut rng);
+    let craig_sum = coreset::error::summarize(&craig_s);
+    let mut rng2 = Rng::new(seed ^ 0xF55);
+    let rand =
+        coreset::random_baseline(ds.n(), &ds.y, ds.num_classes, &Budget::Fraction(frac), true, &mut rng2);
+    let rand_s = coreset::error::gradient_error_samples(&mut prob, &rand, samples, 0.1, &mut rng);
+    let rand_sum = coreset::error::summarize(&rand_s);
+    println!("gradient estimation error (normalized by max ‖full grad‖):");
+    println!("  CRAIG : mean={:.4} max={:.4}", craig_sum.mean_normalized, craig_sum.max_normalized);
+    println!("  random: mean={:.4} max={:.4}", rand_sum.mean_normalized, rand_sum.max_normalized);
+    println!("  certified ε (Eq. 15, facility-location bound): {:.4}", res.epsilon);
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let result = match app().dispatch(&argv) {
+        Ok((name, args)) => match name {
+            "info" => cmd_info(&args),
+            "select" => cmd_select(&args),
+            "train" => cmd_train(&args),
+            "train-mlp" => cmd_train_mlp(&args),
+            "run" => cmd_run(&args),
+            "grad-error" => cmd_grad_error(&args),
+            _ => unreachable!(),
+        },
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

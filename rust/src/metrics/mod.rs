@@ -1,0 +1,309 @@
+//! Metrics substrate: timers, summary statistics, histograms and
+//! CSV/JSONL emitters used by the trainer, pipeline and every bench.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Wall-clock stopwatch with lap support. The trainer uses two of these
+/// to decompose run time into select-time vs train-time (Sec. 5's
+/// "run-time is subset selection plus minimization" accounting).
+#[derive(Debug)]
+pub struct Stopwatch {
+    started: Instant,
+    accumulated: f64,
+    running: bool,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// New, stopped stopwatch.
+    pub fn new() -> Self {
+        Stopwatch { started: Instant::now(), accumulated: 0.0, running: false }
+    }
+
+    /// New, already running.
+    pub fn started() -> Self {
+        Stopwatch { started: Instant::now(), accumulated: 0.0, running: true }
+    }
+
+    pub fn start(&mut self) {
+        if !self.running {
+            self.started = Instant::now();
+            self.running = true;
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if self.running {
+            self.accumulated += self.started.elapsed().as_secs_f64();
+            self.running = false;
+        }
+    }
+
+    /// Total seconds accumulated (includes the live lap if running).
+    pub fn secs(&self) -> f64 {
+        self.accumulated
+            + if self.running { self.started.elapsed().as_secs_f64() } else { 0.0 }
+    }
+
+    /// Time a closure, accumulating into this stopwatch.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// Streaming summary statistics (Welford) plus retained samples for
+/// exact quantiles when `keep_samples` is on (benches keep them).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    samples: Option<Vec<f64>>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn keeping_samples() -> Self {
+        Summary { samples: Some(Vec::new()), ..Self::new() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if let Some(s) = &mut self.samples {
+            s.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Exact quantile (requires `keeping_samples`), q in [0,1].
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let s = self.samples.as_ref()?;
+        if s.is_empty() {
+            return None;
+        }
+        let mut v = s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        Some(v[idx])
+    }
+
+    pub fn median(&self) -> Option<f64> {
+        self.quantile(0.5)
+    }
+}
+
+/// A tabular metrics sink: named columns, one `row()` call per record,
+/// written as CSV. Used by every fig* bench so EXPERIMENTS.md rows are
+/// regenerable byte-for-byte.
+pub struct CsvWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    columns: Vec<String>,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, columns: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut out = std::io::BufWriter::new(f);
+        writeln!(out, "{}", columns.join(","))?;
+        Ok(CsvWriter { out, columns: columns.iter().map(|s| s.to_string()).collect() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            values.len() == self.columns.len(),
+            "row has {} values, header has {}",
+            values.len(),
+            self.columns.len()
+        );
+        writeln!(self.out, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Format a row of mixed display values (helper for CsvWriter).
+#[macro_export]
+macro_rules! csv_row {
+    ($($v:expr),* $(,)?) => {
+        vec![$(format!("{}", $v)),*]
+    };
+}
+
+/// JSONL event log (hand-rolled encoding; values are escaped strings or
+/// raw numbers). Used by the pipeline for structured progress events.
+pub struct JsonlWriter {
+    out: std::io::BufWriter<std::fs::File>,
+}
+
+/// One JSON field value.
+pub enum Json {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Bool(bool),
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl JsonlWriter {
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        Ok(JsonlWriter { out: std::io::BufWriter::new(f) })
+    }
+
+    pub fn event(&mut self, fields: &[(&str, Json)]) -> Result<()> {
+        let mut line = String::from("{");
+        for (i, (k, v)) in fields.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            let _ = match v {
+                Json::Num(x) => write!(line, "\"{}\":{}", escape_json(k), x),
+                Json::Int(x) => write!(line, "\"{}\":{}", escape_json(k), x),
+                Json::Str(s) => write!(line, "\"{}\":\"{}\"", escape_json(k), escape_json(s)),
+                Json::Bool(b) => write!(line, "\"{}\":{}", escape_json(k), b),
+            };
+        }
+        line.push('}');
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(sw.secs() >= 0.009, "{}", sw.secs());
+        let before = sw.secs();
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        assert_eq!(sw.secs(), before, "stopped watch must not tick");
+    }
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::keeping_samples();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.var() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.median(), Some(3.0));
+        assert_eq!(s.quantile(1.0), Some(5.0));
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let dir = std::env::temp_dir().join("craig_test_csv");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&csv_row![1, 2.5]).unwrap();
+        w.row(&csv_row!["x", true]).unwrap();
+        assert!(w.row(&csv_row![1]).is_err());
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\nx,true\n");
+    }
+
+    #[test]
+    fn jsonl_escaping() {
+        let dir = std::env::temp_dir().join("craig_test_jsonl");
+        let path = dir.join("t.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.event(&[("msg", Json::Str("a\"b\n".into())), ("v", Json::Int(3))]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"msg\":\"a\\\"b\\n\",\"v\":3}\n");
+    }
+}

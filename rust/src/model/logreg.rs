@@ -1,0 +1,232 @@
+//! L2-regularized logistic regression (Sec. 5.1 of the paper):
+//! `f_i(w) = ln(1 + exp(-y_i ⟨w, x_i⟩)) + (λ/2)‖w‖²`, labels in {−1,+1}.
+
+use crate::linalg::{self, Matrix};
+
+use super::GradOracle;
+
+/// Numerically-stable `ln(1 + e^{-m})`.
+#[inline]
+pub fn log1p_exp_neg(m: f32) -> f32 {
+    if m > 0.0 {
+        (-m).exp().ln_1p()
+    } else {
+        -m + m.exp().ln_1p()
+    }
+}
+
+/// `σ(-m) = 1 / (1 + e^{m})`, stable.
+#[inline]
+pub fn sigmoid_neg(m: f32) -> f32 {
+    if m > 0.0 {
+        let e = (-m).exp();
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + m.exp())
+    }
+}
+
+/// Logistic-regression training problem bound to a dataset.
+pub struct LogReg {
+    /// `(n, d)` features.
+    pub x: Matrix,
+    /// ±1 labels.
+    pub y: Vec<f32>,
+    /// L2 coefficient λ.
+    pub lam: f32,
+}
+
+impl LogReg {
+    pub fn new(x: Matrix, y: Vec<f32>, lam: f32) -> Self {
+        assert_eq!(x.rows, y.len());
+        assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
+        LogReg { x, y, lam }
+    }
+
+    /// Margins `x_i · w` for arbitrary feature rows.
+    pub fn margins(&self, w: &[f32]) -> Vec<f32> {
+        self.x.matvec(w)
+    }
+
+    /// Per-example gradient "coefficient": `∇f_i = c_i·x_i + λw` with
+    /// `c_i = -y_i σ(-y_i m_i)`. SAGA/SVRG store these scalars instead of
+    /// full gradient vectors (the classic GLM memory trick).
+    #[inline]
+    pub fn grad_coef(&self, w: &[f32], i: usize) -> f32 {
+        let m = self.y[i] * linalg::dot(self.x.row(i), w);
+        -self.y[i] * sigmoid_neg(m)
+    }
+
+    /// Loss of example `i` at `w` (incl. regularizer).
+    pub fn loss_i(&self, w: &[f32], i: usize) -> f32 {
+        let m = self.y[i] * linalg::dot(self.x.row(i), w);
+        log1p_exp_neg(m) + 0.5 * self.lam * linalg::dot(w, w)
+    }
+
+    /// Classification error rate of `w` on an arbitrary labelled set.
+    pub fn error_rate(x: &Matrix, y: &[f32], w: &[f32]) -> f32 {
+        let mut wrong = 0usize;
+        for i in 0..x.rows {
+            let m = linalg::dot(x.row(i), w);
+            let pred = if m >= 0.0 { 1.0 } else { -1.0 };
+            if pred != y[i] {
+                wrong += 1;
+            }
+        }
+        wrong as f32 / x.rows.max(1) as f32
+    }
+
+    /// Mean test loss (γ=1 average) on an arbitrary labelled set.
+    pub fn mean_loss(x: &Matrix, y: &[f32], w: &[f32], lam: f32) -> f32 {
+        let mut s = 0.0f32;
+        for i in 0..x.rows {
+            let m = y[i] * linalg::dot(x.row(i), w);
+            s += log1p_exp_neg(m);
+        }
+        s / x.rows.max(1) as f32 + 0.5 * lam * linalg::dot(w, w)
+    }
+}
+
+impl GradOracle for LogReg {
+    fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    fn num_examples(&self) -> usize {
+        self.x.rows
+    }
+
+    fn loss_grad_at(
+        &mut self,
+        w: &[f32],
+        idx: &[usize],
+        gamma: &[f32],
+        grad_out: &mut [f32],
+    ) -> f32 {
+        assert_eq!(idx.len(), gamma.len());
+        assert_eq!(grad_out.len(), self.x.cols);
+        grad_out.fill(0.0);
+        let mut loss = 0.0f32;
+        let mut sum_gamma = 0.0f32;
+        for (&i, &g) in idx.iter().zip(gamma) {
+            let xi = self.x.row(i);
+            let m = self.y[i] * linalg::dot(xi, w);
+            loss += g * log1p_exp_neg(m);
+            let c = -g * self.y[i] * sigmoid_neg(m);
+            linalg::axpy(c, xi, grad_out);
+            sum_gamma += g;
+        }
+        // Regularizer: Σγ · (λ/2)‖w‖² — matches python/compile/model.py.
+        let w2 = linalg::dot(w, w);
+        loss += 0.5 * self.lam * sum_gamma * w2;
+        linalg::axpy(self.lam * sum_gamma, w, grad_out);
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::rng::Rng;
+
+    fn problem(n: usize, seed: u64) -> (LogReg, Vec<f32>) {
+        let ds = synthetic::covtype_like(n, seed);
+        let y = ds.signed_labels();
+        let d = ds.d();
+        let lr = LogReg::new(ds.x, y, 1e-3);
+        let mut rng = Rng::new(seed);
+        (lr, rng.normal_vec(d, 0.0, 0.1))
+    }
+
+    #[test]
+    fn stable_helpers() {
+        // Large positive/negative margins must not overflow.
+        assert!(log1p_exp_neg(100.0) < 1e-6);
+        assert!((log1p_exp_neg(-100.0) - 100.0).abs() < 1e-3);
+        assert!(sigmoid_neg(100.0) < 1e-6);
+        assert!((sigmoid_neg(-100.0) - 1.0).abs() < 1e-6);
+        assert!((sigmoid_neg(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (mut lr, w) = problem(50, 0);
+        let idx: Vec<usize> = (0..50).collect();
+        let gamma: Vec<f32> = (0..50).map(|i| 1.0 + (i % 3) as f32).collect();
+        let mut g = vec![0.0; lr.dim()];
+        lr.loss_grad_at(&w, &idx, &gamma, &mut g);
+        let eps = 1e-3f32;
+        for j in [0usize, 7, 23, 53] {
+            let mut wp = w.clone();
+            wp[j] += eps;
+            let mut wm = w.clone();
+            wm[j] -= eps;
+            let mut scratch = vec![0.0; lr.dim()];
+            let lp = lr.loss_grad_at(&wp, &idx, &gamma, &mut scratch);
+            let lm = lr.loss_grad_at(&wm, &idx, &gamma, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (g[j] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                "coord {j}: analytic {} vs fd {fd}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn grad_coef_reconstructs_gradient() {
+        let (mut lr, w) = problem(20, 1);
+        let i = 7;
+        let c = lr.grad_coef(&w, i);
+        let mut expect = vec![0.0; lr.dim()];
+        lr.loss_grad_at(&w, &[i], &[1.0], &mut expect);
+        // expect = c*x_i + λ·w
+        let xi: Vec<f32> = lr.x.row(i).to_vec();
+        for j in 0..lr.dim() {
+            let manual = c * xi[j] + lr.lam * w[j];
+            assert!((expect[j] - manual).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gamma_weighting_is_linear() {
+        let (mut lr, w) = problem(30, 2);
+        let idx: Vec<usize> = (0..30).collect();
+        let g1 = vec![1.0f32; 30];
+        let g2 = vec![2.0f32; 30];
+        let mut grad1 = vec![0.0; lr.dim()];
+        let mut grad2 = vec![0.0; lr.dim()];
+        let l1 = lr.loss_grad_at(&w, &idx, &g1, &mut grad1);
+        let l2 = lr.loss_grad_at(&w, &idx, &g2, &mut grad2);
+        assert!((l2 - 2.0 * l1).abs() < 1e-2 * l1.abs().max(1.0));
+        for j in 0..lr.dim() {
+            assert!((grad2[j] - 2.0 * grad1[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn error_rate_sane() {
+        let (lr, _) = problem(100, 3);
+        // An all-zero w predicts +1 everywhere → error = fraction of −1.
+        let w = vec![0.0; lr.dim()];
+        let e = LogReg::error_rate(&lr.x, &lr.y, &w);
+        let neg = lr.y.iter().filter(|&&v| v < 0.0).count() as f32 / 100.0;
+        assert!((e - neg).abs() < 1e-6);
+    }
+
+    #[test]
+    fn full_gd_decreases_loss() {
+        let (mut lr, mut w) = problem(200, 4);
+        let idx: Vec<usize> = (0..200).collect();
+        let gamma = vec![1.0f32; 200];
+        let mut g = vec![0.0; lr.dim()];
+        let l0 = lr.loss_grad_at(&w, &idx, &gamma, &mut g);
+        for _ in 0..50 {
+            lr.loss_grad_at(&w, &idx, &gamma, &mut g);
+            linalg::axpy(-0.001, &g.clone(), &mut w);
+        }
+        let l1 = lr.loss_grad_at(&w, &idx, &gamma, &mut g);
+        assert!(l1 < l0, "GD should reduce loss: {l0} -> {l1}");
+    }
+}

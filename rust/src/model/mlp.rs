@@ -1,0 +1,387 @@
+//! The paper's MNIST network (Sec. 5.2): `D → H` sigmoid → `C` softmax
+//! with cross-entropy and L2 regularization — manual backprop, flattened
+//! parameter vector so the generic optimizers apply unchanged.
+
+use crate::linalg::{self, Matrix};
+use crate::rng::Rng;
+
+use super::GradOracle;
+
+/// Parameter views over a flat buffer: `[w1 (d·h) | b1 (h) | w2 (h·c) | b2 (c)]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlpShape {
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+}
+
+impl MlpShape {
+    pub fn num_params(&self) -> usize {
+        self.d * self.h + self.h + self.h * self.c + self.c
+    }
+
+    /// Split a flat parameter slice into (w1, b1, w2, b2) sub-slices.
+    pub fn split<'a>(&self, p: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let (w1, rest) = p.split_at(self.d * self.h);
+        let (b1, rest) = rest.split_at(self.h);
+        let (w2, b2) = rest.split_at(self.h * self.c);
+        (w1, b1, w2, b2)
+    }
+
+    /// Mutable variant.
+    pub fn split_mut<'a>(
+        &self,
+        p: &'a mut [f32],
+    ) -> (&'a mut [f32], &'a mut [f32], &'a mut [f32], &'a mut [f32]) {
+        let (w1, rest) = p.split_at_mut(self.d * self.h);
+        let (b1, rest) = rest.split_at_mut(self.h);
+        let (w2, b2) = rest.split_at_mut(self.h * self.c);
+        (w1, b1, w2, b2)
+    }
+}
+
+/// Glorot-uniform initial parameters.
+pub struct MlpParams;
+
+impl MlpParams {
+    pub fn init(shape: MlpShape, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; shape.num_params()];
+        {
+            let (w1, _b1, w2, _b2) = shape.split_mut(&mut p);
+            let lim1 = (6.0 / (shape.d + shape.h) as f64).sqrt();
+            for v in w1.iter_mut() {
+                *v = rng.uniform(-lim1, lim1) as f32;
+            }
+            let lim2 = (6.0 / (shape.h + shape.c) as f64).sqrt();
+            for v in w2.iter_mut() {
+                *v = rng.uniform(-lim2, lim2) as f32;
+            }
+        }
+        p
+    }
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// MLP training problem bound to a dataset.
+pub struct Mlp {
+    pub shape: MlpShape,
+    /// `(n, d)` features.
+    pub x: Matrix,
+    /// `(n, c)` one-hot labels.
+    pub y1h: Matrix,
+    pub lam: f32,
+    // Scratch buffers reused across calls (hot-path allocation control).
+    scratch_a1: Vec<f32>,
+    scratch_p: Vec<f32>,
+}
+
+impl Mlp {
+    pub fn new(shape: MlpShape, x: Matrix, y1h: Matrix, lam: f32) -> Self {
+        assert_eq!(x.cols, shape.d);
+        assert_eq!(y1h.cols, shape.c);
+        assert_eq!(x.rows, y1h.rows);
+        Mlp {
+            shape,
+            x,
+            y1h,
+            lam,
+            scratch_a1: vec![0.0; shape.h],
+            scratch_p: vec![0.0; shape.c],
+        }
+    }
+
+    /// Forward pass for one example: fills `a1` (hidden activations) and
+    /// `p` (softmax probabilities); returns the example's CE loss given
+    /// its one-hot row.
+    fn forward_one(
+        shape: &MlpShape,
+        params: &[f32],
+        xi: &[f32],
+        yi: &[f32],
+        a1: &mut [f32],
+        p: &mut [f32],
+    ) -> f32 {
+        let (w1, b1, w2, b2) = shape.split(params);
+        let (d, h, c) = (shape.d, shape.h, shape.c);
+        // a1 = sigmoid(x W1 + b1); W1 is row-major (d, h).
+        for j in 0..h {
+            a1[j] = b1[j];
+        }
+        for k in 0..d {
+            let xv = xi[k];
+            if xv != 0.0 {
+                linalg::axpy(xv, &w1[k * h..(k + 1) * h], a1);
+            }
+        }
+        for j in 0..h {
+            a1[j] = sigmoid(a1[j]);
+        }
+        // logits = a1 W2 + b2; W2 row-major (h, c).
+        for m in 0..c {
+            p[m] = b2[m];
+        }
+        for j in 0..h {
+            linalg::axpy(a1[j], &w2[j * c..(j + 1) * c], p);
+        }
+        // log-softmax CE, stable.
+        let maxl = p.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for m in 0..c {
+            p[m] = (p[m] - maxl).exp();
+            sum += p[m];
+        }
+        let mut loss = 0.0f32;
+        for m in 0..c {
+            p[m] /= sum;
+            if yi[m] > 0.0 {
+                loss -= yi[m] * p[m].max(1e-30).ln();
+            }
+        }
+        loss
+    }
+
+    /// Logits→class prediction accuracy on an arbitrary set.
+    pub fn accuracy(&mut self, params: &[f32], x: &Matrix, labels: &[u32]) -> f32 {
+        let shape = self.shape;
+        let mut a1 = vec![0.0f32; shape.h];
+        let mut p = vec![0.0f32; shape.c];
+        let zero_y = vec![0.0f32; shape.c];
+        let mut correct = 0usize;
+        for i in 0..x.rows {
+            Self::forward_one(&shape, params, x.row(i), &zero_y, &mut a1, &mut p);
+            let pred = crate::util::argmax(&p).unwrap() as u32;
+            if pred == labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f32 / x.rows.max(1) as f32
+    }
+
+    /// Mean CE loss (γ=1 average, incl. regularizer) on an arbitrary set.
+    pub fn mean_loss(&mut self, params: &[f32], x: &Matrix, y1h: &Matrix) -> f32 {
+        let shape = self.shape;
+        let mut a1 = vec![0.0f32; shape.h];
+        let mut p = vec![0.0f32; shape.c];
+        let mut s = 0.0f32;
+        for i in 0..x.rows {
+            s += Self::forward_one(&shape, params, x.row(i), y1h.row(i), &mut a1, &mut p);
+        }
+        let (w1, _, w2, _) = shape.split(params);
+        let reg = 0.5 * self.lam * (linalg::dot(w1, w1) + linalg::dot(w2, w2));
+        s / x.rows.max(1) as f32 + reg
+    }
+
+    /// CRAIG's deep gradient proxy (Sec. 3.4): rows of `softmax(z_L) − y`
+    /// for the given examples — the features the coreset is selected on.
+    pub fn proxy_features(&mut self, params: &[f32], idx: &[usize]) -> Matrix {
+        let shape = self.shape;
+        let mut out = Matrix::zeros(idx.len(), shape.c);
+        let mut a1 = vec![0.0f32; shape.h];
+        let mut p = vec![0.0f32; shape.c];
+        for (r, &i) in idx.iter().enumerate() {
+            Self::forward_one(&shape, params, self.x.row(i), self.y1h.row(i), &mut a1, &mut p);
+            let row = out.row_mut(r);
+            for m in 0..shape.c {
+                row[m] = p[m] - self.y1h.get(i, m);
+            }
+        }
+        out
+    }
+}
+
+impl GradOracle for Mlp {
+    fn dim(&self) -> usize {
+        self.shape.num_params()
+    }
+
+    fn num_examples(&self) -> usize {
+        self.x.rows
+    }
+
+    fn loss_grad_at(
+        &mut self,
+        params: &[f32],
+        idx: &[usize],
+        gamma: &[f32],
+        grad_out: &mut [f32],
+    ) -> f32 {
+        assert_eq!(params.len(), self.dim());
+        assert_eq!(grad_out.len(), self.dim());
+        let shape = self.shape;
+        let (d, h, c) = (shape.d, shape.h, shape.c);
+        grad_out.fill(0.0);
+        let mut loss = 0.0f32;
+        let mut sum_gamma = 0.0f32;
+
+        // Split scratch out of self to satisfy the borrow checker.
+        let mut a1 = std::mem::take(&mut self.scratch_a1);
+        let mut p = std::mem::take(&mut self.scratch_p);
+        let mut dz1 = vec![0.0f32; h];
+
+        for (&i, &g) in idx.iter().zip(gamma) {
+            let xi = self.x.row(i);
+            let yi = self.y1h.row(i);
+            loss += g * Self::forward_one(&shape, params, xi, yi, &mut a1, &mut p);
+            sum_gamma += g;
+
+            // Backward. dlogits = γ(p − y).
+            let (_, _, w2, _) = shape.split(params);
+            {
+                let (gw1, gb1, gw2, gb2) = shape.split_mut(grad_out);
+                // dz1 = (W2 · dlogits) ⊙ a1(1−a1)
+                for j in 0..h {
+                    let mut s = 0.0f32;
+                    let w2row = &w2[j * c..(j + 1) * c];
+                    for m in 0..c {
+                        s += w2row[m] * (p[m] - yi[m]);
+                    }
+                    dz1[j] = g * s * a1[j] * (1.0 - a1[j]);
+                }
+                // gw2[j,m] += γ a1[j] (p−y)[m];  gb2 += γ(p−y)
+                for j in 0..h {
+                    let gw2row = &mut gw2[j * c..(j + 1) * c];
+                    let a = g * a1[j];
+                    for m in 0..c {
+                        gw2row[m] += a * (p[m] - yi[m]);
+                    }
+                }
+                for m in 0..c {
+                    gb2[m] += g * (p[m] - yi[m]);
+                }
+                // gw1[k,j] += x[k] dz1[j];  gb1 += dz1
+                for k in 0..d {
+                    let xv = xi[k];
+                    if xv != 0.0 {
+                        linalg::axpy(xv, &dz1, &mut gw1[k * h..(k + 1) * h]);
+                    }
+                }
+                linalg::axpy(1.0, &dz1, gb1);
+            }
+        }
+
+        // Regularizer on weight matrices (not biases), scaled by Σγ.
+        let (w1, _, w2, _) = shape.split(params);
+        loss += 0.5 * self.lam * sum_gamma * (linalg::dot(w1, w1) + linalg::dot(w2, w2));
+        {
+            let reg = self.lam * sum_gamma;
+            let (gw1, _, gw2, _) = shape.split_mut(grad_out);
+            linalg::axpy(reg, w1, gw1);
+            linalg::axpy(reg, w2, gw2);
+        }
+
+        self.scratch_a1 = a1;
+        self.scratch_p = p;
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::rng::Rng;
+
+    fn problem(n: usize) -> (Mlp, Vec<f32>) {
+        let ds = synthetic::mnist_like(n, 0);
+        let shape = MlpShape { d: 784, h: 16, c: 10 };
+        let y1h = ds.one_hot();
+        let mlp = Mlp::new(shape, ds.x, y1h, 1e-4);
+        let mut rng = Rng::new(1);
+        let p = MlpParams::init(shape, &mut rng);
+        (mlp, p)
+    }
+
+    #[test]
+    fn shape_arithmetic() {
+        let s = MlpShape { d: 5, h: 3, c: 2 };
+        assert_eq!(s.num_params(), 15 + 3 + 6 + 2);
+        let buf = vec![0.0f32; s.num_params()];
+        let (w1, b1, w2, b2) = s.split(&buf);
+        assert_eq!((w1.len(), b1.len(), w2.len(), b2.len()), (15, 3, 6, 2));
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // Small shape for a cheap FD sweep.
+        let shape = MlpShape { d: 6, h: 4, c: 3 };
+        let ds = synthetic::by_name("mixture:6:3", 12, 3).unwrap();
+        let y1h = ds.one_hot();
+        let mut mlp = Mlp::new(shape, ds.x, y1h, 0.01);
+        let mut rng = Rng::new(2);
+        let params = MlpParams::init(shape, &mut rng);
+        let idx: Vec<usize> = (0..12).collect();
+        let gamma: Vec<f32> = (0..12).map(|i| 1.0 + (i % 2) as f32).collect();
+        let mut g = vec![0.0; shape.num_params()];
+        mlp.loss_grad_at(&params, &idx, &gamma, &mut g);
+        let eps = 1e-3f32;
+        let mut scratch = vec![0.0; shape.num_params()];
+        for j in (0..shape.num_params()).step_by(7) {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let lp = mlp.loss_grad_at(&pp, &idx, &gamma, &mut scratch);
+            pp[j] -= 2.0 * eps;
+            let lm = mlp.loss_grad_at(&pp, &idx, &gamma, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (g[j] - fd).abs() < 3e-2 * (1.0 + fd.abs()),
+                "param {j}: analytic {} vs fd {fd}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn proxy_rows_sum_to_zero() {
+        let (mut mlp, p) = problem(30);
+        let proxy = mlp.proxy_features(&p, &(0..30).collect::<Vec<_>>());
+        for i in 0..30 {
+            let s: f32 = proxy.row(i).iter().sum();
+            assert!(s.abs() < 1e-4, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_improves_accuracy() {
+        let (mut mlp, mut p) = problem(120);
+        let idx: Vec<usize> = (0..120).collect();
+        let gamma = vec![1.0f32; 120];
+        let x = mlp.x.clone();
+        let y1h = mlp.y1h.clone();
+        let labels: Vec<u32> = (0..120)
+            .map(|i| crate::util::argmax(y1h.row(i)).unwrap() as u32)
+            .collect();
+        let l0 = mlp.mean_loss(&p, &x, &y1h);
+        let a0 = mlp.accuracy(&p, &x, &labels);
+        let mut g = vec![0.0; mlp.dim()];
+        for _ in 0..60 {
+            mlp.loss_grad_at(&p, &idx, &gamma, &mut g);
+            crate::linalg::axpy(-0.01 / 120.0, &g.clone(), &mut p);
+        }
+        let l1 = mlp.mean_loss(&p, &x, &y1h);
+        let a1 = mlp.accuracy(&p, &x, &labels);
+        assert!(l1 < l0, "loss should drop: {l0} -> {l1}");
+        assert!(a1 >= a0, "accuracy should not degrade: {a0} -> {a1}");
+    }
+
+    #[test]
+    fn gamma_zero_examples_do_not_contribute() {
+        let (mut mlp, p) = problem(20);
+        let mut g1 = vec![0.0; mlp.dim()];
+        let mut g2 = vec![0.0; mlp.dim()];
+        let l1 = mlp.loss_grad_at(&p, &[0, 1, 2, 3], &[1.0, 2.0, 0.0, 0.0], &mut g1);
+        let l2 = mlp.loss_grad_at(&p, &[0, 1], &[1.0, 2.0], &mut g2);
+        assert!((l1 - l2).abs() < 1e-4);
+        for j in 0..mlp.dim() {
+            assert!((g1[j] - g2[j]).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Native (pure-rust) twins of the L2 JAX models.
+//!
+//! The AOT/XLA path in [`crate::runtime`] is the deployment hot path;
+//! these implementations exist to (1) cross-check every artifact's
+//! numerics in integration tests, (2) run registry-less unit tests, and
+//! (3) serve as the fallback gradient source when `artifacts/` has not
+//! been built.  Semantics match `python/compile/model.py` exactly:
+//! gamma-weighted *sums*, regularizer scaled by `Σγ`.
+
+pub mod logreg;
+pub mod mlp;
+
+pub use logreg::LogReg;
+pub use mlp::{Mlp, MlpParams, MlpShape};
+
+/// A gradient source over a fixed training problem: everything the
+/// weighted-IG optimizers need.  Implemented by the native models here
+/// and by the XLA-backed executors in [`crate::runtime`].
+pub trait GradOracle {
+    /// Parameter dimensionality (flattened).
+    fn dim(&self) -> usize;
+
+    /// Gamma-weighted summed loss and gradient over the examples `idx`
+    /// (indices into the oracle's training set), evaluated at `w`.
+    /// `gamma[i]` corresponds to `idx[i]`. Writes the gradient into
+    /// `grad_out` (length `dim()`), returns the loss sum.
+    fn loss_grad_at(&mut self, w: &[f32], idx: &[usize], gamma: &[f32], grad_out: &mut [f32])
+        -> f32;
+
+    /// Number of training examples backing the oracle.
+    fn num_examples(&self) -> usize;
+
+    /// Full (unweighted, γ=1) training loss at `w` — used for loss-residual
+    /// curves. Default: one loss_grad_at over everything.
+    fn full_loss(&mut self, w: &[f32]) -> f32 {
+        let n = self.num_examples();
+        let idx: Vec<usize> = (0..n).collect();
+        let gamma = vec![1.0f32; n];
+        let mut scratch = vec![0.0f32; self.dim()];
+        self.loss_grad_at(w, &idx, &gamma, &mut scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn grad_oracle_full_loss_default_matches_weighted_sum() {
+        let ds = synthetic::covtype_like(200, 5);
+        let y = ds.signed_labels();
+        let mut lr = LogReg::new(ds.x.clone(), y, 1e-5);
+        let w = vec![0.01f32; lr.dim()];
+        let n = lr.num_examples();
+        let idx: Vec<usize> = (0..n).collect();
+        let gamma = vec![1.0f32; n];
+        let mut g = vec![0.0f32; lr.dim()];
+        let direct = lr.loss_grad_at(&w, &idx, &gamma, &mut g);
+        let via_default = lr.full_loss(&w);
+        assert!((direct - via_default).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,223 @@
+//! Weighted incremental-gradient optimizer family (Sec. 4).
+//!
+//! CRAIG is optimizer-agnostic: any IG method runs on the weighted
+//! subset with per-element stepsizes `α_k · γ_j` (Eq. 20).  This module
+//! provides the update rules the paper evaluates — SGD (+momentum),
+//! Adam, and the variance-reduced SAGA/SVRG drivers — plus the two
+//! learning-rate schedules used in Sec. 5.
+//!
+//! Division of labour: gradients come from a [`crate::model::GradOracle`]
+//! (native or XLA-backed); optimizers own parameter/state vectors and the
+//! update arithmetic, so one AOT artifact serves every optimizer.
+
+pub mod saga;
+pub mod schedules;
+pub mod svrg;
+
+pub use saga::Saga;
+pub use schedules::LrSchedule;
+pub use svrg::Svrg;
+
+use crate::linalg;
+
+/// A first-order update rule over flat parameter vectors.
+pub trait Optimizer {
+    /// Apply one step given the (already γ-weighted) gradient and the
+    /// scheduled learning rate α_k.
+    fn step(&mut self, w: &mut [f32], grad: &[f32], lr: f32);
+
+    /// Reset internal state (momentum buffers etc.).
+    fn reset(&mut self);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Plain SGD: `w ← w − α g`.
+#[derive(Clone, Debug, Default)]
+pub struct Sgd;
+
+impl Optimizer for Sgd {
+    fn step(&mut self, w: &mut [f32], grad: &[f32], lr: f32) {
+        linalg::axpy(-lr, grad, w);
+    }
+
+    fn reset(&mut self) {}
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// SGD with classical (heavy-ball) momentum: the paper's ResNet-20
+/// protocol uses momentum 0.9.
+#[derive(Clone, Debug)]
+pub struct Momentum {
+    pub beta: f32,
+    v: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(dim: usize, beta: f32) -> Self {
+        Momentum { beta, v: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, w: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(self.v.len(), w.len());
+        for ((v, g), wi) in self.v.iter_mut().zip(grad).zip(w.iter_mut()) {
+            *v = self.beta * *v + g;
+            *wi -= lr * *v;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.v.fill(0.0);
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+}
+
+/// Adam (Kingma & Ba 2014) with bias correction.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(dim: usize) -> Self {
+        Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, w: &mut [f32], grad: &[f32], lr: f32) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..w.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            w[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.t = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// Construct an optimizer by name (CLI/config entry point).
+pub fn by_name(name: &str, dim: usize) -> anyhow::Result<Box<dyn Optimizer>> {
+    match name {
+        "sgd" => Ok(Box::new(Sgd)),
+        "momentum" => Ok(Box::new(Momentum::new(dim, 0.9))),
+        "adam" => Ok(Box::new(Adam::new(dim))),
+        other => anyhow::bail!("unknown optimizer '{other}' (sgd|momentum|adam)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic f(w) = 0.5‖w − c‖², ∇f = w − c.
+    fn quad_grad(w: &[f32], c: &[f32], out: &mut [f32]) {
+        for i in 0..w.len() {
+            out[i] = w[i] - c[i];
+        }
+    }
+
+    fn converges(opt: &mut dyn Optimizer, lr: f32, iters: usize) -> f32 {
+        let c = [3.0f32, -2.0];
+        let mut w = [0.0f32, 0.0];
+        let mut g = [0.0f32; 2];
+        for _ in 0..iters {
+            quad_grad(&w, &c, &mut g);
+            opt.step(&mut w, &g, lr);
+        }
+        ((w[0] - c[0]).powi(2) + (w[1] - c[1]).powi(2)).sqrt()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        assert!(converges(&mut Sgd, 0.1, 200) < 1e-3);
+    }
+
+    #[test]
+    fn momentum_converges_on_quadratic() {
+        let mut m = Momentum::new(2, 0.9);
+        assert!(converges(&mut m, 0.05, 300) < 1e-3);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut a = Adam::new(2);
+        assert!(converges(&mut a, 0.05, 2000) < 1e-2);
+    }
+
+    #[test]
+    fn momentum_faster_than_sgd_on_ill_conditioned() {
+        // f = 0.5(w1² + 25 w2²): heavy ball should win at tuned rates.
+        let grad = |w: &[f32], out: &mut [f32]| {
+            out[0] = w[0];
+            out[1] = 25.0 * w[1];
+        };
+        let run = |opt: &mut dyn Optimizer, lr: f32| {
+            let mut w = [5.0f32, 5.0];
+            let mut g = [0.0f32; 2];
+            for _ in 0..100 {
+                grad(&w, &mut g);
+                opt.step(&mut w, &g, lr);
+            }
+            (w[0] * w[0] + 25.0 * w[1] * w[1]).sqrt()
+        };
+        let sgd_final = run(&mut Sgd, 0.038);
+        let mut m = Momentum::new(2, 0.7);
+        let mom_final = run(&mut m, 0.038);
+        assert!(mom_final < sgd_final, "momentum {mom_final} vs sgd {sgd_final}");
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut m = Momentum::new(2, 0.9);
+        let mut w = [1.0f32, 1.0];
+        m.step(&mut w, &[1.0, 1.0], 0.1);
+        m.reset();
+        assert!(m.v.iter().all(|&x| x == 0.0));
+        let mut a = Adam::new(2);
+        a.step(&mut w, &[1.0, 1.0], 0.1);
+        a.reset();
+        assert_eq!(a.t, 0);
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        assert!(by_name("sgd", 4).is_ok());
+        assert!(by_name("momentum", 4).is_ok());
+        assert!(by_name("adam", 4).is_ok());
+        assert!(by_name("lbfgs", 4).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Learning-rate schedules (Sec. 5.1's two families + warmup).
+//!
+//! * Exponential decay: `α_k = α₀ · bᵏ` — works best empirically in the
+//!   paper despite lacking the Σα = ∞ guarantee.
+//! * k-inverse: `α_k = α₀ / (1 + b·k)` — satisfies the Thm 1/2
+//!   conditions (`τ = 1` variant of `α/kᵗ`).
+//! * Power: `α_k = α₀ / kᵗ` — the exact form analyzed in Thm 1/2.
+//! * Step decay + linear warmup — the ResNet-20/CIFAR10 protocol
+//!   (decay ×0.1 at epochs 100/150, 20-epoch warmup from 0).
+
+/// Epoch-indexed learning-rate schedule (`k` starts at 0).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Const { a0: f32 },
+    /// `α₀ · bᵏ`
+    ExpDecay { a0: f32, b: f32 },
+    /// `α₀ / (1 + b·k)`
+    KInverse { a0: f32, b: f32 },
+    /// `α₀ / (k+1)ᵗ`, τ ∈ (0, 1]
+    Power { a0: f32, tau: f32 },
+    /// Step decay: `α₀ · factorᵐ` where m = #milestones passed.
+    Step { a0: f32, factor: f32, milestones: Vec<usize> },
+}
+
+/// Linear warmup wrapper: ramps 0 → schedule(k) over `warmup` epochs.
+#[derive(Clone, Debug)]
+pub struct Warmup {
+    pub warmup_epochs: usize,
+    pub inner: LrSchedule,
+}
+
+impl LrSchedule {
+    /// Learning rate for epoch `k` (0-based).
+    pub fn at(&self, k: usize) -> f32 {
+        match self {
+            LrSchedule::Const { a0 } => *a0,
+            LrSchedule::ExpDecay { a0, b } => a0 * b.powi(k as i32),
+            LrSchedule::KInverse { a0, b } => a0 / (1.0 + b * k as f32),
+            LrSchedule::Power { a0, tau } => a0 / ((k + 1) as f32).powf(*tau),
+            LrSchedule::Step { a0, factor, milestones } => {
+                let m = milestones.iter().filter(|&&ms| k >= ms).count();
+                a0 * factor.powi(m as i32)
+            }
+        }
+    }
+
+    /// Parse from a compact string (CLI/config):
+    /// `const:0.01`, `exp:0.1:0.95`, `kinv:0.1:0.1`, `power:0.1:0.5`,
+    /// `step:0.1:0.1:100;150`.
+    pub fn parse(s: &str) -> anyhow::Result<LrSchedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let f = |i: usize| -> anyhow::Result<f32> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("schedule '{s}': missing field {i}"))?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("schedule '{s}': {e}"))
+        };
+        match parts[0] {
+            "const" => Ok(LrSchedule::Const { a0: f(1)? }),
+            "exp" => Ok(LrSchedule::ExpDecay { a0: f(1)?, b: f(2)? }),
+            "kinv" => Ok(LrSchedule::KInverse { a0: f(1)?, b: f(2)? }),
+            "power" => Ok(LrSchedule::Power { a0: f(1)?, tau: f(2)? }),
+            "step" => {
+                let milestones = parts
+                    .get(3)
+                    .ok_or_else(|| anyhow::anyhow!("step schedule needs milestones"))?
+                    .split(';')
+                    .map(|m| m.parse::<usize>())
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|e| anyhow::anyhow!("schedule '{s}': {e}"))?;
+                Ok(LrSchedule::Step { a0: f(1)?, factor: f(2)?, milestones })
+            }
+            other => anyhow::bail!("unknown schedule kind '{other}'"),
+        }
+    }
+}
+
+impl Warmup {
+    pub fn at(&self, k: usize) -> f32 {
+        let base = self.inner.at(k);
+        if k < self.warmup_epochs {
+            base * (k as f32 + 1.0) / self.warmup_epochs as f32
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_and_exp() {
+        assert_eq!(LrSchedule::Const { a0: 0.5 }.at(99), 0.5);
+        let e = LrSchedule::ExpDecay { a0: 1.0, b: 0.5 };
+        assert_eq!(e.at(0), 1.0);
+        assert_eq!(e.at(2), 0.25);
+    }
+
+    #[test]
+    fn kinverse_and_power_decay() {
+        let k = LrSchedule::KInverse { a0: 1.0, b: 1.0 };
+        assert_eq!(k.at(0), 1.0);
+        assert_eq!(k.at(1), 0.5);
+        let p = LrSchedule::Power { a0: 1.0, tau: 0.5 };
+        assert_eq!(p.at(0), 1.0);
+        assert!((p.at(3) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn power_tau1_satisfies_robbins_monro_shape() {
+        // Σ α_k diverges, Σ α_k² converges — spot-check partial sums.
+        let p = LrSchedule::Power { a0: 1.0, tau: 1.0 };
+        let s1: f32 = (0..10_000).map(|k| p.at(k)).sum();
+        let s2: f32 = (0..10_000).map(|k| p.at(k).powi(2)).sum();
+        assert!(s1 > 9.0, "harmonic partial sum grows: {s1}");
+        assert!(s2 < 1.7, "squared sum bounded: {s2}");
+    }
+
+    #[test]
+    fn step_schedule_resnet_protocol() {
+        let s = LrSchedule::Step { a0: 0.1, factor: 0.1, milestones: vec![100, 150] };
+        assert!((s.at(0) - 0.1).abs() < 1e-9);
+        assert!((s.at(99) - 0.1).abs() < 1e-9);
+        assert!((s.at(100) - 0.01).abs() < 1e-9);
+        assert!((s.at(150) - 0.001).abs() < 1e-9);
+        assert!((s.at(199) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let w = Warmup { warmup_epochs: 20, inner: LrSchedule::Const { a0: 0.1 } };
+        assert!((w.at(0) - 0.1 / 20.0).abs() < 1e-7);
+        assert!((w.at(9) - 0.1 * 10.0 / 20.0).abs() < 1e-7);
+        assert!((w.at(20) - 0.1).abs() < 1e-9);
+        assert!((w.at(100) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(
+            LrSchedule::parse("const:0.01").unwrap(),
+            LrSchedule::Const { a0: 0.01 }
+        );
+        assert_eq!(
+            LrSchedule::parse("exp:0.1:0.95").unwrap(),
+            LrSchedule::ExpDecay { a0: 0.1, b: 0.95 }
+        );
+        assert_eq!(
+            LrSchedule::parse("step:0.1:0.1:100;150").unwrap(),
+            LrSchedule::Step { a0: 0.1, factor: 0.1, milestones: vec![100, 150] }
+        );
+        assert!(LrSchedule::parse("bogus:1").is_err());
+        assert!(LrSchedule::parse("exp:0.1").is_err());
+    }
+}

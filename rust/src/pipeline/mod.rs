@@ -1,0 +1,331 @@
+//! Streaming selection/training pipeline — the data-pipeline face of the
+//! L3 coordinator.
+//!
+//! Two stages connected by bounded channels (backpressure by
+//! construction, `std::sync::mpsc::sync_channel`):
+//!
+//! 1. **Selection workers** ([`SelectionPipeline`]): the per-class CRAIG
+//!    subproblems are independent, so classes are sharded across a
+//!    [`ThreadPool`] and each worker emits a class coreset; the collector
+//!    merges them preserving class ratios.
+//! 2. **Batch feeder** ([`BatchFeeder`]): a producer thread shuffles the
+//!    weighted coreset every epoch and emits minibatches into a bounded
+//!    queue that the training consumer drains — selection/IO never stalls
+//!    the optimizer and queue depth bounds memory.
+//!
+//! Workers use the native pairwise path (the PJRT client is not `Send`
+//! in the `xla` crate, so XLA execution stays on the coordinator
+//! thread — with `workers = 1` the pipeline degrades to exactly the
+//! sequential path).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coreset::{
+    lazy_greedy, naive_greedy, stochastic_greedy, DenseSim, Method, SelectorConfig, StopRule,
+    WeightedCoreset,
+};
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::util::ThreadPool;
+
+/// Telemetry from one pipeline run.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    pub classes: usize,
+    pub selected: usize,
+    pub evaluations: usize,
+    pub select_seconds: f64,
+}
+
+/// Parallel per-class selection over a thread pool.
+pub struct SelectionPipeline {
+    pool: ThreadPool,
+}
+
+impl SelectionPipeline {
+    pub fn new(workers: usize) -> Self {
+        SelectionPipeline { pool: ThreadPool::new(workers) }
+    }
+
+    /// Run CRAIG selection sharded by class; semantically identical to
+    /// [`crate::coreset::select`] with the native engine (verified by
+    /// `rust/tests/pipeline_invariants.rs`).
+    pub fn select(&self, ds: &Dataset, cfg: &SelectorConfig) -> (WeightedCoreset, PipelineStats) {
+        let t0 = std::time::Instant::now();
+        let n = ds.n();
+        let groups: Vec<Vec<usize>> = if cfg.per_class && ds.num_classes > 1 {
+            ds.class_indices().into_iter().filter(|g| !g.is_empty()).collect()
+        } else {
+            vec![(0..n).collect()]
+        };
+        let x = Arc::new(ds.x.clone());
+        let cfg = Arc::new(cfg.clone());
+        let total_n = n;
+
+        // Fan out one job per class.
+        let jobs: Vec<(Vec<usize>, Arc<Matrix>, Arc<SelectorConfig>)> = groups
+            .into_iter()
+            .map(|idx| (idx, Arc::clone(&x), Arc::clone(&cfg)))
+            .collect();
+        let classes = jobs.len();
+
+        let outputs = self.pool.scope_map(jobs, move |(idx, x, cfg)| {
+            let class_x = x.gather_rows(&idx);
+            let sq = crate::linalg::pairwise_sqdist_self(&class_x);
+            let sim = DenseSim::from_sqdist(sq);
+            let rule = class_stop_rule(&cfg.budget, idx.len(), total_n);
+            let mut rng = Rng::new(cfg.seed ^ (idx[0] as u64).wrapping_mul(0x9E3779B9));
+            let sel = match cfg.method {
+                Method::Naive => naive_greedy(&sim, rule),
+                Method::Lazy => lazy_greedy(&sim, rule),
+                Method::Stochastic { delta } => stochastic_greedy(&sim, rule, delta, &mut rng),
+            };
+            let wc = WeightedCoreset::compute(&sim, &sel.order);
+            (wc.lift(&idx), sel.evaluations)
+        });
+
+        let mut parts = Vec::with_capacity(outputs.len());
+        let mut evaluations = 0usize;
+        for (wc, ev) in outputs {
+            evaluations += ev;
+            parts.push(wc);
+        }
+        let merged = WeightedCoreset::merge(&parts);
+        let stats = PipelineStats {
+            classes,
+            selected: merged.indices.len(),
+            evaluations,
+            select_seconds: t0.elapsed().as_secs_f64(),
+        };
+        (merged, stats)
+    }
+}
+
+fn class_stop_rule(budget: &crate::coreset::Budget, class_n: usize, total_n: usize) -> StopRule {
+    use crate::coreset::Budget;
+    match *budget {
+        Budget::Fraction(f) => {
+            StopRule::Budget((((class_n as f64) * f).round().max(1.0) as usize).min(class_n))
+        }
+        Budget::Count(total) => {
+            let share = ((total as f64) * (class_n as f64) / (total_n as f64)).round().max(1.0);
+            StopRule::Budget((share as usize).min(class_n))
+        }
+        Budget::Cover { epsilon } => StopRule::Cover {
+            epsilon: epsilon * (class_n as f64) / (total_n as f64),
+            max_size: class_n,
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch feeder: bounded-queue producer/consumer.
+// ---------------------------------------------------------------------------
+
+/// One training minibatch in dataset coordinates.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub epoch: usize,
+    pub indices: Vec<usize>,
+    pub gamma: Vec<f32>,
+}
+
+/// Producer-side handle; dropping it terminates the stream.
+pub struct BatchFeeder {
+    rx: mpsc::Receiver<Batch>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Feeder telemetry (updated by the producer, read after join).
+#[derive(Clone, Debug, Default)]
+pub struct FeederStats {
+    pub batches: usize,
+    pub epochs: usize,
+}
+
+impl BatchFeeder {
+    /// Spawn a producer emitting `epochs` epochs of shuffled minibatches
+    /// over the weighted coreset, queue bounded at `queue_cap` batches.
+    pub fn spawn(
+        coreset: WeightedCoreset,
+        epochs: usize,
+        batch_size: usize,
+        queue_cap: usize,
+        seed: u64,
+    ) -> BatchFeeder {
+        let (tx, rx) = mpsc::sync_channel::<Batch>(queue_cap.max(1));
+        let handle = std::thread::Builder::new()
+            .name("craig-feeder".into())
+            .spawn(move || {
+                let mut rng = Rng::new(seed);
+                let m = coreset.indices.len();
+                let mut order: Vec<usize> = (0..m).collect();
+                for epoch in 0..epochs {
+                    rng.shuffle(&mut order);
+                    for chunk in order.chunks(batch_size.max(1)) {
+                        let batch = Batch {
+                            epoch,
+                            indices: chunk.iter().map(|&k| coreset.indices[k]).collect(),
+                            gamma: chunk.iter().map(|&k| coreset.gamma[k]).collect(),
+                        };
+                        // send blocks when the queue is full: backpressure.
+                        if tx.send(batch).is_err() {
+                            return; // consumer hung up
+                        }
+                    }
+                }
+            })
+            .expect("spawn feeder");
+        BatchFeeder { rx, handle: Some(handle) }
+    }
+
+    /// Blocking receive; `None` when the stream is exhausted.
+    pub fn next(&self) -> Option<Batch> {
+        self.rx.recv().ok()
+    }
+
+    /// Iterate over all remaining batches.
+    pub fn iter(&self) -> impl Iterator<Item = Batch> + '_ {
+        std::iter::from_fn(move || self.next())
+    }
+}
+
+impl Drop for BatchFeeder {
+    fn drop(&mut self) {
+        // Close the receiver first so a blocked producer unblocks.
+        if let Some(h) = self.handle.take() {
+            // Drain whatever is queued to release the producer, then join.
+            while self.rx.try_recv().is_ok() {}
+            drop(std::mem::replace(&mut self.rx, mpsc::sync_channel(1).1));
+            let _ = h.join();
+        }
+    }
+}
+
+/// Convenience: run selection and feeding as one configured pipeline.
+pub struct Orchestrator {
+    pub selection: SelectionPipeline,
+    pub queue_cap: usize,
+}
+
+impl Orchestrator {
+    pub fn new(workers: usize, queue_cap: usize) -> Self {
+        Orchestrator { selection: SelectionPipeline::new(workers), queue_cap }
+    }
+
+    /// Select a coreset and stream `epochs` of batches from it.
+    pub fn run(
+        &self,
+        ds: &Dataset,
+        cfg: &SelectorConfig,
+        epochs: usize,
+        batch_size: usize,
+        seed: u64,
+    ) -> Result<(BatchFeeder, PipelineStats)> {
+        let (coreset, stats) = self.selection.select(ds, cfg);
+        let feeder = BatchFeeder::spawn(coreset, epochs, batch_size, self.queue_cap, seed);
+        Ok((feeder, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::Budget;
+    use crate::data::synthetic;
+
+    #[test]
+    fn parallel_selection_matches_sequential() {
+        let ds = synthetic::covtype_like(600, 0);
+        let cfg = SelectorConfig { budget: Budget::Fraction(0.1), ..Default::default() };
+        let pipe = SelectionPipeline::new(3);
+        let (par, stats) = pipe.select(&ds, &cfg);
+        let mut eng = crate::coreset::NativePairwise;
+        let seq = crate::coreset::select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+        // Same elements and weights (order may differ across classes).
+        let mut a: Vec<(usize, u32)> =
+            par.indices.iter().zip(&par.gamma).map(|(&i, &g)| (i, g as u32)).collect();
+        let mut b: Vec<(usize, u32)> = seq
+            .coreset
+            .indices
+            .iter()
+            .zip(&seq.coreset.gamma)
+            .map(|(&i, &g)| (i, g as u32))
+            .collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        assert_eq!(stats.classes, 2);
+        assert!(stats.select_seconds > 0.0);
+    }
+
+    #[test]
+    fn feeder_partitions_coreset_every_epoch() {
+        let coreset = WeightedCoreset {
+            indices: (100..120).collect(),
+            gamma: (0..20).map(|i| 1.0 + i as f32).collect(),
+            assignment: Vec::new(),
+        };
+        let feeder = BatchFeeder::spawn(coreset.clone(), 3, 7, 2, 42);
+        let mut seen: Vec<Vec<usize>> = vec![Vec::new(); 3];
+        for b in feeder.iter() {
+            assert_eq!(b.indices.len(), b.gamma.len());
+            assert!(b.indices.len() <= 7);
+            seen[b.epoch].extend_from_slice(&b.indices);
+            // Gamma values travel with their index.
+            for (&i, &g) in b.indices.iter().zip(&b.gamma) {
+                assert_eq!(g, 1.0 + (i - 100) as f32);
+            }
+        }
+        for epoch_seen in &mut seen {
+            epoch_seen.sort_unstable();
+            assert_eq!(*epoch_seen, (100..120).collect::<Vec<_>>(), "epoch must cover coreset");
+        }
+    }
+
+    #[test]
+    fn feeder_bounded_queue_applies_backpressure() {
+        // Tiny queue + slow consumer: the producer must not run ahead.
+        let coreset = WeightedCoreset {
+            indices: (0..100).collect(),
+            gamma: vec![1.0; 100],
+            assignment: Vec::new(),
+        };
+        let feeder = BatchFeeder::spawn(coreset, 1, 1, 2, 0);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // Only queue_cap + in-flight batches could be produced by now; the
+        // rest arrive as we consume. Drain and count.
+        let mut count = 0;
+        for _ in feeder.iter() {
+            count += 1;
+        }
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    fn feeder_drop_mid_stream_does_not_hang() {
+        let coreset = WeightedCoreset {
+            indices: (0..1000).collect(),
+            gamma: vec![1.0; 1000],
+            assignment: Vec::new(),
+        };
+        let feeder = BatchFeeder::spawn(coreset, 10, 1, 1, 0);
+        let _ = feeder.next();
+        drop(feeder); // must join cleanly without deadlock
+    }
+
+    #[test]
+    fn orchestrator_end_to_end() {
+        let ds = synthetic::ijcnn1_like(300, 1);
+        let orch = Orchestrator::new(2, 4);
+        let cfg = SelectorConfig { budget: Budget::Fraction(0.2), ..Default::default() };
+        let (feeder, stats) = orch.run(&ds, &cfg, 2, 16, 0).unwrap();
+        assert!(stats.selected >= 50);
+        let total: usize = feeder.iter().map(|b| b.indices.len()).sum();
+        assert_eq!(total, stats.selected * 2, "2 epochs over the coreset");
+    }
+}

@@ -1,0 +1,247 @@
+//! Property-based testing substrate (a `proptest`-lite, since the
+//! offline registry carries no proptest/quickcheck).
+//!
+//! Provides generator combinators over the crate's deterministic [`Rng`]
+//! plus a [`forall`] runner with bounded shrinking for failing cases.
+//! Used by the invariant suites: submodularity/monotonicity of facility
+//! location, lazy-greedy ≡ naive-greedy, coreset partition/weight
+//! invariants, pipeline routing invariants, optimizer-state invariants.
+
+use crate::rng::Rng;
+
+/// A reproducible generator of test cases.
+pub trait Gen {
+    type Item;
+    fn gen(&self, rng: &mut Rng) -> Self::Item;
+    /// Candidate "smaller" versions of a failing case (one shrink step).
+    fn shrink(&self, item: &Self::Item) -> Vec<Self::Item> {
+        let _ = item;
+        Vec::new()
+    }
+}
+
+/// Uniform usize in [lo, hi] (inclusive).
+pub struct IntRange(pub usize, pub usize);
+
+impl Gen for IntRange {
+    type Item = usize;
+    fn gen(&self, rng: &mut Rng) -> usize {
+        rng.range(self.0, self.1 + 1)
+    }
+    fn shrink(&self, item: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *item > self.0 {
+            out.push(self.0); // jump to minimum
+            out.push(self.0 + (*item - self.0) / 2); // halve the distance
+            out.push(*item - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f32 in [lo, hi).
+pub struct FloatRange(pub f32, pub f32);
+
+impl Gen for FloatRange {
+    type Item = f32;
+    fn gen(&self, rng: &mut Rng) -> f32 {
+        rng.uniform(self.0 as f64, self.1 as f64) as f32
+    }
+    fn shrink(&self, item: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *item != self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*item - self.0) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vec of fixed generator with length in [min_len, max_len].
+pub struct VecOf<G>(pub G, pub usize, pub usize);
+
+impl<G: Gen> Gen for VecOf<G>
+where
+    G::Item: Clone,
+{
+    type Item = Vec<G::Item>;
+    fn gen(&self, rng: &mut Rng) -> Vec<G::Item> {
+        let len = rng.range(self.1, self.2 + 1);
+        (0..len).map(|_| self.0.gen(rng)).collect()
+    }
+    fn shrink(&self, item: &Vec<G::Item>) -> Vec<Vec<G::Item>> {
+        let mut out = Vec::new();
+        if item.len() > self.1 {
+            // Drop the second half, drop one element.
+            let half = self.1.max(item.len() / 2);
+            out.push(item[..half].to_vec());
+            out.push(item[..item.len() - 1].to_vec());
+        }
+        // Shrink one element at a time (first 4 positions to bound cost).
+        for i in 0..item.len().min(4) {
+            for candidate in self.0.shrink(&item[i]) {
+                let mut v = item.clone();
+                v[i] = candidate;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of two generators.
+pub struct PairOf<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B>
+where
+    A::Item: Clone,
+    B::Item: Clone,
+{
+    type Item = (A::Item, B::Item);
+    fn gen(&self, rng: &mut Rng) -> Self::Item {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+    fn shrink(&self, item: &Self::Item) -> Vec<Self::Item> {
+        let mut out: Vec<Self::Item> = self
+            .0
+            .shrink(&item.0)
+            .into_iter()
+            .map(|a| (a, item.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&item.1).into_iter().map(|b| (item.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property check.
+pub struct PropResult<T> {
+    pub passed: usize,
+    pub failure: Option<(T, String)>,
+}
+
+/// Run `prop` on `cases` generated cases; on failure, shrink up to
+/// `max_shrink` steps and panic with the minimal counterexample.
+///
+/// `prop` returns `Ok(())` or `Err(description)`.
+pub fn forall<G, F>(seed: u64, cases: usize, gen: &G, prop: F)
+where
+    G: Gen,
+    G::Item: Clone + std::fmt::Debug,
+    F: Fn(&G::Item) -> Result<(), String>,
+{
+    let r = check(seed, cases, gen, &prop, 200);
+    if let Some((case, msg)) = r.failure {
+        panic!(
+            "property failed after {} passes\n  minimal counterexample: {:?}\n  reason: {}",
+            r.passed, case, msg
+        );
+    }
+}
+
+/// Non-panicking variant (used to test the framework itself).
+pub fn check<G, F>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: &F,
+    max_shrink: usize,
+) -> PropResult<G::Item>
+where
+    G: Gen,
+    G::Item: Clone,
+    F: Fn(&G::Item) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let case = gen.gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // Shrink: repeatedly take the first failing shrink candidate.
+            let mut best = case;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < max_shrink {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= max_shrink {
+                        break;
+                    }
+                }
+                break;
+            }
+            return PropResult { passed: i, failure: Some((best, best_msg)) };
+        }
+    }
+    PropResult { passed: cases, failure: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(0, 200, &IntRange(0, 100), |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        // Fails for x >= 37; shrinking should land at exactly 37.
+        let gen = IntRange(0, 1000);
+        let r = check(
+            1,
+            500,
+            &gen,
+            &|&x| if x < 37 { Ok(()) } else { Err("too big".into()) },
+            10_000,
+        );
+        let (case, _) = r.failure.expect("must fail");
+        assert_eq!(case, 37, "shrinker should find the boundary");
+    }
+
+    #[test]
+    fn vec_gen_respects_length_bounds() {
+        let gen = VecOf(IntRange(0, 9), 2, 5);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = gen.gen(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+    }
+
+    #[test]
+    fn vec_shrink_reduces() {
+        let gen = VecOf(IntRange(0, 9), 0, 10);
+        let shrinks = gen.shrink(&vec![5, 6, 7, 8]);
+        assert!(shrinks.iter().any(|v| v.len() < 4));
+    }
+
+    #[test]
+    fn pair_gen() {
+        let gen = PairOf(IntRange(1, 3), FloatRange(0.0, 1.0));
+        let mut rng = Rng::new(9);
+        let (a, b) = gen.gen(&mut rng);
+        assert!((1..=3).contains(&a));
+        assert!((0.0..1.0).contains(&b));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = VecOf(IntRange(0, 100), 1, 10);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        assert_eq!(gen.gen(&mut r1), gen.gen(&mut r2));
+    }
+}

@@ -1,0 +1,377 @@
+//! XLA-backed engines: adapters from AOT executables to the library's
+//! [`PairwiseEngine`] and [`GradOracle`] interfaces.
+//!
+//! All engines pad batches to the artifact's fixed shape (γ=0 padding
+//! rows contribute nothing by construction of the L2 models) and tile
+//! inputs larger than the largest artifact block.
+
+use anyhow::Result;
+
+use crate::coreset::PairwiseEngine;
+use crate::linalg::Matrix;
+use crate::model::{GradOracle, MlpShape};
+
+use super::{literal_matrix, literal_scalar, literal_vec, to_f32_vec, SharedRuntime};
+
+// ---------------------------------------------------------------------------
+// Pairwise distances (the L1 Pallas kernel artifact).
+// ---------------------------------------------------------------------------
+
+/// Pairwise-distance engine executing the tiled Pallas artifact.
+pub struct XlaPairwise {
+    rt: SharedRuntime,
+}
+
+impl XlaPairwise {
+    pub fn new(rt: SharedRuntime) -> Self {
+        XlaPairwise { rt }
+    }
+
+    fn block(&mut self, name: &str, m: usize, x: &Matrix, y: &Matrix) -> Result<Matrix> {
+        let lx = literal_matrix(x, m)?;
+        let ly = literal_matrix(y, m)?;
+        let out = self.rt.borrow_mut().exec(name, &[lx, ly])?;
+        let flat = to_f32_vec(&out[0])?;
+        anyhow::ensure!(flat.len() == m * m, "pairwise block shape mismatch");
+        // Slice the valid (x.rows, y.rows) corner.
+        let mut res = Matrix::zeros(x.rows, y.rows);
+        for i in 0..x.rows {
+            res.row_mut(i).copy_from_slice(&flat[i * m..i * m + y.rows]);
+        }
+        Ok(res)
+    }
+
+    /// Compute the full (possibly tiled) squared-distance matrix.
+    pub fn sqdist_checked(&mut self, x: &Matrix, y: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(x.cols == y.cols, "feature dims differ");
+        let d = x.cols;
+        let want = x.rows.max(y.rows);
+        let meta = {
+            let rt = self.rt.borrow();
+            rt.registry()
+                .pairwise_for(d, want)
+                .map(|m| (m.name.clone(), m.dim("m").unwrap_or(0)))
+        };
+        let (name, m) = meta
+            .ok_or_else(|| anyhow::anyhow!("no pairwise artifact for d={d}; re-run `make artifacts`"))?;
+        if want <= m {
+            return self.block(&name, m, x, y);
+        }
+        // Tile over blocks of the largest artifact.
+        let mut out = Matrix::zeros(x.rows, y.rows);
+        let mut i0 = 0;
+        while i0 < x.rows {
+            let i1 = (i0 + m).min(x.rows);
+            let xi = x.gather_rows(&(i0..i1).collect::<Vec<_>>());
+            let mut j0 = 0;
+            while j0 < y.rows {
+                let j1 = (j0 + m).min(y.rows);
+                let yj = y.gather_rows(&(j0..j1).collect::<Vec<_>>());
+                let blockm = self.block(&name, m, &xi, &yj)?;
+                for i in 0..(i1 - i0) {
+                    out.row_mut(i0 + i)[j0..j1].copy_from_slice(blockm.row(i));
+                }
+                j0 = j1;
+            }
+            i0 = i1;
+        }
+        Ok(out)
+    }
+}
+
+impl PairwiseEngine for XlaPairwise {
+    fn sqdist(&mut self, x: &Matrix, y: &Matrix) -> Matrix {
+        self.sqdist_checked(x, y).expect("XLA pairwise execution failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pallas"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Logistic regression gradient oracle (fused Pallas kernel artifact).
+// ---------------------------------------------------------------------------
+
+/// [`GradOracle`] that evaluates the fused logreg loss+grad artifact.
+pub struct XlaLogReg {
+    rt: SharedRuntime,
+    /// `(n, d)` features.
+    pub x: Matrix,
+    /// ±1 labels.
+    pub y: Vec<f32>,
+    pub lam: f32,
+    grad_name: String,
+    batch: usize,
+    // Reused staging buffers (hot-path allocation control).
+    xbuf: Vec<f32>,
+    ybuf: Vec<f32>,
+    gbuf: Vec<f32>,
+}
+
+impl XlaLogReg {
+    pub fn new(rt: SharedRuntime, x: Matrix, y: Vec<f32>, lam: f32) -> Result<Self> {
+        assert_eq!(x.rows, y.len());
+        let d = x.cols;
+        let meta = {
+            let r = rt.borrow();
+            // Prefer the jnp-lowered variant on CPU (§Perf: ~3x over the
+            // interpret-mode Pallas grid loop); fall back to the Pallas
+            // artifact so older manifests keep working.
+            r.registry()
+                .batched_for("logreg_grad_jnp", &[("d", d)], 1024)
+                .or_else(|| r.registry().batched_for("logreg_grad", &[("d", d)], 1024))
+                .map(|m| (m.name.clone(), m.dim("b").unwrap_or(0)))
+        };
+        let (grad_name, batch) = meta.ok_or_else(|| {
+            anyhow::anyhow!("no logreg_grad artifact for d={d}; re-run `make artifacts`")
+        })?;
+        Ok(XlaLogReg {
+            rt,
+            x,
+            y,
+            lam,
+            grad_name,
+            batch,
+            xbuf: vec![0.0; 1024 * d],
+            ybuf: vec![0.0; 1024],
+            gbuf: vec![0.0; 1024],
+        })
+    }
+
+    /// The artifact's fixed batch size.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+impl GradOracle for XlaLogReg {
+    fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    fn num_examples(&self) -> usize {
+        self.x.rows
+    }
+
+    fn loss_grad_at(
+        &mut self,
+        w: &[f32],
+        idx: &[usize],
+        gamma: &[f32],
+        grad_out: &mut [f32],
+    ) -> f32 {
+        let d = self.x.cols;
+        let b = self.batch;
+        grad_out.fill(0.0);
+        let mut loss = 0.0f32;
+        let lw = literal_vec(w, 0);
+        for (chunk_i, chunk_g) in idx.chunks(b).zip(gamma.chunks(b)) {
+            self.xbuf[..b * d].fill(0.0);
+            self.ybuf[..b].fill(1.0); // any valid label; γ=0 kills padding
+            self.gbuf[..b].fill(0.0);
+            for (r, (&i, &g)) in chunk_i.iter().zip(chunk_g).enumerate() {
+                self.xbuf[r * d..(r + 1) * d].copy_from_slice(self.x.row(i));
+                self.ybuf[r] = self.y[i];
+                self.gbuf[r] = g;
+            }
+            let lx = xla::Literal::vec1(&self.xbuf[..b * d])
+                .reshape(&[b as i64, d as i64])
+                .expect("reshape x batch");
+            let ly = xla::Literal::vec1(&self.ybuf[..b]);
+            let lg = xla::Literal::vec1(&self.gbuf[..b]);
+            let out = self
+                .rt
+                .borrow_mut()
+                .exec(&self.grad_name, &[lw.clone(), lx, ly, lg, literal_scalar(self.lam)])
+                .expect("logreg_grad execution");
+            let l = out[0].to_vec::<f32>().expect("loss literal")[0];
+            let g = to_f32_vec(&out[1]).expect("grad literal");
+            loss += l;
+            for (go, gv) in grad_out.iter_mut().zip(&g) {
+                *go += gv;
+            }
+        }
+        loss
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MLP oracle (AOT jax.value_and_grad artifact).
+// ---------------------------------------------------------------------------
+
+/// XLA-backed MLP: grad / logits / proxy executables over flat params.
+pub struct XlaMlp {
+    rt: SharedRuntime,
+    pub shape: MlpShape,
+    /// `(n, d)` features.
+    pub x: Matrix,
+    /// `(n, c)` one-hot labels.
+    pub y1h: Matrix,
+    pub lam: f32,
+    grad_name: String,
+    logits_name: String,
+    proxy_name: String,
+    batch: usize,
+}
+
+impl XlaMlp {
+    pub fn new(rt: SharedRuntime, shape: MlpShape, x: Matrix, y1h: Matrix, lam: f32) -> Result<Self> {
+        let exact = [("d", shape.d), ("h", shape.h), ("c", shape.c)];
+        let (grad_name, batch, logits_name, proxy_name) = {
+            let r = rt.borrow();
+            let g = r
+                .registry()
+                .batched_for("mlp_grad", &exact, 256)
+                .ok_or_else(|| anyhow::anyhow!("no mlp_grad artifact for {shape:?}"))?;
+            let l = r
+                .registry()
+                .batched_for("mlp_logits", &exact, 256)
+                .ok_or_else(|| anyhow::anyhow!("no mlp_logits artifact for {shape:?}"))?;
+            let p = r
+                .registry()
+                .batched_for("mlp_proxy", &exact, 256)
+                .ok_or_else(|| anyhow::anyhow!("no mlp_proxy artifact for {shape:?}"))?;
+            (g.name.clone(), g.dim("b").unwrap_or(256), l.name.clone(), p.name.clone())
+        };
+        Ok(XlaMlp { rt, shape, x, y1h, lam, grad_name, logits_name, proxy_name, batch })
+    }
+
+    fn param_literals(&self, params: &[f32]) -> Vec<xla::Literal> {
+        let s = self.shape;
+        let (w1, b1, w2, b2) = s.split(params);
+        vec![
+            xla::Literal::vec1(w1).reshape(&[s.d as i64, s.h as i64]).unwrap(),
+            xla::Literal::vec1(b1),
+            xla::Literal::vec1(w2).reshape(&[s.h as i64, s.c as i64]).unwrap(),
+            xla::Literal::vec1(b2),
+        ]
+    }
+
+    fn batch_literals(&self, idx: &[usize], gamma: Option<&[f32]>) -> (xla::Literal, xla::Literal, xla::Literal) {
+        let (d, c, b) = (self.shape.d, self.shape.c, self.batch);
+        let mut xb = vec![0.0f32; b * d];
+        let mut yb = vec![0.0f32; b * c];
+        let mut gb = vec![0.0f32; b];
+        for (r, &i) in idx.iter().enumerate() {
+            xb[r * d..(r + 1) * d].copy_from_slice(self.x.row(i));
+            yb[r * c..(r + 1) * c].copy_from_slice(self.y1h.row(i));
+            gb[r] = gamma.map(|g| g[r]).unwrap_or(1.0);
+        }
+        (
+            xla::Literal::vec1(&xb).reshape(&[b as i64, d as i64]).unwrap(),
+            xla::Literal::vec1(&yb).reshape(&[b as i64, c as i64]).unwrap(),
+            xla::Literal::vec1(&gb),
+        )
+    }
+
+    /// Logits for the given examples, shape `(idx.len(), c)`.
+    pub fn logits(&mut self, params: &[f32], idx: &[usize]) -> Result<Matrix> {
+        let c = self.shape.c;
+        let mut out = Matrix::zeros(idx.len(), c);
+        for (chunk_no, chunk) in idx.chunks(self.batch).enumerate() {
+            let mut args = self.param_literals(params);
+            let (lx, _, _) = self.batch_literals(chunk, None);
+            args.push(lx);
+            let res = self.rt.borrow_mut().exec(&self.logits_name, &args)?;
+            let flat = to_f32_vec(&res[0])?;
+            for (r, _) in chunk.iter().enumerate() {
+                out.row_mut(chunk_no * self.batch + r)
+                    .copy_from_slice(&flat[r * c..(r + 1) * c]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Last-layer gradient proxies `p − y`, shape `(idx.len(), c)`.
+    pub fn proxy_features(&mut self, params: &[f32], idx: &[usize]) -> Result<Matrix> {
+        let c = self.shape.c;
+        let mut out = Matrix::zeros(idx.len(), c);
+        for (chunk_no, chunk) in idx.chunks(self.batch).enumerate() {
+            let mut args = self.param_literals(params);
+            let (lx, ly, _) = self.batch_literals(chunk, None);
+            args.push(lx);
+            args.push(ly);
+            let res = self.rt.borrow_mut().exec(&self.proxy_name, &args)?;
+            let flat = to_f32_vec(&res[0])?;
+            for (r, _) in chunk.iter().enumerate() {
+                out.row_mut(chunk_no * self.batch + r)
+                    .copy_from_slice(&flat[r * c..(r + 1) * c]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Test accuracy via the logits artifact.
+    pub fn accuracy(&mut self, params: &[f32], x: &Matrix, labels: &[u32]) -> Result<f32> {
+        // Temporarily swap in the eval features.
+        let train_x = std::mem::replace(&mut self.x, x.clone());
+        let train_y = std::mem::replace(&mut self.y1h, Matrix::zeros(x.rows, self.shape.c));
+        let idx: Vec<usize> = (0..x.rows).collect();
+        let logits = self.logits(params, &idx);
+        self.x = train_x;
+        self.y1h = train_y;
+        let logits = logits?;
+        let mut correct = 0usize;
+        for i in 0..x.rows {
+            if crate::util::argmax(logits.row(i)).unwrap() as u32 == labels[i] {
+                correct += 1;
+            }
+        }
+        Ok(correct as f32 / x.rows.max(1) as f32)
+    }
+}
+
+impl GradOracle for XlaMlp {
+    fn dim(&self) -> usize {
+        self.shape.num_params()
+    }
+
+    fn num_examples(&self) -> usize {
+        self.x.rows
+    }
+
+    fn loss_grad_at(
+        &mut self,
+        params: &[f32],
+        idx: &[usize],
+        gamma: &[f32],
+        grad_out: &mut [f32],
+    ) -> f32 {
+        let s = self.shape;
+        grad_out.fill(0.0);
+        let mut loss = 0.0f32;
+        for (ci, cg) in idx.chunks(self.batch).zip(gamma.chunks(self.batch)) {
+            let mut args = self.param_literals(params);
+            let (lx, ly, lg) = self.batch_literals(ci, Some(cg));
+            args.push(lx);
+            args.push(ly);
+            args.push(lg);
+            args.push(literal_scalar(self.lam));
+            let res = self
+                .rt
+                .borrow_mut()
+                .exec(&self.grad_name, &args)
+                .expect("mlp_grad execution");
+            loss += res[0].to_vec::<f32>().expect("loss")[0];
+            let g1 = to_f32_vec(&res[1]).expect("g1");
+            let gb1 = to_f32_vec(&res[2]).expect("gb1");
+            let g2 = to_f32_vec(&res[3]).expect("g2");
+            let gb2 = to_f32_vec(&res[4]).expect("gb2");
+            let (o1, ob1, o2, ob2) = s.split_mut(grad_out);
+            for (o, v) in o1.iter_mut().zip(&g1) {
+                *o += v;
+            }
+            for (o, v) in ob1.iter_mut().zip(&gb1) {
+                *o += v;
+            }
+            for (o, v) in o2.iter_mut().zip(&g2) {
+                *o += v;
+            }
+            for (o, v) in ob2.iter_mut().zip(&gb2) {
+                *o += v;
+            }
+        }
+        loss
+    }
+}

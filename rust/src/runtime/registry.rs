@@ -1,0 +1,187 @@
+//! Artifact manifest parsing and shape-aware resolution.
+//!
+//! `python/compile/aot.py` writes one line per artifact:
+//!
+//! ```text
+//! name=pairwise_d54_m1024 file=pairwise_d54_m1024.hlo.txt kind=pairwise d=54 m=1024 n=1024
+//! ```
+//!
+//! The registry indexes these and answers queries like "smallest pairwise
+//! block with feature dim 54 and m ≥ 700".
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Integer shape attributes (d, b, m, n, h, c, ...).
+    pub dims: BTreeMap<String, usize>,
+}
+
+impl ArtifactMeta {
+    pub fn dim(&self, key: &str) -> Option<usize> {
+        self.dims.get(key).copied()
+    }
+}
+
+/// Parsed manifest with lookup helpers.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    entries: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    pub fn parse(text: &str) -> Result<Registry> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut file = None;
+            let mut kind = None;
+            let mut dims = BTreeMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token '{tok}'", i + 1))?;
+                match k {
+                    "name" => name = Some(v.to_string()),
+                    "file" => file = Some(v.to_string()),
+                    "kind" => kind = Some(v.to_string()),
+                    other => {
+                        let iv: usize = v.parse().with_context(|| {
+                            format!("manifest line {}: non-integer dim '{tok}'", i + 1)
+                        })?;
+                        dims.insert(other.to_string(), iv);
+                    }
+                }
+            }
+            let (name, file, kind) = match (name, file, kind) {
+                (Some(n), Some(f), Some(k)) => (n, f, k),
+                _ => bail!("manifest line {}: needs name=, file=, kind=", i + 1),
+            };
+            entries.push(ArtifactMeta { name, file, kind, dims });
+        }
+        if entries.is_empty() {
+            bail!("empty artifact manifest");
+        }
+        Ok(Registry { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Registry> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All artifacts of a kind.
+    pub fn by_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactMeta> + 'a {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// Smallest pairwise block artifact with feature dim `d` and block
+    /// size `m ≥ want` (or the largest available if none is big enough —
+    /// the caller then tiles).
+    pub fn pairwise_for(&self, d: usize, want: usize) -> Option<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .by_kind("pairwise")
+            .filter(|e| e.dim("d") == Some(d))
+            .collect();
+        candidates.sort_by_key(|e| e.dim("m").unwrap_or(0));
+        candidates
+            .iter()
+            .find(|e| e.dim("m").unwrap_or(0) >= want)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    /// Smallest batch artifact of `kind` with the given exact dims
+    /// (besides batch) and `b ≥ want` (or largest available).
+    pub fn batched_for<'a>(
+        &'a self,
+        kind: &'a str,
+        exact: &[(&str, usize)],
+        want: usize,
+    ) -> Option<&'a ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .by_kind(kind)
+            .filter(|e| exact.iter().all(|&(k, v)| e.dim(k) == Some(v)))
+            .collect();
+        candidates.sort_by_key(|e| e.dim("b").unwrap_or(0));
+        candidates
+            .iter()
+            .find(|e| e.dim("b").unwrap_or(0) >= want)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+name=pairwise_d54_m256 file=a.hlo.txt kind=pairwise d=54 m=256 n=256
+name=pairwise_d54_m1024 file=b.hlo.txt kind=pairwise d=54 m=1024 n=1024
+name=logreg_grad_d54_b256 file=c.hlo.txt kind=logreg_grad d=54 b=256
+name=logreg_grad_d54_b1024 file=d.hlo.txt kind=logreg_grad d=54 b=1024
+";
+
+    #[test]
+    fn parses_entries() {
+        let r = Registry::parse(SAMPLE).unwrap();
+        assert_eq!(r.len(), 4);
+        let e = r.by_name("pairwise_d54_m256").unwrap();
+        assert_eq!(e.kind, "pairwise");
+        assert_eq!(e.dim("d"), Some(54));
+        assert_eq!(e.file, "a.hlo.txt");
+    }
+
+    #[test]
+    fn pairwise_resolution_prefers_smallest_sufficient() {
+        let r = Registry::parse(SAMPLE).unwrap();
+        assert_eq!(r.pairwise_for(54, 100).unwrap().name, "pairwise_d54_m256");
+        assert_eq!(r.pairwise_for(54, 256).unwrap().name, "pairwise_d54_m256");
+        assert_eq!(r.pairwise_for(54, 257).unwrap().name, "pairwise_d54_m1024");
+        // Bigger than anything → largest block (caller tiles).
+        assert_eq!(r.pairwise_for(54, 5000).unwrap().name, "pairwise_d54_m1024");
+        assert!(r.pairwise_for(99, 10).is_none());
+    }
+
+    #[test]
+    fn batched_resolution() {
+        let r = Registry::parse(SAMPLE).unwrap();
+        let e = r.batched_for("logreg_grad", &[("d", 54)], 300).unwrap();
+        assert_eq!(e.name, "logreg_grad_d54_b1024");
+        let e = r.batched_for("logreg_grad", &[("d", 54)], 10_000).unwrap();
+        assert_eq!(e.name, "logreg_grad_d54_b1024");
+        assert!(r.batched_for("logreg_grad", &[("d", 22)], 10).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Registry::parse("").is_err());
+        assert!(Registry::parse("name=x file=y\n").is_err()); // missing kind
+        assert!(Registry::parse("name=x file=y kind=z d=abc\n").is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Small shared utilities: a scoped thread pool for per-class selection
+//! workers, bounded-channel helpers, and argmin/argmax.
+
+pub mod threadpool;
+
+pub use threadpool::ThreadPool;
+
+/// Index of the maximum value (first on ties). Empty slice → None.
+pub fn argmax(xs: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        match best {
+            Some((_, b)) if x <= b => {}
+            _ => best = Some((i, x)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Index of the minimum value (first on ties). Empty slice → None.
+pub fn argmin(xs: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        match best {
+            Some((_, b)) if x >= b => {}
+            _ => best = Some((i, x)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_argmin() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), Some(1));
+        assert_eq!(argmin(&[1.0, 5.0, 3.0]), Some(0));
+        assert_eq!(argmax(&[]), None);
+        // Ties: first wins.
+        assert_eq!(argmax(&[2.0, 2.0]), Some(0));
+        // NaN-free assumption: NaN never beats.
+        assert_eq!(argmax(&[f32::NAN, 1.0]), Some(1));
+    }
+
+    #[test]
+    fn div_ceil_cases() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 3), 1);
+    }
+}

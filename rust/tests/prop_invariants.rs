@@ -1,0 +1,230 @@
+//! Property-based invariant suite (in-house `prop` framework).
+//!
+//! Random-instance invariants of the coordinator: submodularity /
+//! monotonicity of F, greedy-gain monotonicity, coreset partition and
+//! weight invariants, baseline invariants, schedule positivity, pipeline
+//! ≡ sequential selection, optimizer-state invariants.
+
+use craig::coreset::{
+    self, lazy_greedy, naive_greedy, Budget, DenseSim, FacilityLocation, NativePairwise,
+    SelectorConfig, StopRule, WeightedCoreset,
+};
+use craig::data::synthetic::{self, MixtureSpec};
+use craig::linalg::Matrix;
+use craig::prop::{forall, Gen, IntRange, PairOf};
+use craig::rng::Rng;
+
+/// Generator: a random feature matrix of n∈[6,40] points, d∈[2,8].
+struct FeatGen;
+
+impl Gen for FeatGen {
+    type Item = (Matrix, u64);
+    fn gen(&self, rng: &mut Rng) -> Self::Item {
+        let n = rng.range(6, 41);
+        let d = rng.range(2, 9);
+        let seed = rng.next_u64();
+        let mut r2 = Rng::new(seed);
+        (Matrix::from_vec(n, d, r2.normal_vec(n * d, 0.0, 1.0)), seed)
+    }
+}
+
+#[test]
+fn prop_facility_location_monotone_submodular() {
+    forall(0, 40, &FeatGen, |(x, seed)| {
+        let sim = DenseSim::from_features(x);
+        let n = x.rows;
+        let mut rng = Rng::new(*seed);
+        let mut fl = FacilityLocation::new(&sim);
+        // Random nested pair S ⊆ T and element e ∉ T.
+        let t_len = rng.range(1, n);
+        let t = rng.sample_indices(n, t_len);
+        let s_len = rng.range(0, t_len + 1);
+        let s = &t[..s_len];
+        let f_s = fl.eval_set(s);
+        let f_t = fl.eval_set(&t);
+        if f_t < f_s - 1e-6 {
+            return Err(format!("monotonicity violated: F(S)={f_s} F(T)={f_t}"));
+        }
+        let outside: Vec<usize> = (0..n).filter(|i| !t.contains(i)).collect();
+        if let Some(&e) = outside.first() {
+            let mut s_e = s.to_vec();
+            s_e.push(e);
+            let mut t_e = t.clone();
+            t_e.push(e);
+            let gain_s = fl.eval_set(&s_e) - f_s;
+            let gain_t = fl.eval_set(&t_e) - f_t;
+            if gain_s < gain_t - 1e-6 {
+                return Err(format!("submodularity violated: {gain_s} < {gain_t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lazy_equals_naive() {
+    forall(1, 25, &FeatGen, |(x, _)| {
+        let sim = DenseSim::from_features(x);
+        let r = (x.rows / 3).max(1);
+        let a = naive_greedy(&sim, StopRule::Budget(r));
+        let b = lazy_greedy(&sim, StopRule::Budget(r));
+        if a.order != b.order {
+            return Err(format!("orders differ: {:?} vs {:?}", a.order, b.order));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weights_partition_and_sum() {
+    forall(2, 30, &FeatGen, |(x, seed)| {
+        let sim = DenseSim::from_features(x);
+        let mut rng = Rng::new(*seed ^ 0xABCD);
+        let r = rng.range(1, x.rows + 1);
+        let picks = rng.sample_indices(x.rows, r);
+        let wc = WeightedCoreset::compute(&sim, &picks);
+        let total: f32 = wc.gamma.iter().sum();
+        if (total - x.rows as f32).abs() > 1e-3 {
+            return Err(format!("Σγ = {total} ≠ n = {}", x.rows));
+        }
+        if wc.assignment.len() != x.rows {
+            return Err("assignment must cover every point".into());
+        }
+        if wc.assignment.iter().any(|&k| k >= picks.len()) {
+            return Err("assignment out of range".into());
+        }
+        // γ_j ≥ 1 for selected points (they serve themselves).
+        for (k, &j) in picks.iter().enumerate() {
+            if wc.assignment[j] != k {
+                return Err(format!("selected point {j} not served by itself"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_greedy_gains_nonincreasing() {
+    forall(3, 25, &FeatGen, |(x, _)| {
+        let sim = DenseSim::from_features(x);
+        let g = lazy_greedy(&sim, StopRule::Budget(x.rows.min(12)));
+        for w in g.gains.windows(2) {
+            if w[0] < w[1] - 1e-6 {
+                return Err(format!("gain increased: {} -> {}", w[0], w[1]));
+            }
+        }
+        // F value equals the sum of gains.
+        let total: f64 = g.gains.iter().sum();
+        if (total - g.f_value).abs() > 1e-6 {
+            return Err("Σ gains ≠ F(S)".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_baseline_invariants() {
+    let gen = PairOf(IntRange(20, 200), IntRange(0, 10_000));
+    forall(4, 40, &gen, |&(n, seed)| {
+        let spec = MixtureSpec::balanced(4, 3);
+        let mut r = Rng::new(seed as u64);
+        let ds = synthetic::gaussian_mixture(n, &spec, &mut r);
+        let mut rng = Rng::new(seed as u64 + 1);
+        let wc = coreset::random_baseline(
+            ds.n(),
+            &ds.y,
+            ds.num_classes,
+            &Budget::Fraction(0.2),
+            true,
+            &mut rng,
+        );
+        let total: f32 = wc.gamma.iter().sum();
+        if (total - ds.n() as f32).abs() > 1.0 {
+            return Err(format!("Σγ {total} vs n {}", ds.n()));
+        }
+        let set: std::collections::HashSet<_> = wc.indices.iter().collect();
+        if set.len() != wc.indices.len() {
+            return Err("duplicate indices in baseline".into());
+        }
+        if wc.indices.iter().any(|&i| i >= ds.n()) {
+            return Err("index out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_selection_equals_sequential() {
+    let gen = IntRange(100, 500);
+    let pipe = craig::pipeline::SelectionPipeline::new(3);
+    forall(5, 8, &gen, |&n| {
+        let ds = synthetic::covtype_like(n, n as u64);
+        let cfg = SelectorConfig { budget: Budget::Fraction(0.1), ..Default::default() };
+        let (par, _) = pipe.select(&ds, &cfg);
+        let mut eng = NativePairwise;
+        let seq = coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+        let mut a: Vec<usize> = par.indices.clone();
+        let mut b: Vec<usize> = seq.coreset.indices.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        if a != b {
+            return Err("parallel and sequential selections differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedules_positive_and_monotone() {
+    use craig::optim::LrSchedule;
+    let gen = PairOf(IntRange(1, 100), IntRange(0, 3));
+    forall(6, 60, &gen, |&(k, kind)| {
+        let s = match kind {
+            0 => LrSchedule::ExpDecay { a0: 0.5, b: 0.9 },
+            1 => LrSchedule::KInverse { a0: 0.5, b: 0.3 },
+            2 => LrSchedule::Power { a0: 0.5, tau: 0.7 },
+            _ => LrSchedule::Step { a0: 0.5, factor: 0.1, milestones: vec![10, 50] },
+        };
+        let now = s.at(k);
+        let next = s.at(k + 1);
+        if now <= 0.0 {
+            return Err(format!("lr must stay positive, got {now} at {k}"));
+        }
+        if next > now + 1e-9 {
+            return Err(format!("lr must not increase: {now} -> {next}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_saga_table_mean_is_full_gradient() {
+    // SAGA invariant: right after init, avg + λ_eff·w == ∇f(w)/m.
+    use craig::model::{GradOracle, LogReg};
+    use craig::optim::Saga;
+    let gen = IntRange(10, 80);
+    forall(7, 15, &gen, |&n| {
+        let ds = synthetic::covtype_like(n, n as u64 * 3 + 1);
+        let y = ds.signed_labels();
+        let mut prob = LogReg::new(ds.x.clone(), y, 1e-3);
+        let idx: Vec<usize> = (0..n).collect();
+        let gamma: Vec<f32> = (0..n).map(|i| 1.0 + (i % 4) as f32).collect();
+        let mut r = Rng::new(n as u64);
+        let w = r.normal_vec(prob.dim(), 0.0, 0.1);
+        let mut saga = Saga::new(&prob, &idx, &gamma, &w);
+        // A zero-lr step from the table point must leave w unchanged and
+        // report the direction == ∇f(w)/m at slot-consistent state.
+        let mut g = vec![0.0f32; prob.dim()];
+        prob.loss_grad_at(&w, &idx, &gamma, &mut g);
+        let mut w2 = w.clone();
+        let dir_norm = saga.step(&prob, 0, idx[0], gamma[0], &mut w2, 0.0);
+        let expect = craig::linalg::norm2(&g) / n as f32;
+        if (dir_norm - expect).abs() > 1e-3 * expect.max(1.0) {
+            return Err(format!("SAGA dir {dir_norm} vs ∇f/m {expect}"));
+        }
+        if w2 != w {
+            return Err("zero-lr step moved parameters".into());
+        }
+        Ok(())
+    });
+}
