@@ -8,8 +8,10 @@
 //!   step latency, feeder throughput.
 
 use craig::bench::{bench, report, results_dir, BenchConfig};
+use craig::coreset::WeightedCoreset;
 use craig::coreset::{lazy_greedy, naive_greedy, stochastic_greedy, DenseSim, StopRule};
-use craig::coreset::{PairwiseEngine, WeightedCoreset};
+#[cfg(feature = "backend-xla")]
+use craig::coreset::PairwiseEngine;
 use craig::csv_row;
 use craig::data::synthetic;
 use craig::linalg::{self, Matrix};
@@ -18,6 +20,7 @@ use craig::model::{GradOracle, LogReg};
 use craig::optim::Saga;
 use craig::pipeline::BatchFeeder;
 use craig::rng::Rng;
+#[cfg(feature = "backend-xla")]
 use craig::runtime::{Runtime, XlaLogReg, XlaPairwise};
 
 fn clustered(n: usize, d: usize, clusters: usize, seed: u64) -> Matrix {
@@ -73,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         });
         let gflops = (2.0 * (m * m * d) as f64) / 1e9;
         emit(&r_native, format!("{:.2} GFLOP/s", gflops / r_native.mean_s));
+        #[cfg(feature = "backend-xla")]
         if Runtime::available() {
             let rt = Runtime::load_default_shared()?;
             let mut eng = XlaPairwise::new(rt);
@@ -95,6 +99,7 @@ fn main() -> anyhow::Result<()> {
         prob.loss_grad_at(&w, &idx, &gam, &mut g)
     });
     emit(&r_native, format!("{:.0} ex/s", 1024.0 / r_native.mean_s));
+    #[cfg(feature = "backend-xla")]
     if Runtime::available() {
         let rt = Runtime::load_default_shared()?;
         let mut xo = XlaLogReg::new(rt, ds.x.clone(), y, 1e-5)?;
@@ -108,6 +113,7 @@ fn main() -> anyhow::Result<()> {
     println!();
 
     println!("== micro: PJRT dispatch overhead (margins artifact, d=22 b=256) ==");
+    #[cfg(feature = "backend-xla")]
     if Runtime::available() {
         let rt = Runtime::load_default_shared()?;
         let wl = xla::Literal::vec1(&vec![0.1f32; 22]);
@@ -124,6 +130,8 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("  (skipped: artifacts missing)");
     }
+    #[cfg(not(feature = "backend-xla"))]
+    println!("  (skipped: backend-xla feature not compiled)");
     println!();
 
     println!("== micro: SAGA step latency + feeder throughput ==");

@@ -313,4 +313,77 @@ mod tests {
         let f = fl.eval_set(&g.order);
         assert!((g.epsilon - (fl.l_s0() - f)).abs() < 1e-6);
     }
+
+    // -----------------------------------------------------------------
+    // Engine-equivalence suite: lazy ≡ naive on order AND gains under
+    // both stop rules; stochastic meets its (1 − 1/e − δ) guarantee.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn lazy_equals_naive_order_and_gains_under_budget() {
+        for seed in 0..6 {
+            let s = sim(45, 5, 200 + seed);
+            let a = naive_greedy(&s, StopRule::Budget(12));
+            let b = lazy_greedy(&s, StopRule::Budget(12));
+            assert_eq!(a.order, b.order, "seed {seed}");
+            assert_eq!(a.gains.len(), b.gains.len());
+            for (ga, gb) in a.gains.iter().zip(&b.gains) {
+                assert!((ga - gb).abs() < 1e-9, "seed {seed}: gains {ga} vs {gb}");
+            }
+            assert!((a.epsilon - b.epsilon).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lazy_equals_naive_order_and_gains_under_cover() {
+        for seed in 0..4 {
+            let s = sim(35, 4, 300 + seed);
+            let fl = FacilityLocation::new(&s);
+            let target = 0.3 * fl.l_s0();
+            let rule = StopRule::Cover { epsilon: target, max_size: 35 };
+            let a = naive_greedy(&s, rule);
+            let b = lazy_greedy(&s, rule);
+            assert_eq!(a.order, b.order, "seed {seed}");
+            for (ga, gb) in a.gains.iter().zip(&b.gains) {
+                assert!((ga - gb).abs() < 1e-9, "seed {seed}: gains {ga} vs {gb}");
+            }
+            assert!(a.epsilon <= target + 1e-6, "cover rule must certify ε");
+            assert_eq!(a.order.len(), b.order.len());
+        }
+    }
+
+    #[test]
+    fn stochastic_meets_guarantee_under_budget() {
+        // (1 − 1/e − δ)·F(S_exact) ≤ (1 − 1/e − δ)·OPT lower-bounds the
+        // guarantee's target, so it must hold against the naive engine.
+        let s = sim(90, 5, 21);
+        let delta = 0.1;
+        let exact = naive_greedy(&s, StopRule::Budget(9));
+        let bound = (1.0 - (-1.0f64).exp() - delta) * exact.f_value;
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let st = stochastic_greedy(&s, StopRule::Budget(9), delta, &mut rng);
+            assert_eq!(st.order.len(), 9);
+            assert!(
+                st.f_value >= bound,
+                "seed {seed}: stochastic {} below (1-1/e-δ) bound {bound}",
+                st.f_value
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_cover_terminates_and_certifies() {
+        let s = sim(40, 3, 22);
+        let fl = FacilityLocation::new(&s);
+        let target = 0.25 * fl.l_s0();
+        let mut rng = Rng::new(3);
+        let rule = StopRule::Cover { epsilon: target, max_size: 40 };
+        let st = stochastic_greedy(&s, rule, 0.1, &mut rng);
+        assert!(st.epsilon <= target + 1e-6, "ε {} vs target {target}", st.epsilon);
+        assert!(st.order.len() <= 40);
+        assert_eq!(st.order.len(), st.gains.len());
+        let total: f64 = st.gains.iter().sum();
+        assert!((total - st.f_value).abs() < 1e-6, "Σ gains must equal F(S)");
+    }
 }

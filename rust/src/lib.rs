@@ -13,15 +13,19 @@
 //! * **L1** — Pallas kernels for the compute hot-spots (tiled pairwise
 //!   distances, fused logreg gradient), lowered into the same HLO.
 //!
-//! The [`runtime`] module loads the AOT artifacts through PJRT (the `xla`
-//! crate); python never runs on the request path.  Every XLA-backed
-//! computation has a pure-rust twin in [`model`], used for cross-checking
-//! and for registry-less unit tests.
+//! The [`runtime`] module is the execution seam: a [`runtime::Backend`]
+//! trait whose default implementation ([`runtime::NativeBackend`]) runs
+//! the pure-rust twins in [`model`] and [`coreset::NativePairwise`].
+//! The PJRT path (the `xla` crate, `runtime::pjrt` + `runtime::engines`)
+//! is an opt-in implementation of the same trait behind the
+//! **`backend-xla`** cargo feature; with default features no `xla::`
+//! symbol is compiled and the crate builds, tests and benches fully
+//! offline — python never runs on the request path either way.
 //!
 //! Substrates ([`rng`], [`linalg`], [`data`], [`config`], [`cli`],
 //! [`metrics`], [`bench`], [`prop`], [`util`]) are implemented from
 //! scratch: the build environment's offline registry carries only the
-//! `xla` + `anyhow` dependency closure.
+//! `anyhow` (+ optionally `xla`) dependency closure.
 //!
 //! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
 //! the reproduction of every figure.

@@ -13,12 +13,12 @@
 use anyhow::Result;
 
 use craig::cli::{App, Args, Command};
-use craig::coreset::{self, Budget, Method, NativePairwise, PairwiseEngine, SelectorConfig};
+use craig::coreset::{self, Budget, Method, PairwiseEngine, SelectorConfig};
 use craig::data::{synthetic, Dataset};
 use craig::metrics::CsvWriter;
 use craig::optim::LrSchedule;
 use craig::rng::Rng;
-use craig::runtime::{Runtime, XlaPairwise};
+use craig::runtime;
 use craig::trainer::convex::{train_logreg, ConvexConfig, IgMethod};
 use craig::trainer::neural::{train_mlp, NeuralConfig};
 use craig::trainer::SubsetMode;
@@ -84,25 +84,10 @@ fn load_dataset(a: &Args) -> Result<Dataset> {
     synthetic::by_name(name, n, seed)
 }
 
-/// Resolve the pairwise backend; `auto` = XLA when artifacts exist.
+/// Resolve the pairwise backend through the [`runtime::Backend`] seam;
+/// `auto` = XLA when it is compiled in and artifacts exist.
 fn make_engine(spec: &str) -> Result<Box<dyn PairwiseEngine>> {
-    match spec {
-        "native" => Ok(Box::new(NativePairwise)),
-        "xla" => {
-            let rt = Runtime::load_default_shared()?;
-            Ok(Box::new(XlaPairwise::new(rt)))
-        }
-        "auto" => {
-            if Runtime::available() {
-                let rt = Runtime::load_default_shared()?;
-                Ok(Box::new(XlaPairwise::new(rt)))
-            } else {
-                eprintln!("note: artifacts/ not found, using native pairwise engine");
-                Ok(Box::new(NativePairwise))
-            }
-        }
-        other => anyhow::bail!("unknown engine '{other}' (native|xla|auto)"),
-    }
+    runtime::backend_by_name(spec)?.pairwise()
 }
 
 fn parse_method(s: &str) -> Result<Method> {
@@ -116,13 +101,28 @@ fn parse_method(s: &str) -> Result<Method> {
 
 fn cmd_info(a: &Args) -> Result<()> {
     println!("craig v{} — CRAIG reproduction (ICML 2020)", craig::VERSION);
-    println!("artifacts: {}", if Runtime::available() { "present" } else { "MISSING (run `make artifacts`)" });
-    if Runtime::available() {
-        let rt = Runtime::load(&Runtime::default_dir())?;
-        println!("  registry entries: {}", rt.registry().len());
-        for kind in ["pairwise", "logreg_grad", "logreg_margins", "mlp_grad", "mlp_logits", "mlp_proxy"] {
-            let c = rt.registry().by_kind(kind).count();
-            println!("    {kind:<16} {c}");
+    if cfg!(feature = "backend-xla") {
+        println!("backends: native (default), xla (compiled in)");
+    } else {
+        println!(
+            "backends: native (default); xla not compiled — rebuild with --features backend-xla"
+        );
+    }
+    #[cfg(feature = "backend-xla")]
+    {
+        use craig::runtime::Runtime;
+        if Runtime::available() {
+            let rt = Runtime::load(&Runtime::default_dir())?;
+            println!("artifacts: present ({} registry entries)", rt.registry().len());
+            let kinds = [
+                "pairwise", "logreg_grad", "logreg_margins", "mlp_grad", "mlp_logits", "mlp_proxy",
+            ];
+            for kind in kinds {
+                let c = rt.registry().by_kind(kind).count();
+                println!("    {kind:<16} {c}");
+            }
+        } else {
+            println!("artifacts: MISSING (run `make artifacts`)");
         }
     }
     let ds = load_dataset(a)?;
@@ -262,7 +262,9 @@ fn cmd_train_mlp(a: &Args) -> Result<()> {
         subset: subset_mode(a, frac, reselect, seed)?,
         ..Default::default()
     };
-    let mut engine: Box<dyn PairwiseEngine> = Box::new(NativePairwise);
+    // Proxy features are low-dimensional (c per row); the native engine
+    // is the right default for the per-epoch reselection path.
+    let mut engine = make_engine("native")?;
     let h = train_mlp(&train, &test, &cfg, engine.as_mut())?;
     println!(
         "mode={} subset={}  final: loss={:.5} test_acc={:.4}  select={:.2}s train={:.2}s",
@@ -367,7 +369,7 @@ fn cmd_grad_error(a: &Args) -> Result<()> {
     let y = ds.signed_labels();
     let mut prob = craig::model::LogReg::new(ds.x.clone(), y, 1e-5);
     let cfg = SelectorConfig { budget: Budget::Fraction(frac), seed, ..Default::default() };
-    let mut eng = NativePairwise;
+    let mut eng = craig::coreset::NativePairwise;
     let res = coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
     let mut rng = Rng::new(seed ^ 0xE44);
     let craig_s =

@@ -13,10 +13,13 @@
 //!    queue that the training consumer drains — selection/IO never stalls
 //!    the optimizer and queue depth bounds memory.
 //!
-//! Workers use the native pairwise path (the PJRT client is not `Send`
-//! in the `xla` crate, so XLA execution stays on the coordinator
-//! thread — with `workers = 1` the pipeline degrades to exactly the
-//! sequential path).
+//! Workers use the native pairwise path (the PJRT client of the opt-in
+//! `backend-xla` feature is not `Send`, so XLA execution stays on the
+//! coordinator thread — see [`crate::runtime::Backend`]; with
+//! `workers = 1` the pipeline degrades to exactly the sequential path).
+//! Determinism contract: the merged coreset is a pure function of
+//! (dataset, [`SelectorConfig`]) — independent of worker count and
+//! scheduling — verified by `rust/tests/pipeline_invariants.rs`.
 
 use std::sync::mpsc;
 use std::sync::Arc;

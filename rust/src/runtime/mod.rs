@@ -1,178 +1,225 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them on the request path — python never runs here.
+//! Execution backends — the compile-time seam between the pure-rust
+//! default engines and the opt-in PJRT/XLA deployment path.
 //!
-//! Pattern (see /opt/xla-example/load_hlo): HLO **text** →
-//! [`xla::HloModuleProto::from_text_file`] → [`xla::XlaComputation`] →
-//! `client.compile` (once, cached) → `execute` with [`xla::Literal`]
-//! inputs.  The [`registry`] module parses `manifest.txt` and resolves
-//! artifact names by kind + shape; [`engines`] adapts executables to the
-//! crate's [`crate::coreset::PairwiseEngine`] / [`crate::model::GradOracle`]
-//! interfaces with automatic batch padding (γ=0 rows are no-ops by
-//! construction of the L2 models).
+//! Every computation the coordinator dispatches flows through one of two
+//! engine interfaces: [`crate::coreset::PairwiseEngine`] (pairwise
+//! squared distances, drives selection) and [`crate::model::GradOracle`]
+//! (weighted loss/gradient, drives training). The [`Backend`] trait is
+//! the factory for both:
+//!
+//! * [`NativeBackend`] — the pure-rust twins ([`crate::linalg`],
+//!   [`crate::model`]); always compiled, the default, needs nothing but
+//!   the crate itself. This is the configuration CI and the offline
+//!   registry guarantee.
+//! * `XlaBackend` (feature `backend-xla`) — loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`) through PJRT via the [`pjrt`] runtime and
+//!   adapts them in [`engines`]; python never runs on the request path.
+//!
+//! With the feature off, no `xla::` symbol is reachable: [`pjrt`] and
+//! [`engines`] are not compiled at all, and [`backend_by_name`] reports
+//! the `xla` spec as unavailable. The [`registry`] (artifact manifest
+//! parsing) is dependency-free and stays available in both builds so the
+//! manifest format is tested offline.
 
-pub mod engines;
 pub mod registry;
 
-pub use engines::{XlaLogReg, XlaMlp, XlaPairwise};
 pub use registry::{ArtifactMeta, Registry};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+#[cfg(feature = "backend-xla")]
+pub mod engines;
+#[cfg(feature = "backend-xla")]
+pub mod pjrt;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "backend-xla")]
+pub use engines::{XlaLogReg, XlaMlp, XlaPairwise};
+#[cfg(feature = "backend-xla")]
+pub use pjrt::{
+    literal_matrix, literal_scalar, literal_vec, to_f32_vec, Runtime, SharedRuntime, XlaBackend,
+};
 
+use anyhow::Result;
+
+use crate::coreset::{NativePairwise, PairwiseEngine};
 use crate::linalg::Matrix;
+use crate::model::{GradOracle, LogReg, Mlp, MlpShape};
 
-/// Shared handle to a runtime (single-threaded interior mutability: the
-/// PJRT client and executable cache live on the coordinator thread).
-pub type SharedRuntime = Rc<RefCell<Runtime>>;
+/// A compute backend: one factory for every execution-engine interface
+/// the coordinator consumes. Implementations bind datasets to oracles;
+/// the trainers and the selection pipeline stay backend-agnostic.
+pub trait Backend {
+    /// Human-readable backend name for logs/CSV.
+    fn name(&self) -> &'static str;
 
-/// The PJRT client plus lazily-compiled executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    registry: Registry,
-    dir: PathBuf,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Executions performed (telemetry).
-    pub exec_count: u64,
+    /// Pairwise squared-distance engine (feeds facility-location
+    /// selection; see [`crate::coreset::select`]).
+    fn pairwise(&self) -> Result<Box<dyn PairwiseEngine>>;
+
+    /// Logistic-regression gradient oracle bound to `(x, y, lam)`;
+    /// labels are ±1.
+    fn logreg_oracle(&self, x: Matrix, y: Vec<f32>, lam: f32) -> Result<Box<dyn GradOracle>>;
+
+    /// MLP gradient oracle bound to `(shape, x, one-hot y, lam)`.
+    fn mlp_oracle(
+        &self,
+        shape: MlpShape,
+        x: Matrix,
+        y1h: Matrix,
+        lam: f32,
+    ) -> Result<Box<dyn GradOracle>>;
 }
 
-impl Runtime {
-    /// Default artifact directory: `$CRAIG_ARTIFACTS` or `./artifacts`
-    /// (falling back to the crate root for `cargo test` cwd quirks).
-    pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("CRAIG_ARTIFACTS") {
-            return PathBuf::from(d);
+/// The pure-rust default backend: always available, no artifacts, no
+/// PJRT, deterministic across platforms.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn pairwise(&self) -> Result<Box<dyn PairwiseEngine>> {
+        Ok(Box::new(NativePairwise))
+    }
+
+    fn logreg_oracle(&self, x: Matrix, y: Vec<f32>, lam: f32) -> Result<Box<dyn GradOracle>> {
+        Ok(Box::new(LogReg::new(x, y, lam)))
+    }
+
+    fn mlp_oracle(
+        &self,
+        shape: MlpShape,
+        x: Matrix,
+        y1h: Matrix,
+        lam: f32,
+    ) -> Result<Box<dyn GradOracle>> {
+        Ok(Box::new(Mlp::new(shape, x, y1h, lam)))
+    }
+}
+
+/// True when the XLA backend is compiled in *and* an artifact directory
+/// with a manifest is present — i.e. `backend_by_name("auto")` would
+/// pick XLA.
+#[cfg(feature = "backend-xla")]
+pub fn xla_available() -> bool {
+    Runtime::available()
+}
+
+/// True when the XLA backend is compiled in *and* an artifact directory
+/// with a manifest is present; always false without `backend-xla`.
+#[cfg(not(feature = "backend-xla"))]
+pub fn xla_available() -> bool {
+    false
+}
+
+/// Construct the XLA backend (loads manifest + PJRT client).
+#[cfg(feature = "backend-xla")]
+fn xla_backend() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(XlaBackend::load_default()?))
+}
+
+/// Without the feature, the `xla` spec is a clean configuration error.
+#[cfg(not(feature = "backend-xla"))]
+fn xla_backend() -> Result<Box<dyn Backend>> {
+    anyhow::bail!(
+        "backend 'xla' is not compiled into this build; rebuild with `--features backend-xla`"
+    )
+}
+
+/// Resolve a backend by CLI/config spec: `native` | `xla` | `auto`.
+///
+/// `auto` prefers XLA when it is compiled in and artifacts exist,
+/// otherwise falls back to native. `xla` errors when the crate was built
+/// without `--features backend-xla`.
+pub fn backend_by_name(spec: &str) -> Result<Box<dyn Backend>> {
+    match spec {
+        "native" => Ok(Box::new(NativeBackend)),
+        "xla" => xla_backend(),
+        "auto" => {
+            if xla_available() {
+                return xla_backend();
+            }
+            if cfg!(feature = "backend-xla") {
+                eprintln!("note: artifacts/ not found, using native engines");
+            }
+            Ok(Box::new(NativeBackend))
         }
-        let local = PathBuf::from("artifacts");
-        if local.join("manifest.txt").exists() {
-            return local;
-        }
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        other => anyhow::bail!("unknown backend '{other}' (native|xla|auto)"),
     }
-
-    /// True if an artifact directory with a manifest is present.
-    pub fn available() -> bool {
-        Self::default_dir().join("manifest.txt").exists()
-    }
-
-    /// Load the manifest and create the CPU PJRT client.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let registry = Registry::load(&dir.join("manifest.txt"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
-        Ok(Runtime { client, registry, dir: dir.to_path_buf(), exes: HashMap::new(), exec_count: 0 })
-    }
-
-    /// Load from the default directory, shared handle.
-    pub fn load_default_shared() -> Result<SharedRuntime> {
-        Ok(Rc::new(RefCell::new(Self::load(&Self::default_dir())?)))
-    }
-
-    pub fn registry(&self) -> &Registry {
-        &self.registry
-    }
-
-    /// Compile (once) and return the executable for an artifact name.
-    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.exes.contains_key(name) {
-            let meta = self
-                .registry
-                .by_name(name)
-                .with_context(|| format!("artifact '{name}' not in manifest"))?;
-            let path = self.dir.join(&meta.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parse HLO {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compile '{name}': {e:?}"))?;
-            self.exes.insert(name.to_string(), exe);
-        }
-        Ok(self.exes.get(name).unwrap())
-    }
-
-    /// Execute an artifact; returns the result tuple's elements.
-    /// (All L2 entry points are lowered with `return_tuple=True`.)
-    pub fn exec(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.exec_count += 1;
-        let exe = self.exe(name)?;
-        let out = exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow::anyhow!("execute '{name}': {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result of '{name}': {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple '{name}': {e:?}"))
-    }
-
-    /// Number of distinct executables compiled so far.
-    pub fn compiled_count(&self) -> usize {
-        self.exes.len()
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Literal conversion helpers shared by the engines.
-// ---------------------------------------------------------------------------
-
-/// Row-major matrix → f32 literal of shape `(rows, cols)`, optionally
-/// zero-padded to `(pad_rows, cols)`.
-pub fn literal_matrix(m: &Matrix, pad_rows: usize) -> Result<xla::Literal> {
-    let rows = m.rows.max(pad_rows);
-    let mut buf;
-    let data: &[f32] = if rows == m.rows {
-        &m.data
-    } else {
-        buf = vec![0.0f32; rows * m.cols];
-        buf[..m.data.len()].copy_from_slice(&m.data);
-        &buf
-    };
-    xla::Literal::vec1(data)
-        .reshape(&[rows as i64, m.cols as i64])
-        .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
-}
-
-/// Vector → f32 literal of shape `(len,)`, zero-padded to `pad_len`.
-pub fn literal_vec(v: &[f32], pad_len: usize) -> xla::Literal {
-    if pad_len <= v.len() {
-        xla::Literal::vec1(v)
-    } else {
-        let mut buf = vec![0.0f32; pad_len];
-        buf[..v.len()].copy_from_slice(v);
-        xla::Literal::vec1(&buf)
-    }
-}
-
-/// Scalar literal.
-pub fn literal_scalar(x: f32) -> xla::Literal {
-    xla::Literal::scalar(x)
-}
-
-/// Extract an f32 vector from a literal.
-pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
-    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synthetic;
 
     #[test]
-    fn literal_helpers_round_trip() {
-        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
-        let l = literal_matrix(&m, 4).unwrap();
-        let v = to_f32_vec(&l).unwrap();
-        assert_eq!(v.len(), 12);
-        assert_eq!(&v[..6], &[1., 2., 3., 4., 5., 6.]);
-        assert!(v[6..].iter().all(|&x| x == 0.0));
-
-        let lv = literal_vec(&[1.0, 2.0], 5);
-        assert_eq!(to_f32_vec(&lv).unwrap(), vec![1., 2., 0., 0., 0.]);
+    fn native_backend_resolves_and_reports_name() {
+        let b = backend_by_name("native").unwrap();
+        assert_eq!(b.name(), "native");
+        let mut eng = b.pairwise().unwrap();
+        assert_eq!(eng.name(), "native");
+        let x = Matrix::from_vec(2, 2, vec![0.0, 0.0, 3.0, 4.0]);
+        let d = eng.sqdist(&x, &x);
+        assert!((d.get(0, 1) - 25.0).abs() < 1e-5);
     }
 
-    // Full execution tests live in rust/tests/xla_crosscheck.rs (they
-    // need artifacts/ built by `make artifacts`).
+    #[test]
+    fn auto_spec_always_resolves() {
+        // Offline/default builds must resolve `auto` to *something*
+        // without artifacts present.
+        let b = backend_by_name("auto").unwrap();
+        let _ = b.pairwise().unwrap();
+    }
+
+    #[test]
+    fn unknown_spec_is_an_error() {
+        assert!(backend_by_name("tpu").is_err());
+    }
+
+    #[test]
+    fn xla_spec_errors_cleanly_when_not_compiled() {
+        #[cfg(not(feature = "backend-xla"))]
+        {
+            let err = backend_by_name("xla").unwrap_err().to_string();
+            assert!(err.contains("backend-xla"), "{err}");
+            assert!(!xla_available());
+        }
+    }
+
+    #[test]
+    fn native_oracles_match_direct_models() {
+        let ds = synthetic::covtype_like(60, 0);
+        let y = ds.signed_labels();
+        let b = NativeBackend;
+        let mut via_backend = b.logreg_oracle(ds.x.clone(), y.clone(), 1e-3).unwrap();
+        let mut direct = LogReg::new(ds.x.clone(), y, 1e-3);
+        let w = vec![0.01f32; ds.d()];
+        let idx: Vec<usize> = (0..ds.n()).collect();
+        let gamma = vec![1.0f32; ds.n()];
+        let mut g1 = vec![0.0f32; ds.d()];
+        let mut g2 = vec![0.0f32; ds.d()];
+        let l1 = via_backend.loss_grad_at(&w, &idx, &gamma, &mut g1);
+        let l2 = direct.loss_grad_at(&w, &idx, &gamma, &mut g2);
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        assert_eq!(via_backend.dim(), ds.d());
+        assert_eq!(via_backend.num_examples(), ds.n());
+    }
+
+    #[test]
+    fn native_mlp_oracle_produces_gradients() {
+        let ds = synthetic::by_name("mixture:6:3", 20, 1).unwrap();
+        let shape = MlpShape { d: 6, h: 4, c: 3 };
+        let b = NativeBackend;
+        let mut o = b.mlp_oracle(shape, ds.x.clone(), ds.one_hot(), 1e-4).unwrap();
+        assert_eq!(o.dim(), shape.num_params());
+        let mut rng = crate::rng::Rng::new(2);
+        let params = crate::model::MlpParams::init(shape, &mut rng);
+        let mut g = vec![0.0f32; shape.num_params()];
+        let idx: Vec<usize> = (0..20).collect();
+        let gamma = vec![1.0f32; 20];
+        let loss = o.loss_grad_at(&params, &idx, &gamma, &mut g);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(g.iter().any(|&v| v != 0.0));
+    }
 }

@@ -1,0 +1,230 @@
+//! PJRT runtime (feature `backend-xla`): loads the AOT artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the request path —
+//! python never runs here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO **text** →
+//! [`xla::HloModuleProto::from_text_file`] → [`xla::XlaComputation`] →
+//! `client.compile` (once, cached) → `execute` with [`xla::Literal`]
+//! inputs.  The [`super::registry`] module parses `manifest.txt` and
+//! resolves artifact names by kind + shape; [`super::engines`] adapts
+//! executables to the crate's [`crate::coreset::PairwiseEngine`] /
+//! [`crate::model::GradOracle`] interfaces with automatic batch padding
+//! (γ=0 rows are no-ops by construction of the L2 models).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::engines::{XlaLogReg, XlaMlp, XlaPairwise};
+use super::registry::Registry;
+use super::Backend;
+use crate::coreset::PairwiseEngine;
+use crate::linalg::Matrix;
+use crate::model::{GradOracle, MlpShape};
+
+/// Shared handle to a runtime (single-threaded interior mutability: the
+/// PJRT client and executable cache live on the coordinator thread).
+pub type SharedRuntime = Rc<RefCell<Runtime>>;
+
+/// The PJRT client plus lazily-compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (telemetry).
+    pub exec_count: u64,
+}
+
+impl Runtime {
+    /// Default artifact directory: `$CRAIG_ARTIFACTS` or `./artifacts`
+    /// (falling back to the crate root for `cargo test` cwd quirks).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("CRAIG_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let local = PathBuf::from("artifacts");
+        if local.join("manifest.txt").exists() {
+            return local;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// True if an artifact directory with a manifest is present.
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.txt").exists()
+    }
+
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let registry = Registry::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
+        Ok(Runtime { client, registry, dir: dir.to_path_buf(), exes: HashMap::new(), exec_count: 0 })
+    }
+
+    /// Load from the default directory, shared handle.
+    pub fn load_default_shared() -> Result<SharedRuntime> {
+        Ok(Rc::new(RefCell::new(Self::load(&Self::default_dir())?)))
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Compile (once) and return the executable for an artifact name.
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let meta = self
+                .registry
+                .by_name(name)
+                .with_context(|| format!("artifact '{name}' not in manifest"))?;
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse HLO {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile '{name}': {e:?}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(self.exes.get(name).unwrap())
+    }
+
+    /// Execute an artifact; returns the result tuple's elements.
+    /// (All L2 entry points are lowered with `return_tuple=True`.)
+    pub fn exec(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.exec_count += 1;
+        let exe = self.exe(name)?;
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute '{name}': {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of '{name}': {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple '{name}': {e:?}"))
+    }
+
+    /// Number of distinct executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The opt-in XLA implementation of the Backend seam.
+// ---------------------------------------------------------------------------
+
+/// [`Backend`] executing AOT artifacts through PJRT. Construction loads
+/// the manifest and spins up the CPU client; engines share the runtime
+/// handle (and therefore its executable cache).
+pub struct XlaBackend {
+    rt: SharedRuntime,
+}
+
+impl XlaBackend {
+    pub fn new(rt: SharedRuntime) -> Self {
+        XlaBackend { rt }
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Self> {
+        Ok(Self::new(Runtime::load_default_shared()?))
+    }
+
+    /// The shared runtime handle (for telemetry / direct `exec`).
+    pub fn runtime(&self) -> SharedRuntime {
+        self.rt.clone()
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn pairwise(&self) -> Result<Box<dyn PairwiseEngine>> {
+        Ok(Box::new(XlaPairwise::new(self.rt.clone())))
+    }
+
+    fn logreg_oracle(&self, x: Matrix, y: Vec<f32>, lam: f32) -> Result<Box<dyn GradOracle>> {
+        Ok(Box::new(XlaLogReg::new(self.rt.clone(), x, y, lam)?))
+    }
+
+    fn mlp_oracle(
+        &self,
+        shape: MlpShape,
+        x: Matrix,
+        y1h: Matrix,
+        lam: f32,
+    ) -> Result<Box<dyn GradOracle>> {
+        Ok(Box::new(XlaMlp::new(self.rt.clone(), shape, x, y1h, lam)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers shared by the engines.
+// ---------------------------------------------------------------------------
+
+/// Row-major matrix → f32 literal of shape `(rows, cols)`, optionally
+/// zero-padded to `(pad_rows, cols)`.
+pub fn literal_matrix(m: &Matrix, pad_rows: usize) -> Result<xla::Literal> {
+    let rows = m.rows.max(pad_rows);
+    let mut buf;
+    let data: &[f32] = if rows == m.rows {
+        &m.data
+    } else {
+        buf = vec![0.0f32; rows * m.cols];
+        buf[..m.data.len()].copy_from_slice(&m.data);
+        &buf
+    };
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, m.cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+}
+
+/// Vector → f32 literal of shape `(len,)`, zero-padded to `pad_len`.
+pub fn literal_vec(v: &[f32], pad_len: usize) -> xla::Literal {
+    if pad_len <= v.len() {
+        xla::Literal::vec1(v)
+    } else {
+        let mut buf = vec![0.0f32; pad_len];
+        buf[..v.len()].copy_from_slice(v);
+        xla::Literal::vec1(&buf)
+    }
+}
+
+/// Scalar literal.
+pub fn literal_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_round_trip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let l = literal_matrix(&m, 4).unwrap();
+        let v = to_f32_vec(&l).unwrap();
+        assert_eq!(v.len(), 12);
+        assert_eq!(&v[..6], &[1., 2., 3., 4., 5., 6.]);
+        assert!(v[6..].iter().all(|&x| x == 0.0));
+
+        let lv = literal_vec(&[1.0, 2.0], 5);
+        assert_eq!(to_f32_vec(&lv).unwrap(), vec![1., 2., 0., 0., 0.]);
+    }
+
+    // Full execution tests live in rust/tests/xla_crosscheck.rs (they
+    // need artifacts/ built by `make artifacts` and a real `xla` crate,
+    // not the vendored stub).
+}

@@ -32,7 +32,7 @@ pub fn argmin(xs: &[f32]) -> Option<usize> {
 /// Ceiling division.
 #[inline]
 pub fn div_ceil(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 #[cfg(test)]

@@ -1,6 +1,7 @@
 //! Integration: full-system smoke over the real composition — pipeline
 //! selection → batch feeder → weighted-IG training → metrics, with the
-//! XLA engines when artifacts are present.
+//! XLA engines when the `backend-xla` feature is compiled in and
+//! artifacts are present.
 
 use craig::coreset::{Budget, SelectorConfig};
 use craig::data::synthetic;
@@ -8,7 +9,6 @@ use craig::model::{GradOracle, LogReg};
 use craig::optim::LrSchedule;
 use craig::pipeline::Orchestrator;
 use craig::rng::Rng;
-use craig::runtime::Runtime;
 use craig::trainer::convex::{train_logreg, ConvexConfig, IgMethod};
 use craig::trainer::SubsetMode;
 
@@ -123,8 +123,16 @@ fn cli_binary_smoke() {
     assert!(!out.status.success());
 }
 
+#[cfg(not(feature = "backend-xla"))]
+#[test]
+fn xla_end_to_end_skipped_without_backend_feature() {
+    eprintln!("SKIP: built without --features backend-xla — XLA end-to-end leg not compiled");
+}
+
+#[cfg(feature = "backend-xla")]
 #[test]
 fn xla_end_to_end_training_when_artifacts_present() {
+    use craig::runtime::Runtime;
     if !Runtime::available() {
         eprintln!("SKIP: artifacts/ missing");
         return;

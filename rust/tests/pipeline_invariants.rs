@@ -1,0 +1,110 @@
+//! Integration: `pipeline::SelectionPipeline` invariants.
+//!
+//! * Determinism — the same seed and worker count must produce the
+//!   byte-identical merged coreset run over run (workers shard
+//!   independent per-class subproblems and the collector merges in
+//!   class order, so nothing may depend on scheduling).
+//! * Worker-count independence — the merged result is a pure function
+//!   of (dataset, config), not of the pool size.
+//! * Class balance — per-class selection preserves the dataset's class
+//!   ratios within rounding, and the merged weights cover the dataset.
+
+use craig::coreset::{Budget, Method, SelectorConfig, WeightedCoreset};
+use craig::data::synthetic;
+use craig::pipeline::SelectionPipeline;
+
+fn pairs(wc: &WeightedCoreset) -> Vec<(usize, f32)> {
+    wc.indices.iter().copied().zip(wc.gamma.iter().copied()).collect()
+}
+
+#[test]
+fn same_seed_same_workers_identical_coreset() {
+    let ds = synthetic::covtype_like(700, 0);
+    let cfg = SelectorConfig { budget: Budget::Fraction(0.1), seed: 42, ..Default::default() };
+    let pipe = SelectionPipeline::new(3);
+    let (a, _) = pipe.select(&ds, &cfg);
+    let (b, _) = pipe.select(&ds, &cfg);
+    assert_eq!(pairs(&a), pairs(&b), "same seed + workers must reproduce exactly");
+
+    // A fresh pipeline with the same worker count reproduces too.
+    let pipe2 = SelectionPipeline::new(3);
+    let (c, _) = pipe2.select(&ds, &cfg);
+    assert_eq!(pairs(&a), pairs(&c));
+}
+
+#[test]
+fn worker_count_does_not_change_result() {
+    let ds = synthetic::ijcnn1_like(800, 1);
+    for method in [Method::Lazy, Method::Stochastic { delta: 0.1 }] {
+        let cfg = SelectorConfig {
+            method,
+            budget: Budget::Fraction(0.1),
+            seed: 7,
+            ..Default::default()
+        };
+        let (one, _) = SelectionPipeline::new(1).select(&ds, &cfg);
+        let (four, _) = SelectionPipeline::new(4).select(&ds, &cfg);
+        assert_eq!(
+            pairs(&one),
+            pairs(&four),
+            "merged coreset must be independent of the worker count ({method:?})"
+        );
+    }
+}
+
+#[test]
+fn stochastic_runs_are_seed_deterministic() {
+    // Stochastic greedy derives per-class streams from cfg.seed, so the
+    // pipeline stays reproducible even with subsampled gain evaluation.
+    let ds = synthetic::covtype_like(500, 3);
+    let cfg = SelectorConfig {
+        method: Method::Stochastic { delta: 0.05 },
+        budget: Budget::Fraction(0.1),
+        seed: 11,
+        ..Default::default()
+    };
+    let pipe = SelectionPipeline::new(2);
+    let (a, _) = pipe.select(&ds, &cfg);
+    let (b, _) = pipe.select(&ds, &cfg);
+    assert_eq!(pairs(&a), pairs(&b));
+
+    let other = SelectorConfig { seed: 12, ..cfg };
+    let (c, _) = pipe.select(&ds, &other);
+    assert_ne!(pairs(&a), pairs(&c), "different seeds should explore differently");
+}
+
+#[test]
+fn merged_selection_preserves_class_ratios() {
+    let ds = synthetic::ijcnn1_like(2000, 0);
+    let frac = 0.1;
+    let cfg = SelectorConfig { budget: Budget::Fraction(frac), ..Default::default() };
+    let pipe = SelectionPipeline::new(3);
+    let (merged, stats) = pipe.select(&ds, &cfg);
+    assert_eq!(stats.classes, 2);
+    assert_eq!(stats.selected, merged.indices.len());
+
+    let counts = ds.class_counts();
+    let mut sel_counts = vec![0usize; ds.num_classes];
+    let mut sel_weight = vec![0.0f32; ds.num_classes];
+    for (&i, &g) in merged.indices.iter().zip(&merged.gamma) {
+        sel_counts[ds.y[i] as usize] += 1;
+        sel_weight[ds.y[i] as usize] += g;
+    }
+    for c in 0..ds.num_classes {
+        let expect = ((counts[c] as f64) * frac).round().max(1.0) as usize;
+        assert_eq!(
+            sel_counts[c], expect,
+            "class {c}: selected {} vs rounded share {expect}",
+            sel_counts[c]
+        );
+        // Per-class weights must cover the class exactly (Σγ_c = n_c).
+        assert!(
+            (sel_weight[c] - counts[c] as f32).abs() < 1e-3,
+            "class {c}: Σγ {} vs n_c {}",
+            sel_weight[c],
+            counts[c]
+        );
+    }
+    let total: f32 = merged.gamma.iter().sum();
+    assert!((total - ds.n() as f32).abs() < 1e-3, "Σγ {total} must equal n");
+}

@@ -1,8 +1,20 @@
 //! Integration: every AOT artifact's numerics vs the native rust twins.
 //!
-//! These tests need `artifacts/` (run `make artifacts` first); when the
-//! directory is absent they SKIP (pass with a note) so registry-less
-//! `cargo test` still goes green.
+//! Two-level gating keeps `cargo test` green in every configuration:
+//!
+//! * Without the `backend-xla` feature the whole suite compiles to a
+//!   single SKIP stub (the XLA engines do not exist in that build).
+//! * With the feature but without `artifacts/` (run `make artifacts`
+//!   first) every test SKIPs at runtime with a note.
+
+#[cfg(not(feature = "backend-xla"))]
+#[test]
+fn xla_crosscheck_skipped_without_backend_feature() {
+    eprintln!("SKIP: built without --features backend-xla — XLA cross-checks not compiled");
+}
+
+#[cfg(feature = "backend-xla")]
+mod with_xla {
 
 use craig::coreset::{self, Budget, NativePairwise, PairwiseEngine, SelectorConfig};
 use craig::data::synthetic;
@@ -163,3 +175,5 @@ fn runtime_caches_compiled_executables() {
     assert_eq!(c1, c2, "second call must reuse the compiled executable");
     assert!(rt.borrow().exec_count >= 2);
 }
+
+} // mod with_xla

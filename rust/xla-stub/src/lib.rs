@@ -1,0 +1,204 @@
+//! Offline API stub of the `xla` PJRT bindings.
+//!
+//! The build environment's offline registry may not carry the real
+//! `xla` crate, but `craig`'s `backend-xla` feature must still
+//! *type-check* (the PJRT path is compile-gated, not deleted). This
+//! crate mirrors exactly the API surface `craig::runtime` consumes:
+//!
+//! * host-side [`Literal`] construction/reshape/readback — implemented
+//!   for real (they are plain buffers), so literal round-trip tests pass;
+//! * PJRT client / compilation / execution — every entry point returns
+//!   an [`Error`] explaining that the stub is linked, so callers fail
+//!   loudly at runtime instead of silently computing nothing.
+//!
+//! To link the genuine runtime, point the `xla` dependency of `craig`
+//! at the real crate (registry version or git) — no `craig` source
+//! changes are needed; see DESIGN.md §6.
+
+use std::path::Path;
+
+/// Stub error: carries a human-readable reason. The real crate's error
+/// type is also formatted via `{:?}` at every `craig` call site.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} is unavailable — craig was built against the vendored API stub; \
+         link the real `xla` crate to execute PJRT artifacts"
+    )))
+}
+
+/// Element types a [`Literal`] can hold. The stub stores everything as
+/// f32 because that is the only element type the AOT artifacts use.
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// Host-side tensor literal (row-major f32 buffer plus dims).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            data: v.iter().map(|x| x.to_f32()).collect(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { data: vec![x.to_f32()], dims: Vec::new() }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "xla stub: reshape to {dims:?} ({want} elements) from buffer of {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read the buffer back as a flat vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Destructure a tuple literal. Only execution produces tuples, so
+    /// the stub can never hold one.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple (tuple literals only come from PJRT execution)")
+    }
+
+    /// Dims accessor (handy for debugging).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        ))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The real crate spins up the CPU PJRT plugin here; the stub
+    /// reports itself so `Runtime::load` fails with a clear message.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_works_in_stub() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        let s = Literal::scalar(7.5f32);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+        assert!(s.dims().is_empty());
+    }
+
+    #[test]
+    fn pjrt_entry_points_fail_loudly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+        assert!(HloModuleProto::from_text_file("/tmp/nope.hlo.txt").is_err());
+        assert!(Literal::scalar(0.0f32).to_tuple().is_err());
+    }
+}
