@@ -62,7 +62,10 @@ fn main() -> anyhow::Result<()> {
                     reselect_every: 0,
                 },
             ),
-            ("random", SubsetMode::Random { budget: Budget::Fraction(frac), reselect_every: 0, seed: 5 }),
+            (
+                "random",
+                SubsetMode::Random { budget: Budget::Fraction(frac), reselect_every: 0, seed: 5 },
+            ),
         ] {
             let base = ConvexConfig {
                 method,

@@ -44,13 +44,21 @@ fn main() -> anyhow::Result<()> {
         .train_time_to_loss(f_star, target)
         .unwrap_or(full.last().train_s);
     println!(
-        "full-data SGD: residual {full_residual:.6}; reaches target {target:.4} in {full_time:.3}s training\n"
+        "full-data SGD: residual {full_residual:.6}; reaches target {target:.4} \
+         in {full_time:.3}s training\n"
     );
 
     let dir = craig::bench::results_dir();
     let mut csv = CsvWriter::create(
         &dir.join("fig3_subset_sweep.csv"),
-        &["fraction", "mode", "final_residual", "train_time_to_full_residual_s", "speedup", "select_s"],
+        &[
+            "fraction",
+            "mode",
+            "final_residual",
+            "train_time_to_full_residual_s",
+            "speedup",
+            "select_s",
+        ],
     )?;
     println!(
         "{:>6} {:<7} {:>14} {:>12} {:>9} {:>10}",
@@ -65,7 +73,10 @@ fn main() -> anyhow::Result<()> {
                     reselect_every: 0,
                 },
             ),
-            ("random", SubsetMode::Random { budget: Budget::Fraction(frac), reselect_every: 0, seed: 7 }),
+            (
+                "random",
+                SubsetMode::Random { budget: Budget::Fraction(frac), reselect_every: 0, seed: 7 },
+            ),
         ] {
             let b = ConvexConfig { subset, ..base.clone() };
             let a0 = tune_a0(&train, &test, &b, &candidates, 5, &mut eng)?;

@@ -50,7 +50,10 @@ fn main() -> anyhow::Result<()> {
                 reselect_every: 1,
             },
         ),
-        ("random", SubsetMode::Random { budget: Budget::Fraction(0.5), reselect_every: 1, seed: 3 }),
+        (
+            "random",
+            SubsetMode::Random { budget: Budget::Fraction(0.5), reselect_every: 1, seed: 3 },
+        ),
     ] {
         let mut eng = NativePairwise;
         let h = train_mlp(&train, &test, &mk(subset), &mut eng)?;
@@ -71,15 +74,24 @@ fn main() -> anyhow::Result<()> {
 
     // Speedup to the accuracy CRAIG ends at.
     let craig_acc = finals[1].1;
-    let t_craig = finals[1].3.records.iter().find(|r| r.test_metric >= craig_acc).map(|r| r.select_s + r.train_s);
-    let t_full = finals[0].3.records.iter().find(|r| r.test_metric >= craig_acc).map(|r| r.select_s + r.train_s);
+    let time_to = |h: &craig::trainer::History| {
+        h.records
+            .iter()
+            .find(|r| r.test_metric >= craig_acc)
+            .map(|r| r.select_s + r.train_s)
+    };
+    let t_craig = time_to(&finals[1].3);
+    let t_full = time_to(&finals[0].3);
     match (t_full, t_craig) {
         (Some(tf), Some(tc)) => println!(
             "\nCRAIG speedup to {:.3} accuracy: {:.2}x (paper: 2–3x)",
             craig_acc,
             tf / tc.max(1e-9)
         ),
-        _ => println!("\nfull run never reached CRAIG's final accuracy — CRAIG generalized better (paper observes the same)"),
+        _ => println!(
+            "\nfull run never reached CRAIG's final accuracy — CRAIG generalized better \
+             (paper observes the same)"
+        ),
     }
     println!("series -> target/bench_results/fig4_mnist.csv");
     Ok(())

@@ -23,17 +23,7 @@ use craig::rng::Rng;
 #[cfg(feature = "backend-xla")]
 use craig::runtime::{Runtime, XlaLogReg, XlaPairwise};
 
-fn clustered(n: usize, d: usize, clusters: usize, seed: u64) -> Matrix {
-    let mut r = Rng::new(seed);
-    let mut data = Vec::with_capacity(n * d);
-    for i in 0..n {
-        let c = i % clusters;
-        for j in 0..d {
-            data.push((c * 7 + j) as f32 * 0.3 + r.normal32(0.0, 0.1));
-        }
-    }
-    Matrix::from_vec(n, d, data)
-}
+use craig::bench::suite::clustered;
 
 fn main() -> anyhow::Result<()> {
     let cfg = BenchConfig { warmup_iters: 2, measure_iters: 8, ..Default::default() };
@@ -84,6 +74,21 @@ fn main() -> anyhow::Result<()> {
             let r_xla = bench(&format!("pairwise/xla_{m}x{d}"), &cfg, |_| eng.sqdist(&a, &a));
             emit(&r_xla, format!("{:.2} GFLOP/s", gflops / r_xla.mean_s));
         }
+    }
+    println!();
+
+    println!("== micro: intra-class parallel selection (n=2000, single class) ==");
+    for width in [1usize, 2, 4] {
+        let pool = craig::util::ThreadPool::scoped(width);
+        let r_kernel = bench(&format!("pairwise/self_par_t{width}"), &cfg, |_| {
+            linalg::pairwise_sqdist_self_par(&x, &pool)
+        });
+        emit(&r_kernel, format!("{width} threads"));
+        let r_sel = bench(&format!("select/lazy_par_t{width}"), &cfg, |_| {
+            let s = DenseSim::from_features_par(&x, &pool);
+            craig::coreset::lazy_greedy_par(&s, StopRule::Budget(200), &pool)
+        });
+        emit(&r_sel, format!("{width} threads, end-to-end"));
     }
     println!();
 

@@ -3,6 +3,11 @@
 //! `criterion`.  All `benches/fig*.rs` targets are `harness = false`
 //! binaries built on this module; each prints the paper-figure series it
 //! regenerates and mirrors it into `target/bench_results/<name>.csv`.
+//!
+//! [`suite`] holds the fixed perf-snapshot suite behind `craig bench`
+//! (the machine-readable `BENCH_selection.json` CI artifact).
+
+pub mod suite;
 
 use std::time::{Duration, Instant};
 
@@ -109,7 +114,11 @@ mod tests {
 
     #[test]
     fn bench_reports_sane_stats() {
-        let cfg = BenchConfig { warmup_iters: 1, measure_iters: 5, max_total: Duration::from_secs(5) };
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            measure_iters: 5,
+            max_total: Duration::from_secs(5),
+        };
         let r = bench("sleep", &cfg, |_| std::thread::sleep(Duration::from_millis(2)));
         assert_eq!(r.iters, 5);
         assert!(r.mean_s >= 0.0015, "{}", r.mean_s);

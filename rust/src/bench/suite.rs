@@ -1,0 +1,294 @@
+//! The fixed perf-snapshot suite behind `craig bench`.
+//!
+//! A small, deterministic set of measurements over synthetic clustered
+//! data — the pairwise kernel build and single-class selection with all
+//! three greedy engines, each at 1 thread and at N threads — emitted as
+//! a schema'd `BENCH_selection.json`.  CI runs the `--quick` variant
+//! every push and uploads the artifact, so the perf trajectory of the
+//! selection hot path is machine-readable across PRs (the missing
+//! `BENCH_*.json` record called out by ISSUE 2).
+//!
+//! The suite also *verifies* the determinism contract it is measuring:
+//! each engine's selection at N threads must match the 1-thread run
+//! exactly (indices and weights); `parallel_matches_sequential` lands
+//! in the JSON and the CLI exits nonzero when it fails.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::{bench, BenchConfig, BenchResult};
+use crate::coreset::{
+    lazy_greedy_par, naive_greedy_par, stochastic_greedy_par, DenseSim, StopRule, WeightedCoreset,
+};
+use crate::linalg::{self, Matrix};
+use crate::rng::Rng;
+use crate::util::ThreadPool;
+
+/// JSON schema version of `BENCH_selection.json`.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Suite knobs (everything else is fixed by design).
+pub struct SuiteConfig {
+    /// Tiny sizes + few iterations: the CI smoke variant.
+    pub quick: bool,
+    /// The "parallel" leg's thread count (compared against 1 thread).
+    pub threads: usize,
+}
+
+/// One named measurement.
+pub struct SuiteCase {
+    pub result: BenchResult,
+    pub threads: usize,
+    /// Items processed per iteration (defines the throughput figure).
+    pub items: f64,
+}
+
+impl SuiteCase {
+    pub fn throughput(&self) -> f64 {
+        self.result.throughput(self.items)
+    }
+}
+
+/// Everything `BENCH_selection.json` serializes.
+pub struct SuiteReport {
+    pub git_rev: String,
+    pub threads: usize,
+    pub quick: bool,
+    /// Single-class problem size (points × feature dim).
+    pub n: usize,
+    pub d: usize,
+    pub cases: Vec<SuiteCase>,
+    /// 1-thread mean / N-thread mean for end-to-end lazy selection.
+    pub speedup_lazy_selection: f64,
+    /// Same ratio for the bare kernel build.
+    pub speedup_kernel_build: f64,
+    /// Every engine produced identical indices and weights at 1 and N
+    /// threads (the determinism contract).
+    pub parallel_matches_sequential: bool,
+}
+
+/// Deterministic clustered features — the fixed workload of the suite,
+/// shared with `benches/micro.rs` so the micro numbers and the CI
+/// snapshot stay comparable.
+pub fn clustered(n: usize, d: usize, clusters: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let c = i % clusters;
+        for j in 0..d {
+            data.push((c * 7 + j) as f32 * 0.3 + r.normal32(0.0, 0.1));
+        }
+    }
+    Matrix::from_vec(n, d, data)
+}
+
+/// End-to-end single-class selection: kernel build → similarity build →
+/// greedy → weights.  Returns (indices, weights) for the equivalence
+/// check.
+fn run_selection(
+    x: &Matrix,
+    r: usize,
+    method: &str,
+    seed: u64,
+    pool: &ThreadPool,
+) -> (Vec<usize>, Vec<f32>) {
+    let sim = DenseSim::from_features_par(x, pool);
+    let rule = StopRule::Budget(r);
+    let sel = match method {
+        "lazy" => lazy_greedy_par(&sim, rule, pool),
+        "naive" => naive_greedy_par(&sim, rule, pool),
+        "stochastic" => {
+            let mut rng = Rng::new(seed);
+            stochastic_greedy_par(&sim, rule, 0.05, &mut rng, pool)
+        }
+        other => unreachable!("unknown suite method {other}"),
+    };
+    let wc = WeightedCoreset::compute(&sim, &sel.order);
+    (sel.order, wc.gamma)
+}
+
+/// Run the fixed suite.  Case names are stable identifiers — CI and
+/// trend tooling key on them.
+pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
+    let threads = cfg.threads.max(2);
+    let (n, d, r, r_naive) = if cfg.quick { (600, 16, 60, 12) } else { (3000, 32, 300, 60) };
+    let (iters, warmup) = if cfg.quick { (3, 1) } else { (7, 2) };
+    let bc = BenchConfig {
+        warmup_iters: warmup,
+        measure_iters: iters,
+        max_total: Duration::from_secs(if cfg.quick { 30 } else { 120 }),
+    };
+    let x = clustered(n, d, 24, 0);
+    let pool1 = ThreadPool::scoped(1);
+    let pool_n = ThreadPool::scoped(threads);
+    let mut cases: Vec<SuiteCase> = Vec::new();
+
+    // Bare kernel build (the L1 hot spot): n² pair entries per iter.
+    for (w, pool) in [(1usize, &pool1), (threads, &pool_n)] {
+        let res = bench(&format!("kernel/pairwise_self/t{w}"), &bc, |_| {
+            linalg::pairwise_sqdist_self_par(&x, pool)
+        });
+        cases.push(SuiteCase { result: res, threads: w, items: (n * n) as f64 });
+    }
+    let speedup_kernel_build = cases[0].result.mean_s / cases[1].result.mean_s;
+
+    // End-to-end single-class selection per engine, 1 vs N threads,
+    // with the determinism contract checked on the side.
+    let mut equivalent = true;
+    let mut speedup_lazy_selection = 0.0;
+    for method in ["lazy", "naive", "stochastic"] {
+        let budget = if method == "naive" { r_naive } else { r };
+        let seq = run_selection(&x, budget, method, 7, &pool1);
+        let par = run_selection(&x, budget, method, 7, &pool_n);
+        equivalent &= seq == par;
+        let mut pair = Vec::with_capacity(2);
+        for (w, pool) in [(1usize, &pool1), (threads, &pool_n)] {
+            let res = bench(&format!("select/{method}/t{w}"), &bc, |_| {
+                run_selection(&x, budget, method, 7, pool)
+            });
+            pair.push(res.mean_s);
+            cases.push(SuiteCase { result: res, threads: w, items: n as f64 });
+        }
+        if method == "lazy" {
+            speedup_lazy_selection = pair[0] / pair[1];
+        }
+    }
+
+    SuiteReport {
+        git_rev: git_rev(),
+        threads,
+        quick: cfg.quick,
+        n,
+        d,
+        cases,
+        speedup_lazy_selection,
+        speedup_kernel_build,
+        parallel_matches_sequential: equivalent,
+    }
+}
+
+/// Resolve the git revision for the snapshot: `$GITHUB_SHA` in CI,
+/// `git rev-parse` locally, `"unknown"` offline.
+fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A JSON number literal (f64 `Display` round-trips and emits valid
+/// JSON for all finite values; non-finite degrades to `null`).
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Serialize the report (`BENCH_selection.json`, schema v1).
+pub fn to_json(rep: &SuiteReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema_version\": {SCHEMA_VERSION},\n"));
+    s.push_str("  \"suite\": \"selection\",\n");
+    s.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&rep.git_rev)));
+    s.push_str(&format!("  \"threads\": {},\n", rep.threads));
+    s.push_str(&format!("  \"quick\": {},\n", rep.quick));
+    s.push_str(&format!(
+        "  \"dataset\": {{\"kind\": \"clustered-synthetic\", \"n\": {}, \"d\": {}}},\n",
+        rep.n, rep.d
+    ));
+    s.push_str(&format!(
+        "  \"parallel_matches_sequential\": {},\n",
+        rep.parallel_matches_sequential
+    ));
+    s.push_str(&format!(
+        "  \"speedup\": {{\"lazy_selection\": {}, \"kernel_build\": {}}},\n",
+        json_num(rep.speedup_lazy_selection),
+        json_num(rep.speedup_kernel_build)
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, c) in rep.cases.iter().enumerate() {
+        let r = &c.result;
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"threads\": {}, \"iters\": {}, \"mean_s\": {}, \
+             \"std_s\": {}, \"median_s\": {}, \"min_s\": {}, \"throughput\": {}}}{}\n",
+            json_escape(&r.name),
+            c.threads,
+            r.iters,
+            json_num(r.mean_s),
+            json_num(r.std_s),
+            json_num(r.median_s),
+            json_num(r.min_s),
+            json_num(c.throughput()),
+            if i + 1 < rep.cases.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write the report to `path`.
+pub fn write_json(rep: &SuiteReport, path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(rep))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_suite_is_valid_and_equivalent() {
+        let rep = run_selection_suite(&SuiteConfig { quick: true, threads: 2 });
+        assert!(rep.parallel_matches_sequential, "parallel must equal sequential");
+        assert_eq!(rep.cases.len(), 8, "2 kernel + 3 engines x 2 widths");
+        assert!(rep.cases.iter().all(|c| c.result.mean_s > 0.0));
+        assert!(rep.speedup_lazy_selection > 0.0);
+        let json = to_json(&rep);
+        assert!(json.contains("\"schema_version\": 1"));
+        assert!(json.contains("select/lazy/t1"));
+        assert!(json.contains("select/lazy/t2"));
+        assert!(json.contains("\"parallel_matches_sequential\": true"));
+        // Balanced braces/brackets as a cheap well-formedness proxy.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn json_escaping_and_numbers() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_num(2.5), "2.5");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+    }
+}

@@ -117,7 +117,8 @@ mod tests {
         let mut rand_mean = 0.0;
         for seed in 0..5 {
             let mut r2 = Rng::new(seed);
-            let rb = coreset::random_baseline(600, &labels, 2, &Budget::Fraction(0.1), true, &mut r2);
+            let rb =
+                coreset::random_baseline(600, &labels, 2, &Budget::Fraction(0.1), true, &mut r2);
             let s = gradient_error_samples(&mut lr, &rb, 8, 0.1, &mut rng);
             rand_mean += summarize(&s).mean_normalized;
         }

@@ -9,8 +9,69 @@
 //!
 //! The incremental state is the per-point best similarity (the classic
 //! O(n) marginal-gain trick): `gain(e | S) = Σ_i max(0, s_ie − best_i)`.
+//!
+//! ## Determinism contract under parallel sweeps
+//!
+//! Gains are f64 sums, and f64 addition is not associative — splitting
+//! *one* gain across threads would make F(S) (and thus tie-breaks)
+//! depend on the thread count.  So parallelism lives strictly at the
+//! **candidate** granularity: a single gain evaluation always runs on
+//! exactly one thread, via the same shared reduction ([`gain_over`])
+//! whether it is called from the incremental evaluator or from a
+//! scoped sweep worker in [`crate::coreset::greedy`].  Per-candidate
+//! values are therefore bitwise-equal at any `parallelism`, and the
+//! sweeps combine them in a fixed range order — verified by
+//! `tests/parallel_equivalence.rs`.  (Per-gain fan-out is a loss by
+//! construction: a scoped-thread spawn/join costs more than the
+//! microsecond-scale O(n) sum it would split.)
 
 use super::sim::SimilaritySource;
+
+/// The marginal-gain reduction: `Σ max(0, s_i − best_i)`.  Single
+/// definition shared by every call path so parallel sweeps and the
+/// incremental evaluator produce bit-identical values.
+fn gain_over(best: &[f32], col: &[f32]) -> f64 {
+    let mut g = 0.0f64;
+    for (b, &s) in best.iter().zip(col) {
+        let diff = s - *b;
+        if diff > 0.0 {
+            g += diff as f64;
+        }
+    }
+    g
+}
+
+/// Realized-gain reduction, updating `best` in place.
+fn add_over(best: &mut [f32], col: &[f32]) -> f64 {
+    let mut g = 0.0f64;
+    for (b, &s) in best.iter_mut().zip(col) {
+        if s > *b {
+            g += (s - *b) as f64;
+            *b = s;
+        }
+    }
+    g
+}
+
+/// Gain of candidate `e` against a frozen `best` snapshot.  The shared
+/// read-only entry point for parallel candidate sweeps: `best` is a
+/// plain borrow, `scratch` is per-thread.  Runs the same reduction as
+/// [`FacilityLocation::gain`], so the value is bitwise identical to the
+/// incremental evaluator's.
+pub(crate) fn gain_against<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    best: &[f32],
+    e: usize,
+    scratch: &mut Vec<f32>,
+) -> f64 {
+    if let Some(col) = sim.sim_col_ref(e) {
+        gain_over(best, col)
+    } else {
+        scratch.resize(sim.n(), 0.0);
+        sim.sim_col(e, &mut scratch[..]);
+        gain_over(best, &scratch[..])
+    }
+}
 
 /// Incremental facility-location evaluator over a similarity source.
 pub struct FacilityLocation<'a, S: SimilaritySource + ?Sized> {
@@ -52,47 +113,25 @@ impl<'a, S: SimilaritySource + ?Sized> FacilityLocation<'a, S> {
 
     /// Marginal gain `F(e | S)` — O(n) via one similarity column.
     /// Hot loop of every greedy engine; uses the zero-copy column borrow
-    /// when the similarity store provides one (§Perf iterations 1–2).
+    /// when the similarity store provides one (§Perf iterations 1–2) and
+    /// the shared reduction (§determinism contract above).
     pub fn gain(&mut self, e: usize) -> f64 {
-        let mut g = 0.0f64;
         if let Some(col) = self.sim.sim_col_ref(e) {
-            for (b, &s) in self.best.iter().zip(col) {
-                let diff = s - *b;
-                if diff > 0.0 {
-                    g += diff as f64;
-                }
-            }
+            gain_over(&self.best, col)
         } else {
             self.sim.sim_col(e, &mut self.col);
-            for (b, &s) in self.best.iter().zip(&self.col) {
-                let diff = s - *b;
-                if diff > 0.0 {
-                    g += diff as f64;
-                }
-            }
+            gain_over(&self.best, &self.col)
         }
-        g
     }
 
     /// Add `e` to S, updating the state; returns the realized gain.
     pub fn add(&mut self, e: usize) -> f64 {
-        let mut g = 0.0f64;
-        if let Some(col) = self.sim.sim_col_ref(e) {
-            for (b, &s) in self.best.iter_mut().zip(col) {
-                if s > *b {
-                    g += (s - *b) as f64;
-                    *b = s;
-                }
-            }
+        let g = if let Some(col) = self.sim.sim_col_ref(e) {
+            add_over(&mut self.best, col)
         } else {
             self.sim.sim_col(e, &mut self.col);
-            for (b, &s) in self.best.iter_mut().zip(&self.col) {
-                if s > *b {
-                    g += (s - *b) as f64;
-                    *b = s;
-                }
-            }
-        }
+            add_over(&mut self.best, &self.col)
+        };
         self.value += g;
         g
     }

@@ -17,9 +17,22 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use super::facility::FacilityLocation;
+use super::facility::{gain_against, FacilityLocation};
 use super::sim::SimilaritySource;
 use crate::rng::Rng;
+use crate::util::{self, ThreadPool};
+
+/// Below this many candidates a parallel sweep costs more than it saves.
+const PAR_MIN_CANDIDATES: usize = 512;
+
+/// Fan-out width for a sweep over `n` candidates (1 ⇒ stay sequential).
+fn sweep_parts(pool: &ThreadPool, n: usize) -> usize {
+    if pool.size() > 1 && n >= PAR_MIN_CANDIDATES {
+        pool.size().min(n)
+    } else {
+        1
+    }
+}
 
 /// When to stop adding elements.
 #[derive(Clone, Copy, Debug)]
@@ -60,8 +73,104 @@ fn done<S: SimilaritySource + ?Sized>(
     }
 }
 
+/// Argmax sweep over all non-selected candidates: chunks of the index
+/// space are scanned in parallel (strict `>` within each range keeps the
+/// lowest-index maximizer), then the per-range winners are combined in
+/// range order with the same strict `>` — the global winner is exactly
+/// the sequential scan's.  Returns `(best_e, evals)`.
+fn sweep_best<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    best: &[f32],
+    in_set: &[bool],
+    pool: &ThreadPool,
+) -> (usize, usize) {
+    let n = sim.n();
+    let ranges = util::even_ranges(n, sweep_parts(pool, n));
+    let locals = pool.scope_map_parts(&ranges, |lo, hi| {
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut local = (usize::MAX, f64::NEG_INFINITY);
+        let mut evals = 0usize;
+        for e in lo..hi {
+            if in_set[e] {
+                continue;
+            }
+            let g = gain_against(sim, best, e, &mut scratch);
+            evals += 1;
+            if g > local.1 {
+                local = (e, g);
+            }
+        }
+        (local, evals)
+    });
+    let mut winner = (usize::MAX, f64::NEG_INFINITY);
+    let mut evals = 0usize;
+    for ((e, g), ev) in locals {
+        evals += ev;
+        if e != usize::MAX && g > winner.1 {
+            winner = (e, g);
+        }
+    }
+    (winner.0, evals)
+}
+
+/// Argmax sweep over an explicit candidate slice (stochastic greedy's
+/// subsample), preserving the sequential scan's first-maximum-in-slice-
+/// order tie-break.  Returns the winning element (or `usize::MAX`).
+fn sweep_best_among<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    best: &[f32],
+    cands: &[usize],
+    pool: &ThreadPool,
+) -> usize {
+    let ranges = util::even_ranges(cands.len(), sweep_parts(pool, cands.len()));
+    let locals = pool.scope_map_parts(&ranges, |lo, hi| {
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut local = (usize::MAX, f64::NEG_INFINITY);
+        for &e in &cands[lo..hi] {
+            let g = gain_against(sim, best, e, &mut scratch);
+            if g > local.1 {
+                local = (e, g);
+            }
+        }
+        local
+    });
+    let mut winner = (usize::MAX, f64::NEG_INFINITY);
+    for (e, g) in locals {
+        if e != usize::MAX && g > winner.1 {
+            winner = (e, g);
+        }
+    }
+    winner.0
+}
+
+/// Round-0 gains for every element (lazy greedy's first pass), computed
+/// range-parallel and returned in index order.
+fn initial_gains<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    best: &[f32],
+    pool: &ThreadPool,
+) -> Vec<f64> {
+    let n = sim.n();
+    let ranges = util::even_ranges(n, sweep_parts(pool, n));
+    let nested = pool.scope_map_parts(&ranges, |lo, hi| {
+        let mut scratch: Vec<f32> = Vec::new();
+        (lo..hi).map(|e| gain_against(sim, best, e, &mut scratch)).collect::<Vec<f64>>()
+    });
+    nested.into_iter().flatten().collect()
+}
+
 /// Reference implementation: full gain recomputation each round.
 pub fn naive_greedy<S: SimilaritySource + ?Sized>(sim: &S, rule: StopRule) -> Selection {
+    naive_greedy_par(sim, rule, &ThreadPool::scoped(1))
+}
+
+/// [`naive_greedy`] with the per-round candidate sweep fanned out over
+/// `pool` (identical output at any pool width).
+pub fn naive_greedy_par<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    rule: StopRule,
+    pool: &ThreadPool,
+) -> Selection {
     let n = sim.n();
     let mut fl = FacilityLocation::new(sim);
     let mut in_set = vec![false; n];
@@ -69,23 +178,14 @@ pub fn naive_greedy<S: SimilaritySource + ?Sized>(sim: &S, rule: StopRule) -> Se
     let mut gains = Vec::new();
     let mut evals = 0usize;
     while !done(&rule, &fl, order.len()) {
-        let mut best = (usize::MAX, f64::NEG_INFINITY);
-        for e in 0..n {
-            if in_set[e] {
-                continue;
-            }
-            let g = fl.gain(e);
-            evals += 1;
-            if g > best.1 {
-                best = (e, g);
-            }
-        }
-        if best.0 == usize::MAX {
+        let (best_e, ev) = sweep_best(sim, fl.best(), &in_set, pool);
+        evals += ev;
+        if best_e == usize::MAX {
             break;
         }
-        let realized = fl.add(best.0);
-        in_set[best.0] = true;
-        order.push(best.0);
+        let realized = fl.add(best_e);
+        in_set[best_e] = true;
+        order.push(best_e);
         gains.push(realized);
     }
     let epsilon = fl.epsilon();
@@ -124,13 +224,24 @@ impl Ord for HeapEntry {
 /// bounds, so an entry whose cached score was computed *this* round is
 /// exactly its gain and can be taken without re-scoring the rest.
 pub fn lazy_greedy<S: SimilaritySource + ?Sized>(sim: &S, rule: StopRule) -> Selection {
+    lazy_greedy_par(sim, rule, &ThreadPool::scoped(1))
+}
+
+/// [`lazy_greedy`] with a parallel first-pass gain initialization
+/// (identical output at any width; the pop/re-score loop is inherently
+/// sequential and single gain evaluations are too cheap to split).
+pub fn lazy_greedy_par<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    rule: StopRule,
+    pool: &ThreadPool,
+) -> Selection {
     let n = sim.n();
     let mut fl = FacilityLocation::new(sim);
     let mut heap = BinaryHeap::with_capacity(n);
     let mut evals = 0usize;
-    // Round 0: score everything once.
-    for e in 0..n {
-        let g = fl.gain(e);
+    // Round 0: score everything once (range-parallel; pushes stay in
+    // index order so the heap layout is thread-count independent).
+    for (e, g) in initial_gains(sim, fl.best(), pool).into_iter().enumerate() {
         evals += 1;
         heap.push(HeapEntry { bound: g, elem: e, round: 0 });
     }
@@ -168,6 +279,19 @@ pub fn stochastic_greedy<S: SimilaritySource + ?Sized>(
     delta: f64,
     rng: &mut Rng,
 ) -> Selection {
+    stochastic_greedy_par(sim, rule, delta, rng, &ThreadPool::scoped(1))
+}
+
+/// [`stochastic_greedy`] with the per-round subsample sweep fanned out
+/// over `pool`.  Sampling stays on the caller's thread (the rng stream
+/// is untouched by the fan-out), so output is identical at any width.
+pub fn stochastic_greedy_par<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    rule: StopRule,
+    delta: f64,
+    rng: &mut Rng,
+    pool: &ThreadPool,
+) -> Selection {
     let n = sim.n();
     let r_hint = match rule {
         StopRule::Budget(r) => r.max(1),
@@ -188,20 +312,14 @@ pub fn stochastic_greedy<S: SimilaritySource + ?Sized>(
             let j = rng.range(t, remaining.len());
             remaining.swap(t, j);
         }
-        let mut best = (usize::MAX, f64::NEG_INFINITY);
-        for &e in &remaining[..k] {
-            let g = fl.gain(e);
-            evals += 1;
-            if g > best.1 {
-                best = (e, g);
-            }
-        }
-        if best.0 == usize::MAX {
+        let best_e = sweep_best_among(sim, fl.best(), &remaining[..k], pool);
+        evals += k;
+        if best_e == usize::MAX {
             break;
         }
-        let realized = fl.add(best.0);
-        in_set[best.0] = true;
-        order.push(best.0);
+        let realized = fl.add(best_e);
+        in_set[best_e] = true;
+        order.push(best_e);
         gains.push(realized);
         remaining.retain(|&e| !in_set[e]);
     }

@@ -15,12 +15,16 @@ pub mod sim;
 pub mod weights;
 
 pub use facility::FacilityLocation;
-pub use greedy::{lazy_greedy, naive_greedy, stochastic_greedy, Selection, StopRule};
+pub use greedy::{
+    lazy_greedy, lazy_greedy_par, naive_greedy, naive_greedy_par, stochastic_greedy,
+    stochastic_greedy_par, Selection, StopRule,
+};
 pub use sim::{BlockedSim, DenseSim, SimilaritySource};
 pub use weights::WeightedCoreset;
 
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use crate::util::ThreadPool;
 
 /// Which greedy engine to run.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -52,6 +56,10 @@ pub struct SelectorConfig {
     pub per_class: bool,
     /// Seed for stochastic greedy.
     pub seed: u64,
+    /// Intra-class fan-out width for the kernel tiles and gain sweeps
+    /// (1 = sequential).  Composes with the pipeline's class-shard
+    /// workers; the selected coreset is identical at any width.
+    pub parallelism: usize,
 }
 
 impl Default for SelectorConfig {
@@ -61,6 +69,7 @@ impl Default for SelectorConfig {
             budget: Budget::Fraction(0.1),
             per_class: true,
             seed: 0,
+            parallelism: 1,
         }
     }
 }
@@ -74,6 +83,14 @@ pub trait PairwiseEngine {
     /// (the native engine computes only the upper triangle, §Perf).
     fn sqdist_self(&mut self, x: &Matrix) -> Matrix {
         self.sqdist(x, x)
+    }
+
+    /// Self-distances with a scoped pool for intra-call tiling.
+    /// Backends that cannot fan out (the single-threaded PJRT client)
+    /// fall back to [`sqdist_self`](Self::sqdist_self).
+    fn sqdist_self_par(&mut self, x: &Matrix, pool: &ThreadPool) -> Matrix {
+        let _ = pool;
+        self.sqdist_self(x)
     }
 
     /// Human-readable backend name for logs.
@@ -92,6 +109,10 @@ impl PairwiseEngine for NativePairwise {
 
     fn sqdist_self(&mut self, x: &Matrix) -> Matrix {
         crate::linalg::pairwise_sqdist_self(x)
+    }
+
+    fn sqdist_self_par(&mut self, x: &Matrix, pool: &ThreadPool) -> Matrix {
+        crate::linalg::pairwise_sqdist_self_par(x, pool)
     }
 
     fn name(&self) -> &'static str {
@@ -115,16 +136,19 @@ pub struct CoresetResult {
     pub evaluations: usize,
 }
 
-fn run_greedy<S: SimilaritySource + ?Sized>(
+/// Dispatch one greedy engine over a scoped pool (`pool.size() == 1`
+/// degrades to exactly the sequential path).
+pub fn run_greedy<S: SimilaritySource + ?Sized>(
     sim: &S,
     method: Method,
     rule: StopRule,
     rng: &mut Rng,
+    pool: &ThreadPool,
 ) -> Selection {
     match method {
-        Method::Naive => naive_greedy(sim, rule),
-        Method::Lazy => lazy_greedy(sim, rule),
-        Method::Stochastic { delta } => stochastic_greedy(sim, rule, delta, rng),
+        Method::Naive => naive_greedy_par(sim, rule, pool),
+        Method::Lazy => lazy_greedy_par(sim, rule, pool),
+        Method::Stochastic { delta } => stochastic_greedy_par(sim, rule, delta, rng, pool),
     }
 }
 
@@ -164,6 +188,7 @@ pub fn select(
     assert_eq!(features.rows, labels.len());
     let n = features.rows;
     let mut rng = Rng::new(cfg.seed);
+    let pool = ThreadPool::scoped(cfg.parallelism);
 
     let groups: Vec<Vec<usize>> = if cfg.per_class && num_classes > 1 {
         let mut g = vec![Vec::new(); num_classes];
@@ -184,10 +209,10 @@ pub fn select(
 
     for idx in &groups {
         let class_x = features.gather_rows(idx);
-        let sq = engine.sqdist_self(&class_x);
-        let sim = DenseSim::from_sqdist(sq);
+        let sq = engine.sqdist_self_par(&class_x, &pool);
+        let sim = DenseSim::from_sqdist_par(sq, &pool);
         let rule = class_rule(&cfg.budget, idx.len(), n);
-        let sel = run_greedy(&sim, cfg.method, rule, &mut rng);
+        let sel = run_greedy(&sim, cfg.method, rule, &mut rng, &pool);
         let wc = WeightedCoreset::compute(&sim, &sel.order);
         class_sizes.push(sel.order.len());
         epsilon += sel.epsilon;
@@ -313,6 +338,7 @@ mod tests {
             budget: Budget::Fraction(0.05),
             per_class: true,
             seed: 9,
+            parallelism: 1,
         };
         let mut eng = NativePairwise;
         let res = select(&ds.x, &ds.y, 2, &cfg, &mut eng);

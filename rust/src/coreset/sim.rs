@@ -14,10 +14,15 @@
 //! distances) to match the paper's `‖∇f_i − ∇f_j‖` metric.
 
 use crate::linalg::{self, Matrix};
+use crate::util::{self, ThreadPool};
 
 /// Column-oriented access to the similarity matrix: facility-location
 /// gains need `s(i, j)` for a fixed candidate `j` against every `i`.
-pub trait SimilaritySource {
+///
+/// `Sync` is a supertrait: the parallel candidate sweeps in
+/// [`crate::coreset::greedy`] evaluate gains against a shared store from
+/// several scoped threads at once (per-thread scratch, read-only store).
+pub trait SimilaritySource: Sync {
     /// Number of points.
     fn n(&self) -> usize;
 
@@ -50,6 +55,25 @@ pub struct DenseSim {
     symmetric: bool,
 }
 
+/// Detect symmetry on a deterministic sample (self-distance matrices
+/// from both engines are symmetric up to f32 rounding).
+fn detect_symmetry(sq: &Matrix) -> bool {
+    let n = sq.rows;
+    let stride = (n / 17).max(1);
+    let mut i = 0;
+    while i < n {
+        let mut j = i + 1;
+        while j < n {
+            if (sq.get(i, j) - sq.get(j, i)).abs() > 1e-4 {
+                return false;
+            }
+            j += stride;
+        }
+        i += stride;
+    }
+    true
+}
+
 impl DenseSim {
     /// Build from a squared-distance matrix (e.g. the L1 pairwise kernel's
     /// output): take sqrt, find `d_max`, flip into similarities.
@@ -67,29 +91,51 @@ impl DenseSim {
         for v in &mut sq.data {
             *v = d_max - *v;
         }
-        // Detect symmetry on a deterministic sample (self-distance
-        // matrices from both engines are symmetric up to f32 rounding).
-        let n = sq.rows;
-        let stride = (n / 17).max(1);
-        let mut symmetric = true;
-        let mut i = 0;
-        'outer: while i < n {
-            let mut j = i + 1;
-            while j < n {
-                if (sq.get(i, j) - sq.get(j, i)).abs() > 1e-4 {
-                    symmetric = false;
-                    break 'outer;
-                }
-                j += stride;
-            }
-            i += stride;
+        let symmetric = detect_symmetry(&sq);
+        DenseSim { sims: sq, d_max, symmetric }
+    }
+
+    /// Parallel twin of [`from_sqdist`](Self::from_sqdist): the sqrt /
+    /// `d_max` scan and the similarity flip each run tiled over the pool.
+    /// Both passes are elementwise and `d_max` is a max-reduction (exact
+    /// under any merge order), so the result is bitwise-identical to the
+    /// sequential build at any thread count.
+    pub fn from_sqdist_par(mut sq: Matrix, pool: &ThreadPool) -> Self {
+        assert_eq!(sq.rows, sq.cols, "similarity needs a square matrix");
+        if pool.size() <= 1 || sq.rows < 128 {
+            return Self::from_sqdist(sq);
         }
+        let bounds = util::even_ranges(sq.data.len(), pool.size());
+        let maxes = pool.scope_map_chunks(&mut sq.data, &bounds, |_, chunk| {
+            let mut m = 0.0f32;
+            for v in chunk.iter_mut() {
+                *v = v.max(0.0).sqrt();
+                m = m.max(*v);
+            }
+            m
+        });
+        let mut d_max = maxes.into_iter().fold(0.0f32, f32::max);
+        if d_max == 0.0 {
+            d_max = 1.0;
+        }
+        pool.scope_map_chunks(&mut sq.data, &bounds, |_, chunk| {
+            for v in chunk.iter_mut() {
+                *v = d_max - *v;
+            }
+        });
+        let symmetric = detect_symmetry(&sq);
         DenseSim { sims: sq, d_max, symmetric }
     }
 
     /// Build directly from feature rows using the native pairwise path.
     pub fn from_features(x: &Matrix) -> Self {
         Self::from_sqdist(linalg::pairwise_sqdist(x, x))
+    }
+
+    /// Build from feature rows with both the kernel and the similarity
+    /// transform tiled over the pool.
+    pub fn from_features_par(x: &Matrix, pool: &ThreadPool) -> Self {
+        Self::from_sqdist_par(linalg::pairwise_sqdist_self_par(x, pool), pool)
     }
 }
 
@@ -222,6 +268,21 @@ mod tests {
         rb.sort_by(|&a, &b| cb[b].partial_cmp(&cb[a]).unwrap());
         assert_eq!(rd[0], rb[0]);
         assert_eq!(rd[0], 3, "nearest point to j is j itself");
+    }
+
+    #[test]
+    fn from_sqdist_par_bitwise_equals_sequential() {
+        // Above the n=128 engage threshold so the tiled passes run.
+        let x = feats(150, 6, 7);
+        let sq = linalg::pairwise_sqdist_self(&x);
+        let seq = DenseSim::from_sqdist(sq.clone());
+        for width in [1usize, 2, 8] {
+            let pool = ThreadPool::scoped(width);
+            let par = DenseSim::from_sqdist_par(sq.clone(), &pool);
+            assert_eq!(par.d_max(), seq.d_max(), "width {width}");
+            assert_eq!(par.symmetric, seq.symmetric);
+            assert_eq!(par.sims.data, seq.sims.data, "width {width} bitwise");
+        }
     }
 
     #[test]

@@ -4,6 +4,17 @@
 //! primitives, a row-major [`Matrix`], matvec / blocked GEMM, and batched
 //! norms.  The blocked GEMM is the native fallback for the L1 pairwise
 //! kernel; the runtime path executes the Pallas artifact instead.
+//!
+//! The `*_par` pairwise kernels tile the output over row blocks and fan
+//! out across a scoped [`ThreadPool`].  Every entry is produced by the
+//! same scalar recipe as the sequential kernels — the partition only
+//! decides *which worker* computes it — so parallel output is
+//! bitwise-identical to sequential output at any thread count.
+
+use crate::util::{self, ThreadPool};
+
+/// Below this many rows the scoped fan-out costs more than it saves.
+const PAR_MIN_ROWS: usize = 128;
 
 /// Dot product.
 #[inline]
@@ -216,6 +227,75 @@ pub fn pairwise_sqdist_self(x: &Matrix) -> Matrix {
     out
 }
 
+/// Parallel twin of [`pairwise_sqdist`]: the output is tiled over
+/// contiguous row blocks (one disjoint `&mut` slice per worker) and each
+/// block runs the identical blocked inner loop.  Bitwise-equal to the
+/// sequential kernel.
+pub fn pairwise_sqdist_par(x: &Matrix, y: &Matrix, pool: &ThreadPool) -> Matrix {
+    assert_eq!(x.cols, y.cols, "feature dims");
+    if pool.size() <= 1 || x.rows < PAR_MIN_ROWS {
+        return pairwise_sqdist(x, y);
+    }
+    let xn = x.row_sqnorms();
+    let yn = y.row_sqnorms();
+    let mut out = Matrix::zeros(x.rows, y.rows);
+    let ranges = util::even_ranges(x.rows, pool.size());
+    let bounds: Vec<(usize, usize)> =
+        ranges.iter().map(|&(a, b)| (a * y.rows, b * y.rows)).collect();
+    let (xn, yn, ranges) = (&xn, &yn, &ranges);
+    pool.scope_map_chunks(&mut out.data, &bounds, |p, chunk| {
+        let (r0, r1) = ranges[p];
+        const BJ: usize = 128;
+        for j0 in (0..y.rows).step_by(BJ) {
+            let j1 = (j0 + BJ).min(y.rows);
+            for i in r0..r1 {
+                let xi = x.row(i);
+                let orow = &mut chunk[(i - r0) * y.rows..(i - r0 + 1) * y.rows];
+                for j in j0..j1 {
+                    let g = dot(xi, y.row(j));
+                    orow[j] = (xn[i] + yn[j] - 2.0 * g).max(0.0);
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Parallel twin of [`pairwise_sqdist_self`]: workers own contiguous row
+/// blocks balanced by upper-triangle area ([`util::triangular_ranges`]),
+/// compute only `j > i`, and the lower triangle is mirrored afterwards
+/// (the deterministic merge).  Bitwise-equal to the sequential kernel.
+pub fn pairwise_sqdist_self_par(x: &Matrix, pool: &ThreadPool) -> Matrix {
+    let n = x.rows;
+    if pool.size() <= 1 || n < PAR_MIN_ROWS {
+        return pairwise_sqdist_self(x);
+    }
+    let xn = x.row_sqnorms();
+    let mut out = Matrix::zeros(n, n);
+    let ranges = util::triangular_ranges(n, pool.size());
+    let bounds: Vec<(usize, usize)> = ranges.iter().map(|&(a, b)| (a * n, b * n)).collect();
+    let (xn, ranges) = (&xn, &ranges);
+    pool.scope_map_chunks(&mut out.data, &bounds, |p, chunk| {
+        let (r0, r1) = ranges[p];
+        for i in r0..r1 {
+            let xi = x.row(i);
+            let orow = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
+            for j in (i + 1)..n {
+                let g = dot(xi, x.row(j));
+                orow[j] = (xn[i] + xn[j] - 2.0 * g).max(0.0);
+            }
+        }
+    });
+    // Mirror the upper triangle into the lower (memory-bound; cheap next
+    // to the O(n²·d) dot products above).
+    for i in 0..n {
+        for j in (i + 1)..n {
+            out.data[j * n + i] = out.data[i * n + j];
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -303,6 +383,32 @@ mod tests {
             for j in 0..33 {
                 assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-4, "({i},{j})");
             }
+        }
+    }
+
+    #[test]
+    fn pairwise_par_bitwise_equals_sequential() {
+        let mut r = Rng::new(21);
+        // Above PAR_MIN_ROWS so the scoped fan-out actually engages.
+        let x = randmat(&mut r, 150, 9);
+        let y = randmat(&mut r, 140, 9);
+        let seq = pairwise_sqdist(&x, &y);
+        for width in [1usize, 2, 8] {
+            let pool = ThreadPool::scoped(width);
+            let par = pairwise_sqdist_par(&x, &y, &pool);
+            assert_eq!(par.data, seq.data, "width {width} must be bitwise-identical");
+        }
+    }
+
+    #[test]
+    fn pairwise_self_par_bitwise_equals_sequential() {
+        let mut r = Rng::new(22);
+        let x = randmat(&mut r, 170, 7);
+        let seq = pairwise_sqdist_self(&x);
+        for width in [1usize, 3, 8] {
+            let pool = ThreadPool::scoped(width);
+            let par = pairwise_sqdist_self_par(&x, &pool);
+            assert_eq!(par.data, seq.data, "width {width} must be bitwise-identical");
         }
     }
 

@@ -7,6 +7,8 @@
 //!                    full/craig/random), per-epoch CSV trace.
 //! * `train-mlp`    — neural experiment with per-epoch reselection.
 //! * `grad-error`   — Fig. 2 gradient-estimation error measurement.
+//! * `bench`        — fixed perf-snapshot suite; `--json` writes the
+//!                    schema'd `BENCH_selection.json` CI artifact.
 //!
 //! Every run is reproducible from `--seed`; all randomness flows from it.
 
@@ -38,6 +40,7 @@ fn app() -> App {
                 .opt_default("fraction", "0.1", "subset fraction per class")
                 .opt_default("method", "lazy", "lazy|naive|stochastic")
                 .opt_default("seed", "0", "rng seed")
+                .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
                 .opt("out", "CSV path for the selected coreset"),
             Command::new("train", "convex experiment: logreg on full/craig/random")
@@ -51,6 +54,7 @@ fn app() -> App {
                 .opt_default("lam", "1e-5", "L2 regularization")
                 .opt_default("schedule", "exp:0.5:0.9", "lr schedule spec")
                 .opt_default("seed", "0", "rng seed")
+                .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
                 .opt("out", "CSV path for the epoch trace"),
             Command::new("train-mlp", "neural experiment with per-epoch reselection")
@@ -73,6 +77,11 @@ fn app() -> App {
                 .opt_default("fraction", "0.1", "subset fraction")
                 .opt_default("samples", "10", "sampled parameter points")
                 .opt_default("seed", "0", "rng seed"),
+            Command::new("bench", "fixed perf-snapshot suite for the selection hot path")
+                .flag("json", "write the schema'd snapshot file")
+                .flag("quick", "tiny suite (the CI smoke variant)")
+                .opt_default("threads", "4", "parallel leg thread count (vs 1 thread)")
+                .opt_default("out", "BENCH_selection.json", "snapshot path for --json"),
         ],
     }
 }
@@ -139,6 +148,7 @@ fn cmd_select(a: &Args) -> Result<()> {
         budget: Budget::Fraction(frac),
         per_class: true,
         seed,
+        parallelism: a.parse_opt("parallelism", 1)?,
     };
     let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
     let t0 = std::time::Instant::now();
@@ -173,10 +183,16 @@ fn cmd_select(a: &Args) -> Result<()> {
 }
 
 fn subset_mode(a: &Args, frac: f64, reselect: usize, seed: u64) -> Result<SubsetMode> {
+    let parallelism: usize = a.parse_opt("parallelism", 1)?;
     Ok(match a.opt("mode").unwrap_or("craig") {
         "full" => SubsetMode::Full,
         "craig" => SubsetMode::Craig {
-            cfg: SelectorConfig { budget: Budget::Fraction(frac), seed, ..Default::default() },
+            cfg: SelectorConfig {
+                budget: Budget::Fraction(frac),
+                seed,
+                parallelism,
+                ..Default::default()
+            },
             reselect_every: reselect,
         },
         "random" => SubsetMode::Random {
@@ -191,7 +207,16 @@ fn subset_mode(a: &Args, frac: f64, reselect: usize, seed: u64) -> Result<Subset
 fn write_history(path: &str, h: &craig::trainer::History) -> Result<()> {
     let mut w = CsvWriter::create(
         std::path::Path::new(path),
-        &["epoch", "train_loss", "test_metric", "lr", "select_s", "train_s", "grad_evals", "distinct_points"],
+        &[
+            "epoch",
+            "train_loss",
+            "test_metric",
+            "lr",
+            "select_s",
+            "train_s",
+            "grad_evals",
+            "distinct_points",
+        ],
     )?;
     for r in &h.records {
         w.row(&csv_row![
@@ -345,7 +370,8 @@ fn cmd_run(a: &Args) -> Result<()> {
     let mut engine = make_engine("auto")?;
     let h = train_logreg(&train, &test, &tcfg, engine.as_mut())?;
     println!(
-        "[{}] mode={} method={} subset={} final: loss={:.5} test_err={:.4} ({:.2}s select, {:.2}s train)",
+        "[{}] mode={} method={} subset={} final: loss={:.5} test_err={:.4} \
+         ({:.2}s select, {:.2}s train)",
         cfg.str_or("name", "experiment"),
         tcfg.subset.tag(),
         tcfg.method.name(),
@@ -376,14 +402,54 @@ fn cmd_grad_error(a: &Args) -> Result<()> {
         coreset::error::gradient_error_samples(&mut prob, &res.coreset, samples, 0.1, &mut rng);
     let craig_sum = coreset::error::summarize(&craig_s);
     let mut rng2 = Rng::new(seed ^ 0xF55);
-    let rand =
-        coreset::random_baseline(ds.n(), &ds.y, ds.num_classes, &Budget::Fraction(frac), true, &mut rng2);
+    let budget = Budget::Fraction(frac);
+    let rand = coreset::random_baseline(ds.n(), &ds.y, ds.num_classes, &budget, true, &mut rng2);
     let rand_s = coreset::error::gradient_error_samples(&mut prob, &rand, samples, 0.1, &mut rng);
     let rand_sum = coreset::error::summarize(&rand_s);
     println!("gradient estimation error (normalized by max ‖full grad‖):");
     println!("  CRAIG : mean={:.4} max={:.4}", craig_sum.mean_normalized, craig_sum.max_normalized);
     println!("  random: mean={:.4} max={:.4}", rand_sum.mean_normalized, rand_sum.max_normalized);
     println!("  certified ε (Eq. 15, facility-location bound): {:.4}", res.epsilon);
+    Ok(())
+}
+
+/// `craig bench [--json] [--quick] [--threads N] [--out PATH]`: run the
+/// fixed selection perf suite and (optionally) write the machine-
+/// readable snapshot CI tracks.  Exits nonzero if the parallel runs do
+/// not reproduce the sequential coresets — the snapshot must never
+/// record a speedup bought with a different answer.
+fn cmd_bench(a: &Args) -> Result<()> {
+    use craig::bench::suite;
+    let cfg = suite::SuiteConfig {
+        quick: a.flag("quick"),
+        threads: a.parse_opt("threads", 4)?,
+    };
+    println!(
+        "craig bench — selection perf snapshot ({} suite, 1 vs {} threads)",
+        if cfg.quick { "quick" } else { "full" },
+        cfg.threads.max(2)
+    );
+    let rep = suite::run_selection_suite(&cfg);
+    for c in &rep.cases {
+        craig::bench::report(&c.result);
+    }
+    println!(
+        "  speedup: lazy selection {:.2}x, kernel build {:.2}x  (t{} vs t1)",
+        rep.speedup_lazy_selection, rep.speedup_kernel_build, rep.threads
+    );
+    println!(
+        "  parallel ≡ sequential coresets: {}",
+        if rep.parallel_matches_sequential { "yes" } else { "NO — BUG" }
+    );
+    if a.flag("json") {
+        let path = a.opt("out").unwrap_or("BENCH_selection.json");
+        suite::write_json(&rep, std::path::Path::new(path))?;
+        println!("  wrote {path} (schema v{})", suite::SCHEMA_VERSION);
+    }
+    anyhow::ensure!(
+        rep.parallel_matches_sequential,
+        "parallel selection diverged from sequential — determinism contract broken"
+    );
     Ok(())
 }
 
@@ -397,6 +463,7 @@ fn main() {
             "train-mlp" => cmd_train_mlp(&args),
             "run" => cmd_run(&args),
             "grad-error" => cmd_grad_error(&args),
+            "bench" => cmd_bench(&args),
             _ => unreachable!(),
         },
         Err(e) => {

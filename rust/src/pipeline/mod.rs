@@ -17,19 +17,24 @@
 //! `backend-xla` feature is not `Send`, so XLA execution stays on the
 //! coordinator thread — see [`crate::runtime::Backend`]; with
 //! `workers = 1` the pipeline degrades to exactly the sequential path).
+//!
+//! Parallelism is two-level: classes shard across the resident worker
+//! pool (level 1), and within each class shard the pairwise kernel
+//! tiles and greedy gain sweeps fan out over a scoped pool of
+//! [`SelectorConfig::parallelism`] threads (level 2) — so one large or
+//! imbalanced class no longer serializes the run on a single worker.
 //! Determinism contract: the merged coreset is a pure function of
-//! (dataset, [`SelectorConfig`]) — independent of worker count and
-//! scheduling — verified by `rust/tests/pipeline_invariants.rs`.
+//! (dataset, [`SelectorConfig`]) — independent of worker count,
+//! intra-class width and scheduling — verified by
+//! `rust/tests/pipeline_invariants.rs` and
+//! `rust/tests/parallel_equivalence.rs`.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coreset::{
-    lazy_greedy, naive_greedy, stochastic_greedy, DenseSim, Method, SelectorConfig, StopRule,
-    WeightedCoreset,
-};
+use crate::coreset::{run_greedy, DenseSim, SelectorConfig, StopRule, WeightedCoreset};
 use crate::data::Dataset;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -77,16 +82,16 @@ impl SelectionPipeline {
         let classes = jobs.len();
 
         let outputs = self.pool.scope_map(jobs, move |(idx, x, cfg)| {
+            // Second parallelism level: within this class shard, the
+            // kernel tiles and gain sweeps fan out over a scoped pool of
+            // `cfg.parallelism` threads (deterministic at any width).
+            let tile_pool = ThreadPool::scoped(cfg.parallelism);
             let class_x = x.gather_rows(&idx);
-            let sq = crate::linalg::pairwise_sqdist_self(&class_x);
-            let sim = DenseSim::from_sqdist(sq);
+            let sq = crate::linalg::pairwise_sqdist_self_par(&class_x, &tile_pool);
+            let sim = DenseSim::from_sqdist_par(sq, &tile_pool);
             let rule = class_stop_rule(&cfg.budget, idx.len(), total_n);
             let mut rng = Rng::new(cfg.seed ^ (idx[0] as u64).wrapping_mul(0x9E3779B9));
-            let sel = match cfg.method {
-                Method::Naive => naive_greedy(&sim, rule),
-                Method::Lazy => lazy_greedy(&sim, rule),
-                Method::Stochastic { delta } => stochastic_greedy(&sim, rule, delta, &mut rng),
-            };
+            let sel = run_greedy(&sim, cfg.method, rule, &mut rng, &tile_pool);
             let wc = WeightedCoreset::compute(&sim, &sel.order);
             (wc.lift(&idx), sel.evaluations)
         });

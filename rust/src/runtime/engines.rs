@@ -52,8 +52,9 @@ impl XlaPairwise {
                 .pairwise_for(d, want)
                 .map(|m| (m.name.clone(), m.dim("m").unwrap_or(0)))
         };
-        let (name, m) = meta
-            .ok_or_else(|| anyhow::anyhow!("no pairwise artifact for d={d}; re-run `make artifacts`"))?;
+        let (name, m) = meta.ok_or_else(|| {
+            anyhow::anyhow!("no pairwise artifact for d={d}; re-run `make artifacts`")
+        })?;
         if want <= m {
             return self.block(&name, m, x, y);
         }
@@ -216,7 +217,13 @@ pub struct XlaMlp {
 }
 
 impl XlaMlp {
-    pub fn new(rt: SharedRuntime, shape: MlpShape, x: Matrix, y1h: Matrix, lam: f32) -> Result<Self> {
+    pub fn new(
+        rt: SharedRuntime,
+        shape: MlpShape,
+        x: Matrix,
+        y1h: Matrix,
+        lam: f32,
+    ) -> Result<Self> {
         let exact = [("d", shape.d), ("h", shape.h), ("c", shape.c)];
         let (grad_name, batch, logits_name, proxy_name) = {
             let r = rt.borrow();
@@ -248,7 +255,11 @@ impl XlaMlp {
         ]
     }
 
-    fn batch_literals(&self, idx: &[usize], gamma: Option<&[f32]>) -> (xla::Literal, xla::Literal, xla::Literal) {
+    fn batch_literals(
+        &self,
+        idx: &[usize],
+        gamma: Option<&[f32]>,
+    ) -> (xla::Literal, xla::Literal, xla::Literal) {
         let (d, c, b) = (self.shape.d, self.shape.c, self.batch);
         let mut xb = vec![0.0f32; b * d];
         let mut yb = vec![0.0f32; b * c];

@@ -62,7 +62,13 @@ impl Runtime {
     pub fn load(dir: &Path) -> Result<Runtime> {
         let registry = Registry::load(&dir.join("manifest.txt"))?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
-        Ok(Runtime { client, registry, dir: dir.to_path_buf(), exes: HashMap::new(), exec_count: 0 })
+        Ok(Runtime {
+            client,
+            registry,
+            dir: dir.to_path_buf(),
+            exes: HashMap::new(),
+            exec_count: 0,
+        })
     }
 
     /// Load from the default directory, shared handle.

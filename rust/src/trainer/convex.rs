@@ -101,10 +101,15 @@ fn select_subset(
         }
         SubsetMode::Random { budget, seed, .. } => {
             let mut rng = Rng::new(seed.wrapping_add(epoch as u64));
-            (
-                coreset::random_baseline(train.n(), &train.y, train.num_classes, budget, true, &mut rng),
-                0.0,
-            )
+            let rb = coreset::random_baseline(
+                train.n(),
+                &train.y,
+                train.num_classes,
+                budget,
+                true,
+                &mut rng,
+            );
+            (rb, 0.0)
         }
     }
 }
@@ -202,7 +207,8 @@ pub fn train_logreg(
                 }
             }
             IgMethod::Svrg => {
-                let st = svrg.get_or_insert_with(|| Svrg::new(&prob, &subset.indices, &subset.gamma));
+                let st =
+                    svrg.get_or_insert_with(|| Svrg::new(&prob, &subset.indices, &subset.gamma));
                 st.snapshot(&prob, &subset.indices, &subset.gamma, &w);
                 grad_evals += m; // snapshot pass
                 for &k in &order {

@@ -1,9 +1,10 @@
-//! Small shared utilities: a scoped thread pool for per-class selection
-//! workers, bounded-channel helpers, and argmin/argmax.
+//! Small shared utilities: a thread pool with both a resident job queue
+//! and a scoped (borrowing) fan-out API, deterministic range grids for
+//! tiled kernels, and argmin/argmax.
 
 pub mod threadpool;
 
-pub use threadpool::ThreadPool;
+pub use threadpool::{even_ranges, triangular_ranges, ThreadPool};
 
 /// Index of the maximum value (first on ties). Empty slice → None.
 pub fn argmax(xs: &[f32]) -> Option<usize> {

@@ -1,9 +1,23 @@
 //! A minimal fixed-size thread pool (no `rayon`/`tokio` offline).
 //!
-//! Jobs are `FnOnce + Send` closures; the pool owns its workers for its
-//! lifetime and joins them on drop.  `scope_map` provides the common
-//! "parallel map over items, collect in order" pattern used by the
-//! per-class selection pipeline.
+//! Two execution styles share one handle:
+//!
+//! * **Resident queue** — `execute`/`scope_map` ship `'static` jobs to
+//!   long-lived workers over a channel (the per-class selection shards).
+//! * **Scoped fan-out** — `scope`, `scope_map_parts` and
+//!   `scope_map_chunks` run closures that *borrow* caller data (no
+//!   per-job `Arc` cloning, no `'static` bound).  They are built on
+//!   `std::thread::scope`, so every borrowed job is joined before the
+//!   call returns; the pool contributes its size as the fan-out width.
+//!   `ThreadPool::scoped(n)` makes a queue-less handle for callers that
+//!   only need scoped fan-out (no resident workers are ever spawned;
+//!   `execute` on such a handle runs the job inline).
+//!
+//! Determinism contract: the `scope_map_*` helpers return results in
+//! input (range) order, and the range grids handed to them are pure
+//! functions of the problem size — never of scheduling — so callers can
+//! fold partial results in a fixed order and get bitwise-identical
+//! answers at any thread count.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -20,10 +34,11 @@ enum Msg {
 pub struct ThreadPool {
     tx: mpsc::Sender<Msg>,
     workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
 }
 
 impl ThreadPool {
-    /// Spawn `size` workers (size 0 is clamped to 1).
+    /// Spawn `size` resident workers (size 0 is clamped to 1).
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Msg>();
@@ -43,12 +58,113 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx, workers }
+        ThreadPool { tx, workers, size }
     }
 
-    /// Submit a fire-and-forget job.
+    /// A scoped-only handle: carries a fan-out width but spawns no
+    /// resident workers.  Scoped calls create their (short-lived)
+    /// threads per region; `execute` runs inline.  Constructing one is
+    /// free, so `ThreadPool::scoped(1)` is the canonical "sequential"
+    /// pool for the kernel and greedy `*_par` entry points.
+    pub fn scoped(size: usize) -> Self {
+        let (tx, _rx) = mpsc::channel::<Msg>();
+        ThreadPool { tx, workers: Vec::new(), size: size.max(1) }
+    }
+
+    /// Submit a fire-and-forget job (inline on a scoped-only handle).
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        if self.workers.is_empty() {
+            job();
+            return;
+        }
         self.tx.send(Msg::Run(Box::new(job))).expect("pool alive");
+    }
+
+    /// Scoped parallel region over borrowed data: a thin wrapper around
+    /// [`std::thread::scope`] so call sites stay pool-shaped.  Threads
+    /// spawned on the scope may borrow from the caller's stack and are
+    /// all joined before `scope` returns.
+    pub fn scope<'env, R, F>(&self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope thread::Scope<'scope, 'env>) -> R,
+    {
+        thread::scope(f)
+    }
+
+    /// Scoped map over index ranges: runs `f(lo, hi)` for each range,
+    /// returning the outputs **in range order**.  `f` may borrow caller
+    /// data immutably; one scoped thread per range (callers pass at most
+    /// ~`size()` pre-balanced ranges).  Sequential when the pool width
+    /// is 1 or there is a single range.
+    pub fn scope_map_parts<U, F>(&self, ranges: &[(usize, usize)], f: F) -> Vec<U>
+    where
+        U: Send,
+        F: Fn(usize, usize) -> U + Sync,
+    {
+        if self.size <= 1 || ranges.len() <= 1 {
+            return ranges.iter().map(|&(lo, hi)| f(lo, hi)).collect();
+        }
+        thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(lo, hi)| {
+                    let f = &f;
+                    s.spawn(move || f(lo, hi))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("scoped worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Scoped map over **disjoint mutable chunks** of one buffer:
+    /// `data` is split at the element `bounds` (contiguous, ascending
+    /// from 0) and `f(part_index, chunk)` runs once per chunk, results
+    /// returned in part order.  This is the write-side primitive the
+    /// tiled kernels use: each worker owns its row-block `&mut` slice,
+    /// shared inputs are plain `&` borrows.
+    pub fn scope_map_chunks<T, U, F>(
+        &self,
+        data: &mut [T],
+        bounds: &[(usize, usize)],
+        f: F,
+    ) -> Vec<U>
+    where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut [T]) -> U + Sync,
+    {
+        let mut chunks: Vec<&mut [T]> = Vec::with_capacity(bounds.len());
+        let mut rest: &mut [T] = data;
+        let mut cursor = 0usize;
+        for &(lo, hi) in bounds {
+            assert_eq!(lo, cursor, "bounds must be contiguous from 0");
+            assert!(hi >= lo, "bounds must be ascending");
+            let taken = std::mem::take(&mut rest);
+            let (head, tail) = taken.split_at_mut(hi - lo);
+            chunks.push(head);
+            rest = tail;
+            cursor = hi;
+        }
+        if self.size <= 1 || chunks.len() <= 1 {
+            return chunks.into_iter().enumerate().map(|(p, c)| f(p, c)).collect();
+        }
+        thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .enumerate()
+                .map(|(p, chunk)| {
+                    let f = &f;
+                    s.spawn(move || f(p, chunk))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("scoped worker panicked"))
+                .collect()
+        })
     }
 
     /// Parallel map: applies `f` to each item, returns outputs **in input
@@ -80,9 +196,53 @@ impl ThreadPool {
         slots.into_iter().map(|s| s.unwrap()).collect()
     }
 
+    /// Fan-out width: resident worker count, or the configured width of
+    /// a scoped-only handle.
     pub fn size(&self) -> usize {
-        self.workers.len()
+        self.size
     }
+}
+
+/// Split `[0, total)` into at most `parts` contiguous ranges of
+/// near-equal length (earlier ranges absorb the remainder).  Pure
+/// function of `(total, parts)` — the grid never depends on scheduling.
+pub fn even_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, total.max(1));
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Split `[0, n)` row indices into at most `parts` contiguous ranges
+/// balanced by **upper-triangle area** (row `i` carries `n - i - 1`
+/// units of work): the partition the symmetric pairwise kernel needs so
+/// every worker sees a near-equal share of the dot products.
+pub fn triangular_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    if parts == 1 {
+        return vec![(0, n)];
+    }
+    let total = (n as u64) * (n as u64 - 1) / 2;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    let mut acc = 0u64;
+    for i in 0..n {
+        acc += (n - i - 1) as u64;
+        let cut = out.len() as u64 + 1;
+        if out.len() + 1 < parts && acc * (parts as u64) >= total * cut {
+            out.push((lo, i + 1));
+            lo = i + 1;
+        }
+    }
+    out.push((lo, n));
+    out
 }
 
 impl Drop for ThreadPool {
@@ -140,5 +300,99 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn scoped_handle_runs_inline() {
+        let pool = ThreadPool::scoped(4);
+        assert_eq!(pool.size(), 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        // Inline execution: visible immediately, no channel round-trip.
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        drop(pool);
+    }
+
+    #[test]
+    fn scope_map_parts_borrows_and_orders() {
+        let pool = ThreadPool::scoped(3);
+        let data: Vec<u64> = (0..1000).collect();
+        let ranges = even_ranges(data.len(), 3);
+        // Borrow `data` without Arc; partial sums come back in range order.
+        let parts = pool.scope_map_parts(&ranges, |lo, hi| data[lo..hi].iter().sum::<u64>());
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().sum::<u64>(), 1000 * 999 / 2);
+        let seq = ThreadPool::scoped(1);
+        assert_eq!(seq.scope_map_parts(&ranges, |lo, hi| data[lo..hi].iter().sum::<u64>()), parts);
+    }
+
+    #[test]
+    fn scope_map_chunks_disjoint_writes() {
+        for width in [1usize, 2, 5] {
+            let pool = ThreadPool::scoped(width);
+            let mut buf = vec![0u32; 103];
+            let bounds = even_ranges(buf.len(), width);
+            let lens = pool.scope_map_chunks(&mut buf, &bounds, |p, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = p as u32 + 1;
+                }
+                chunk.len()
+            });
+            assert_eq!(lens.iter().sum::<usize>(), 103);
+            assert!(buf.iter().all(|&v| v >= 1), "every slot written exactly once");
+        }
+    }
+
+    #[test]
+    fn even_ranges_cover_and_balance() {
+        for (total, parts) in [(10usize, 3usize), (0, 4), (7, 7), (5, 9), (100, 1)] {
+            let r = even_ranges(total, parts);
+            assert_eq!(r.first().map(|&(lo, _)| lo), Some(0));
+            assert_eq!(r.last().map(|&(_, hi)| hi), Some(total));
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            let lens: Vec<usize> = r.iter().map(|&(lo, hi)| hi - lo).collect();
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "near-equal lengths: {lens:?}");
+        }
+    }
+
+    #[test]
+    fn triangular_ranges_cover_and_balance() {
+        let n = 500;
+        let r = triangular_ranges(n, 4);
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, n);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        // Each part's upper-triangle area is within 2x of the ideal share.
+        let area = |lo: usize, hi: usize| -> u64 {
+            (lo..hi).map(|i| (n - i - 1) as u64).sum()
+        };
+        let total: u64 = area(0, n);
+        for &(lo, hi) in &r {
+            let a = area(lo, hi);
+            assert!(a * 4 <= total * 2, "part ({lo},{hi}) area {a} vs total {total}");
+        }
+        assert_eq!(triangular_ranges(0, 3), vec![(0, 0)]);
+        assert_eq!(triangular_ranges(1, 3), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn scope_runs_borrowed_jobs() {
+        let pool = ThreadPool::scoped(2);
+        let data = [1u32, 2, 3, 4];
+        let total = pool.scope(|s| {
+            let (a, b) = data.split_at(2);
+            let ha = s.spawn(|| a.iter().sum::<u32>());
+            let hb = s.spawn(|| b.iter().sum::<u32>());
+            ha.join().unwrap() + hb.join().unwrap()
+        });
+        assert_eq!(total, 10);
     }
 }

@@ -97,7 +97,10 @@ fn cli_binary_smoke() {
     // Run the built `craig` binary end-to-end (info + select + train).
     let bin = env!("CARGO_BIN_EXE_craig");
     let out = std::process::Command::new(bin)
-        .args(["select", "--dataset", "covtype", "--n", "800", "--fraction", "0.1", "--engine", "native"])
+        .args([
+            "select", "--dataset", "covtype", "--n", "800", "--fraction", "0.1", "--engine",
+            "native",
+        ])
         .output()
         .expect("run craig select");
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));

@@ -74,6 +74,31 @@ fn stochastic_runs_are_seed_deterministic() {
 }
 
 #[test]
+fn single_class_intra_parallelism_is_invisible() {
+    // The ISSUE-2 case: one class holds everything, so class sharding
+    // gives no parallelism — the intra-class fan-out must carry the run
+    // and must not change the selected coreset.
+    let ds = synthetic::covtype_like(800, 9);
+    let mut base: Option<Vec<(usize, f32)>> = None;
+    for width in [1usize, 2, 8] {
+        let cfg = SelectorConfig {
+            budget: Budget::Fraction(0.1),
+            per_class: false,
+            seed: 3,
+            parallelism: width,
+            ..Default::default()
+        };
+        let (merged, stats) = SelectionPipeline::new(4).select(&ds, &cfg);
+        assert_eq!(stats.classes, 1, "per_class=false must run one shard");
+        let got = pairs(&merged);
+        match &base {
+            None => base = Some(got),
+            Some(b) => assert_eq!(b, &got, "parallelism={width} changed the coreset"),
+        }
+    }
+}
+
+#[test]
 fn merged_selection_preserves_class_ratios() {
     let ds = synthetic::ijcnn1_like(2000, 0);
     let frac = 0.1;
