@@ -10,8 +10,15 @@
 //!
 //! The suite also *verifies* the determinism contract it is measuring:
 //! each engine's selection at N threads must match the 1-thread run
-//! exactly (indices and weights); `parallel_matches_sequential` lands
-//! in the JSON and the CLI exits nonzero when it fails.
+//! exactly (indices and weights), the blocked store must match its own
+//! sequential run, and a warm workspace must reproduce a cold one;
+//! `parallel_matches_sequential` lands in the JSON and the CLI exits
+//! nonzero when it fails.
+//!
+//! Schema v2 (ISSUE 3) adds the store and workspace rows:
+//! `select/lazy/blocked/tN` (dense-vs-blocked) and
+//! `workspace/{cold,warm}/tN` (cold-vs-warm `Selector` reuse), plus the
+//! `warm_workspace` / `blocked_vs_dense_lazy` speedup fields.
 
 use std::path::Path;
 use std::time::Duration;
@@ -20,14 +27,14 @@ use anyhow::Result;
 
 use super::{bench, BenchConfig, BenchResult};
 use crate::coreset::{
-    lazy_greedy_par, naive_greedy_par, stochastic_greedy_par, DenseSim, StopRule, WeightedCoreset,
+    Budget, Method, NativePairwise, Selector, SelectorConfig, SimStorePolicy, StopRule,
 };
 use crate::linalg::{self, Matrix};
 use crate::rng::Rng;
 use crate::util::ThreadPool;
 
 /// JSON schema version of `BENCH_selection.json`.
-pub const SCHEMA_VERSION: u32 = 1;
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// Suite knobs (everything else is fixed by design).
 pub struct SuiteConfig {
@@ -64,8 +71,15 @@ pub struct SuiteReport {
     pub speedup_lazy_selection: f64,
     /// Same ratio for the bare kernel build.
     pub speedup_kernel_build: f64,
+    /// Cold-workspace mean / warm-workspace mean for lazy selection at
+    /// N threads (≥ 1 when buffer reuse pays).
+    pub speedup_warm_workspace: f64,
+    /// Blocked-store mean / dense-store mean for lazy selection at N
+    /// threads (the price of dropping the n² matrix).
+    pub blocked_vs_dense_lazy: f64,
     /// Every engine produced identical indices and weights at 1 and N
-    /// threads (the determinism contract).
+    /// threads, blocked matched its own sequential run, and warm
+    /// workspaces reproduced cold ones (the determinism contract).
     pub parallel_matches_sequential: bool,
 }
 
@@ -84,29 +98,41 @@ pub fn clustered(n: usize, d: usize, clusters: usize, seed: u64) -> Matrix {
     Matrix::from_vec(n, d, data)
 }
 
-/// End-to-end single-class selection: kernel build → similarity build →
-/// greedy → weights.  Returns (indices, weights) for the equivalence
-/// check.
+/// End-to-end single-class selection through the [`Selector`] subsystem
+/// (kernel build → similarity store → greedy → weights), reusing the
+/// caller's selector so cold-vs-warm workspace behaviour is measurable.
+/// Returns (indices, weights) for the equivalence checks.
 fn run_selection(
+    selector: &mut Selector,
     x: &Matrix,
     r: usize,
-    method: &str,
-    seed: u64,
-    pool: &ThreadPool,
+    method: Method,
+    threads: usize,
+    store: SimStorePolicy,
 ) -> (Vec<usize>, Vec<f32>) {
-    let sim = DenseSim::from_features_par(x, pool);
-    let rule = StopRule::Budget(r);
-    let sel = match method {
-        "lazy" => lazy_greedy_par(&sim, rule, pool),
-        "naive" => naive_greedy_par(&sim, rule, pool),
-        "stochastic" => {
-            let mut rng = Rng::new(seed);
-            stochastic_greedy_par(&sim, rule, 0.05, &mut rng, pool)
-        }
-        other => unreachable!("unknown suite method {other}"),
+    let idx: Vec<usize> = (0..x.rows).collect();
+    let cfg = SelectorConfig {
+        method,
+        budget: Budget::Count(r),
+        per_class: false,
+        seed: 7,
+        parallelism: threads,
+        sim_store: store,
     };
-    let wc = WeightedCoreset::compute(&sim, &sel.order);
-    (sel.order, wc.gamma)
+    let mut engine = NativePairwise;
+    let cs = selector.select_class(x, &idx, StopRule::Budget(r), &cfg, &mut engine);
+    (cs.coreset.indices, cs.coreset.gamma)
+}
+
+/// Cold-workspace convenience: a fresh [`Selector`] per run.
+fn run_selection_cold(
+    x: &Matrix,
+    r: usize,
+    method: Method,
+    threads: usize,
+    store: SimStorePolicy,
+) -> (Vec<usize>, Vec<f32>) {
+    run_selection(&mut Selector::new(), x, r, method, threads, store)
 }
 
 /// Run the fixed suite.  Case names are stable identifiers — CI and
@@ -124,6 +150,11 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
     let pool1 = ThreadPool::scoped(1);
     let pool_n = ThreadPool::scoped(threads);
     let mut cases: Vec<SuiteCase> = Vec::new();
+    let methods = [
+        ("lazy", Method::Lazy),
+        ("naive", Method::Naive),
+        ("stochastic", Method::Stochastic { delta: 0.05 }),
+    ];
 
     // Bare kernel build (the L1 hot spot): n² pair entries per iter.
     for (w, pool) in [(1usize, &pool1), (threads, &pool_n)] {
@@ -134,27 +165,66 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
     }
     let speedup_kernel_build = cases[0].result.mean_s / cases[1].result.mean_s;
 
-    // End-to-end single-class selection per engine, 1 vs N threads,
-    // with the determinism contract checked on the side.
+    // End-to-end single-class selection per engine (dense store), 1 vs
+    // N threads, with the determinism contract checked on the side.
     let mut equivalent = true;
     let mut speedup_lazy_selection = 0.0;
-    for method in ["lazy", "naive", "stochastic"] {
-        let budget = if method == "naive" { r_naive } else { r };
-        let seq = run_selection(&x, budget, method, 7, &pool1);
-        let par = run_selection(&x, budget, method, 7, &pool_n);
+    let mut dense_lazy_tn = 0.0;
+    let dense = SimStorePolicy::Dense;
+    for (name, method) in methods {
+        let budget = if name == "naive" { r_naive } else { r };
+        let seq = run_selection_cold(&x, budget, method, 1, dense);
+        let par = run_selection_cold(&x, budget, method, threads, dense);
         equivalent &= seq == par;
         let mut pair = Vec::with_capacity(2);
-        for (w, pool) in [(1usize, &pool1), (threads, &pool_n)] {
-            let res = bench(&format!("select/{method}/t{w}"), &bc, |_| {
-                run_selection(&x, budget, method, 7, pool)
+        for w in [1usize, threads] {
+            let res = bench(&format!("select/{name}/t{w}"), &bc, |_| {
+                run_selection_cold(&x, budget, method, w, dense)
             });
             pair.push(res.mean_s);
             cases.push(SuiteCase { result: res, threads: w, items: n as f64 });
         }
-        if method == "lazy" {
+        if name == "lazy" {
             speedup_lazy_selection = pair[0] / pair[1];
+            dense_lazy_tn = pair[1];
         }
     }
+
+    // Dense vs blocked (lazy): the blocked store trades the n² matrix
+    // for recomputed columns; this row prices that trade.
+    let blocked = SimStorePolicy::Blocked;
+    let blk_seq = run_selection_cold(&x, r, Method::Lazy, 1, blocked);
+    let blk_par = run_selection_cold(&x, r, Method::Lazy, threads, blocked);
+    equivalent &= blk_seq == blk_par;
+    let mut blocked_tn = 0.0;
+    for w in [1usize, threads] {
+        let res = bench(&format!("select/lazy/blocked/t{w}"), &bc, |_| {
+            run_selection_cold(&x, r, Method::Lazy, w, blocked)
+        });
+        if w == threads {
+            blocked_tn = res.mean_s;
+        }
+        cases.push(SuiteCase { result: res, threads: w, items: n as f64 });
+    }
+    let blocked_vs_dense_lazy = blocked_tn / dense_lazy_tn;
+
+    // Cold vs warm workspace (lazy, dense, N threads): the warm leg
+    // reuses one Selector's buffers across iterations — the per-epoch
+    // reselection profile.  Warm output must equal cold output.
+    let cold_res = bench(&format!("workspace/cold/t{threads}"), &bc, |_| {
+        run_selection_cold(&x, r, Method::Lazy, threads, dense)
+    });
+    let mut warm_selector = Selector::new();
+    run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense); // pre-warm
+    let warm_res = bench(&format!("workspace/warm/t{threads}"), &bc, |_| {
+        run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense)
+    });
+    let speedup_warm_workspace = cold_res.mean_s / warm_res.mean_s;
+    let cold_out = run_selection_cold(&x, r, Method::Lazy, threads, dense);
+    let warm_out = run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense);
+    equivalent &= cold_out == warm_out;
+    cases.push(SuiteCase { result: cold_res, threads, items: n as f64 });
+    cases.push(SuiteCase { result: warm_res, threads, items: n as f64 });
 
     SuiteReport {
         git_rev: git_rev(),
@@ -165,6 +235,8 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
         cases,
         speedup_lazy_selection,
         speedup_kernel_build,
+        speedup_warm_workspace,
+        blocked_vs_dense_lazy,
         parallel_matches_sequential: equivalent,
     }
 }
@@ -214,7 +286,8 @@ fn json_num(x: f64) -> String {
     }
 }
 
-/// Serialize the report (`BENCH_selection.json`, schema v1).
+/// Serialize the report (`BENCH_selection.json`, schema
+/// [`SCHEMA_VERSION`]).
 pub fn to_json(rep: &SuiteReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -232,9 +305,12 @@ pub fn to_json(rep: &SuiteReport) -> String {
         rep.parallel_matches_sequential
     ));
     s.push_str(&format!(
-        "  \"speedup\": {{\"lazy_selection\": {}, \"kernel_build\": {}}},\n",
+        "  \"speedup\": {{\"lazy_selection\": {}, \"kernel_build\": {}, \
+         \"warm_workspace\": {}, \"blocked_vs_dense_lazy\": {}}},\n",
         json_num(rep.speedup_lazy_selection),
-        json_num(rep.speedup_kernel_build)
+        json_num(rep.speedup_kernel_build),
+        json_num(rep.speedup_warm_workspace),
+        json_num(rep.blocked_vs_dense_lazy)
     ));
     s.push_str("  \"results\": [\n");
     for (i, c) in rep.cases.iter().enumerate() {
@@ -271,13 +347,24 @@ mod tests {
     fn quick_suite_is_valid_and_equivalent() {
         let rep = run_selection_suite(&SuiteConfig { quick: true, threads: 2 });
         assert!(rep.parallel_matches_sequential, "parallel must equal sequential");
-        assert_eq!(rep.cases.len(), 8, "2 kernel + 3 engines x 2 widths");
+        assert_eq!(
+            rep.cases.len(),
+            12,
+            "2 kernel + 3 engines x 2 widths + 2 blocked + 2 workspace"
+        );
         assert!(rep.cases.iter().all(|c| c.result.mean_s > 0.0));
         assert!(rep.speedup_lazy_selection > 0.0);
+        assert!(rep.speedup_warm_workspace > 0.0);
+        assert!(rep.blocked_vs_dense_lazy > 0.0);
         let json = to_json(&rep);
-        assert!(json.contains("\"schema_version\": 1"));
+        assert!(json.contains("\"schema_version\": 2"));
         assert!(json.contains("select/lazy/t1"));
         assert!(json.contains("select/lazy/t2"));
+        assert!(json.contains("select/lazy/blocked/t1"));
+        assert!(json.contains("workspace/cold/t2"));
+        assert!(json.contains("workspace/warm/t2"));
+        assert!(json.contains("\"warm_workspace\":"));
+        assert!(json.contains("\"blocked_vs_dense_lazy\":"));
         assert!(json.contains("\"parallel_matches_sequential\": true"));
         // Balanced braces/brackets as a cheap well-formedness proxy.
         assert_eq!(json.matches('{').count(), json.matches('}').count());

@@ -11,6 +11,7 @@ pub mod diagnostics;
 pub mod error;
 pub mod facility;
 pub mod greedy;
+pub mod selector;
 pub mod sim;
 pub mod weights;
 
@@ -18,6 +19,10 @@ pub use facility::FacilityLocation;
 pub use greedy::{
     lazy_greedy, lazy_greedy_par, naive_greedy, naive_greedy_par, stochastic_greedy,
     stochastic_greedy_par, Selection, StopRule,
+};
+pub use selector::{
+    count_shares, group_by_class, split_budget, ClassSelection, SelectionWorkspace, Selector,
+    SimStore, SimStorePolicy, DEFAULT_SIM_MEM_BUDGET,
 };
 pub use sim::{BlockedSim, DenseSim, SimilaritySource};
 pub use weights::WeightedCoreset;
@@ -60,6 +65,10 @@ pub struct SelectorConfig {
     /// (1 = sequential).  Composes with the pipeline's class-shard
     /// workers; the selected coreset is identical at any width.
     pub parallelism: usize,
+    /// Per-class similarity-store policy: dense n² matrix, on-the-fly
+    /// blocked columns, or auto by memory budget (see
+    /// [`selector::SimStorePolicy`]).
+    pub sim_store: SimStorePolicy,
 }
 
 impl Default for SelectorConfig {
@@ -70,6 +79,7 @@ impl Default for SelectorConfig {
             per_class: true,
             seed: 0,
             parallelism: 1,
+            sim_store: SimStorePolicy::default(),
         }
     }
 }
@@ -91,6 +101,15 @@ pub trait PairwiseEngine {
     fn sqdist_self_par(&mut self, x: &Matrix, pool: &ThreadPool) -> Matrix {
         let _ = pool;
         self.sqdist_self(x)
+    }
+
+    /// Self-distances written into a caller-owned buffer (the warm
+    /// [`SelectionWorkspace`] path: zero allocations when capacity
+    /// suffices).  Backends without an in-place kernel fall back to the
+    /// allocating path; the native engine overrides this with
+    /// `linalg::pairwise_sqdist_self_into`.
+    fn sqdist_self_into(&mut self, x: &Matrix, out: &mut Matrix, pool: &ThreadPool) {
+        *out = self.sqdist_self_par(x, pool);
     }
 
     /// Human-readable backend name for logs.
@@ -115,6 +134,10 @@ impl PairwiseEngine for NativePairwise {
         crate::linalg::pairwise_sqdist_self_par(x, pool)
     }
 
+    fn sqdist_self_into(&mut self, x: &Matrix, out: &mut Matrix, pool: &ThreadPool) {
+        crate::linalg::pairwise_sqdist_self_into(x, out, pool);
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -127,6 +150,9 @@ pub struct CoresetResult {
     pub coreset: WeightedCoreset,
     /// Per-class subset sizes (empty when `per_class` is off).
     pub class_sizes: Vec<usize>,
+    /// Which similarity store served each class (the
+    /// [`SimStorePolicy`] resolution, in class order).
+    pub stores: Vec<SimStore>,
     /// Sum of certified ε over classes (Eq. 15 per class, summed via the
     /// triangle inequality).
     pub epsilon: f64,
@@ -152,27 +178,11 @@ pub fn run_greedy<S: SimilaritySource + ?Sized>(
     }
 }
 
-fn class_rule(budget: &Budget, class_n: usize, total_n: usize) -> StopRule {
-    match *budget {
-        Budget::Fraction(f) => {
-            let r = ((class_n as f64) * f).round().max(1.0) as usize;
-            StopRule::Budget(r.min(class_n))
-        }
-        Budget::Count(total) => {
-            let share = ((total as f64) * (class_n as f64) / (total_n as f64))
-                .round()
-                .max(1.0) as usize;
-            StopRule::Budget(share.min(class_n))
-        }
-        Budget::Cover { epsilon } => StopRule::Cover {
-            // Split the ε budget proportionally to class size.
-            epsilon: epsilon * (class_n as f64) / (total_n as f64),
-            max_size: class_n,
-        },
-    }
-}
-
 /// Select a weighted coreset from `features` (one row per example).
+///
+/// Thin caller of [`Selector`] with a cold workspace — callers that
+/// reselect repeatedly (per-epoch protocols) should hold a [`Selector`]
+/// instead and reuse its workspace.
 ///
 /// * `labels`/`num_classes`: when `cfg.per_class` is set, selection runs
 ///   independently inside every class and the merged coreset preserves
@@ -185,54 +195,13 @@ pub fn select(
     cfg: &SelectorConfig,
     engine: &mut dyn PairwiseEngine,
 ) -> CoresetResult {
-    assert_eq!(features.rows, labels.len());
-    let n = features.rows;
-    let mut rng = Rng::new(cfg.seed);
-    let pool = ThreadPool::scoped(cfg.parallelism);
-
-    let groups: Vec<Vec<usize>> = if cfg.per_class && num_classes > 1 {
-        let mut g = vec![Vec::new(); num_classes];
-        for (i, &c) in labels.iter().enumerate() {
-            g[c as usize].push(i);
-        }
-        g.retain(|v| !v.is_empty());
-        g
-    } else {
-        vec![(0..n).collect()]
-    };
-
-    let mut parts = Vec::with_capacity(groups.len());
-    let mut class_sizes = Vec::with_capacity(groups.len());
-    let mut epsilon = 0.0f64;
-    let mut f_value = 0.0f64;
-    let mut evaluations = 0usize;
-
-    for idx in &groups {
-        let class_x = features.gather_rows(idx);
-        let sq = engine.sqdist_self_par(&class_x, &pool);
-        let sim = DenseSim::from_sqdist_par(sq, &pool);
-        let rule = class_rule(&cfg.budget, idx.len(), n);
-        let sel = run_greedy(&sim, cfg.method, rule, &mut rng, &pool);
-        let wc = WeightedCoreset::compute(&sim, &sel.order);
-        class_sizes.push(sel.order.len());
-        epsilon += sel.epsilon;
-        f_value += sel.f_value;
-        evaluations += sel.evaluations;
-        parts.push(wc.lift(idx));
-    }
-
-    CoresetResult {
-        coreset: WeightedCoreset::merge(&parts),
-        class_sizes,
-        epsilon,
-        f_value,
-        evaluations,
-    }
+    Selector::new().select(features, labels, num_classes, cfg, engine)
 }
 
 /// Uniformly random weighted baseline: `r` points, each weighted `n/r`
 /// (how SGD implicitly weights a random batch) — the paper's "random"
-/// curve in every figure. Stratified per class like `select`.
+/// curve in every figure. Stratified per class like `select`, through
+/// the same grouping and budget-splitting rules.
 pub fn random_baseline(
     n: usize,
     labels: &[u32],
@@ -241,20 +210,13 @@ pub fn random_baseline(
     per_class: bool,
     rng: &mut Rng,
 ) -> WeightedCoreset {
-    let groups: Vec<Vec<usize>> = if per_class && num_classes > 1 {
-        let mut g = vec![Vec::new(); num_classes];
-        for (i, &c) in labels.iter().enumerate() {
-            g[c as usize].push(i);
-        }
-        g.retain(|v| !v.is_empty());
-        g
-    } else {
-        vec![(0..n).collect()]
-    };
+    let groups = group_by_class(labels, num_classes, per_class);
+    let sizes: Vec<usize> = groups.iter().map(Vec::len).collect();
+    let rules = split_budget(budget, &sizes, n);
     let mut indices = Vec::new();
     let mut gamma = Vec::new();
-    for idx in &groups {
-        let r = match class_rule(budget, idx.len(), n) {
+    for (idx, rule) in groups.iter().zip(rules) {
+        let r = match rule {
             StopRule::Budget(r) => r,
             StopRule::Cover { max_size, .. } => max_size.min(idx.len()),
         };
@@ -296,6 +258,9 @@ mod tests {
 
     #[test]
     fn count_budget_splits_proportionally() {
+        // Largest-remainder apportionment: the per-class shares must sum
+        // to the requested total exactly (the old per-class `.round()`
+        // drifted within ±2).
         let ds = synthetic::covtype_like(1000, 1);
         let cfg = SelectorConfig {
             budget: Budget::Count(100),
@@ -304,7 +269,7 @@ mod tests {
         let mut eng = NativePairwise;
         let res = select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
         let total: usize = res.class_sizes.iter().sum();
-        assert!((98..=102).contains(&total), "total {total}");
+        assert_eq!(total, 100, "Count budget must be hit exactly");
     }
 
     #[test]
@@ -338,7 +303,7 @@ mod tests {
             budget: Budget::Fraction(0.05),
             per_class: true,
             seed: 9,
-            parallelism: 1,
+            ..Default::default()
         };
         let mut eng = NativePairwise;
         let res = select(&ds.x, &ds.y, 2, &cfg, &mut eng);

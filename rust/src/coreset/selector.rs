@@ -1,0 +1,564 @@
+//! The unified selection subsystem: one per-class loop, one budget
+//! splitter, pluggable similarity stores, reusable epoch workspaces.
+//!
+//! Historically the per-class CRAIG loop lived twice — in
+//! [`crate::coreset::select`] and in `pipeline::SelectionPipeline` —
+//! with twin copies of the budget-splitting rule, and every call
+//! materialized an O(n²) [`DenseSim`] and re-allocated every kernel /
+//! similarity / coverage buffer.  For the repeated in-training selection
+//! regime (per-epoch reselection, Sec. 3.4 / Fig. 4–5) those costs
+//! recur every epoch.  This module centralizes the machinery:
+//!
+//! * [`Selector`] — the single entry point.  Owns a
+//!   [`SelectionWorkspace`] whose buffers survive across calls, so a
+//!   trainer that reselects every epoch pays its large allocations once.
+//! * [`SimStorePolicy`] — picks the backing similarity store per class:
+//!   `Dense` (n² floats, fastest columns), `Blocked` (O(n·d) memory,
+//!   columns recomputed on the fly), or `Auto` (dense iff the n² matrix
+//!   fits a memory budget).  Lifts the n² ceiling for large classes.
+//! * [`split_budget`] — the one budget-splitting rule.  `Budget::Count`
+//!   uses largest-remainder apportionment: the per-class shares sum to
+//!   the requested total *exactly* (the old per-class `.round()`
+//!   drifted by a few points).
+//!
+//! Determinism contract (inherited and preserved): the selected coreset
+//! is a pure function of `(dataset, SelectorConfig)` — independent of
+//! worker count, intra-class width, workspace temperature (cold vs
+//! warm), and scheduling.  Per-class rng streams are derived from
+//! `cfg.seed` and the class's first global index, so class order and
+//! sharding cannot perturb stochastic greedy.
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::util::ThreadPool;
+
+use super::greedy::StopRule;
+use super::sim::{BlockedSim, DenseSim};
+use super::weights::WeightedCoreset;
+use super::{run_greedy, Budget, CoresetResult, PairwiseEngine, SelectorConfig};
+
+/// Default `Auto` memory budget for one class's dense similarity
+/// matrix: 1 GiB ⇒ dense up to n ≈ 16k, blocked beyond.
+pub const DEFAULT_SIM_MEM_BUDGET: usize = 1 << 30;
+
+/// Which backing store actually served a class (the resolution of a
+/// [`SimStorePolicy`] at a concrete class size).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimStore {
+    Dense,
+    Blocked,
+}
+
+impl SimStore {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimStore::Dense => "dense",
+            SimStore::Blocked => "blocked",
+        }
+    }
+}
+
+/// Per-class similarity-store selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimStorePolicy {
+    /// Always materialize the n² matrix.
+    Dense,
+    /// Never materialize; recompute columns on the fly (O(n·d) memory).
+    Blocked,
+    /// Dense iff the class's n² f32 matrix fits `mem_budget_bytes`.
+    Auto { mem_budget_bytes: usize },
+}
+
+impl Default for SimStorePolicy {
+    fn default() -> Self {
+        SimStorePolicy::Auto { mem_budget_bytes: DEFAULT_SIM_MEM_BUDGET }
+    }
+}
+
+impl SimStorePolicy {
+    /// Bytes a dense store needs for a class of `n` points.
+    pub fn dense_bytes(n: usize) -> u128 {
+        (n as u128) * (n as u128) * std::mem::size_of::<f32>() as u128
+    }
+
+    /// Resolve the policy at a concrete class size.
+    pub fn resolve(&self, n: usize) -> SimStore {
+        match *self {
+            SimStorePolicy::Dense => SimStore::Dense,
+            SimStorePolicy::Blocked => SimStore::Blocked,
+            SimStorePolicy::Auto { mem_budget_bytes } => {
+                if Self::dense_bytes(n) <= mem_budget_bytes as u128 {
+                    SimStore::Dense
+                } else {
+                    SimStore::Blocked
+                }
+            }
+        }
+    }
+
+    /// Parse a CLI spec: `dense` | `blocked` | `auto` (the latter taking
+    /// its byte budget from `mem_budget_bytes`).
+    pub fn parse(spec: &str, mem_budget_bytes: usize) -> anyhow::Result<Self> {
+        match spec {
+            "dense" => Ok(SimStorePolicy::Dense),
+            "blocked" => Ok(SimStorePolicy::Blocked),
+            "auto" => Ok(SimStorePolicy::Auto { mem_budget_bytes }),
+            other => anyhow::bail!("unknown sim store '{other}' (dense|blocked|auto)"),
+        }
+    }
+}
+
+/// Group `[0, n)` by label.  Empty classes are dropped; with
+/// `per_class` off (or a single class) everything lands in one group.
+/// The one grouping rule shared by [`Selector::select`],
+/// [`crate::coreset::random_baseline`] and the pipeline.
+pub fn group_by_class(labels: &[u32], num_classes: usize, per_class: bool) -> Vec<Vec<usize>> {
+    let n = labels.len();
+    if per_class && num_classes > 1 {
+        let mut g = vec![Vec::new(); num_classes];
+        for (i, &c) in labels.iter().enumerate() {
+            g[c as usize].push(i);
+        }
+        g.retain(|v| !v.is_empty());
+        g
+    } else {
+        vec![(0..n).collect()]
+    }
+}
+
+/// The single budget-splitting rule: one [`StopRule`] per class group.
+///
+/// * `Fraction(f)` — each class contributes `round(n_c·f)` (min 1), the
+///   paper's per-class protocol.
+/// * `Count(r)` — **largest-remainder apportionment**: shares sum to
+///   `clamp(r, #classes, n)` exactly (see [`count_shares`]).
+/// * `Cover { ε }` — the ε budget splits proportionally to class size.
+pub fn split_budget(budget: &Budget, class_sizes: &[usize], total_n: usize) -> Vec<StopRule> {
+    match *budget {
+        Budget::Fraction(f) => class_sizes
+            .iter()
+            .map(|&c| {
+                let r = ((c as f64) * f).round().max(1.0) as usize;
+                StopRule::Budget(r.min(c))
+            })
+            .collect(),
+        Budget::Count(total) => {
+            count_shares(total, class_sizes).into_iter().map(StopRule::Budget).collect()
+        }
+        Budget::Cover { epsilon } => class_sizes
+            .iter()
+            .map(|&c| StopRule::Cover {
+                epsilon: epsilon * (c as f64) / (total_n as f64),
+                max_size: c,
+            })
+            .collect(),
+    }
+}
+
+/// Largest-remainder apportionment of `total` across classes,
+/// proportional to `sizes`, with per-class bounds `1 ≤ share ≤ size`.
+///
+/// The effective total is `clamp(total, #classes, Σ sizes)` (every
+/// nonempty class contributes at least one point — selecting zero is
+/// undefined for the weight assignment — and no class can exceed its
+/// population); within those bounds the returned shares sum to it
+/// **exactly**.  Deterministic: remainder ties break toward the lower
+/// class index, trims come off the largest over-quota share first.
+pub fn count_shares(total: usize, sizes: &[usize]) -> Vec<usize> {
+    let k = sizes.len();
+    assert!(k > 0 && sizes.iter().all(|&s| s > 0), "classes must be nonempty");
+    let n: usize = sizes.iter().sum();
+    let total = total.clamp(k.min(n), n);
+    let quota: Vec<f64> = sizes.iter().map(|&s| total as f64 * s as f64 / n as f64).collect();
+    let mut shares: Vec<usize> =
+        quota.iter().zip(sizes).map(|(&q, &s)| (q.floor() as usize).min(s)).collect();
+    // Hand out the remainder by largest fractional part (tie: lower
+    // index), skipping classes already at capacity.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        let (fa, fb) = (quota[a] - quota[a].floor(), quota[b] - quota[b].floor());
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    let mut assigned: usize = shares.iter().sum();
+    let mut cursor = 0usize;
+    while assigned < total {
+        let c = order[cursor % k];
+        cursor += 1;
+        if shares[c] < sizes[c] {
+            shares[c] += 1;
+            assigned += 1;
+        }
+    }
+    // Enforce the min-1 floor, then trim back to exactness by taking
+    // points from the most over-represented classes (largest
+    // share − quota, tie: lower index), never below 1.
+    for s in shares.iter_mut() {
+        if *s == 0 {
+            *s = 1;
+            assigned += 1;
+        }
+    }
+    while assigned > total {
+        let mut victim = usize::MAX;
+        let mut worst = f64::NEG_INFINITY;
+        for c in 0..k {
+            let over = shares[c] as f64 - quota[c];
+            if shares[c] > 1 && over > worst {
+                worst = over;
+                victim = c;
+            }
+        }
+        debug_assert!(victim != usize::MAX, "total ≥ k guarantees a trimmable class");
+        shares[victim] -= 1;
+        assigned -= 1;
+    }
+    shares
+}
+
+/// Reusable selection buffers: the allocations that dominate a
+/// selection call survive inside the workspace, so repeated calls
+/// (per-epoch reselection, multi-class sweeps) run warm.
+///
+/// Lifecycle: buffers are *taken* out of the workspace for the duration
+/// of one class subproblem, resized/overwritten in full (dirty content
+/// never leaks — see `pairwise_sqdist_self_into`), and *returned* when
+/// the class completes.  Capacity is monotone: the workspace grows to
+/// the largest class it has served and stays there, so a steady-state
+/// epoch loop performs zero large allocations.  Dropping the workspace
+/// (or the owning [`Selector`]) releases everything.
+pub struct SelectionWorkspace {
+    /// Gathered class-feature rows (n_c × d).
+    class_x: Matrix,
+    /// The n² squared-distance / similarity buffer (dense store only).
+    sq: Vec<f32>,
+    /// Coverage state for weight assignment (best similarity per point).
+    cover_best: Vec<f32>,
+    /// Column scratch for weight assignment over non-borrowable stores.
+    cover_scratch: Vec<f32>,
+    /// Class subproblems served since construction.
+    pub calls: usize,
+    /// Calls whose dense buffer was served from capacity (no alloc).
+    pub warm_hits: usize,
+    /// High-water mark of the dense similarity buffer, in bytes.
+    pub peak_dense_bytes: usize,
+}
+
+impl Default for SelectionWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SelectionWorkspace {
+    pub fn new() -> Self {
+        SelectionWorkspace {
+            class_x: Matrix::zeros(0, 0),
+            sq: Vec::new(),
+            cover_best: Vec::new(),
+            cover_scratch: Vec::new(),
+            calls: 0,
+            warm_hits: 0,
+            peak_dense_bytes: 0,
+        }
+    }
+}
+
+/// Outcome of one class subproblem, lifted to dataset coordinates.
+#[derive(Clone, Debug)]
+pub struct ClassSelection {
+    pub coreset: WeightedCoreset,
+    pub selected: usize,
+    pub epsilon: f64,
+    pub f_value: f64,
+    pub evaluations: usize,
+    /// Which store served this class (policy resolution).
+    pub store: SimStore,
+}
+
+/// Per-class rng stream derivation: a pure function of the seed and the
+/// class's first global index, so streams are identical no matter which
+/// worker runs the class or in which order classes complete.
+fn class_seed(seed: u64, first_global_idx: usize) -> u64 {
+    seed ^ (first_global_idx as u64).wrapping_mul(0x9E37_79B9)
+}
+
+/// Gather `features[idx]` into a reusable row buffer.
+fn gather_rows_into(features: &Matrix, idx: &[usize], out: &mut Matrix) {
+    out.rows = idx.len();
+    out.cols = features.cols;
+    out.data.resize(idx.len() * features.cols, 0.0);
+    for (r, &i) in idx.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(features.row(i));
+    }
+}
+
+/// The unified selection engine: THE per-class loop.  Everything that
+/// selects a CRAIG coreset — [`crate::coreset::select`], the pipeline's
+/// class shards, both trainers — goes through here.
+pub struct Selector {
+    ws: SelectionWorkspace,
+}
+
+impl Default for Selector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Selector {
+    /// A selector with a cold workspace.
+    pub fn new() -> Self {
+        Selector { ws: SelectionWorkspace::new() }
+    }
+
+    /// Workspace telemetry (warm-hit counters, peak bytes).
+    pub fn workspace(&self) -> &SelectionWorkspace {
+        &self.ws
+    }
+
+    /// Solve one class subproblem: gather → pairwise kernel →
+    /// similarity store (per policy) → greedy → weights, returning the
+    /// class coreset lifted to dataset coordinates.  `idx` holds the
+    /// class's global row indices (nonempty).
+    ///
+    /// Engine scope: `engine` computes the batch distance matrix of the
+    /// **dense** store.  The blocked store recomputes single columns on
+    /// the fly, which has no batch-kernel shape — those columns always
+    /// use the native arithmetic ([`BlockedSim`]), regardless of the
+    /// configured backend (the same restriction the pipeline's class
+    /// shards already have).  Under a non-native engine the two stores
+    /// may therefore round differently; the cross-store parity
+    /// guarantees in `tests/selector_stores.rs` are stated for the
+    /// native engine.
+    pub fn select_class(
+        &mut self,
+        features: &Matrix,
+        idx: &[usize],
+        rule: StopRule,
+        cfg: &SelectorConfig,
+        engine: &mut dyn PairwiseEngine,
+    ) -> ClassSelection {
+        assert!(!idx.is_empty(), "empty class group");
+        let n = idx.len();
+        let pool = ThreadPool::scoped(cfg.parallelism);
+        let mut rng = Rng::new(class_seed(cfg.seed, idx[0]));
+        let store = cfg.sim_store.resolve(n);
+        self.ws.calls += 1;
+
+        let mut class_x = std::mem::replace(&mut self.ws.class_x, Matrix::zeros(0, 0));
+        gather_rows_into(features, idx, &mut class_x);
+
+        let (sel, wc) = match store {
+            SimStore::Dense => {
+                let mut data = std::mem::take(&mut self.ws.sq);
+                if data.capacity() >= n * n {
+                    self.ws.warm_hits += 1;
+                }
+                data.resize(n * n, 0.0);
+                let mut sq = Matrix::from_vec(n, n, data);
+                self.ws.peak_dense_bytes =
+                    self.ws.peak_dense_bytes.max(n * n * std::mem::size_of::<f32>());
+                engine.sqdist_self_into(&class_x, &mut sq, &pool);
+                let sim = DenseSim::from_sqdist_par(sq, &pool);
+                let sel = run_greedy(&sim, cfg.method, rule, &mut rng, &pool);
+                let wc = WeightedCoreset::compute_with_scratch(
+                    &sim,
+                    &sel.order,
+                    &mut self.ws.cover_best,
+                    &mut self.ws.cover_scratch,
+                );
+                self.ws.sq = sim.into_scratch();
+                (sel, wc)
+            }
+            SimStore::Blocked => {
+                let sim = BlockedSim::with_pool(&class_x, &pool);
+                let sel = run_greedy(&sim, cfg.method, rule, &mut rng, &pool);
+                let wc = WeightedCoreset::compute_with_scratch(
+                    &sim,
+                    &sel.order,
+                    &mut self.ws.cover_best,
+                    &mut self.ws.cover_scratch,
+                );
+                (sel, wc)
+            }
+        };
+        self.ws.class_x = class_x;
+        ClassSelection {
+            coreset: wc.lift(idx),
+            selected: sel.order.len(),
+            epsilon: sel.epsilon,
+            f_value: sel.f_value,
+            evaluations: sel.evaluations,
+            store,
+        }
+    }
+
+    /// Full multi-class selection: group by label, split the budget
+    /// once, solve every class through [`select_class`](Self::select_class),
+    /// merge preserving class ratios.
+    pub fn select(
+        &mut self,
+        features: &Matrix,
+        labels: &[u32],
+        num_classes: usize,
+        cfg: &SelectorConfig,
+        engine: &mut dyn PairwiseEngine,
+    ) -> CoresetResult {
+        assert_eq!(features.rows, labels.len());
+        let n = features.rows;
+        let groups = group_by_class(labels, num_classes, cfg.per_class);
+        let sizes: Vec<usize> = groups.iter().map(Vec::len).collect();
+        let rules = split_budget(&cfg.budget, &sizes, n);
+
+        let mut parts = Vec::with_capacity(groups.len());
+        let mut class_sizes = Vec::with_capacity(groups.len());
+        let mut stores = Vec::with_capacity(groups.len());
+        let mut epsilon = 0.0f64;
+        let mut f_value = 0.0f64;
+        let mut evaluations = 0usize;
+        for (idx, rule) in groups.iter().zip(rules) {
+            let cs = self.select_class(features, idx, rule, cfg, engine);
+            class_sizes.push(cs.selected);
+            stores.push(cs.store);
+            epsilon += cs.epsilon;
+            f_value += cs.f_value;
+            evaluations += cs.evaluations;
+            parts.push(cs.coreset);
+        }
+        CoresetResult {
+            coreset: WeightedCoreset::merge(&parts),
+            class_sizes,
+            stores,
+            epsilon,
+            f_value,
+            evaluations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::NativePairwise;
+    use crate::data::synthetic;
+
+    #[test]
+    fn count_shares_sum_exactly() {
+        for (total, sizes) in [
+            (100usize, vec![510usize, 490]),
+            (100, vec![333, 333, 334]),
+            (7, vec![1000, 10, 10]),
+            (97, vec![61, 193, 7, 401, 89]),
+        ] {
+            let shares = count_shares(total, &sizes);
+            assert_eq!(shares.iter().sum::<usize>(), total, "{total} over {sizes:?}");
+            for (s, &c) in shares.iter().zip(&sizes) {
+                assert!(*s >= 1 && *s <= c, "share {s} of class {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn count_shares_respects_bounds() {
+        // total > n clamps to n; total < #classes clamps to #classes.
+        assert_eq!(count_shares(50, &[10, 5]), vec![10, 5]);
+        assert_eq!(count_shares(1, &[9, 9, 9]), vec![1, 1, 1]);
+        // Tiny classes are floored at one point, larger ones absorb the trim.
+        let shares = count_shares(10, &[1, 1, 98]);
+        assert_eq!(shares.iter().sum::<usize>(), 10);
+        assert_eq!(&shares[..2], &[1, 1]);
+    }
+
+    #[test]
+    fn count_shares_is_proportional() {
+        let shares = count_shares(200, &[800, 200]);
+        assert_eq!(shares, vec![160, 40]);
+    }
+
+    #[test]
+    fn split_budget_fraction_and_cover_unchanged() {
+        let rules = split_budget(&Budget::Fraction(0.1), &[95, 205], 300);
+        match (rules[0], rules[1]) {
+            (StopRule::Budget(a), StopRule::Budget(b)) => {
+                assert_eq!((a, b), (10, 21));
+            }
+            other => panic!("unexpected rules {other:?}"),
+        }
+        let rules = split_budget(&Budget::Cover { epsilon: 3.0 }, &[100, 200], 300);
+        match (rules[0], rules[1]) {
+            (
+                StopRule::Cover { epsilon: e0, max_size: m0 },
+                StopRule::Cover { epsilon: e1, .. },
+            ) => {
+                assert!((e0 - 1.0).abs() < 1e-12 && (e1 - 2.0).abs() < 1e-12);
+                assert_eq!(m0, 100);
+            }
+            other => panic!("unexpected rules {other:?}"),
+        }
+    }
+
+    #[test]
+    fn workspace_warms_up_across_calls() {
+        let ds = synthetic::covtype_like(600, 0);
+        let cfg = SelectorConfig { budget: Budget::Fraction(0.1), ..Default::default() };
+        let mut eng = NativePairwise;
+        let mut selector = Selector::new();
+        let a = selector.select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+        let calls_after_first = selector.workspace().calls;
+        assert_eq!(calls_after_first, 2, "two classes, two subproblems");
+        let b = selector.select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+        // Warm pass: both classes fit the grown buffer, and the output is
+        // identical to the cold pass (workspace temperature is invisible).
+        assert!(selector.workspace().warm_hits >= 2, "second pass must run warm");
+        assert!(selector.workspace().peak_dense_bytes > 0);
+        assert_eq!(a.coreset.indices, b.coreset.indices);
+        assert_eq!(a.coreset.gamma, b.coreset.gamma);
+    }
+
+    #[test]
+    fn auto_policy_resolves_by_size() {
+        let auto = SimStorePolicy::Auto { mem_budget_bytes: 4 * 100 * 100 };
+        assert_eq!(auto.resolve(100), SimStore::Dense);
+        assert_eq!(auto.resolve(101), SimStore::Blocked);
+        assert_eq!(SimStorePolicy::Dense.resolve(1 << 20), SimStore::Dense);
+        assert_eq!(SimStorePolicy::Blocked.resolve(2), SimStore::Blocked);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(SimStorePolicy::parse("dense", 0).unwrap(), SimStorePolicy::Dense);
+        assert_eq!(SimStorePolicy::parse("blocked", 0).unwrap(), SimStorePolicy::Blocked);
+        assert_eq!(
+            SimStorePolicy::parse("auto", 123).unwrap(),
+            SimStorePolicy::Auto { mem_budget_bytes: 123 }
+        );
+        assert!(SimStorePolicy::parse("mmap", 0).is_err());
+    }
+
+    #[test]
+    fn blocked_policy_selects_same_subset_shape() {
+        let ds = synthetic::covtype_like(500, 2);
+        let mut eng = NativePairwise;
+        let dense_cfg = SelectorConfig {
+            budget: Budget::Count(40),
+            sim_store: SimStorePolicy::Dense,
+            ..Default::default()
+        };
+        let blocked_cfg = SelectorConfig { sim_store: SimStorePolicy::Blocked, ..dense_cfg };
+        let a = Selector::new().select(&ds.x, &ds.y, 2, &dense_cfg, &mut eng);
+        let b = Selector::new().select(&ds.x, &ds.y, 2, &blocked_cfg, &mut eng);
+        assert_eq!(a.stores, vec![SimStore::Dense, SimStore::Dense]);
+        assert_eq!(b.stores, vec![SimStore::Blocked, SimStore::Blocked]);
+        // Exact-count apportionment holds under both stores.
+        assert_eq!(a.class_sizes.iter().sum::<usize>(), 40);
+        assert_eq!(b.class_sizes.iter().sum::<usize>(), 40);
+        // Same selected points: the stores share distance arithmetic and
+        // only differ in the constant d_max offset, which preserves every
+        // greedy argmax (see sim.rs; the bitwise parity suite lives in
+        // tests/selector_stores.rs).
+        assert_eq!(a.coreset.indices, b.coreset.indices);
+        let (sa, sb): (f32, f32) = (a.coreset.gamma.iter().sum(), b.coreset.gamma.iter().sum());
+        assert_eq!(sa, 500.0, "weights must cover the dataset");
+        assert_eq!(sa, sb);
+    }
+}

@@ -55,11 +55,29 @@ pub struct DenseSim {
     symmetric: bool,
 }
 
-/// Detect symmetry on a deterministic sample (self-distance matrices
+/// Below this size the symmetry check inspects **every** `(i, j)` pair;
+/// a strided sample cannot see asymmetry confined to unsampled cells,
+/// and at small `n` the full sweep is nearly free.
+const SYMMETRY_FULL_CHECK_MAX_N: usize = 256;
+
+/// Detect symmetry of a squared-distance matrix (self-distance matrices
 /// from both engines are symmetric up to f32 rounding).
+///
+/// Guarantee: for `n ≤` [`SYMMETRY_FULL_CHECK_MAX_N`] the check is
+/// exhaustive — any asymmetric cell is found.  Above that, a
+/// deterministic strided sample (stride `⌈n/17⌉`, ≥ 289 probed pairs) is
+/// used: it detects any asymmetry that touches a sampled row/column
+/// pair, but an adversary could confine asymmetry to unsampled cells.
+/// That trade is deliberate — the symmetric fast path is a *perf* hint
+/// (row-for-column reads), and the matrices reaching this function come
+/// from our own self-distance kernels, which are symmetric by
+/// construction; the sample is a cheap safety net against wiring bugs,
+/// not a cryptographic defence.  Callers feeding externally-sourced
+/// matrices at large `n` should not rely on the sample rejecting a
+/// crafted input.
 fn detect_symmetry(sq: &Matrix) -> bool {
     let n = sq.rows;
-    let stride = (n / 17).max(1);
+    let stride = if n <= SYMMETRY_FULL_CHECK_MAX_N { 1 } else { (n / 17).max(1) };
     let mut i = 0;
     while i < n {
         let mut j = i + 1;
@@ -137,6 +155,14 @@ impl DenseSim {
     pub fn from_features_par(x: &Matrix, pool: &ThreadPool) -> Self {
         Self::from_sqdist_par(linalg::pairwise_sqdist_self_par(x, pool), pool)
     }
+
+    /// Tear down into the backing buffer so a
+    /// [`crate::coreset::SelectionWorkspace`] can recycle the `n²`
+    /// allocation for the next class / epoch (the content is scratch —
+    /// the next fill overwrites every cell).
+    pub fn into_scratch(self) -> Vec<f32> {
+        self.sims.data
+    }
 }
 
 impl SimilaritySource for DenseSim {
@@ -168,33 +194,126 @@ impl SimilaritySource for DenseSim {
     }
 }
 
-/// On-the-fly similarity from features; `d_max` is estimated from a
-/// deterministic sample of pairs and clamped per-column (an upper bound
-/// on d_max only shifts F by a constant, preserving the argmax).
+/// Below this many `n·d` multiply-adds a column is too cheap for the
+/// tiled parallel path.  Each tiled call pays `par_width` scoped thread
+/// spawn/joins (~hundreds of µs at width 8), so the threshold is set
+/// where the tiled work clearly dominates that cost (2²¹ madds ≈
+/// several ms sequential).  It also keeps nested fan-out tame when
+/// `sim_col` is reached from inside an already-parallel candidate
+/// sweep: cheap columns stay sequential there instead of multiplying
+/// the thread count.  Above the threshold a nested call does briefly
+/// oversubscribe (width² threads during a sweep round) — tolerated
+/// because each tile still carries ≥ threshold/width work, the OS
+/// timeslices work-dominated threads at near-core throughput, and
+/// determinism is unaffected; the win on the *sequential* consumers of
+/// big columns (lazy re-scoring, `FacilityLocation::add`, weight
+/// assignment) is where this path earns its keep.
+const COL_PAR_MIN_WORK: usize = 1 << 21;
+
+/// On-the-fly similarity from features: O(n·d) memory instead of the
+/// dense store's O(n²) floats — the store the selector picks when a
+/// class is too large for [`DenseSim`].
+///
+/// Distances use the **same** `‖a‖²+‖b‖²−2⟨a,b⟩` decomposition (with
+/// the same unrolled [`linalg::dot`] and the same `max(0)` clamp) as the
+/// dense self-distance kernel, so a column's pre-`sqrt` values are
+/// bitwise-equal to the dense path's — store choice changes memory
+/// footprint, not arithmetic.
+///
+/// `d_max` is a **guaranteed** upper bound on the pairwise diameter,
+/// computed in one O(n·d) pass via the triangle inequality (see
+/// [`estimate_d_max`](Self::estimate_d_max)); an over-estimate of
+/// `d_max` only shifts F by a constant per covered point, preserving
+/// every greedy argmax (similarities are clamped at 0 per column — and
+/// the guarantee means the clamp never actually fires, which is what
+/// keeps store choice a memory decision rather than a semantic one).
 pub struct BlockedSim<'a> {
     x: &'a Matrix,
+    /// Per-row squared norms, precomputed once (O(n·d)).
+    xn: Vec<f32>,
     d_max: f32,
+    /// Fan-out width for the tiled `sim_col` path (1 ⇒ sequential).
+    /// Stored as a width, not a pool handle: scoped handles are free to
+    /// construct per call and the store stays trivially `Sync`.
+    par_width: usize,
 }
 
 impl<'a> BlockedSim<'a> {
+    /// Sequential store (no column tiling, sequential `d_max` scan).
     pub fn new(x: &'a Matrix) -> Self {
-        // Deterministic estimate: max distance from a coarse stride sample,
-        // inflated by 2× to stay an upper bound with near-certainty; an
-        // over-estimate of d_max is safe (constant shift of F).
+        let xn = x.row_sqnorms();
+        let d_max = Self::estimate_d_max(x, &xn, None);
+        BlockedSim { x, xn, d_max, par_width: 1 }
+    }
+
+    /// Pool-backed store: the `d_max` anchor scan fans out over `pool`,
+    /// and `sim_col` runs tiled when a column carries enough work
+    /// ([`COL_PAR_MIN_WORK`]).  Output is bitwise-identical to
+    /// [`BlockedSim::new`] at any pool width: every `out[i]` is produced
+    /// by the same scalar recipe (tiling only decides which worker
+    /// computes it), and f32 `max` is order-independent, so the `d_max`
+    /// reduction is partition-invariant.
+    pub fn with_pool(x: &'a Matrix, pool: &ThreadPool) -> Self {
+        let xn = x.row_sqnorms();
+        let d_max = Self::estimate_d_max(x, &xn, Some(pool));
+        BlockedSim { x, xn, d_max, par_width: pool.size() }
+    }
+
+    /// Store with an explicit `d_max` (callers that already know a
+    /// bound — e.g. the dense/blocked parity tests, which feed
+    /// `DenseSim::d_max()` to get bitwise-equal similarity columns).
+    pub fn with_d_max(x: &'a Matrix, d_max: f32) -> Self {
+        let xn = x.row_sqnorms();
+        BlockedSim { x, xn, d_max: if d_max > 0.0 { d_max } else { 1.0 }, par_width: 1 }
+    }
+
+    /// Deterministic **guaranteed** upper bound on the pairwise
+    /// diameter, built from one O(n·d) pass: with the first row as the
+    /// anchor, the triangle inequality gives `d(i,j) ≤ d(i,0) + d(0,j)
+    /// ≤ 2·max_i d(i,0)` for every pair — no sampled pair can be
+    /// missed, unlike a strided pair sample, so the bound holds on
+    /// adversarial inputs too (it is within 2× of the true diameter).
+    /// With a pool, anchor distances are scanned range-parallel and the
+    /// partial maxima folded — f32 `max` is partition-invariant, so the
+    /// result is identical at any width.
+    fn estimate_d_max(x: &Matrix, xn: &[f32], pool: Option<&ThreadPool>) -> f32 {
         let n = x.rows;
-        let stride = (n / 64).max(1);
-        let mut d2_max = 0.0f32;
-        let mut i = 0;
-        while i < n {
-            let mut j = i + stride;
-            while j < n {
-                d2_max = d2_max.max(linalg::sqdist(x.row(i), x.row(j)));
-                j += stride;
+        let x0 = x.row(0);
+        let d0 = xn[0];
+        let scan = |lo: usize, hi: usize| -> f32 {
+            let mut m = 0.0f32;
+            for i in lo..hi {
+                let g = linalg::dot(x.row(i), x0);
+                m = m.max((xn[i] + d0 - 2.0 * g).max(0.0));
             }
-            i += stride;
+            m
+        };
+        let d2_anchor = match pool {
+            Some(pool) if pool.size() > 1 && n > 1 => {
+                let ranges = util::even_ranges(n, pool.size());
+                pool.scope_map_parts(&ranges, scan).into_iter().fold(0.0f32, f32::max)
+            }
+            _ => scan(0, n),
+        };
+        if d2_anchor > 0.0 {
+            2.0 * d2_anchor.sqrt()
+        } else {
+            1.0
         }
-        let d_max = if d2_max > 0.0 { 2.0 * d2_max.sqrt() } else { 1.0 };
-        BlockedSim { x, d_max }
+    }
+
+    /// One output tile of a similarity column: `out[i] = max(0, d_max −
+    /// d_ij)` for `i ∈ [lo, lo+len)`.  The single scalar recipe behind
+    /// both the sequential and the tiled path.
+    fn col_tile(&self, j: usize, lo: usize, out: &mut [f32]) {
+        let xj = self.x.row(j);
+        let dj = self.xn[j];
+        for (k, o) in out.iter_mut().enumerate() {
+            let i = lo + k;
+            let g = linalg::dot(self.x.row(i), xj);
+            let d2 = (self.xn[i] + dj - 2.0 * g).max(0.0);
+            *o = (self.d_max - d2.sqrt()).max(0.0);
+        }
     }
 }
 
@@ -204,10 +323,15 @@ impl SimilaritySource for BlockedSim<'_> {
     }
 
     fn sim_col(&self, j: usize, out: &mut [f32]) {
-        let xj = self.x.row(j);
-        for i in 0..self.x.rows {
-            let d = linalg::sqdist(self.x.row(i), xj).sqrt();
-            out[i] = (self.d_max - d).max(0.0);
+        let n = self.x.rows;
+        if self.par_width > 1 && n * self.x.cols >= COL_PAR_MIN_WORK {
+            let pool = ThreadPool::scoped(self.par_width);
+            let bounds = util::even_ranges(n, self.par_width);
+            pool.scope_map_chunks(out, &bounds, |p, chunk| {
+                self.col_tile(j, bounds[p].0, chunk);
+            });
+        } else {
+            self.col_tile(j, 0, out);
         }
     }
 
@@ -282,6 +406,59 @@ mod tests {
             assert_eq!(par.d_max(), seq.d_max(), "width {width}");
             assert_eq!(par.symmetric, seq.symmetric);
             assert_eq!(par.sims.data, seq.sims.data, "width {width} bitwise");
+        }
+    }
+
+    #[test]
+    fn symmetry_check_is_exhaustive_at_small_n() {
+        // Asymmetry confined to a single cell the old strided sample
+        // (stride ⌈n/17⌉ = 2 here, even rows only) never probed: at
+        // n ≤ SYMMETRY_FULL_CHECK_MAX_N the check is exhaustive, so the
+        // symmetric fast path (a row read standing in for the column)
+        // must be declined.  `sim_col_ref` is the public probe: it only
+        // returns a borrow on the symmetric path.
+        let x = feats(40, 3, 5);
+        let sq = linalg::pairwise_sqdist_self(&x);
+        let sym = DenseSim::from_sqdist(sq.clone());
+        assert!(sym.sim_col_ref(0).is_some(), "symmetric input keeps the fast path");
+        let mut bad = sq;
+        bad.set(3, 5, bad.get(3, 5) + 1.0); // odd row — off the strided sample
+        let asym = DenseSim::from_sqdist(bad);
+        assert!(asym.sim_col_ref(0).is_none(), "hidden asymmetric cell must be caught");
+    }
+
+    #[test]
+    fn blocked_tiled_sim_col_bitwise_equals_sequential() {
+        // n·d above COL_PAR_MIN_WORK so the tiled path genuinely engages.
+        let x = feats(2200, 1024, 11);
+        let seq = BlockedSim::new(&x);
+        let mut a = vec![0.0f32; 2200];
+        let mut b = vec![0.0f32; 2200];
+        for width in [1usize, 2, 8] {
+            let pool = ThreadPool::scoped(width);
+            let par = BlockedSim::with_pool(&x, &pool);
+            assert_eq!(par.d_max(), seq.d_max(), "width {width}: sampled d_max");
+            for j in [0usize, 1099, 2199] {
+                seq.sim_col(j, &mut a);
+                par.sim_col(j, &mut b);
+                assert_eq!(a, b, "width {width} col {j} must be bitwise-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_with_dense_d_max_is_bitwise_dense() {
+        // Same d_max + same distance arithmetic ⇒ the two stores serve
+        // bitwise-equal similarity columns (the store parity foundation).
+        let x = feats(150, 6, 3);
+        let dense = DenseSim::from_features(&x);
+        let blocked = BlockedSim::with_d_max(&x, dense.d_max());
+        let mut a = vec![0.0f32; 150];
+        let mut b = vec![0.0f32; 150];
+        for j in [0usize, 42, 75, 149] {
+            dense.sim_col(j, &mut a);
+            blocked.sim_col(j, &mut b);
+            assert_eq!(a, b, "col {j}");
         }
     }
 

@@ -20,17 +20,33 @@ impl WeightedCoreset {
     /// Compute assignments/weights for a selected set over a similarity
     /// source. O(n·|S|).
     pub fn compute<S: SimilaritySource + ?Sized>(sim: &S, indices: &[usize]) -> Self {
+        Self::compute_with_scratch(sim, indices, &mut Vec::new(), &mut Vec::new())
+    }
+
+    /// [`compute`](Self::compute) against caller-owned coverage buffers:
+    /// `best_sim` and `scratch` are resized/refilled here and survive the
+    /// call, so a warm [`crate::coreset::SelectionWorkspace`] pays no
+    /// per-class/per-epoch allocations for the O(n) coverage state.
+    /// (`assignment` is part of the returned value and cannot be reused.)
+    /// Identical output to a cold call.
+    pub fn compute_with_scratch<S: SimilaritySource + ?Sized>(
+        sim: &S,
+        indices: &[usize],
+        best_sim: &mut Vec<f32>,
+        scratch: &mut Vec<f32>,
+    ) -> Self {
         assert!(!indices.is_empty(), "empty coreset");
         let n = sim.n();
-        let mut best_sim = vec![f32::NEG_INFINITY; n];
+        best_sim.resize(n, 0.0);
+        best_sim.fill(f32::NEG_INFINITY);
+        scratch.resize(n, 0.0);
         let mut assignment = vec![0usize; n];
-        let mut scratch = vec![0.0f32; n];
         for (k, &j) in indices.iter().enumerate() {
             let col: &[f32] = match sim.sim_col_ref(j) {
                 Some(c) => c,
                 None => {
-                    sim.sim_col(j, &mut scratch);
-                    &scratch
+                    sim.sim_col(j, &mut scratch[..]);
+                    &scratch[..]
                 }
             };
             for i in 0..n {
@@ -128,6 +144,24 @@ mod tests {
                 assert!(d_assigned <= dj + 1e-4, "point {i}: {assigned} vs {j}");
             }
         }
+    }
+
+    #[test]
+    fn compute_with_scratch_matches_cold_and_reuses() {
+        let (s, _) = sim_from(60, 4, 5);
+        let mut best = Vec::new();
+        let mut scratch = Vec::new();
+        let cold = WeightedCoreset::compute(&s, &[1, 7, 30]);
+        let warm = WeightedCoreset::compute_with_scratch(&s, &[1, 7, 30], &mut best, &mut scratch);
+        assert_eq!(cold.gamma, warm.gamma);
+        assert_eq!(cold.assignment, warm.assignment);
+        // Second call on the warmed buffers: no reallocation, same output.
+        let cap = best.capacity();
+        let warm2 = WeightedCoreset::compute_with_scratch(&s, &[2, 9], &mut best, &mut scratch);
+        assert_eq!(best.capacity(), cap, "warm call must not reallocate");
+        let cold2 = WeightedCoreset::compute(&s, &[2, 9]);
+        assert_eq!(cold2.gamma, warm2.gamma);
+        assert_eq!(cold2.assignment, warm2.assignment);
     }
 
     #[test]

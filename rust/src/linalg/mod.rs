@@ -212,19 +212,61 @@ pub fn pairwise_sqdist(x: &Matrix, y: &Matrix) -> Matrix {
 /// triangle is computed and mirrored (§Perf iteration 3 — ~2× over
 /// [`pairwise_sqdist`] for the per-class selection matrices).
 pub fn pairwise_sqdist_self(x: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    pairwise_sqdist_self_into(x, &mut out, &ThreadPool::scoped(1));
+    out
+}
+
+/// In-place twin of [`pairwise_sqdist_self`] / the `_par` variant: writes
+/// the full `n×n` squared-distance matrix into `out`, reshaping and
+/// reusing its existing allocation (the epoch-workspace hot path — a
+/// warm caller pays zero allocations when the buffer capacity suffices).
+/// Every entry of `out` is overwritten, so a dirty reused buffer is
+/// safe.  The scalar recipe is identical at any pool width and identical
+/// to the historical sequential kernel, so output stays bitwise-stable.
+pub fn pairwise_sqdist_self_into(x: &Matrix, out: &mut Matrix, pool: &ThreadPool) {
     let n = x.rows;
+    out.rows = n;
+    out.cols = n;
+    out.data.resize(n * n, 0.0);
     let xn = x.row_sqnorms();
-    let mut out = Matrix::zeros(n, n);
+    if pool.size() <= 1 || n < PAR_MIN_ROWS {
+        for i in 0..n {
+            let xi = x.row(i);
+            for j in (i + 1)..n {
+                let g = dot(xi, x.row(j));
+                let d = (xn[i] + xn[j] - 2.0 * g).max(0.0);
+                out.data[i * n + j] = d;
+                out.data[j * n + i] = d;
+            }
+        }
+        for i in 0..n {
+            out.data[i * n + i] = 0.0;
+        }
+        return;
+    }
+    let ranges = util::triangular_ranges(n, pool.size());
+    let bounds: Vec<(usize, usize)> = ranges.iter().map(|&(a, b)| (a * n, b * n)).collect();
+    let (xn, ranges) = (&xn, &ranges);
+    pool.scope_map_chunks(&mut out.data, &bounds, |p, chunk| {
+        let (r0, r1) = ranges[p];
+        for i in r0..r1 {
+            let xi = x.row(i);
+            let orow = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
+            for j in (i + 1)..n {
+                let g = dot(xi, x.row(j));
+                orow[j] = (xn[i] + xn[j] - 2.0 * g).max(0.0);
+            }
+        }
+    });
+    // Mirror the upper triangle into the lower and clear the diagonal
+    // (the buffer may be a dirty reuse; every cell must be written).
     for i in 0..n {
-        let xi = x.row(i);
+        out.data[i * n + i] = 0.0;
         for j in (i + 1)..n {
-            let g = dot(xi, x.row(j));
-            let d = (xn[i] + xn[j] - 2.0 * g).max(0.0);
-            out.data[i * n + j] = d;
-            out.data[j * n + i] = d;
+            out.data[j * n + i] = out.data[i * n + j];
         }
     }
-    out
 }
 
 /// Parallel twin of [`pairwise_sqdist`]: the output is tiled over
@@ -265,34 +307,10 @@ pub fn pairwise_sqdist_par(x: &Matrix, y: &Matrix, pool: &ThreadPool) -> Matrix 
 /// blocks balanced by upper-triangle area ([`util::triangular_ranges`]),
 /// compute only `j > i`, and the lower triangle is mirrored afterwards
 /// (the deterministic merge).  Bitwise-equal to the sequential kernel.
+/// Thin allocator shim over [`pairwise_sqdist_self_into`].
 pub fn pairwise_sqdist_self_par(x: &Matrix, pool: &ThreadPool) -> Matrix {
-    let n = x.rows;
-    if pool.size() <= 1 || n < PAR_MIN_ROWS {
-        return pairwise_sqdist_self(x);
-    }
-    let xn = x.row_sqnorms();
-    let mut out = Matrix::zeros(n, n);
-    let ranges = util::triangular_ranges(n, pool.size());
-    let bounds: Vec<(usize, usize)> = ranges.iter().map(|&(a, b)| (a * n, b * n)).collect();
-    let (xn, ranges) = (&xn, &ranges);
-    pool.scope_map_chunks(&mut out.data, &bounds, |p, chunk| {
-        let (r0, r1) = ranges[p];
-        for i in r0..r1 {
-            let xi = x.row(i);
-            let orow = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
-            for j in (i + 1)..n {
-                let g = dot(xi, x.row(j));
-                orow[j] = (xn[i] + xn[j] - 2.0 * g).max(0.0);
-            }
-        }
-    });
-    // Mirror the upper triangle into the lower (memory-bound; cheap next
-    // to the O(n²·d) dot products above).
-    for i in 0..n {
-        for j in (i + 1)..n {
-            out.data[j * n + i] = out.data[i * n + j];
-        }
-    }
+    let mut out = Matrix::zeros(0, 0);
+    pairwise_sqdist_self_into(x, &mut out, pool);
     out
 }
 
@@ -409,6 +427,28 @@ mod tests {
             let pool = ThreadPool::scoped(width);
             let par = pairwise_sqdist_self_par(&x, &pool);
             assert_eq!(par.data, seq.data, "width {width} must be bitwise-identical");
+        }
+    }
+
+    #[test]
+    fn pairwise_self_into_reuses_dirty_buffer() {
+        let mut r = Rng::new(23);
+        let big = randmat(&mut r, 160, 5);
+        let small = randmat(&mut r, 40, 5);
+        let pool = ThreadPool::scoped(4);
+        let mut buf = Matrix::zeros(0, 0);
+        // First fill (large): establishes capacity.
+        pairwise_sqdist_self_into(&big, &mut buf, &pool);
+        assert_eq!(buf.data, pairwise_sqdist_self(&big).data);
+        let cap = buf.data.capacity();
+        // Warm reuse with a smaller input: dirty cells must not leak and
+        // the allocation must be reused (capacity unchanged).
+        pairwise_sqdist_self_into(&small, &mut buf, &pool);
+        assert_eq!((buf.rows, buf.cols), (40, 40));
+        assert_eq!(buf.data, pairwise_sqdist_self(&small).data);
+        assert_eq!(buf.data.capacity(), cap, "warm reuse must not reallocate");
+        for i in 0..40 {
+            assert_eq!(buf.get(i, i), 0.0, "diagonal must be cleared on reuse");
         }
     }
 

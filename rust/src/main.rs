@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use craig::cli::{App, Args, Command};
-use craig::coreset::{self, Budget, Method, PairwiseEngine, SelectorConfig};
+use craig::coreset::{self, Budget, Method, PairwiseEngine, SelectorConfig, SimStorePolicy};
 use craig::data::{synthetic, Dataset};
 use craig::metrics::CsvWriter;
 use craig::optim::LrSchedule;
@@ -41,6 +41,8 @@ fn app() -> App {
                 .opt_default("method", "lazy", "lazy|naive|stochastic")
                 .opt_default("seed", "0", "rng seed")
                 .opt_default("parallelism", "1", "intra-class selection threads")
+                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
+                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
                 .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
                 .opt("out", "CSV path for the selected coreset"),
             Command::new("train", "convex experiment: logreg on full/craig/random")
@@ -55,6 +57,8 @@ fn app() -> App {
                 .opt_default("schedule", "exp:0.5:0.9", "lr schedule spec")
                 .opt_default("seed", "0", "rng seed")
                 .opt_default("parallelism", "1", "intra-class selection threads")
+                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
+                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
                 .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
                 .opt("out", "CSV path for the epoch trace"),
             Command::new("train-mlp", "neural experiment with per-epoch reselection")
@@ -67,6 +71,9 @@ fn app() -> App {
                 .opt_default("hidden", "100", "hidden units")
                 .opt_default("lr", "0.01", "constant learning rate")
                 .opt_default("seed", "0", "rng seed")
+                .opt_default("parallelism", "1", "intra-class selection threads")
+                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
+                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
                 .opt("out", "CSV path for the epoch trace"),
             Command::new("run", "run an experiment described by a config file")
                 .opt("config", "path to a TOML-subset experiment config")
@@ -106,6 +113,12 @@ fn parse_method(s: &str) -> Result<Method> {
         "stochastic" => Ok(Method::Stochastic { delta: 0.05 }),
         other => anyhow::bail!("unknown selection method '{other}'"),
     }
+}
+
+/// `--sim-store` + `--mem-budget` → the per-class store policy.
+fn parse_sim_store(a: &Args) -> Result<SimStorePolicy> {
+    let budget: usize = a.parse_opt("mem-budget", craig::coreset::DEFAULT_SIM_MEM_BUDGET)?;
+    SimStorePolicy::parse(a.opt("sim-store").unwrap_or("auto"), budget)
 }
 
 fn cmd_info(a: &Args) -> Result<()> {
@@ -149,6 +162,7 @@ fn cmd_select(a: &Args) -> Result<()> {
         per_class: true,
         seed,
         parallelism: a.parse_opt("parallelism", 1)?,
+        sim_store: parse_sim_store(a)?,
     };
     let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
     let t0 = std::time::Instant::now();
@@ -164,6 +178,8 @@ fn cmd_select(a: &Args) -> Result<()> {
         res.evaluations
     );
     println!("  per-class sizes: {:?}", res.class_sizes);
+    let store_names: Vec<&str> = res.stores.iter().map(|s| s.name()).collect();
+    println!("  sim stores: {store_names:?}");
     println!("  certified epsilon (Eq. 15): {:.4}", res.epsilon);
     println!("  gamma_max: {}", res.coreset.gamma_max());
     let stats = coreset::diagnostics::subset_stats(&ds.x, &res.coreset);
@@ -184,6 +200,7 @@ fn cmd_select(a: &Args) -> Result<()> {
 
 fn subset_mode(a: &Args, frac: f64, reselect: usize, seed: u64) -> Result<SubsetMode> {
     let parallelism: usize = a.parse_opt("parallelism", 1)?;
+    let sim_store = parse_sim_store(a)?;
     Ok(match a.opt("mode").unwrap_or("craig") {
         "full" => SubsetMode::Full,
         "craig" => SubsetMode::Craig {
@@ -191,6 +208,7 @@ fn subset_mode(a: &Args, frac: f64, reselect: usize, seed: u64) -> Result<Subset
                 budget: Budget::Fraction(frac),
                 seed,
                 parallelism,
+                sim_store,
                 ..Default::default()
             },
             reselect_every: reselect,
@@ -436,6 +454,10 @@ fn cmd_bench(a: &Args) -> Result<()> {
     println!(
         "  speedup: lazy selection {:.2}x, kernel build {:.2}x  (t{} vs t1)",
         rep.speedup_lazy_selection, rep.speedup_kernel_build, rep.threads
+    );
+    println!(
+        "  warm workspace {:.2}x vs cold; blocked store {:.2}x the dense lazy time",
+        rep.speedup_warm_workspace, rep.blocked_vs_dense_lazy
     );
     println!(
         "  parallel ≡ sequential coresets: {}",

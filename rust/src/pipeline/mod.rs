@@ -34,7 +34,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coreset::{run_greedy, DenseSim, SelectorConfig, StopRule, WeightedCoreset};
+use crate::coreset::{
+    group_by_class, split_budget, NativePairwise, Selector, SelectorConfig, StopRule,
+    WeightedCoreset,
+};
 use crate::data::Dataset;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -59,41 +62,44 @@ impl SelectionPipeline {
         SelectionPipeline { pool: ThreadPool::new(workers) }
     }
 
-    /// Run CRAIG selection sharded by class; semantically identical to
-    /// [`crate::coreset::select`] with the native engine (verified by
-    /// `rust/tests/pipeline_invariants.rs`).
+    /// Run CRAIG selection sharded by class.  A thin parallel caller of
+    /// [`Selector`]: grouping and budget splitting use the same
+    /// `coreset::{group_by_class, split_budget}` rules as
+    /// [`crate::coreset::select`], and each class shard runs
+    /// [`Selector::select_class`] — so the merged coreset is identical
+    /// to the sequential path (verified by
+    /// `rust/tests/pipeline_invariants.rs` under both sim stores).
     pub fn select(&self, ds: &Dataset, cfg: &SelectorConfig) -> (WeightedCoreset, PipelineStats) {
         let t0 = std::time::Instant::now();
         let n = ds.n();
-        let groups: Vec<Vec<usize>> = if cfg.per_class && ds.num_classes > 1 {
-            ds.class_indices().into_iter().filter(|g| !g.is_empty()).collect()
-        } else {
-            vec![(0..n).collect()]
-        };
+        let groups = group_by_class(&ds.y, ds.num_classes, cfg.per_class);
+        let sizes: Vec<usize> = groups.iter().map(Vec::len).collect();
+        let rules = split_budget(&cfg.budget, &sizes, n);
         let x = Arc::new(ds.x.clone());
         let cfg = Arc::new(cfg.clone());
-        let total_n = n;
 
-        // Fan out one job per class.
-        let jobs: Vec<(Vec<usize>, Arc<Matrix>, Arc<SelectorConfig>)> = groups
+        // Fan out one job per class.  Workers use the native pairwise
+        // path (see the module docs: the PJRT client is not `Send`).
+        let jobs: Vec<(Vec<usize>, StopRule, Arc<Matrix>, Arc<SelectorConfig>)> = groups
             .into_iter()
-            .map(|idx| (idx, Arc::clone(&x), Arc::clone(&cfg)))
+            .zip(rules)
+            .map(|(idx, rule)| (idx, rule, Arc::clone(&x), Arc::clone(&cfg)))
             .collect();
         let classes = jobs.len();
 
-        let outputs = self.pool.scope_map(jobs, move |(idx, x, cfg)| {
-            // Second parallelism level: within this class shard, the
+        let outputs = self.pool.scope_map(jobs, move |(idx, rule, x, cfg)| {
+            // Second parallelism level lives inside `select_class`: the
             // kernel tiles and gain sweeps fan out over a scoped pool of
             // `cfg.parallelism` threads (deterministic at any width).
-            let tile_pool = ThreadPool::scoped(cfg.parallelism);
-            let class_x = x.gather_rows(&idx);
-            let sq = crate::linalg::pairwise_sqdist_self_par(&class_x, &tile_pool);
-            let sim = DenseSim::from_sqdist_par(sq, &tile_pool);
-            let rule = class_stop_rule(&cfg.budget, idx.len(), total_n);
-            let mut rng = Rng::new(cfg.seed ^ (idx[0] as u64).wrapping_mul(0x9E3779B9));
-            let sel = run_greedy(&sim, cfg.method, rule, &mut rng, &tile_pool);
-            let wc = WeightedCoreset::compute(&sim, &sel.order);
-            (wc.lift(&idx), sel.evaluations)
+            // Each job runs a cold Selector: jobs are queue-distributed
+            // with no worker identity, so per-worker workspace reuse has
+            // nowhere to live — allocation per class matches the
+            // pre-Selector pipeline (warm reuse is the sequential /
+            // trainer path's win).
+            let mut selector = Selector::new();
+            let mut engine = NativePairwise;
+            let cs = selector.select_class(&x, &idx, rule, &cfg, &mut engine);
+            (cs.coreset, cs.evaluations)
         });
 
         let mut parts = Vec::with_capacity(outputs.len());
@@ -110,23 +116,6 @@ impl SelectionPipeline {
             select_seconds: t0.elapsed().as_secs_f64(),
         };
         (merged, stats)
-    }
-}
-
-fn class_stop_rule(budget: &crate::coreset::Budget, class_n: usize, total_n: usize) -> StopRule {
-    use crate::coreset::Budget;
-    match *budget {
-        Budget::Fraction(f) => {
-            StopRule::Budget((((class_n as f64) * f).round().max(1.0) as usize).min(class_n))
-        }
-        Budget::Count(total) => {
-            let share = ((total as f64) * (class_n as f64) / (total_n as f64)).round().max(1.0);
-            StopRule::Budget((share as usize).min(class_n))
-        }
-        Budget::Cover { epsilon } => StopRule::Cover {
-            epsilon: epsilon * (class_n as f64) / (total_n as f64),
-            max_size: class_n,
-        },
     }
 }
 

@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 
-use crate::coreset::{self, PairwiseEngine, WeightedCoreset};
+use crate::coreset::{self, PairwiseEngine, Selector, WeightedCoreset};
 use crate::data::Dataset;
 use crate::linalg;
 use crate::metrics::Stopwatch;
@@ -90,13 +90,14 @@ fn full_coreset(n: usize) -> WeightedCoreset {
 fn select_subset(
     mode: &SubsetMode,
     train: &Dataset,
+    selector: &mut Selector,
     engine: &mut dyn PairwiseEngine,
     epoch: usize,
 ) -> (WeightedCoreset, f64) {
     match mode {
         SubsetMode::Full => (full_coreset(train.n()), 0.0),
         SubsetMode::Craig { cfg, .. } => {
-            let res = coreset::select(&train.x, &train.y, train.num_classes, cfg, engine);
+            let res = selector.select(&train.x, &train.y, train.num_classes, cfg, engine);
             (res.coreset, res.epsilon)
         }
         SubsetMode::Random { budget, seed, .. } => {
@@ -139,9 +140,14 @@ pub fn train_logreg(
     let mut select_sw = Stopwatch::new();
     let mut train_sw = Stopwatch::new();
 
+    // One selector for the whole run: with `reselect_every > 0` the
+    // workspace stays warm across reselections (one-shot runs pay one
+    // cold pass either way).
+    let mut selector = Selector::new();
+
     // Initial selection (preprocessing; charged to select time).
     let (mut subset, mut epsilon) =
-        select_sw.time(|| select_subset(&cfg.subset, train, engine, 0));
+        select_sw.time(|| select_subset(&cfg.subset, train, &mut selector, engine, 0));
     let period = reselect_period(&cfg.subset);
 
     let mut distinct: std::collections::HashSet<usize> =
@@ -163,7 +169,8 @@ pub fn train_logreg(
         // Reselect when requested (deep-style protocol on convex data is
         // supported but off by default).
         if period > 0 && epoch > 0 && epoch % period == 0 {
-            let (s, e) = select_sw.time(|| select_subset(&cfg.subset, train, engine, epoch));
+            let (s, e) =
+                select_sw.time(|| select_subset(&cfg.subset, train, &mut selector, engine, epoch));
             subset = s;
             epsilon = e;
             history.epsilon = epsilon;
@@ -278,7 +285,8 @@ pub fn train_logreg_weights(
     let d = prob.dim();
     let mut w = vec![0.0f32; d];
     let mut rng = Rng::new(cfg.seed);
-    let (subset, _) = select_subset(&cfg.subset, train, engine, 0);
+    let mut selector = Selector::new();
+    let (subset, _) = select_subset(&cfg.subset, train, &mut selector, engine, 0);
     let mut order: Vec<usize> = (0..subset.indices.len()).collect();
     let mut grad = vec![0.0f32; d];
     for epoch in 0..cfg.epochs {

@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::coreset::{self, Budget, PairwiseEngine, SelectorConfig, WeightedCoreset};
+use crate::coreset::{self, Budget, PairwiseEngine, Selector, SelectorConfig, WeightedCoreset};
 use crate::data::Dataset;
 use crate::linalg;
 use crate::metrics::Stopwatch;
@@ -58,13 +58,16 @@ fn full_coreset(n: usize) -> WeightedCoreset {
 }
 
 /// Select on proxy features: per class, distances between `p − y` rows
-/// bound gradient distances (Eq. 16).
+/// bound gradient distances (Eq. 16).  The caller's [`Selector`] keeps
+/// its workspace across epochs, so every reselection after the first
+/// reuses the kernel/similarity/coverage buffers (Sec. 3.4 protocol:
+/// this path runs once per epoch — the warm path is the hot path).
 fn select_neural(
     mode: &SubsetMode,
     mlp: &mut Mlp,
     params: &[f32],
-    labels: &[u32],
-    num_classes: usize,
+    train: &Dataset,
+    selector: &mut Selector,
     engine: &mut dyn PairwiseEngine,
     epoch: usize,
 ) -> (WeightedCoreset, f64) {
@@ -74,12 +77,14 @@ fn select_neural(
         SubsetMode::Craig { cfg, .. } => {
             let all: Vec<usize> = (0..n).collect();
             let proxies = mlp.proxy_features(params, &all);
-            let res = coreset::select(&proxies, labels, num_classes, cfg, engine);
+            let res = selector.select(&proxies, &train.y, train.num_classes, cfg, engine);
             (res.coreset, res.epsilon)
         }
         SubsetMode::Random { budget, seed, .. } => {
             let mut rng = Rng::new(seed.wrapping_add(epoch as u64 * 7919));
-            (coreset::random_baseline(n, labels, num_classes, budget, true, &mut rng), 0.0)
+            let rb =
+                coreset::random_baseline(n, &train.y, train.num_classes, budget, true, &mut rng);
+            (rb, 0.0)
         }
     }
 }
@@ -112,8 +117,12 @@ pub fn train_mlp(
     let mut select_sw = Stopwatch::new();
     let mut train_sw = Stopwatch::new();
 
+    // One selector for the whole run: per-epoch reselections after the
+    // first reuse its workspace buffers instead of re-allocating them.
+    let mut selector = Selector::new();
+
     let (mut subset, mut epsilon) = select_sw.time(|| {
-        select_neural(&cfg.subset, &mut mlp, &params, &train.y, train.num_classes, engine, 0)
+        select_neural(&cfg.subset, &mut mlp, &params, train, &mut selector, engine, 0)
     });
     let mut distinct: std::collections::HashSet<usize> =
         subset.indices.iter().copied().collect();
@@ -129,15 +138,7 @@ pub fn train_mlp(
     for epoch in 0..cfg.epochs {
         if period > 0 && epoch > 0 && epoch % period == 0 {
             let (s, e) = select_sw.time(|| {
-                select_neural(
-                    &cfg.subset,
-                    &mut mlp,
-                    &params,
-                    &train.y,
-                    train.num_classes,
-                    engine,
-                    epoch,
-                )
+                select_neural(&cfg.subset, &mut mlp, &params, train, &mut selector, engine, epoch)
             });
             subset = s;
             epsilon = e;

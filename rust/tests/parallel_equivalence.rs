@@ -12,7 +12,8 @@
 
 use craig::coreset::{
     lazy_greedy_par, naive_greedy_par, stochastic_greedy_par, BlockedSim, Budget, DenseSim,
-    Method, Selection, SelectorConfig, SimilaritySource, StopRule, WeightedCoreset,
+    Method, Selection, SelectorConfig, SimStorePolicy, SimilaritySource, StopRule,
+    WeightedCoreset,
 };
 use craig::data::synthetic;
 use craig::linalg::Matrix;
@@ -136,25 +137,30 @@ fn kernel_and_sim_build_identical_across_widths() {
 
 #[test]
 fn full_select_identical_across_parallelism() {
+    // The config-level contract, run under BOTH sim stores: for a fixed
+    // (dataset, SelectorConfig) the coreset is invariant in `parallelism`.
     let ds = synthetic::covtype_like(900, 4);
-    for method in [Method::Lazy, Method::Naive, Method::Stochastic { delta: 0.1 }] {
-        let mut base: Option<(Vec<usize>, Vec<f32>)> = None;
-        for width in WIDTHS {
-            let cfg = SelectorConfig {
-                method,
-                budget: Budget::Fraction(0.08),
-                per_class: true,
-                seed: 5,
-                parallelism: width,
-            };
-            let mut eng = craig::coreset::NativePairwise;
-            let res = craig::coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
-            let got = (res.coreset.indices.clone(), res.coreset.gamma.clone());
-            match &base {
-                None => base = Some(got),
-                Some(b) => {
-                    assert_eq!(b.0, got.0, "{method:?} w{width}: indices");
-                    assert_eq!(b.1, got.1, "{method:?} w{width}: weights");
+    for store in [SimStorePolicy::Dense, SimStorePolicy::Blocked] {
+        for method in [Method::Lazy, Method::Naive, Method::Stochastic { delta: 0.1 }] {
+            let mut base: Option<(Vec<usize>, Vec<f32>)> = None;
+            for width in WIDTHS {
+                let cfg = SelectorConfig {
+                    method,
+                    budget: Budget::Fraction(0.08),
+                    per_class: true,
+                    seed: 5,
+                    parallelism: width,
+                    sim_store: store,
+                };
+                let mut eng = craig::coreset::NativePairwise;
+                let res = craig::coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+                let got = (res.coreset.indices.clone(), res.coreset.gamma.clone());
+                match &base {
+                    None => base = Some(got),
+                    Some(b) => {
+                        assert_eq!(b.0, got.0, "{store:?}/{method:?} w{width}: indices");
+                        assert_eq!(b.1, got.1, "{store:?}/{method:?} w{width}: weights");
+                    }
                 }
             }
         }
@@ -164,25 +170,29 @@ fn full_select_identical_across_parallelism() {
 #[test]
 fn pipeline_workers_by_parallelism_grid_identical() {
     let ds = synthetic::ijcnn1_like(1200, 6);
-    let mut base: Option<Vec<(usize, f32)>> = None;
-    for workers in [1usize, 3] {
-        for width in WIDTHS {
-            let cfg = SelectorConfig {
-                budget: Budget::Fraction(0.1),
-                seed: 13,
-                parallelism: width,
-                ..Default::default()
-            };
-            let pipe = SelectionPipeline::new(workers);
-            let (merged, _) = pipe.select(&ds, &cfg);
-            let pairs: Vec<(usize, f32)> =
-                merged.indices.iter().copied().zip(merged.gamma.iter().copied()).collect();
-            match &base {
-                None => base = Some(pairs),
-                Some(b) => assert_eq!(
-                    b, &pairs,
-                    "workers={workers} parallelism={width}: merged coreset must be invariant"
-                ),
+    for store in [SimStorePolicy::Dense, SimStorePolicy::Blocked] {
+        let mut base: Option<Vec<(usize, f32)>> = None;
+        for workers in [1usize, 3] {
+            for width in WIDTHS {
+                let cfg = SelectorConfig {
+                    budget: Budget::Fraction(0.1),
+                    seed: 13,
+                    parallelism: width,
+                    sim_store: store,
+                    ..Default::default()
+                };
+                let pipe = SelectionPipeline::new(workers);
+                let (merged, _) = pipe.select(&ds, &cfg);
+                let pairs: Vec<(usize, f32)> =
+                    merged.indices.iter().copied().zip(merged.gamma.iter().copied()).collect();
+                match &base {
+                    None => base = Some(pairs),
+                    Some(b) => assert_eq!(
+                        b, &pairs,
+                        "store={store:?} workers={workers} parallelism={width}: \
+                         merged coreset must be invariant"
+                    ),
+                }
             }
         }
     }

@@ -9,12 +9,40 @@
 //! * Class balance — per-class selection preserves the dataset's class
 //!   ratios within rounding, and the merged weights cover the dataset.
 
-use craig::coreset::{Budget, Method, SelectorConfig, WeightedCoreset};
+use craig::coreset::{Budget, Method, SelectorConfig, SimStorePolicy, WeightedCoreset};
 use craig::data::synthetic;
 use craig::pipeline::SelectionPipeline;
 
 fn pairs(wc: &WeightedCoreset) -> Vec<(usize, f32)> {
     wc.indices.iter().copied().zip(wc.gamma.iter().copied()).collect()
+}
+
+#[test]
+fn pipeline_is_equivalent_to_selector_under_both_stores() {
+    // Both layers are thin callers of `coreset::Selector`, so the
+    // sharded pipeline must reproduce the sequential `coreset::select`
+    // exactly — same indices, same weights, same (class) order — under
+    // the dense AND the blocked sim store.
+    let ds = synthetic::covtype_like(700, 8);
+    for store in [SimStorePolicy::Dense, SimStorePolicy::Blocked] {
+        for method in [Method::Lazy, Method::Stochastic { delta: 0.1 }] {
+            let cfg = SelectorConfig {
+                method,
+                budget: Budget::Fraction(0.1),
+                seed: 21,
+                sim_store: store,
+                ..Default::default()
+            };
+            let (piped, _) = SelectionPipeline::new(3).select(&ds, &cfg);
+            let mut eng = craig::coreset::NativePairwise;
+            let seq = craig::coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+            assert_eq!(
+                pairs(&piped),
+                pairs(&seq.coreset),
+                "{store:?}/{method:?}: pipeline must equal sequential selection"
+            );
+        }
+    }
 }
 
 #[test]
@@ -35,20 +63,23 @@ fn same_seed_same_workers_identical_coreset() {
 #[test]
 fn worker_count_does_not_change_result() {
     let ds = synthetic::ijcnn1_like(800, 1);
-    for method in [Method::Lazy, Method::Stochastic { delta: 0.1 }] {
-        let cfg = SelectorConfig {
-            method,
-            budget: Budget::Fraction(0.1),
-            seed: 7,
-            ..Default::default()
-        };
-        let (one, _) = SelectionPipeline::new(1).select(&ds, &cfg);
-        let (four, _) = SelectionPipeline::new(4).select(&ds, &cfg);
-        assert_eq!(
-            pairs(&one),
-            pairs(&four),
-            "merged coreset must be independent of the worker count ({method:?})"
-        );
+    for store in [SimStorePolicy::Dense, SimStorePolicy::Blocked] {
+        for method in [Method::Lazy, Method::Stochastic { delta: 0.1 }] {
+            let cfg = SelectorConfig {
+                method,
+                budget: Budget::Fraction(0.1),
+                seed: 7,
+                sim_store: store,
+                ..Default::default()
+            };
+            let (one, _) = SelectionPipeline::new(1).select(&ds, &cfg);
+            let (four, _) = SelectionPipeline::new(4).select(&ds, &cfg);
+            assert_eq!(
+                pairs(&one),
+                pairs(&four),
+                "merged coreset must be independent of the worker count ({store:?}/{method:?})"
+            );
+        }
     }
 }
 

@@ -1,0 +1,174 @@
+//! Store parity: the similarity store is a memory-layout decision, not
+//! a semantic one.
+//!
+//! * With a shared `d_max`, [`BlockedSim`] serves bitwise-identical
+//!   columns to [`DenseSim`] (same norm-decomposition distance
+//!   arithmetic — see `coreset::sim`), so all three greedy engines must
+//!   produce identical selections, gains, F(S) and weights on either
+//!   store, at any intra-class width.
+//! * With the default `d_max` (a guaranteed triangle-inequality bound,
+//!   inflated above the true diameter), similarities shift by a
+//!   constant per covered point, which preserves every greedy argmax —
+//!   the selected indices must still agree.
+//! * A single class of n = 20 000 points selects under
+//!   `SimStorePolicy::Blocked` without ever allocating the n² matrix
+//!   (the ISSUE-3 acceptance run: dense would need 1.6 GB).
+
+use craig::coreset::{
+    lazy_greedy_par, naive_greedy_par, stochastic_greedy_par, BlockedSim, Budget, DenseSim,
+    Method, Selection, Selector, SelectorConfig, SimStore, SimStorePolicy, SimilaritySource,
+    StopRule, WeightedCoreset,
+};
+use craig::linalg::Matrix;
+use craig::rng::Rng;
+use craig::util::ThreadPool;
+
+fn features(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut r = Rng::new(seed);
+    Matrix::from_vec(n, d, r.normal_vec(n * d, 0.0, 1.0))
+}
+
+fn run_engine<S: SimilaritySource + ?Sized>(
+    sim: &S,
+    method: &str,
+    r: usize,
+    width: usize,
+) -> (Selection, Vec<f32>) {
+    let pool = ThreadPool::scoped(width);
+    let rule = StopRule::Budget(r);
+    let sel = match method {
+        "lazy" => lazy_greedy_par(sim, rule, &pool),
+        "naive" => naive_greedy_par(sim, rule, &pool),
+        "stochastic" => {
+            let mut rng = Rng::new(41);
+            stochastic_greedy_par(sim, rule, 0.1, &mut rng, &pool)
+        }
+        other => panic!("unknown engine {other}"),
+    };
+    let weights = WeightedCoreset::compute(sim, &sel.order).gamma;
+    (sel, weights)
+}
+
+#[test]
+fn blocked_parity_with_dense_all_engines_shared_d_max() {
+    // Same d_max ⇒ bitwise-equal similarity columns ⇒ the stores are
+    // indistinguishable to every engine: indices, gains, F(S), ε and
+    // weights all match exactly, at every width.
+    let x = features(650, 6, 9);
+    let pool = ThreadPool::scoped(4);
+    let dense = DenseSim::from_features_par(&x, &pool);
+    let blocked = BlockedSim::with_d_max(&x, dense.d_max());
+    for method in ["lazy", "naive", "stochastic"] {
+        let want = run_engine(&dense, method, 30, 1);
+        for width in [1usize, 2, 8] {
+            let got = run_engine(&blocked, method, 30, width);
+            let tag = format!("{method}/w{width}");
+            assert_eq!(want.0.order, got.0.order, "{tag}: indices");
+            assert_eq!(want.0.gains, got.0.gains, "{tag}: gains");
+            assert_eq!(want.0.f_value, got.0.f_value, "{tag}: F(S)");
+            assert_eq!(want.0.epsilon, got.0.epsilon, "{tag}: epsilon");
+            assert_eq!(want.1, got.1, "{tag}: weights");
+        }
+    }
+}
+
+#[test]
+fn blocked_estimated_d_max_selects_same_indices() {
+    // The production path: blocked's d_max is a guaranteed
+    // triangle-inequality over-estimate of the diameter.  The constant
+    // offset preserves the greedy argmax sequence, so the selected
+    // points agree with dense even though gain values differ.
+    let x = features(420, 5, 17);
+    let dense = DenseSim::from_features(&x);
+    let blocked = BlockedSim::new(&x);
+    assert!(blocked.d_max() >= dense.d_max(), "bound must dominate the true d_max");
+    for method in ["lazy", "naive"] {
+        let a = run_engine(&dense, method, 25, 1);
+        let b = run_engine(&blocked, method, 25, 1);
+        assert_eq!(a.0.order, b.0.order, "{method}: selected indices");
+        assert_eq!(a.1, b.1, "{method}: weights");
+    }
+}
+
+#[test]
+fn blocked_selection_through_selector_tiled_columns() {
+    // d large enough that the tiled sim_col path engages inside a full
+    // greedy run (n·d ≥ COL_PAR_MIN_WORK = 2²¹); the coreset must be
+    // invariant in the intra-class width.
+    let x = features(1200, 1792, 3);
+    let labels = vec![0u32; 1200];
+    let mut base: Option<(Vec<usize>, Vec<f32>)> = None;
+    for width in [1usize, 8] {
+        let cfg = SelectorConfig {
+            method: Method::Lazy,
+            budget: Budget::Count(4),
+            per_class: false,
+            seed: 2,
+            parallelism: width,
+            sim_store: SimStorePolicy::Blocked,
+        };
+        let mut eng = craig::coreset::NativePairwise;
+        let res = craig::coreset::select(&x, &labels, 1, &cfg, &mut eng);
+        assert_eq!(res.stores, vec![SimStore::Blocked]);
+        let got = (res.coreset.indices.clone(), res.coreset.gamma.clone());
+        match &base {
+            None => base = Some(got),
+            Some(b) => assert_eq!(b, &got, "width {width}: tiled columns changed the coreset"),
+        }
+    }
+}
+
+#[test]
+fn large_single_class_blocked_never_materializes_n_squared() {
+    // ISSUE-3 acceptance: n = 20_000 in one class. Dense would need
+    // n²·4 = 1.6 GB; the blocked store runs in O(n·d). The workspace's
+    // dense high-water mark is the structural witness that the n²
+    // buffer was never allocated.
+    let n = 20_000;
+    let x = features(n, 4, 77);
+    let labels = vec![0u32; n];
+    let cfg = SelectorConfig {
+        method: Method::Lazy,
+        budget: Budget::Count(6),
+        per_class: false,
+        seed: 1,
+        parallelism: 8,
+        sim_store: SimStorePolicy::Blocked,
+    };
+    let mut selector = Selector::new();
+    let mut eng = craig::coreset::NativePairwise;
+    let res = selector.select(&x, &labels, 1, &cfg, &mut eng);
+    assert_eq!(res.stores, vec![SimStore::Blocked]);
+    assert_eq!(res.coreset.indices.len(), 6);
+    assert_eq!(
+        selector.workspace().peak_dense_bytes,
+        0,
+        "blocked selection must not touch the dense n² buffer"
+    );
+    let total: f32 = res.coreset.gamma.iter().sum();
+    assert_eq!(total as usize, n, "weights must cover every point");
+}
+
+#[test]
+fn auto_policy_splits_stores_by_class_size() {
+    // A budget sized between the two classes' n² footprints makes Auto
+    // pick dense for the small class and blocked for the large one —
+    // within one run.
+    let small = features(100, 4, 5);
+    let large = features(300, 4, 6);
+    let mut data = small.data.clone();
+    data.extend_from_slice(&large.data);
+    let x = Matrix::from_vec(400, 4, data);
+    let mut labels = vec![0u32; 100];
+    labels.resize(400, 1);
+    let cfg = SelectorConfig {
+        budget: Budget::Fraction(0.1),
+        // 160 kB: holds 100² (40 kB) but not 300² (360 kB).
+        sim_store: SimStorePolicy::Auto { mem_budget_bytes: 160_000 },
+        ..Default::default()
+    };
+    let mut eng = craig::coreset::NativePairwise;
+    let res = craig::coreset::select(&x, &labels, 2, &cfg, &mut eng);
+    assert_eq!(res.stores, vec![SimStore::Dense, SimStore::Blocked]);
+    assert_eq!(res.class_sizes, vec![10, 30]);
+}

@@ -13,7 +13,7 @@
 //!
 //! To link the genuine runtime, point the `xla` dependency of `craig`
 //! at the real crate (registry version or git) — no `craig` source
-//! changes are needed; see DESIGN.md §6.
+//! changes are needed; see DESIGN.md §7.
 
 use std::path::Path;
 
