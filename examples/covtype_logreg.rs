@@ -36,7 +36,13 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
     let (train, test) = ds.stratified_split(0.5, &mut rng);
     println!("== CRAIG end-to-end driver ==");
-    println!("workload: {} → train {} / test {} (d={})", ds.source, train.n(), test.n(), train.d());
+    println!(
+        "workload: {} → train {} / test {} (d={})",
+        ds.source,
+        train.n(),
+        test.n(),
+        train.d()
+    );
 
     let xla = Runtime::available();
     let mut engine: Box<dyn PairwiseEngine> = if xla {

@@ -26,7 +26,13 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
     let (train, test) = ds.stratified_split(0.8, &mut rng);
     println!("== MNIST-like 2-layer MLP (Fig. 4 protocol) ==");
-    println!("train {} / test {}  d={}  classes={}", train.n(), test.n(), train.d(), train.num_classes);
+    println!(
+        "train {} / test {}  d={}  classes={}",
+        train.n(),
+        test.n(),
+        train.d(),
+        train.num_classes
+    );
 
     let epochs = 12;
     let mk = |subset| NeuralConfig {

@@ -19,6 +19,16 @@
 //! `select/lazy/blocked/tN` (dense-vs-blocked) and
 //! `workspace/{cold,warm}/tN` (cold-vs-warm `Selector` reuse), plus the
 //! `warm_workspace` / `blocked_vs_dense_lazy` speedup fields.
+//!
+//! Schema v3 (ISSUE 4) adds the streaming merge-and-reduce rows:
+//! `stream/shard/tN` and `stream/reduce/tN` (the two phases of an
+//! out-of-core run over K in-memory shards, timed from the same runs)
+//! plus the `stream` object — `objective_ratio_vs_inmemory`
+//! (F(stream-selected) / F(in-memory-selected) on the full-data
+//! facility-location objective) and the peak dense-buffer bytes of the
+//! streamed vs the in-memory run (the memory the subsystem exists to
+//! bound).  Stream runs at 1 worker and N workers must produce the
+//! same coreset; that check folds into `parallel_matches_sequential`.
 
 use std::path::Path;
 use std::time::Duration;
@@ -27,14 +37,16 @@ use anyhow::Result;
 
 use super::{bench, BenchConfig, BenchResult};
 use crate::coreset::{
-    Budget, Method, NativePairwise, Selector, SelectorConfig, SimStorePolicy, StopRule,
+    Budget, DenseSim, FacilityLocation, MemShards, Method, NativePairwise, Selector,
+    SelectorConfig, SimStorePolicy, StopRule, StreamConfig, StreamingSelector,
 };
 use crate::linalg::{self, Matrix};
+use crate::metrics::Summary;
 use crate::rng::Rng;
 use crate::util::ThreadPool;
 
 /// JSON schema version of `BENCH_selection.json`.
-pub const SCHEMA_VERSION: u32 = 2;
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// Suite knobs (everything else is fixed by design).
 pub struct SuiteConfig {
@@ -77,9 +89,20 @@ pub struct SuiteReport {
     /// Blocked-store mean / dense-store mean for lazy selection at N
     /// threads (the price of dropping the n² matrix).
     pub blocked_vs_dense_lazy: f64,
+    /// F(stream-selected set) / F(in-memory-selected set) on the
+    /// full-dataset facility-location objective — the quality price of
+    /// merge-and-reduce (1.0 = no loss; the streaming tests require
+    /// ≥ 0.9).
+    pub stream_vs_inmemory_objective: f64,
+    /// Peak dense similarity-buffer bytes of the streamed run (bounded
+    /// by the per-shard memory budget)…
+    pub stream_peak_dense_bytes: usize,
+    /// …vs the in-memory dense run's n² buffer.
+    pub inmemory_peak_dense_bytes: usize,
     /// Every engine produced identical indices and weights at 1 and N
-    /// threads, blocked matched its own sequential run, and warm
-    /// workspaces reproduced cold ones (the determinism contract).
+    /// threads, blocked matched its own sequential run, warm workspaces
+    /// reproduced cold ones, and the streamed selection was identical
+    /// at 1 and N workers (the determinism contract).
     pub parallel_matches_sequential: bool,
 }
 
@@ -118,6 +141,7 @@ fn run_selection(
         seed: 7,
         parallelism: threads,
         sim_store: store,
+        stream_shards: 0,
     };
     let mut engine = NativePairwise;
     let cs = selector.select_class(x, &idx, StopRule::Budget(r), &cfg, &mut engine);
@@ -133,6 +157,65 @@ fn run_selection_cold(
     store: SimStorePolicy,
 ) -> (Vec<usize>, Vec<f32>) {
     run_selection(&mut Selector::new(), x, r, method, threads, store)
+}
+
+/// Build a [`BenchResult`] from pre-collected samples (the streaming
+/// rows time the two phases of the *same* runs, so they cannot go
+/// through [`bench`]'s one-closure-per-case shape).
+fn result_from_samples(name: &str, samples: &[f64]) -> BenchResult {
+    let mut s = Summary::keeping_samples();
+    for &v in samples {
+        s.add(v);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: s.count() as usize,
+        mean_s: s.mean(),
+        std_s: s.std(),
+        median_s: s.median().unwrap_or(s.mean()),
+        min_s: s.min(),
+    }
+}
+
+/// One streamed merge-and-reduce run over `k` stratified in-memory
+/// shards (single class, `Count(r)` final budget, per-class memory
+/// budget `mem_budget`).  Returns the selected `(index, γ)` pairs
+/// sorted by index — the full answer, so the determinism verdict
+/// covers weights too, not just the index set — plus the phase timings
+/// and the peak dense-buffer bytes.
+fn run_stream(
+    x: &Matrix,
+    labels: &[u32],
+    r: usize,
+    k: usize,
+    workers: usize,
+    mem_budget: usize,
+) -> (Vec<(usize, f32)>, f64, f64, usize) {
+    let cfg = SelectorConfig {
+        method: Method::Lazy,
+        budget: Budget::Count(r),
+        per_class: false,
+        seed: 7,
+        parallelism: 1,
+        sim_store: SimStorePolicy::Auto { mem_budget_bytes: mem_budget },
+        stream_shards: 0,
+    };
+    let shards = MemShards::new(x, labels, 1, k, cfg.seed);
+    let mut scfg = StreamConfig::new(cfg);
+    scfg.workers = workers;
+    let mut streamer = StreamingSelector::new(workers);
+    let mut engine = NativePairwise;
+    let (res, stats) =
+        streamer.select(&shards, &scfg, &mut engine).expect("in-memory stream cannot fail");
+    let mut pairs: Vec<(usize, f32)> = res
+        .coreset
+        .indices
+        .iter()
+        .copied()
+        .zip(res.coreset.gamma.iter().copied())
+        .collect();
+    pairs.sort_by_key(|p| p.0);
+    (pairs, stats.shard_phase_seconds, stats.reduce_seconds, stats.peak_dense_bytes)
 }
 
 /// Run the fixed suite.  Case names are stable identifiers — CI and
@@ -226,6 +309,52 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
     cases.push(SuiteCase { result: cold_res, threads, items: n as f64 });
     cases.push(SuiteCase { result: warm_res, threads, items: n as f64 });
 
+    // Streaming merge-and-reduce (schema v3): K stratified shards under
+    // a memory budget that forbids the full n² buffer but admits each
+    // shard's.  Both phases are timed from the same runs; quality is
+    // priced against the in-memory dense lazy set on the full-data
+    // objective.
+    let stream_k = 4usize;
+    let full_dense = n * n * std::mem::size_of::<f32>();
+    // A quarter of the full matrix: each ~n/4-row shard fits (n²/16),
+    // the whole dataset never does.
+    let stream_budget = full_dense / 4;
+    let labels = vec![0u32; n];
+    let (seq_set, ..) = run_stream(&x, &labels, r, stream_k, 1, stream_budget);
+    let mut shard_samples = Vec::with_capacity(bc.measure_iters);
+    let mut reduce_samples = Vec::with_capacity(bc.measure_iters);
+    let mut stream_peak_dense_bytes = 0usize;
+    let mut par_set = Vec::new();
+    for _ in 0..bc.measure_iters {
+        let (set, shard_s, reduce_s, peak) =
+            run_stream(&x, &labels, r, stream_k, threads, stream_budget);
+        shard_samples.push(shard_s);
+        reduce_samples.push(reduce_s);
+        stream_peak_dense_bytes = stream_peak_dense_bytes.max(peak);
+        par_set = set;
+    }
+    equivalent &= seq_set == par_set;
+    cases.push(SuiteCase {
+        result: result_from_samples(&format!("stream/shard/t{threads}"), &shard_samples),
+        threads,
+        items: n as f64,
+    });
+    cases.push(SuiteCase {
+        result: result_from_samples(&format!("stream/reduce/t{threads}"), &reduce_samples),
+        threads,
+        items: n as f64,
+    });
+    // Quality + memory comparison against the in-memory dense run.
+    let mut inmem_selector = Selector::new();
+    let (inmem_set, _) = run_selection(&mut inmem_selector, &x, r, Method::Lazy, threads, dense);
+    let inmemory_peak_dense_bytes = inmem_selector.workspace().peak_dense_bytes;
+    let sim = DenseSim::from_features_par(&x, &pool_n);
+    let mut fl = FacilityLocation::new(&sim);
+    let stream_indices: Vec<usize> = par_set.iter().map(|p| p.0).collect();
+    let f_stream = fl.eval_set(&stream_indices);
+    let f_inmem = fl.eval_set(&inmem_set);
+    let stream_vs_inmemory_objective = f_stream / f_inmem;
+
     SuiteReport {
         git_rev: git_rev(),
         threads,
@@ -237,6 +366,9 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
         speedup_kernel_build,
         speedup_warm_workspace,
         blocked_vs_dense_lazy,
+        stream_vs_inmemory_objective,
+        stream_peak_dense_bytes,
+        inmemory_peak_dense_bytes,
         parallel_matches_sequential: equivalent,
     }
 }
@@ -312,6 +444,13 @@ pub fn to_json(rep: &SuiteReport) -> String {
         json_num(rep.speedup_warm_workspace),
         json_num(rep.blocked_vs_dense_lazy)
     ));
+    s.push_str(&format!(
+        "  \"stream\": {{\"objective_ratio_vs_inmemory\": {}, \"peak_dense_bytes\": {}, \
+         \"inmemory_peak_dense_bytes\": {}}},\n",
+        json_num(rep.stream_vs_inmemory_objective),
+        rep.stream_peak_dense_bytes,
+        rep.inmemory_peak_dense_bytes
+    ));
     s.push_str("  \"results\": [\n");
     for (i, c) in rep.cases.iter().enumerate() {
         let r = &c.result;
@@ -349,22 +488,35 @@ mod tests {
         assert!(rep.parallel_matches_sequential, "parallel must equal sequential");
         assert_eq!(
             rep.cases.len(),
-            12,
-            "2 kernel + 3 engines x 2 widths + 2 blocked + 2 workspace"
+            14,
+            "2 kernel + 3 engines x 2 widths + 2 blocked + 2 workspace + 2 stream"
         );
         assert!(rep.cases.iter().all(|c| c.result.mean_s > 0.0));
         assert!(rep.speedup_lazy_selection > 0.0);
         assert!(rep.speedup_warm_workspace > 0.0);
         assert!(rep.blocked_vs_dense_lazy > 0.0);
+        assert!(
+            rep.stream_vs_inmemory_objective >= 0.9,
+            "merge-and-reduce objective ratio {}",
+            rep.stream_vs_inmemory_objective
+        );
+        assert!(rep.stream_peak_dense_bytes > 0);
+        assert!(
+            rep.stream_peak_dense_bytes < rep.inmemory_peak_dense_bytes,
+            "streaming must not materialize the full n² buffer"
+        );
         let json = to_json(&rep);
-        assert!(json.contains("\"schema_version\": 2"));
+        assert!(json.contains("\"schema_version\": 3"));
         assert!(json.contains("select/lazy/t1"));
         assert!(json.contains("select/lazy/t2"));
         assert!(json.contains("select/lazy/blocked/t1"));
         assert!(json.contains("workspace/cold/t2"));
         assert!(json.contains("workspace/warm/t2"));
+        assert!(json.contains("stream/shard/t2"));
+        assert!(json.contains("stream/reduce/t2"));
         assert!(json.contains("\"warm_workspace\":"));
         assert!(json.contains("\"blocked_vs_dense_lazy\":"));
+        assert!(json.contains("\"objective_ratio_vs_inmemory\":"));
         assert!(json.contains("\"parallel_matches_sequential\": true"));
         // Balanced braces/brackets as a cheap well-formedness proxy.
         assert_eq!(json.matches('{').count(), json.matches('}').count());

@@ -13,6 +13,7 @@ pub mod facility;
 pub mod greedy;
 pub mod selector;
 pub mod sim;
+pub mod stream;
 pub mod weights;
 
 pub use facility::FacilityLocation;
@@ -21,10 +22,14 @@ pub use greedy::{
     stochastic_greedy_par, Selection, StopRule,
 };
 pub use selector::{
-    count_shares, group_by_class, split_budget, ClassSelection, SelectionWorkspace, Selector,
-    SimStore, SimStorePolicy, DEFAULT_SIM_MEM_BUDGET,
+    count_shares, count_shares_capped, group_by_class, split_budget, split_budget_weighted,
+    ClassSelection, SelectionWorkspace, Selector, SimStore, SimStorePolicy,
+    DEFAULT_SIM_MEM_BUDGET,
 };
-pub use sim::{BlockedSim, DenseSim, SimilaritySource};
+pub use sim::{BlockedSim, DenseSim, RowWeightedSim, SimilaritySource};
+pub use stream::{
+    EpochSelector, MemShards, ShardSource, StreamConfig, StreamStats, StreamingSelector,
+};
 pub use weights::WeightedCoreset;
 
 use crate::linalg::Matrix;
@@ -69,6 +74,13 @@ pub struct SelectorConfig {
     /// blocked columns, or auto by memory budget (see
     /// [`selector::SimStorePolicy`]).
     pub sim_store: SimStorePolicy,
+    /// Out-of-core fan-out: when > 1, the streaming-aware entry points
+    /// ([`select`], both trainers, the pipeline) run merge-and-reduce
+    /// over this many stratified shards ([`stream`]) instead of one
+    /// whole-dataset pass, bounding similarity memory by shard size.
+    /// 0/1 = plain in-memory selection.  [`Selector::select`] itself
+    /// ignores the knob (it *is* the per-shard engine).
+    pub stream_shards: usize,
 }
 
 impl Default for SelectorConfig {
@@ -80,6 +92,7 @@ impl Default for SelectorConfig {
             seed: 0,
             parallelism: 1,
             sim_store: SimStorePolicy::default(),
+            stream_shards: 0,
         }
     }
 }
@@ -180,14 +193,16 @@ pub fn run_greedy<S: SimilaritySource + ?Sized>(
 
 /// Select a weighted coreset from `features` (one row per example).
 ///
-/// Thin caller of [`Selector`] with a cold workspace — callers that
-/// reselect repeatedly (per-epoch protocols) should hold a [`Selector`]
-/// instead and reuse its workspace.
+/// Thin caller of [`EpochSelector`] with a cold workspace — callers
+/// that reselect repeatedly (per-epoch protocols) should hold an
+/// [`EpochSelector`] (or a bare [`Selector`]) and reuse its buffers.
 ///
 /// * `labels`/`num_classes`: when `cfg.per_class` is set, selection runs
 ///   independently inside every class and the merged coreset preserves
 ///   class ratios. Pass `num_classes = 1` for unconditional selection.
 /// * `engine`: pairwise-distance backend (native or XLA).
+/// * `cfg.stream_shards > 1` routes through the merge-and-reduce
+///   streaming path over stratified in-memory shards ([`stream`]).
 pub fn select(
     features: &Matrix,
     labels: &[u32],
@@ -195,7 +210,7 @@ pub fn select(
     cfg: &SelectorConfig,
     engine: &mut dyn PairwiseEngine,
 ) -> CoresetResult {
-    Selector::new().select(features, labels, num_classes, cfg, engine)
+    EpochSelector::new().select(features, labels, num_classes, cfg, engine)
 }
 
 /// Uniformly random weighted baseline: `r` points, each weighted `n/r`

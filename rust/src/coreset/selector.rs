@@ -33,9 +33,9 @@ use crate::rng::Rng;
 use crate::util::ThreadPool;
 
 use super::greedy::StopRule;
-use super::sim::{BlockedSim, DenseSim};
+use super::sim::{BlockedSim, DenseSim, RowWeightedSim, SimilaritySource};
 use super::weights::WeightedCoreset;
-use super::{run_greedy, Budget, CoresetResult, PairwiseEngine, SelectorConfig};
+use super::{run_greedy, Budget, CoresetResult, Method, PairwiseEngine, SelectorConfig};
 
 /// Default `Auto` memory budget for one class's dense similarity
 /// matrix: 1 GiB ⇒ dense up to n ≈ 16k, blocked beyond.
@@ -134,22 +134,50 @@ pub fn group_by_class(labels: &[u32], num_classes: usize, per_class: bool) -> Ve
 ///   `clamp(r, #classes, n)` exactly (see [`count_shares`]).
 /// * `Cover { ε }` — the ε budget splits proportionally to class size.
 pub fn split_budget(budget: &Budget, class_sizes: &[usize], total_n: usize) -> Vec<StopRule> {
+    let weighted: Vec<f64> = class_sizes.iter().map(|&c| c as f64).collect();
+    split_budget_weighted(budget, &weighted, class_sizes, total_n as f64)
+}
+
+/// [`split_budget`] over **weighted** class masses: `weighted_sizes[c]`
+/// is the total point mass of class `c` (for plain selection that is
+/// just the member count; for the streaming reduce round it is the sum
+/// of shard-coreset weights, i.e. the class's *original* population),
+/// while `caps[c]` bounds how many elements can actually be picked
+/// (the number of candidate rows present).
+///
+/// This is what keeps the reduce round's budget expressed in
+/// original-dataset terms: `Fraction(f)` yields `round(mass_c · f)`
+/// per class — the same count the in-memory path would produce — even
+/// though only `caps[c]` union rows are available to choose from.
+/// With `weighted_sizes == caps == class_sizes` this is exactly
+/// [`split_budget`] (which delegates here).
+pub fn split_budget_weighted(
+    budget: &Budget,
+    weighted_sizes: &[f64],
+    caps: &[usize],
+    total_mass: f64,
+) -> Vec<StopRule> {
+    assert_eq!(weighted_sizes.len(), caps.len());
     match *budget {
-        Budget::Fraction(f) => class_sizes
+        Budget::Fraction(f) => weighted_sizes
             .iter()
-            .map(|&c| {
-                let r = ((c as f64) * f).round().max(1.0) as usize;
-                StopRule::Budget(r.min(c))
+            .zip(caps)
+            .map(|(&m, &cap)| {
+                let r = (m * f).round().max(1.0) as usize;
+                StopRule::Budget(r.min(cap))
             })
             .collect(),
         Budget::Count(total) => {
-            count_shares(total, class_sizes).into_iter().map(StopRule::Budget).collect()
+            let sizes: Vec<usize> =
+                weighted_sizes.iter().map(|&m| (m.round() as usize).max(1)).collect();
+            count_shares_capped(total, &sizes, caps).into_iter().map(StopRule::Budget).collect()
         }
-        Budget::Cover { epsilon } => class_sizes
+        Budget::Cover { epsilon } => weighted_sizes
             .iter()
-            .map(|&c| StopRule::Cover {
-                epsilon: epsilon * (c as f64) / (total_n as f64),
-                max_size: c,
+            .zip(caps)
+            .map(|(&m, &cap)| StopRule::Cover {
+                epsilon: epsilon * m / total_mass,
+                max_size: cap,
             })
             .collect(),
     }
@@ -165,13 +193,26 @@ pub fn split_budget(budget: &Budget, class_sizes: &[usize], total_n: usize) -> V
 /// **exactly**.  Deterministic: remainder ties break toward the lower
 /// class index, trims come off the largest over-quota share first.
 pub fn count_shares(total: usize, sizes: &[usize]) -> Vec<usize> {
+    count_shares_capped(total, sizes, sizes)
+}
+
+/// [`count_shares`] with the per-class ceiling decoupled from the
+/// proportionality mass: shares are proportional to `sizes` but bounded
+/// by `1 ≤ share ≤ caps[c]`.  The streaming reduce round apportions by
+/// *original* class populations (the weighted masses) while only
+/// `caps[c]` union rows exist to pick from; with `caps == sizes` this
+/// is exactly [`count_shares`].
+pub fn count_shares_capped(total: usize, sizes: &[usize], caps: &[usize]) -> Vec<usize> {
     let k = sizes.len();
+    assert_eq!(k, caps.len());
     assert!(k > 0 && sizes.iter().all(|&s| s > 0), "classes must be nonempty");
+    assert!(caps.iter().all(|&c| c > 0), "caps must admit at least one pick per class");
     let n: usize = sizes.iter().sum();
-    let total = total.clamp(k.min(n), n);
+    let cap_total: usize = caps.iter().sum();
+    let total = total.clamp(k.min(cap_total), cap_total);
     let quota: Vec<f64> = sizes.iter().map(|&s| total as f64 * s as f64 / n as f64).collect();
     let mut shares: Vec<usize> =
-        quota.iter().zip(sizes).map(|(&q, &s)| (q.floor() as usize).min(s)).collect();
+        quota.iter().zip(caps).map(|(&q, &c)| (q.floor() as usize).min(c)).collect();
     // Hand out the remainder by largest fractional part (tie: lower
     // index), skipping classes already at capacity.
     let mut order: Vec<usize> = (0..k).collect();
@@ -184,7 +225,7 @@ pub fn count_shares(total: usize, sizes: &[usize]) -> Vec<usize> {
     while assigned < total {
         let c = order[cursor % k];
         cursor += 1;
-        if shares[c] < sizes[c] {
+        if shares[c] < caps[c] {
             shares[c] += 1;
             assigned += 1;
         }
@@ -275,10 +316,13 @@ pub struct ClassSelection {
     pub store: SimStore,
 }
 
-/// Per-class rng stream derivation: a pure function of the seed and the
-/// class's first global index, so streams are identical no matter which
-/// worker runs the class or in which order classes complete.
-fn class_seed(seed: u64, first_global_idx: usize) -> u64 {
+/// Rng stream derivation: a pure function of the seed and a subproblem's
+/// first global index, so streams are identical no matter which worker
+/// runs the subproblem or in which order subproblems complete.  THE one
+/// mixing rule — per-class streams here, per-shard streams in
+/// [`crate::coreset::stream`] (which is why a stream whose single shard
+/// starts at index 0 reproduces the in-memory rng exactly).
+pub(crate) fn derive_seed(seed: u64, first_global_idx: usize) -> u64 {
     seed ^ (first_global_idx as u64).wrapping_mul(0x9E37_79B9)
 }
 
@@ -289,6 +333,48 @@ fn gather_rows_into(features: &Matrix, idx: &[usize], out: &mut Matrix) {
     out.data.resize(idx.len() * features.cols, 0.0);
     for (r, &i) in idx.iter().enumerate() {
         out.row_mut(r).copy_from_slice(features.row(i));
+    }
+}
+
+/// Greedy + weight assignment over one concrete similarity store — the
+/// store-agnostic tail of a class subproblem.  With `weights` the store
+/// is viewed through [`RowWeightedSim`] (weighted gains, weighted γ);
+/// without, this is the historical unweighted path, bit for bit.
+fn run_store<S: SimilaritySource>(
+    sim: &S,
+    weights: Option<&[f32]>,
+    method: Method,
+    rule: StopRule,
+    rng: &mut Rng,
+    pool: &ThreadPool,
+    ws: &mut SelectionWorkspace,
+) -> (super::Selection, WeightedCoreset) {
+    match weights {
+        None => {
+            let sel = run_greedy(sim, method, rule, rng, pool);
+            let wc = WeightedCoreset::compute_with_scratch(
+                sim,
+                &sel.order,
+                &mut ws.cover_best,
+                &mut ws.cover_scratch,
+            );
+            (sel, wc)
+        }
+        Some(w) => {
+            let wsim = RowWeightedSim::new(sim, w);
+            let sel = run_greedy(&wsim, method, rule, rng, pool);
+            let mut wc = WeightedCoreset::compute_with_scratch(
+                &wsim,
+                &sel.order,
+                &mut ws.cover_best,
+                &mut ws.cover_scratch,
+            );
+            // Row scaling leaves every per-point argmax unchanged, so the
+            // assignment is the unweighted one; the cluster masses fold
+            // the covered points' own weights (merge-and-reduce γ).
+            wc.reweight(w);
+            (sel, wc)
+        }
     }
 }
 
@@ -316,6 +402,16 @@ impl Selector {
         &self.ws
     }
 
+    /// Reset the `peak_dense_bytes` high-water mark (buffer capacity is
+    /// untouched, so the workspace stays warm).  Callers that report
+    /// per-run peaks over a long-lived selector — the streaming
+    /// subsystem's [`StreamStats`](crate::coreset::StreamStats) — clear
+    /// the mark at the start of each run; otherwise it accumulates over
+    /// the selector's lifetime.
+    pub fn reset_peak_dense_bytes(&mut self) {
+        self.ws.peak_dense_bytes = 0;
+    }
+
     /// Solve one class subproblem: gather → pairwise kernel →
     /// similarity store (per policy) → greedy → weights, returning the
     /// class coreset lifted to dataset coordinates.  `idx` holds the
@@ -338,10 +434,45 @@ impl Selector {
         cfg: &SelectorConfig,
         engine: &mut dyn PairwiseEngine,
     ) -> ClassSelection {
+        self.select_class_inner(features, idx, None, rule, cfg, engine)
+    }
+
+    /// [`select_class`](Self::select_class) with per-point masses folded
+    /// into the gain function (the streaming reduce round): `weights`
+    /// is indexed in the same coordinates as `idx`'s entries, greedy
+    /// maximizes the **weighted** facility-location objective, and the
+    /// returned γ are weighted cluster masses (Σγ = Σ class mass).
+    /// Unit weights reproduce [`select_class`](Self::select_class)
+    /// bitwise.
+    pub fn select_class_weighted(
+        &mut self,
+        features: &Matrix,
+        idx: &[usize],
+        weights: &[f32],
+        rule: StopRule,
+        cfg: &SelectorConfig,
+        engine: &mut dyn PairwiseEngine,
+    ) -> ClassSelection {
+        let w_local: Vec<f32> = idx.iter().map(|&i| weights[i]).collect();
+        self.select_class_inner(features, idx, Some(&w_local), rule, cfg, engine)
+    }
+
+    /// The one class-subproblem body behind both entry points.
+    /// `weights`, when present, is class-local (`weights[r]` masses
+    /// `features[idx[r]]`).
+    fn select_class_inner(
+        &mut self,
+        features: &Matrix,
+        idx: &[usize],
+        weights: Option<&[f32]>,
+        rule: StopRule,
+        cfg: &SelectorConfig,
+        engine: &mut dyn PairwiseEngine,
+    ) -> ClassSelection {
         assert!(!idx.is_empty(), "empty class group");
         let n = idx.len();
         let pool = ThreadPool::scoped(cfg.parallelism);
-        let mut rng = Rng::new(class_seed(cfg.seed, idx[0]));
+        let mut rng = Rng::new(derive_seed(cfg.seed, idx[0]));
         let store = cfg.sim_store.resolve(n);
         self.ws.calls += 1;
 
@@ -360,26 +491,14 @@ impl Selector {
                     self.ws.peak_dense_bytes.max(n * n * std::mem::size_of::<f32>());
                 engine.sqdist_self_into(&class_x, &mut sq, &pool);
                 let sim = DenseSim::from_sqdist_par(sq, &pool);
-                let sel = run_greedy(&sim, cfg.method, rule, &mut rng, &pool);
-                let wc = WeightedCoreset::compute_with_scratch(
-                    &sim,
-                    &sel.order,
-                    &mut self.ws.cover_best,
-                    &mut self.ws.cover_scratch,
-                );
+                let (sel, wc) =
+                    run_store(&sim, weights, cfg.method, rule, &mut rng, &pool, &mut self.ws);
                 self.ws.sq = sim.into_scratch();
                 (sel, wc)
             }
             SimStore::Blocked => {
                 let sim = BlockedSim::with_pool(&class_x, &pool);
-                let sel = run_greedy(&sim, cfg.method, rule, &mut rng, &pool);
-                let wc = WeightedCoreset::compute_with_scratch(
-                    &sim,
-                    &sel.order,
-                    &mut self.ws.cover_best,
-                    &mut self.ws.cover_scratch,
-                );
-                (sel, wc)
+                run_store(&sim, weights, cfg.method, rule, &mut rng, &pool, &mut self.ws)
             }
         };
         self.ws.class_x = class_x;
@@ -404,11 +523,54 @@ impl Selector {
         cfg: &SelectorConfig,
         engine: &mut dyn PairwiseEngine,
     ) -> CoresetResult {
+        self.select_impl(features, labels, num_classes, None, cfg, engine)
+    }
+
+    /// [`select`](Self::select) over pre-weighted points — the streaming
+    /// reduce round.  `weights[i]` is row `i`'s original-point mass:
+    /// budgets are split by **weighted** class masses (so a `Fraction`
+    /// budget means a fraction of the *original* population, not of the
+    /// union rows), gains are weighted through [`RowWeightedSim`], and
+    /// the output γ sum to the total input mass per class.  Unit
+    /// weights reproduce [`select`](Self::select) bitwise.
+    pub fn select_weighted(
+        &mut self,
+        features: &Matrix,
+        labels: &[u32],
+        num_classes: usize,
+        weights: &[f32],
+        cfg: &SelectorConfig,
+        engine: &mut dyn PairwiseEngine,
+    ) -> CoresetResult {
+        assert_eq!(features.rows, weights.len());
+        self.select_impl(features, labels, num_classes, Some(weights), cfg, engine)
+    }
+
+    fn select_impl(
+        &mut self,
+        features: &Matrix,
+        labels: &[u32],
+        num_classes: usize,
+        weights: Option<&[f32]>,
+        cfg: &SelectorConfig,
+        engine: &mut dyn PairwiseEngine,
+    ) -> CoresetResult {
         assert_eq!(features.rows, labels.len());
         let n = features.rows;
         let groups = group_by_class(labels, num_classes, cfg.per_class);
-        let sizes: Vec<usize> = groups.iter().map(Vec::len).collect();
-        let rules = split_budget(&cfg.budget, &sizes, n);
+        let rules = match weights {
+            None => {
+                let sizes: Vec<usize> = groups.iter().map(Vec::len).collect();
+                split_budget(&cfg.budget, &sizes, n)
+            }
+            Some(w) => {
+                let masses: Vec<f64> =
+                    groups.iter().map(|g| g.iter().map(|&i| w[i] as f64).sum()).collect();
+                let caps: Vec<usize> = groups.iter().map(Vec::len).collect();
+                let total: f64 = masses.iter().sum();
+                split_budget_weighted(&cfg.budget, &masses, &caps, total)
+            }
+        };
 
         let mut parts = Vec::with_capacity(groups.len());
         let mut class_sizes = Vec::with_capacity(groups.len());
@@ -417,7 +579,10 @@ impl Selector {
         let mut f_value = 0.0f64;
         let mut evaluations = 0usize;
         for (idx, rule) in groups.iter().zip(rules) {
-            let cs = self.select_class(features, idx, rule, cfg, engine);
+            let cs = match weights {
+                None => self.select_class(features, idx, rule, cfg, engine),
+                Some(w) => self.select_class_weighted(features, idx, w, rule, cfg, engine),
+            };
             class_sizes.push(cs.selected);
             stores.push(cs.store);
             epsilon += cs.epsilon;
@@ -495,6 +660,99 @@ mod tests {
             }
             other => panic!("unexpected rules {other:?}"),
         }
+    }
+
+    #[test]
+    fn count_shares_capped_bounds_by_caps() {
+        // Proportionality mass 900/100, but only 5 rows of the big class
+        // exist: the cap absorbs and the small class takes the rest.
+        let shares = count_shares_capped(20, &[900, 100], &[5, 50]);
+        assert_eq!(shares.iter().sum::<usize>(), 20);
+        assert_eq!(shares[0], 5, "big class capped at its row count");
+        assert_eq!(shares[1], 15);
+        // Total above Σ caps clamps to Σ caps.
+        assert_eq!(count_shares_capped(99, &[10, 10], &[3, 4]), vec![3, 4]);
+        // caps == sizes degrades to count_shares exactly.
+        for (total, sizes) in [(100usize, vec![510usize, 490]), (7, vec![1000, 10, 10])] {
+            assert_eq!(count_shares_capped(total, &sizes, &sizes), count_shares(total, &sizes));
+        }
+    }
+
+    #[test]
+    fn split_budget_weighted_speaks_original_masses() {
+        // A union of 30+20 rows standing for 600+400 originals: a 10%
+        // fraction budget must mean 10% of the *originals*.
+        let rules =
+            split_budget_weighted(&Budget::Fraction(0.1), &[600.0, 400.0], &[30, 20], 1000.0);
+        match (rules[0], rules[1]) {
+            (StopRule::Budget(a), StopRule::Budget(b)) => assert_eq!((a, b), (30, 20)),
+            other => panic!("unexpected rules {other:?}"),
+        }
+        // Count apportioned by mass, capped by row availability.
+        let rules = split_budget_weighted(&Budget::Count(40), &[900.0, 100.0], &[10, 90], 1000.0);
+        match (rules[0], rules[1]) {
+            (StopRule::Budget(a), StopRule::Budget(b)) => {
+                assert_eq!(a + b, 40);
+                assert_eq!(a, 10, "mass-heavy class capped at its rows");
+            }
+            other => panic!("unexpected rules {other:?}"),
+        }
+        // Cover ε splits by mass; max_size is the cap.
+        let cover = Budget::Cover { epsilon: 4.0 };
+        let rules = split_budget_weighted(&cover, &[300.0, 100.0], &[7, 9], 400.0);
+        match (rules[0], rules[1]) {
+            (
+                StopRule::Cover { epsilon: e0, max_size: m0 },
+                StopRule::Cover { epsilon: e1, .. },
+            ) => {
+                assert!((e0 - 3.0).abs() < 1e-12 && (e1 - 1.0).abs() < 1e-12);
+                assert_eq!(m0, 7);
+            }
+            other => panic!("unexpected rules {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unit_weights_select_weighted_is_bitwise_select() {
+        let ds = synthetic::covtype_like(500, 4);
+        let mut eng = NativePairwise;
+        for budget in [Budget::Fraction(0.08), Budget::Count(35)] {
+            let cfg = SelectorConfig { budget, ..Default::default() };
+            let a = Selector::new().select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+            let w = vec![1.0f32; 500];
+            let b = Selector::new().select_weighted(&ds.x, &ds.y, 2, &w, &cfg, &mut eng);
+            assert_eq!(a.coreset.indices, b.coreset.indices, "{budget:?}");
+            assert_eq!(a.coreset.gamma, b.coreset.gamma, "{budget:?}");
+            assert_eq!(a.class_sizes, b.class_sizes);
+            assert_eq!(a.f_value, b.f_value, "×1.0 gains are bitwise");
+        }
+    }
+
+    #[test]
+    fn heavy_weights_pull_the_selection() {
+        // Two tight clusters in 1-d: 6 light points near 0, 4 points near
+        // 10.  Unweighted budget-1 greedy serves the bigger cluster; mass
+        // 50 on the far cluster flips the weighted argmax.
+        let data = vec![0.0f32, 0.01, 0.02, 0.03, 0.04, 0.05, 10.0, 10.01, 10.02, 10.03];
+        let x = Matrix::from_vec(10, 1, data);
+        let labels = vec![0u32; 10];
+        let cfg = SelectorConfig {
+            budget: Budget::Count(1),
+            per_class: false,
+            ..Default::default()
+        };
+        let mut eng = NativePairwise;
+        let plain = Selector::new().select(&x, &labels, 1, &cfg, &mut eng);
+        assert!(plain.coreset.indices[0] < 6, "unweighted pick serves the 6-cluster");
+        let mut w = vec![1.0f32; 10];
+        for wi in w.iter_mut().skip(6) {
+            *wi = 50.0;
+        }
+        let heavy = Selector::new().select_weighted(&x, &labels, 1, &w, &cfg, &mut eng);
+        assert!(heavy.coreset.indices[0] >= 6, "mass 50 flips the pick to the far cluster");
+        // γ of the single element is the full mass either way.
+        let total: f32 = heavy.coreset.gamma.iter().sum();
+        assert_eq!(total, 6.0 + 4.0 * 50.0);
     }
 
     #[test]

@@ -317,6 +317,58 @@ impl<'a> BlockedSim<'a> {
     }
 }
 
+/// Row-weighted view of a similarity source: `s'_ij = w_i · s_ij` with
+/// per-point masses `w_i > 0`.
+///
+/// This is how the streaming reduce round folds coreset weights into
+/// the facility-location gain function: a union point standing for
+/// `w_i` originals contributes `w_i`-fold to every marginal gain
+/// (`Σ_i max(0, w_i·s_ie − w_i·best_i) = Σ_i w_i·max(0, s_ie −
+/// best_i)` — the weighted objective exactly), while per-point argmax
+/// comparisons are unchanged (`w_i > 0` scales both sides), so the
+/// nearest-element *assignment* is the unweighted one.
+///
+/// `d_max` is rescaled so `L({s0}) = d_max·n` remains the true
+/// weighted no-selection bound `Σ_i w_i·d_max` — a constant offset
+/// that preserves every greedy argmax but keeps `Cover`-mode ε
+/// semantics meaningful under weights.
+pub struct RowWeightedSim<'a, S: SimilaritySource> {
+    inner: &'a S,
+    w: &'a [f32],
+    d_max: f32,
+}
+
+impl<'a, S: SimilaritySource> RowWeightedSim<'a, S> {
+    pub fn new(inner: &'a S, w: &'a [f32]) -> Self {
+        assert_eq!(inner.n(), w.len(), "one weight per point");
+        debug_assert!(w.iter().all(|&x| x > 0.0), "weights must be positive");
+        let sum: f64 = w.iter().map(|&x| x as f64).sum();
+        let d_max = (inner.d_max() as f64 * sum / inner.n().max(1) as f64) as f32;
+        RowWeightedSim { inner, w, d_max }
+    }
+}
+
+impl<S: SimilaritySource> SimilaritySource for RowWeightedSim<'_, S> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn sim_col(&self, j: usize, out: &mut [f32]) {
+        self.inner.sim_col(j, out);
+        for (o, &wi) in out.iter_mut().zip(self.w) {
+            *o *= wi;
+        }
+    }
+
+    // No `sim_col_ref`: the scaled column cannot be borrowed from the
+    // inner store (and uniform weights of 1.0 still produce bitwise
+    // unweighted values through `sim_col`, since `x * 1.0 ≡ x`).
+
+    fn d_max(&self) -> f32 {
+        self.d_max
+    }
+}
+
 impl SimilaritySource for BlockedSim<'_> {
     fn n(&self) -> usize {
         self.x.rows
@@ -459,6 +511,44 @@ mod tests {
             dense.sim_col(j, &mut a);
             blocked.sim_col(j, &mut b);
             assert_eq!(a, b, "col {j}");
+        }
+    }
+
+    #[test]
+    fn row_weighted_scales_columns_and_dmax() {
+        let x = feats(30, 4, 21);
+        let dense = DenseSim::from_features(&x);
+        let w: Vec<f32> = (0..30).map(|i| 1.0 + (i % 5) as f32).collect();
+        let ws = RowWeightedSim::new(&dense, &w);
+        assert_eq!(ws.n(), 30);
+        let mut plain = vec![0.0f32; 30];
+        let mut scaled = vec![0.0f32; 30];
+        dense.sim_col(7, &mut plain);
+        ws.sim_col(7, &mut scaled);
+        for i in 0..30 {
+            assert_eq!(scaled[i], plain[i] * w[i], "row {i}");
+        }
+        // L({s0}) under the wrapper equals the true weighted bound.
+        let wsum: f64 = w.iter().map(|&v| v as f64).sum();
+        let l_s0 = ws.d_max() as f64 * 30.0;
+        assert!((l_s0 - dense.d_max() as f64 * wsum).abs() < 1e-3 * l_s0);
+        // No borrowable column (the scaled view is synthesized).
+        assert!(ws.sim_col_ref(0).is_none());
+    }
+
+    #[test]
+    fn unit_weights_are_bitwise_transparent() {
+        let x = feats(25, 3, 22);
+        let dense = DenseSim::from_features(&x);
+        let w = vec![1.0f32; 25];
+        let ws = RowWeightedSim::new(&dense, &w);
+        assert_eq!(ws.d_max(), dense.d_max(), "Σ1/n = 1 exactly in f64");
+        let mut a = vec![0.0f32; 25];
+        let mut b = vec![0.0f32; 25];
+        for j in [0usize, 11, 24] {
+            dense.sim_col(j, &mut a);
+            ws.sim_col(j, &mut b);
+            assert_eq!(a, b, "×1.0 must be bitwise identity");
         }
     }
 

@@ -1,0 +1,664 @@
+//! Streaming merge-and-reduce selection: out-of-core CRAIG over shards.
+//!
+//! The in-memory [`Selector`] needs every class's pairwise-similarity
+//! state resident at once, which caps the problem at what one machine's
+//! RAM holds.  This module lifts that ceiling with the composable-
+//! coreset recipe:
+//!
+//! ```text
+//!   shard 0 ──select──▶ C₀,γ₀ ─┐
+//!   shard 1 ──select──▶ C₁,γ₁ ─┤   weighted     reduce-round select
+//!   ...                        ├─▶  union   ──▶ (gains folded by γ) ──▶ C,γ
+//!   shard K ──select──▶ C_K,γ_K┘
+//! ```
+//!
+//! 1. **Shard phase** — every shard is loaded (one at a time per
+//!    worker), selected with the existing [`Selector`] machinery, and
+//!    released; only its budget-sized coreset (rows + γ + global
+//!    indices) survives.  Shards fan out across worker threads, each
+//!    worker owning a warm [`Selector`] whose
+//!    [`SelectionWorkspace`](super::SelectionWorkspace) is reused from
+//!    shard to shard, and per-shard memory is bounded by the
+//!    [`SimStorePolicy`](super::SimStorePolicy) budget — the n² buffer
+//!    never exceeds it.
+//! 2. **Merge** — shard coresets concatenate into a weighted union: a
+//!    union row stands for `γ` original points.
+//! 3. **Reduce** — one [`Selector::select_weighted`] pass over the
+//!    union with the weights folded into the facility-location gains
+//!    and the final budget expressed in *original-dataset* terms;
+//!    cluster masses multiply through, so Σγ of the result still
+//!    equals n.
+//!
+//! ## Determinism contract
+//!
+//! The output is a pure function of `(shard contents, StreamConfig)` —
+//! independent of worker count, scheduling, and workspace temperature.
+//! Per-shard rng streams derive from the shard's first global index
+//! through the same `seed ^ (first_idx · 0x9E3779B9)` rule the
+//! per-class streams use, and shard budgets apportion with the same
+//! largest-remainder rule as class budgets.  Consequently a **1-shard
+//! stream is bitwise-identical to the in-memory path**: the single
+//! shard preserves dataset order ([`stratified_assignment`]), its
+//! derived seed is `seed ^ 0 = seed`, its budget is the whole budget,
+//! and the reduce round is skipped (reducing a union of itself would
+//! re-cluster γ).  Verified by `rust/tests/stream_equivalence.rs`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::shard::{stratified_assignment, Shard, ShardReader, ShardSet};
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::util::{self, ThreadPool};
+
+use super::selector::derive_seed;
+use super::{
+    count_shares, Budget, CoresetResult, NativePairwise, PairwiseEngine, Selector, SelectorConfig,
+};
+
+/// Where shards come from: an on-disk [`ShardSet`] or an in-memory
+/// view ([`MemShards`]).  `Sync` because the shard phase loads from
+/// several worker threads at once.
+pub trait ShardSource: Sync {
+    fn num_shards(&self) -> usize;
+
+    /// Per-shard row counts, readable without loading any shard
+    /// (budget apportionment and worker planning run off these).
+    fn shard_sizes(&self) -> Vec<usize>;
+
+    fn num_classes(&self) -> usize;
+
+    /// Total points across shards.
+    fn total_n(&self) -> usize {
+        self.shard_sizes().iter().sum()
+    }
+
+    /// Materialize shard `k` (rows + labels + global indices).  At most
+    /// one shard per worker is resident at a time.
+    fn load_shard(&self, k: usize) -> Result<Shard>;
+}
+
+impl ShardSource for ShardSet {
+    fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.n).collect()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn load_shard(&self, k: usize) -> Result<Shard> {
+        ShardReader::new(self).read_shard(k)
+    }
+}
+
+/// In-memory shard view: a borrowed dataset partitioned by the same
+/// deterministic stratified rule the on-disk splitter uses.  This is
+/// how the trainers and [`crate::coreset::select`] run merge-and-reduce
+/// without touching disk — bounding the n² similarity state per shard
+/// even though the rows themselves are resident.
+pub struct MemShards<'a> {
+    x: &'a Matrix,
+    y: &'a [u32],
+    num_classes: usize,
+    assign: Vec<Vec<usize>>,
+}
+
+impl<'a> MemShards<'a> {
+    /// Partition `(x, y)` into (at most) `k` stratified shards under
+    /// `seed` (see [`stratified_assignment`]; `k = 1` preserves input
+    /// order exactly).
+    pub fn new(x: &'a Matrix, y: &'a [u32], num_classes: usize, k: usize, seed: u64) -> Self {
+        assert_eq!(x.rows, y.len());
+        let assign = stratified_assignment(y, num_classes, k, seed);
+        MemShards { x, y, num_classes, assign }
+    }
+}
+
+impl ShardSource for MemShards<'_> {
+    fn num_shards(&self) -> usize {
+        self.assign.len()
+    }
+
+    fn shard_sizes(&self) -> Vec<usize> {
+        self.assign.iter().map(Vec::len).collect()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn load_shard(&self, k: usize) -> Result<Shard> {
+        let idx = self.assign.get(k).with_context(|| format!("shard {k}"))?;
+        Ok(Shard {
+            data: Dataset {
+                x: self.x.gather_rows(idx),
+                y: idx.iter().map(|&i| self.y[i]).collect(),
+                num_classes: self.num_classes,
+                source: format!("mem-shard[{k}]"),
+            },
+            global_idx: idx.clone(),
+        })
+    }
+}
+
+/// Streaming-run configuration: the reduce-round [`SelectorConfig`]
+/// (final budget in original-dataset terms, method, seed, sim-store
+/// policy — the same policy also bounds every shard subproblem) plus
+/// the stream-specific knobs.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    pub selector: SelectorConfig,
+    /// Explicit per-shard budget override applied to every shard.
+    /// `None` derives shard budgets from `selector.budget`
+    /// (2×-oversampled when K > 1 — see [`SHARD_OVERSAMPLE`]):
+    /// `Fraction` passes through, `Count` apportions across shards by
+    /// largest remainder ([`count_shares`]), `Cover` splits ε by shard
+    /// size.
+    pub shard_budget: Option<Budget>,
+    /// Shard-level fan-out width (worker threads; output-invariant).
+    pub workers: usize,
+}
+
+impl StreamConfig {
+    pub fn new(selector: SelectorConfig) -> Self {
+        StreamConfig { selector, shard_budget: None, workers: 1 }
+    }
+}
+
+/// Telemetry from one streaming run.
+#[derive(Clone, Debug, Default)]
+pub struct StreamStats {
+    /// Effective shard count.
+    pub shards: usize,
+    /// Rows in the merged weighted union (Σ shard coreset sizes).
+    pub union_size: usize,
+    /// Final coreset size.
+    pub selected: usize,
+    /// `selected / union_size`: how much the reduce round compacts the
+    /// merged union (1.0 when the reduce is skipped at K = 1).
+    pub merge_ratio: f64,
+    /// Per-shard wall seconds (load + select), in shard order.
+    pub shard_seconds: Vec<f64>,
+    /// Wall seconds of the whole fanned-out shard phase.
+    pub shard_phase_seconds: f64,
+    /// Wall seconds of the merge + reduce round.
+    pub reduce_seconds: f64,
+    /// High-water mark of any dense similarity buffer, shard or reduce
+    /// (the n² allocation the memory budget bounds).
+    pub peak_dense_bytes: usize,
+    /// Upper bound on concurrently resident bytes: every worker's
+    /// largest shard rows + dense buffer, plus the union rows and the
+    /// reduce-round buffer.
+    pub peak_resident_bytes: usize,
+    /// Gain evaluations across all shards and the reduce round.
+    pub evaluations: usize,
+}
+
+/// One shard's contribution to the union.
+struct ShardOutcome {
+    /// Shard id (outcomes are re-sorted by this after the fan-out).
+    k: usize,
+    /// Full selection result with indices lifted to dataset coordinates.
+    res: CoresetResult,
+    /// Selected feature rows (budget-sized; the only rows that outlive
+    /// the shard).
+    rows: Matrix,
+    /// Labels of the selected rows.
+    labels: Vec<u32>,
+    /// Shard population (for resident-memory accounting).
+    shard_bytes: usize,
+    seconds: f64,
+}
+
+/// Oversampling factor for *derived* shard budgets: the union carries
+/// ~2× the final budget so the reduce round has genuine slack to
+/// exploit cross-shard redundancy (picking the final set from a union
+/// exactly the final size would make the reduce a re-weighting no-op).
+/// A 1-shard stream keeps the exact budget — the bitwise in-memory
+/// equivalence path — and an explicit
+/// [`StreamConfig::shard_budget`] override is always taken verbatim.
+const SHARD_OVERSAMPLE: usize = 2;
+
+/// Derive every shard's budget from the final budget (see
+/// [`StreamConfig::shard_budget`] and [`SHARD_OVERSAMPLE`]).
+fn derive_shard_budgets(cfg: &StreamConfig, sizes: &[usize]) -> Vec<Budget> {
+    if let Some(b) = cfg.shard_budget {
+        return vec![b; sizes.len()];
+    }
+    let total_n: usize = sizes.iter().sum();
+    let over = if sizes.len() == 1 { 1 } else { SHARD_OVERSAMPLE };
+    match cfg.selector.budget {
+        Budget::Fraction(f) => {
+            vec![Budget::Fraction((f * over as f64).min(1.0)); sizes.len()]
+        }
+        Budget::Count(r) => count_shares((r * over).min(total_n), sizes)
+            .into_iter()
+            .map(Budget::Count)
+            .collect(),
+        // Cover is an error target, already self-limiting: split ε
+        // proportionally, no oversample.
+        Budget::Cover { epsilon } => sizes
+            .iter()
+            .map(|&s| Budget::Cover { epsilon: epsilon * s as f64 / total_n as f64 })
+            .collect(),
+    }
+}
+
+/// Select one shard end-to-end: load, select with the shard-derived
+/// seed and budget, lift to dataset coordinates, keep only the coreset
+/// rows.  Pure in `(source[k], cfg, budget)` — worker identity and
+/// workspace temperature are invisible.
+fn run_one_shard(
+    source: &dyn ShardSource,
+    k: usize,
+    budget: Budget,
+    cfg: &StreamConfig,
+    selector: &mut Selector,
+) -> Result<ShardOutcome> {
+    let t0 = Instant::now();
+    let shard = source.load_shard(k)?;
+    anyhow::ensure!(
+        shard.data.n() == shard.global_idx.len(),
+        "shard {k}: {} rows vs {} indices",
+        shard.data.n(),
+        shard.global_idx.len()
+    );
+    let shard_bytes = shard.data.x.data.len() * std::mem::size_of::<f32>();
+    let mut scfg = cfg.selector.clone();
+    scfg.budget = budget;
+    scfg.stream_shards = 0; // a shard subproblem is in-memory by construction
+    scfg.seed = derive_seed(cfg.selector.seed, shard.global_idx[0]);
+    // Workers run the native pairwise path (the PJRT client is not
+    // `Send` — the same restriction the pipeline's class shards have).
+    let mut engine = NativePairwise;
+    let mut res =
+        selector.select(&shard.data.x, &shard.data.y, source.num_classes(), &scfg, &mut engine);
+    let rows = shard.data.x.gather_rows(&res.coreset.indices);
+    let labels: Vec<u32> = res.coreset.indices.iter().map(|&i| shard.data.y[i]).collect();
+    for i in res.coreset.indices.iter_mut() {
+        *i = shard.global_idx[*i];
+    }
+    Ok(ShardOutcome { k, res, rows, labels, shard_bytes, seconds: t0.elapsed().as_secs_f64() })
+}
+
+/// The merge-and-reduce engine.  Holds one warm [`Selector`] per shard
+/// worker plus one for the reduce round, so repeated streaming calls
+/// (per-epoch reselection) reuse every large buffer — the same
+/// warm-workspace economics the in-memory `Selector` has, one level up.
+pub struct StreamingSelector {
+    workers: usize,
+    shard_selectors: Vec<Selector>,
+    reduce: Selector,
+}
+
+impl StreamingSelector {
+    /// A streaming selector with `workers` shard-phase threads (1 =
+    /// fully sequential; the output is identical at any width).
+    pub fn new(workers: usize) -> Self {
+        StreamingSelector {
+            workers: workers.max(1),
+            shard_selectors: Vec::new(),
+            reduce: Selector::new(),
+        }
+    }
+
+    /// Run merge-and-reduce selection over `source`.  `engine` serves
+    /// the reduce round's pairwise kernel (shard workers always use the
+    /// native path); the returned [`CoresetResult`] is in dataset
+    /// coordinates with Σγ = n.
+    pub fn select(
+        &mut self,
+        source: &dyn ShardSource,
+        cfg: &StreamConfig,
+        engine: &mut dyn PairwiseEngine,
+    ) -> Result<(CoresetResult, StreamStats)> {
+        let k = source.num_shards();
+        anyhow::ensure!(k > 0, "empty shard source");
+        let sizes = source.shard_sizes();
+        let budgets = derive_shard_budgets(cfg, &sizes);
+
+        // ---- phase 1: shard fan-out -------------------------------------
+        let t_phase = Instant::now();
+        let w_count = self.workers.min(k);
+        while self.shard_selectors.len() < w_count {
+            self.shard_selectors.push(Selector::new());
+        }
+        // Peak-bytes telemetry is per *run*: clear the warm selectors'
+        // lifetime high-water marks so `StreamStats.peak_dense_bytes`
+        // reports this run, not the largest run this selector ever saw.
+        for s in self.shard_selectors.iter_mut() {
+            s.reset_peak_dense_bytes();
+        }
+        self.reduce.reset_peak_dense_bytes();
+        let mut outcomes = run_shard_phase(
+            source,
+            cfg,
+            &budgets,
+            &mut self.shard_selectors[..w_count],
+        )?;
+        outcomes.sort_by_key(|o| o.k);
+        let shard_phase_seconds = t_phase.elapsed().as_secs_f64();
+
+        // ---- merge: weighted union --------------------------------------
+        let t_reduce = Instant::now();
+        let union_size: usize = outcomes.iter().map(|o| o.res.coreset.indices.len()).sum();
+        let d = outcomes[0].rows.cols;
+        let peak_shard_dense =
+            self.shard_selectors.iter().map(|s| s.workspace().peak_dense_bytes).max().unwrap_or(0);
+        let max_shard_bytes = outcomes.iter().map(|o| o.shard_bytes).max().unwrap_or(0);
+        let shard_seconds: Vec<f64> = outcomes.iter().map(|o| o.seconds).collect();
+        let shard_evals: usize = outcomes.iter().map(|o| o.res.evaluations).sum();
+
+        if k == 1 {
+            // Merge-and-reduce over one shard is that shard's coreset;
+            // re-reducing would re-cluster γ and break the bitwise
+            // equivalence with the in-memory path.
+            let res = outcomes.pop().expect("one outcome").res;
+            let stats = StreamStats {
+                shards: 1,
+                union_size,
+                selected: res.coreset.indices.len(),
+                merge_ratio: 1.0,
+                shard_seconds,
+                shard_phase_seconds,
+                reduce_seconds: 0.0,
+                peak_dense_bytes: peak_shard_dense,
+                peak_resident_bytes: max_shard_bytes + peak_shard_dense,
+                evaluations: shard_evals,
+            };
+            return Ok((res, stats));
+        }
+
+        let mut union_x = Matrix::zeros(union_size, d);
+        let mut union_y = Vec::with_capacity(union_size);
+        let mut union_w = Vec::with_capacity(union_size);
+        let mut union_global = Vec::with_capacity(union_size);
+        let mut r = 0usize;
+        for o in &outcomes {
+            for local in 0..o.rows.rows {
+                union_x.row_mut(r).copy_from_slice(o.rows.row(local));
+                r += 1;
+            }
+            union_y.extend_from_slice(&o.labels);
+            union_w.extend_from_slice(&o.res.coreset.gamma);
+            union_global.extend_from_slice(&o.res.coreset.indices);
+        }
+        drop(outcomes);
+
+        // ---- phase 2: weighted reduce round -----------------------------
+        let mut rcfg = cfg.selector.clone();
+        rcfg.stream_shards = 0;
+        let mut res = self.reduce.select_weighted(
+            &union_x,
+            &union_y,
+            source.num_classes(),
+            &union_w,
+            &rcfg,
+            engine,
+        );
+        for i in res.coreset.indices.iter_mut() {
+            *i = union_global[*i];
+        }
+        res.evaluations += shard_evals;
+        let reduce_seconds = t_reduce.elapsed().as_secs_f64();
+
+        let peak_dense =
+            peak_shard_dense.max(self.reduce.workspace().peak_dense_bytes);
+        let union_bytes = union_x.data.len() * std::mem::size_of::<f32>();
+        let selected = res.coreset.indices.len();
+        let stats = StreamStats {
+            shards: k,
+            union_size,
+            selected,
+            merge_ratio: selected as f64 / union_size.max(1) as f64,
+            shard_seconds,
+            shard_phase_seconds,
+            reduce_seconds,
+            peak_dense_bytes: peak_dense,
+            peak_resident_bytes: w_count * (max_shard_bytes + peak_shard_dense)
+                + union_bytes
+                + self.reduce.workspace().peak_dense_bytes,
+            evaluations: res.evaluations,
+        };
+        Ok((res, stats))
+    }
+}
+
+/// Fan the shard ids over the workers (worker `w` owns shards `w, w +
+/// W, ...` — a pure function of `(k, W)`) and collect every outcome.
+/// Built on the pool's scoped chunk fan-out: each worker owns its
+/// `&mut Selector` as a one-element chunk, shared inputs are plain
+/// borrows, and a single worker degrades to the inline sequential path.
+fn run_shard_phase(
+    source: &dyn ShardSource,
+    cfg: &StreamConfig,
+    budgets: &[Budget],
+    selectors: &mut [Selector],
+) -> Result<Vec<ShardOutcome>> {
+    let w_count = selectors.len();
+    let num_shards = budgets.len();
+    let pool = ThreadPool::scoped(w_count);
+    let bounds = util::even_ranges(w_count, w_count);
+    let nested = pool.scope_map_chunks(selectors, &bounds, |w, chunk| {
+        let selector = &mut chunk[0];
+        let mut out = Vec::new();
+        let mut k = w;
+        while k < num_shards {
+            out.push(run_one_shard(source, k, budgets[k], cfg, selector));
+            k += w_count;
+        }
+        out
+    });
+    let mut outcomes = Vec::with_capacity(num_shards);
+    for o in nested.into_iter().flatten() {
+        outcomes.push(o?);
+    }
+    Ok(outcomes)
+}
+
+/// Selection front door for repeated (per-epoch) callers: owns a warm
+/// in-memory [`Selector`] *and* a warm [`StreamingSelector`] and
+/// dispatches per call on [`SelectorConfig::stream_shards`] — so the
+/// trainers and [`crate::coreset::select`] honor the streaming knob
+/// with one code path and keep their buffers warm either way.
+pub struct EpochSelector {
+    inmem: Selector,
+    streamer: StreamingSelector,
+    /// Telemetry of the most recent streamed call (None after an
+    /// in-memory call).
+    pub last_stream: Option<StreamStats>,
+}
+
+impl Default for EpochSelector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EpochSelector {
+    pub fn new() -> Self {
+        EpochSelector {
+            inmem: Selector::new(),
+            streamer: StreamingSelector::new(1),
+            last_stream: None,
+        }
+    }
+
+    /// [`Selector::select`] when `cfg.stream_shards ≤ 1`, otherwise
+    /// merge-and-reduce over that many stratified in-memory shards
+    /// (shard workers = `cfg.parallelism`).  Streaming over resident
+    /// rows cannot fail, so the signature stays infallible.
+    pub fn select(
+        &mut self,
+        features: &Matrix,
+        labels: &[u32],
+        num_classes: usize,
+        cfg: &SelectorConfig,
+        engine: &mut dyn PairwiseEngine,
+    ) -> CoresetResult {
+        if cfg.stream_shards > 1 {
+            let shards = MemShards::new(features, labels, num_classes, cfg.stream_shards, cfg.seed);
+            let mut scfg = StreamConfig::new(cfg.clone());
+            scfg.workers = cfg.parallelism.max(1);
+            // The one `parallelism` knob already fans out at the shard
+            // level here; keeping it inside each shard's config too
+            // would square the thread count (W shards × W-wide pools).
+            // Shard interiors run sequential — output-invariant either
+            // way.  (`select-stream`'s separate --workers/--parallelism
+            // knobs compose the two levels explicitly instead.)
+            scfg.selector.parallelism = 1;
+            self.streamer.workers = scfg.workers;
+            let (res, stats) = self
+                .streamer
+                .select(&shards, &scfg, engine)
+                .expect("in-memory streaming performs no I/O");
+            self.last_stream = Some(stats);
+            res
+        } else {
+            self.last_stream = None;
+            self.inmem.select(features, labels, num_classes, cfg, engine)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::{self, Method};
+    use crate::data::synthetic;
+
+    #[test]
+    fn one_mem_shard_stream_is_bitwise_in_memory() {
+        let ds = synthetic::covtype_like(500, 3);
+        let cfg = SelectorConfig { budget: Budget::Fraction(0.1), ..Default::default() };
+        let mut eng = NativePairwise;
+        let inmem = Selector::new().select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+        let shards = MemShards::new(&ds.x, &ds.y, 2, 1, cfg.seed);
+        let mut streamer = StreamingSelector::new(3);
+        let (res, stats) = streamer.select(&shards, &StreamConfig::new(cfg), &mut eng).unwrap();
+        assert_eq!(res.coreset.indices, inmem.coreset.indices);
+        assert_eq!(res.coreset.gamma, inmem.coreset.gamma);
+        assert_eq!(res.f_value, inmem.f_value, "even gains must match bitwise");
+        assert_eq!(stats.shards, 1);
+        assert_eq!(stats.merge_ratio, 1.0);
+        assert_eq!(stats.reduce_seconds, 0.0);
+    }
+
+    #[test]
+    fn stream_weights_conserve_total_mass() {
+        let ds = synthetic::covtype_like(900, 1);
+        let cfg = SelectorConfig { budget: Budget::Count(60), ..Default::default() };
+        let mut eng = NativePairwise;
+        let shards = MemShards::new(&ds.x, &ds.y, 2, 4, 7);
+        let mut streamer = StreamingSelector::new(2);
+        let (res, stats) = streamer.select(&shards, &StreamConfig::new(cfg), &mut eng).unwrap();
+        assert_eq!(res.coreset.indices.len(), 60, "final Count budget hit exactly");
+        let total: f32 = res.coreset.gamma.iter().sum();
+        assert_eq!(total, 900.0, "γ must multiply through to the original n");
+        assert_eq!(stats.shards, 4);
+        assert!(stats.union_size >= 60, "union at least as large as the final budget");
+        assert!(stats.merge_ratio <= 1.0);
+        assert_eq!(stats.shard_seconds.len(), 4);
+        // Final indices are valid, distinct dataset coordinates.
+        let mut seen = res.coreset.indices.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 60);
+        assert!(seen.iter().all(|&i| i < 900));
+    }
+
+    #[test]
+    fn stream_is_worker_count_invariant() {
+        let ds = synthetic::ijcnn1_like(700, 5);
+        let cfg = SelectorConfig {
+            budget: Budget::Fraction(0.08),
+            method: Method::Stochastic { delta: 0.05 },
+            seed: 11,
+            ..Default::default()
+        };
+        let mut eng = NativePairwise;
+        let mut reference: Option<CoresetResult> = None;
+        for workers in [1usize, 2, 5] {
+            let shards = MemShards::new(&ds.x, &ds.y, 2, 3, cfg.seed);
+            let mut streamer = StreamingSelector::new(workers);
+            let (res, _) =
+                streamer.select(&shards, &StreamConfig::new(cfg.clone()), &mut eng).unwrap();
+            match &reference {
+                None => reference = Some(res),
+                Some(r) => {
+                    assert_eq!(res.coreset.indices, r.coreset.indices, "workers={workers}");
+                    assert_eq!(res.coreset.gamma, r.coreset.gamma, "workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_streaming_selector_reproduces_cold() {
+        let ds = synthetic::covtype_like(600, 9);
+        let cfg = SelectorConfig { budget: Budget::Count(40), ..Default::default() };
+        let mut eng = NativePairwise;
+        let mut streamer = StreamingSelector::new(2);
+        let shards = MemShards::new(&ds.x, &ds.y, 2, 3, cfg.seed);
+        let (a, s1) = streamer.select(&shards, &StreamConfig::new(cfg.clone()), &mut eng).unwrap();
+        // Same call on the now-warm selectors must be identical.
+        let (b, _) = streamer.select(&shards, &StreamConfig::new(cfg.clone()), &mut eng).unwrap();
+        assert_eq!(a.coreset.indices, b.coreset.indices);
+        assert_eq!(a.coreset.gamma, b.coreset.gamma);
+        // Peak telemetry is per run: a smaller follow-up run on the same
+        // warm streamer must not report the earlier, larger high-water.
+        let small = synthetic::covtype_like(150, 9);
+        let small_cfg = SelectorConfig { budget: Budget::Count(20), ..Default::default() };
+        let small_shards = MemShards::new(&small.x, &small.y, 2, 3, small_cfg.seed);
+        let (_, s2) =
+            streamer.select(&small_shards, &StreamConfig::new(small_cfg), &mut eng).unwrap();
+        assert!(
+            s2.peak_dense_bytes < s1.peak_dense_bytes,
+            "per-run peak {} must shrink below the warm lifetime peak {}",
+            s2.peak_dense_bytes,
+            s1.peak_dense_bytes
+        );
+    }
+
+    #[test]
+    fn shard_budget_override_controls_union_size() {
+        let ds = synthetic::covtype_like(800, 2);
+        let mut eng = NativePairwise;
+        let base = SelectorConfig { budget: Budget::Count(50), ..Default::default() };
+        let mut scfg = StreamConfig::new(base);
+        scfg.shard_budget = Some(Budget::Count(40));
+        let shards = MemShards::new(&ds.x, &ds.y, 2, 4, 0);
+        let mut streamer = StreamingSelector::new(2);
+        let (res, stats) = streamer.select(&shards, &scfg, &mut eng).unwrap();
+        assert_eq!(stats.union_size, 160, "4 shards × 40 override");
+        assert_eq!(res.coreset.indices.len(), 50);
+        let total: f32 = res.coreset.gamma.iter().sum();
+        assert_eq!(total, 800.0);
+    }
+
+    #[test]
+    fn epoch_selector_dispatches_on_stream_shards() {
+        let ds = synthetic::covtype_like(400, 6);
+        let mut eng = NativePairwise;
+        let mut es = EpochSelector::new();
+        let plain_cfg = SelectorConfig { budget: Budget::Count(30), ..Default::default() };
+        let plain = es.select(&ds.x, &ds.y, 2, &plain_cfg, &mut eng);
+        assert!(es.last_stream.is_none());
+        let stream_cfg = SelectorConfig { stream_shards: 4, ..plain_cfg };
+        let streamed = es.select(&ds.x, &ds.y, 2, &stream_cfg, &mut eng);
+        let stats = es.last_stream.as_ref().expect("streamed call records stats");
+        assert_eq!(stats.shards, 4);
+        assert_eq!(streamed.coreset.indices.len(), 30);
+        // And coreset::select (the free function) takes the same path.
+        let via_free = coreset::select(&ds.x, &ds.y, 2, &stream_cfg, &mut eng);
+        assert_eq!(via_free.coreset.indices, streamed.coreset.indices);
+        assert_eq!(via_free.coreset.gamma, streamed.coreset.gamma);
+        let _ = plain;
+    }
+}

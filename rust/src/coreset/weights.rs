@@ -68,6 +68,22 @@ impl WeightedCoreset {
         self.assignment.len()
     }
 
+    /// Replace the per-element counts by weighted cluster masses:
+    /// `gamma[k] = Σ_{i: assignment[i] = k} w[i]`.
+    ///
+    /// This is the merge-and-reduce weight multiplication: when the
+    /// covered points are themselves shard-coreset elements, each
+    /// already stands for `w[i]` originals, so the reduce-round
+    /// element inherits the total original mass of its cluster (and
+    /// `Σ gamma` stays equal to the original `n`).
+    pub fn reweight(&mut self, w: &[f32]) {
+        assert_eq!(self.assignment.len(), w.len(), "one weight per covered point");
+        self.gamma.iter_mut().for_each(|g| *g = 0.0);
+        for (&k, &wi) in self.assignment.iter().zip(w) {
+            self.gamma[k] += wi;
+        }
+    }
+
     /// Largest weight γ_max (appears in the Thm 1/2 neighbourhood radius).
     pub fn gamma_max(&self) -> f32 {
         self.gamma.iter().cloned().fold(0.0, f32::max)
@@ -171,6 +187,33 @@ mod tests {
         assert_eq!(wc.gamma, vec![17.0]);
         assert!(wc.assignment.iter().all(|&k| k == 0));
         assert_eq!(wc.gamma_max(), 17.0);
+    }
+
+    #[test]
+    fn reweight_folds_point_masses() {
+        let (s, _) = sim_from(20, 3, 6);
+        let mut wc = WeightedCoreset::compute(&s, &[2, 9, 15]);
+        let w: Vec<f32> = (0..20).map(|i| 1.0 + (i % 3) as f32).collect();
+        let expected: Vec<f32> = (0..3)
+            .map(|k| {
+                wc.assignment
+                    .iter()
+                    .zip(&w)
+                    .filter(|(&a, _)| a == k)
+                    .map(|(_, &wi)| wi)
+                    .sum()
+            })
+            .collect();
+        wc.reweight(&w);
+        assert_eq!(wc.gamma, expected);
+        let total: f32 = wc.gamma.iter().sum();
+        let wsum: f32 = w.iter().sum();
+        assert_eq!(total, wsum, "Σγ must equal the total input mass");
+        // Unit weights reduce to the plain counts.
+        let mut wc2 = WeightedCoreset::compute(&s, &[2, 9, 15]);
+        let counts = wc2.gamma.clone();
+        wc2.reweight(&vec![1.0; 20]);
+        assert_eq!(wc2.gamma, counts);
     }
 
     #[test]

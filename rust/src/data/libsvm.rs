@@ -1,14 +1,26 @@
-//! LIBSVM sparse-text format parser.
+//! LIBSVM sparse-text format parser and writer.
 //!
 //! The paper's convex datasets (covtype.binary, ijcnn1) ship in this
 //! format; when the real files are present the loaders here replace the
-//! synthetic stand-ins with zero code changes elsewhere.
+//! synthetic stand-ins with zero code changes elsewhere.  The writer is
+//! the shard substrate's serialization path ([`crate::data::shard`]):
+//! values are emitted with rust's shortest-round-trip float `Display`,
+//! so a write → parse cycle reproduces every feature bitwise.
 //!
 //! Format, per line: `<label> <index>:<value> <index>:<value> ...` with
-//! 1-based feature indices. Labels may be `-1/+1`, `0/1`, or small class
-//! ids; they are remapped to contiguous `0..num_classes`.
+//! 1-based, strictly increasing feature indices. Labels may be `-1/+1`,
+//! `0/1`, or small class ids; [`parse`] remaps them to contiguous
+//! `0..num_classes`, while [`parse_raw_labels`] (the shard path) takes
+//! them verbatim so a shard missing a class cannot silently renumber
+//! the others.
+//!
+//! Streaming hardening: comment lines (`#`) and blank lines are
+//! skipped, surrounding whitespace (including `\r` from CRLF files) is
+//! trimmed, and every malformed token — bad label, bad pair, zero-based
+//! or non-monotone index, bad value — is an error (never a panic)
+//! carrying the 1-based line number.
 
-use std::io::{BufRead, BufReader};
+use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -16,25 +28,39 @@ use anyhow::{bail, Context, Result};
 use super::Dataset;
 use crate::linalg::Matrix;
 
-/// Parse LIBSVM text from a reader. `dims`: pass `Some(d)` to force the
-/// dimensionality (features beyond it error out), `None` to infer.
-pub fn parse<R: BufRead>(reader: R, dims: Option<usize>) -> Result<Dataset> {
+/// One parsed file before label policy is applied.
+struct RawFile {
+    /// Sparse rows: 0-based `(feature, value)` pairs.
+    rows: Vec<Vec<(usize, f32)>>,
+    /// Labels exactly as written (rounded to integers).
+    labels: Vec<i64>,
+    /// 1-based source line of every row (comments/blanks skipped).
+    linenos: Vec<usize>,
+    /// Largest 1-based feature index seen.
+    max_dim: usize,
+}
+
+/// Tokenize the sparse-text body.  All structural validation lives
+/// here; both label policies ([`parse`], [`parse_raw_labels`]) share it.
+fn parse_rows<R: BufRead>(reader: R) -> Result<RawFile> {
     let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
-    let mut raw_labels: Vec<i64> = Vec::new();
+    let mut labels: Vec<i64> = Vec::new();
+    let mut linenos: Vec<usize> = Vec::new();
     let mut max_dim = 0usize;
 
     for (lineno, line) in reader.lines().enumerate() {
-        let line = line.context("read line")?;
+        let line = line.with_context(|| format!("line {}: read error", lineno + 1))?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
         let mut parts = line.split_whitespace();
-        let label_tok = parts.next().unwrap();
+        let label_tok = parts.next().expect("trimmed non-empty line has a token");
         let label: f64 = label_tok
             .parse()
             .with_context(|| format!("line {}: bad label '{label_tok}'", lineno + 1))?;
         let mut feats = Vec::new();
+        let mut prev_idx = 0usize; // indices are 1-based: 0 means "none yet"
         for tok in parts {
             let (idx_s, val_s) = tok
                 .split_once(':')
@@ -45,6 +71,13 @@ pub fn parse<R: BufRead>(reader: R, dims: Option<usize>) -> Result<Dataset> {
             if idx == 0 {
                 bail!("line {}: LIBSVM indices are 1-based, got 0", lineno + 1);
             }
+            if idx <= prev_idx {
+                bail!(
+                    "line {}: feature indices must be strictly increasing ({idx} after {prev_idx})",
+                    lineno + 1
+                );
+            }
+            prev_idx = idx;
             let val: f32 = val_s
                 .parse()
                 .with_context(|| format!("line {}: bad value '{val_s}'", lineno + 1))?;
@@ -52,50 +85,109 @@ pub fn parse<R: BufRead>(reader: R, dims: Option<usize>) -> Result<Dataset> {
             feats.push((idx - 1, val));
         }
         rows.push(feats);
-        raw_labels.push(label.round() as i64);
+        labels.push(label.round() as i64);
+        linenos.push(lineno + 1);
     }
     if rows.is_empty() {
         bail!("empty LIBSVM file");
     }
+    Ok(RawFile { rows, labels, linenos, max_dim })
+}
 
-    let d = match dims {
+/// Resolve the dimensionality: forced (`Some(d)`, indices beyond it
+/// error out) or inferred from the largest index seen.
+fn resolve_dims(raw: &RawFile, dims: Option<usize>) -> Result<usize> {
+    match dims {
         Some(d) => {
-            if max_dim > d {
-                bail!("feature index {max_dim} exceeds forced dims {d}");
+            if raw.max_dim > d {
+                bail!("feature index {} exceeds forced dims {d}", raw.max_dim);
             }
-            d
+            Ok(d)
         }
-        None => max_dim,
-    };
+        None => Ok(raw.max_dim),
+    }
+}
 
-    // Remap labels to 0..k, ordered ascending (so -1 -> 0, +1 -> 1).
-    let mut uniq: Vec<i64> = raw_labels.clone();
-    uniq.sort_unstable();
-    uniq.dedup();
-    let lookup = |l: i64| uniq.binary_search(&l).unwrap() as u32;
-
-    let n = rows.len();
+/// Densify the sparse rows into an `(n, d)` matrix.
+fn densify(raw: &RawFile, d: usize) -> Matrix {
+    let n = raw.rows.len();
     let mut x = Matrix::zeros(n, d);
-    for (i, feats) in rows.iter().enumerate() {
+    for (i, feats) in raw.rows.iter().enumerate() {
         let row = x.row_mut(i);
         for &(j, v) in feats {
             row[j] = v;
         }
     }
+    x
+}
+
+/// Parse LIBSVM text from a reader. `dims`: pass `Some(d)` to force the
+/// dimensionality (features beyond it error out), `None` to infer.
+/// Labels are remapped to contiguous `0..num_classes`, ordered
+/// ascending (so `-1 → 0`, `+1 → 1`).
+pub fn parse<R: BufRead>(reader: R, dims: Option<usize>) -> Result<Dataset> {
+    let raw = parse_rows(reader)?;
+    let d = resolve_dims(&raw, dims)?;
+    let mut uniq: Vec<i64> = raw.labels.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let lookup = |l: i64| uniq.binary_search(&l).unwrap() as u32;
     Ok(Dataset {
-        x,
-        y: raw_labels.iter().map(|&l| lookup(l)).collect(),
+        x: densify(&raw, d),
+        y: raw.labels.iter().map(|&l| lookup(l)).collect(),
         num_classes: uniq.len(),
         source: "libsvm".into(),
     })
 }
 
-/// Load a LIBSVM file from disk.
+/// Parse with labels taken **verbatim** as class ids in
+/// `0..num_classes` (no sorted-unique remap).  The shard reader uses
+/// this: per-shard files may miss classes entirely, and remapping would
+/// silently renumber the survivors, corrupting the cross-shard merge.
+pub fn parse_raw_labels<R: BufRead>(reader: R, dims: usize, num_classes: usize) -> Result<Dataset> {
+    let raw = parse_rows(reader)?;
+    let d = resolve_dims(&raw, Some(dims))?;
+    let mut y = Vec::with_capacity(raw.labels.len());
+    for (i, &l) in raw.labels.iter().enumerate() {
+        if l < 0 || l as usize >= num_classes {
+            bail!("line {}: class id {l} outside 0..{num_classes}", raw.linenos[i]);
+        }
+        y.push(l as u32);
+    }
+    Ok(Dataset { x: densify(&raw, d), y, num_classes, source: "libsvm-raw".into() })
+}
+
+/// Load a LIBSVM file from disk (remapped labels, see [`parse`]).
 pub fn load(path: &Path, dims: Option<usize>) -> Result<Dataset> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut ds = parse(BufReader::new(f), dims)?;
     ds.source = path.display().to_string();
     Ok(ds)
+}
+
+/// Write a dataset as LIBSVM text: class ids as labels, 1-based indices,
+/// zero features skipped.  Values use `Display`'s shortest round-trip
+/// form, so [`parse`]/[`parse_raw_labels`] recover them bitwise.
+pub fn write<W: Write>(w: &mut W, ds: &Dataset) -> Result<()> {
+    for i in 0..ds.n() {
+        write!(w, "{}", ds.y[i])?;
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{v}", j + 1)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Write a dataset to a LIBSVM file on disk (buffered [`write`]).
+pub fn save(path: &Path, ds: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    write(&mut w, ds)?;
+    w.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -123,6 +215,14 @@ mod tests {
     }
 
     #[test]
+    fn tolerates_crlf_and_trailing_whitespace() {
+        let text = "+1 1:1 \r\n-1 2:1\t\r\n";
+        let ds = parse(Cursor::new(text), None).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 2);
+    }
+
+    #[test]
     fn forced_dims() {
         let text = "+1 1:1\n-1 2:1\n";
         let ds = parse(Cursor::new(text), Some(10)).unwrap();
@@ -139,10 +239,78 @@ mod tests {
     }
 
     #[test]
+    fn rejects_non_monotone_indices_with_line_number() {
+        // Repeated index.
+        let err = parse(Cursor::new("+1 1:1\n+1 3:1 3:2\n"), None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("strictly increasing"), "{msg}");
+        // Decreasing index.
+        assert!(parse(Cursor::new("+1 5:1 2:1\n"), None).is_err());
+        // In-order stays fine.
+        assert!(parse(Cursor::new("+1 1:1 2:1 7:1\n"), None).is_ok());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (text, line) in [
+            ("+1 1:1\nbad 1:1\n", "line 2"),
+            ("+1 1:1\n# c\n+1 nope\n", "line 3"),
+            ("+1 1:1\n+1 0:1\n", "line 2"),
+            ("+1 1:1\n+1 2:zz\n", "line 2"),
+        ] {
+            let err = parse(Cursor::new(text), None).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(line), "'{text}' → {msg}");
+        }
+    }
+
+    #[test]
     fn multiclass_label_remap() {
         let text = "3 1:1\n7 1:2\n3 1:3\n5 1:4\n";
         let ds = parse(Cursor::new(text), None).unwrap();
         assert_eq!(ds.num_classes, 3);
         assert_eq!(ds.y, vec![0, 2, 0, 1]); // 3->0, 5->1, 7->2
+    }
+
+    #[test]
+    fn raw_labels_preserve_class_ids() {
+        // A "shard" containing only classes {0, 2} of a 3-class problem:
+        // the remapping parser would renumber 2 → 1; raw mode must not.
+        let text = "0 1:1\n2 1:2\n0 2:1\n";
+        let ds = parse_raw_labels(Cursor::new(text), 4, 3).unwrap();
+        assert_eq!(ds.y, vec![0, 2, 0]);
+        assert_eq!(ds.num_classes, 3);
+        assert_eq!(ds.d(), 4);
+        // Out-of-range ids error instead of silently reshaping the task.
+        assert!(parse_raw_labels(Cursor::new("3 1:1\n"), 4, 3).is_err());
+        assert!(parse_raw_labels(Cursor::new("-1 1:1\n"), 4, 3).is_err());
+    }
+
+    #[test]
+    fn write_parse_round_trip_is_bitwise() {
+        let mut r = crate::rng::Rng::new(9);
+        let n = 12;
+        let d = 7;
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                // Mix zeros (sparsity) with awkward floats.
+                if r.bool(0.4) {
+                    x.set(i, j, r.normal32(0.0, 1.0) / 3.0);
+                }
+            }
+        }
+        let ds = Dataset {
+            x,
+            y: (0..n as u32).map(|i| i % 3).collect(),
+            num_classes: 3,
+            source: "toy".into(),
+        };
+        let mut buf = Vec::new();
+        write(&mut buf, &ds).unwrap();
+        let back = parse_raw_labels(Cursor::new(buf), d, 3).unwrap();
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.x.data, ds.x.data, "floats must round-trip bitwise");
     }
 }

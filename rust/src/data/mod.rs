@@ -1,9 +1,12 @@
 //! Dataset substrate: the in-memory dataset model, stratified splits,
 //! normalization, plus [`synthetic`] generators standing in for the
-//! paper's four datasets and a [`libsvm`] parser so the genuine files
-//! drop in when available (see DESIGN.md §3 for the substitution table).
+//! paper's four datasets, a [`libsvm`] parser/writer so the genuine
+//! files drop in when available (see DESIGN.md §3 for the substitution
+//! table), and the [`shard`] substrate for out-of-core selection
+//! (directory-of-shards + manifest + bounded-memory reader).
 
 pub mod libsvm;
+pub mod shard;
 pub mod synthetic;
 
 use crate::linalg::Matrix;

@@ -1,0 +1,510 @@
+//! On-disk shard substrate for out-of-core selection.
+//!
+//! A **shard set** is a directory of LIBSVM shard files plus a
+//! generated manifest (`MANIFEST.txt`) recording the global shape
+//! (n, d, num_classes) and per-shard row counts / class counts.  Each
+//! shard also carries an index sidecar (`*.idx`, one decimal per line)
+//! mapping its rows back to dataset coordinates — the coordinates every
+//! selection result is expressed in, and what makes a 1-shard stream
+//! reproduce the in-memory selection bitwise.
+//!
+//! * [`stratified_assignment`] — THE deterministic K-way split rule
+//!   (shared by [`write_shards`] and the in-memory
+//!   [`crate::coreset::stream::MemShards`]): class members are
+//!   seed-shuffled within class, dealt round-robin across shards, and
+//!   each shard's rows sorted ascending — so every shard mirrors the
+//!   global class mix (±1 per class) and `K = 1` reproduces the input
+//!   order exactly, whatever the seed.
+//! * [`write_shards`] — split a [`Dataset`] into a shard set on disk
+//!   (the `craig shard` CLI subcommand).
+//! * [`ShardSet`] / [`ShardReader`] — manifest round-trip and a
+//!   bounded-memory reader yielding one [`Shard`] (a [`Dataset`] chunk
+//!   plus its global indices) at a time through the existing
+//!   [`libsvm`] parser in raw-label mode (shards must not renumber
+//!   classes they happen to miss).
+
+use std::io::{BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{libsvm, Dataset};
+use crate::rng::Rng;
+
+/// Manifest file name inside a shard directory.
+pub const MANIFEST_NAME: &str = "MANIFEST.txt";
+
+/// Manifest format version (`craig-shards v1`).
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// One shard's manifest entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// LIBSVM shard file, relative to the set directory.
+    pub file: String,
+    /// Global-index sidecar, relative to the set directory.
+    pub idx_file: String,
+    /// Rows in this shard.
+    pub n: usize,
+    /// Per-class row counts (len == num_classes).
+    pub class_counts: Vec<usize>,
+}
+
+/// A shard directory's manifest: global shape + per-shard entries.
+#[derive(Clone, Debug)]
+pub struct ShardSet {
+    pub dir: PathBuf,
+    /// Total rows across shards.
+    pub n: usize,
+    /// Feature dimensionality (forced on every shard parse, so trailing
+    /// all-zero columns survive the sparse format).
+    pub d: usize,
+    pub num_classes: usize,
+    pub shards: Vec<ShardMeta>,
+}
+
+/// A loaded shard: its rows plus the dataset coordinate of each row.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub data: Dataset,
+    /// `global_idx[i]` = dataset-coordinate row of shard row `i`,
+    /// strictly ascending.
+    pub global_idx: Vec<usize>,
+}
+
+impl ShardSet {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard row counts (budget apportionment reads these without
+    /// touching any shard file).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.n).collect()
+    }
+
+    /// Serialize the manifest.
+    pub fn manifest_string(&self) -> String {
+        let mut s = format!("craig-shards v{MANIFEST_VERSION}\n");
+        s.push_str(&format!("n {}\n", self.n));
+        s.push_str(&format!("d {}\n", self.d));
+        s.push_str(&format!("classes {}\n", self.num_classes));
+        for m in &self.shards {
+            let counts: Vec<String> = m.class_counts.iter().map(usize::to_string).collect();
+            s.push_str(&format!("shard {} {} {} {}\n", m.file, m.idx_file, m.n, counts.join(",")));
+        }
+        s
+    }
+
+    /// Write `MANIFEST.txt` into the set directory.
+    pub fn write_manifest(&self) -> Result<()> {
+        let path = self.dir.join(MANIFEST_NAME);
+        std::fs::write(&path, self.manifest_string())
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Parse a manifest back (errors carry 1-based line numbers).
+    pub fn parse_manifest(dir: &Path, text: &str) -> Result<ShardSet> {
+        let mut lines = text.lines().enumerate();
+        let (_, header) = lines.next().context("empty manifest")?;
+        let expect = format!("craig-shards v{MANIFEST_VERSION}");
+        if header.trim() != expect {
+            bail!("line 1: bad manifest header '{header}' (want '{expect}')");
+        }
+        let mut n = None;
+        let mut d = None;
+        let mut classes = None;
+        let mut shards = Vec::new();
+        fn tok<'x>(
+            toks: &mut std::str::SplitWhitespace<'x>,
+            lineno: usize,
+            name: &str,
+        ) -> Result<&'x str> {
+            toks.next().with_context(|| format!("line {lineno}: missing {name}"))
+        }
+        for (i, line) in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let key = toks.next().expect("non-empty line");
+            match key {
+                "n" | "d" | "classes" => {
+                    let v: usize = tok(&mut toks, i + 1, key)?
+                        .parse()
+                        .with_context(|| format!("line {}: bad {key}", i + 1))?;
+                    match key {
+                        "n" => n = Some(v),
+                        "d" => d = Some(v),
+                        _ => classes = Some(v),
+                    }
+                }
+                "shard" => {
+                    let file = tok(&mut toks, i + 1, "shard file")?.to_string();
+                    let idx_file = tok(&mut toks, i + 1, "idx file")?.to_string();
+                    let sn: usize = tok(&mut toks, i + 1, "shard n")?
+                        .parse()
+                        .with_context(|| format!("line {}: bad shard n", i + 1))?;
+                    let counts_tok = tok(&mut toks, i + 1, "class counts")?;
+                    let mut class_counts = Vec::new();
+                    for c in counts_tok.split(',') {
+                        class_counts.push(
+                            c.parse()
+                                .with_context(|| format!("line {}: bad class count '{c}'", i + 1))?,
+                        );
+                    }
+                    shards.push(ShardMeta { file, idx_file, n: sn, class_counts });
+                }
+                other => bail!("line {}: unknown manifest key '{other}'", i + 1),
+            }
+        }
+        let set = ShardSet {
+            dir: dir.to_path_buf(),
+            n: n.context("manifest missing 'n'")?,
+            d: d.context("manifest missing 'd'")?,
+            num_classes: classes.context("manifest missing 'classes'")?,
+            shards,
+        };
+        if set.shards.is_empty() {
+            bail!("manifest lists no shards");
+        }
+        let total: usize = set.shards.iter().map(|s| s.n).sum();
+        if total != set.n {
+            bail!("manifest inconsistent: shard rows sum to {total}, header says {}", set.n);
+        }
+        for m in &set.shards {
+            if m.n == 0 {
+                bail!("shard {}: empty shards are not allowed", m.file);
+            }
+            if m.class_counts.len() != set.num_classes {
+                bail!(
+                    "shard {}: {} class counts, want {}",
+                    m.file,
+                    m.class_counts.len(),
+                    set.num_classes
+                );
+            }
+        }
+        Ok(set)
+    }
+
+    /// Load a shard directory's manifest.
+    pub fn load(dir: &Path) -> Result<ShardSet> {
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse_manifest(dir, &text)
+    }
+}
+
+/// Bounded-memory shard reader: one shard resident per
+/// [`read_shard`](Self::read_shard) call, everything else stays on
+/// disk.  Peak memory is therefore `O(max shard size)`, not `O(n)`.
+pub struct ShardReader<'a> {
+    set: &'a ShardSet,
+}
+
+impl<'a> ShardReader<'a> {
+    pub fn new(set: &'a ShardSet) -> Self {
+        ShardReader { set }
+    }
+
+    /// Load shard `k`: LIBSVM rows (raw-label mode, dims forced from
+    /// the manifest) plus the global-index sidecar.
+    pub fn read_shard(&self, k: usize) -> Result<Shard> {
+        let meta = self
+            .set
+            .shards
+            .get(k)
+            .with_context(|| format!("shard {k} of {}", self.set.num_shards()))?;
+        let path = self.set.dir.join(&meta.file);
+        let f = std::fs::File::open(&path).with_context(|| format!("open {}", path.display()))?;
+        let mut data = libsvm::parse_raw_labels(
+            BufReader::new(f),
+            self.set.d,
+            self.set.num_classes,
+        )
+        .with_context(|| format!("parse {}", path.display()))?;
+        data.source = path.display().to_string();
+        if data.n() != meta.n {
+            bail!("{}: {} rows on disk, manifest says {}", path.display(), data.n(), meta.n);
+        }
+        let ipath = self.set.dir.join(&meta.idx_file);
+        let itext = std::fs::read_to_string(&ipath)
+            .with_context(|| format!("read {}", ipath.display()))?;
+        let mut global_idx: Vec<usize> = Vec::with_capacity(meta.n);
+        for (i, line) in itext.lines().enumerate() {
+            let g: usize = line
+                .trim()
+                .parse()
+                .with_context(|| format!("{}: line {}: bad index", ipath.display(), i + 1))?;
+            // The documented `Shard` invariants: dataset-coordinate
+            // indices, strictly ascending (which also makes them
+            // distinct).  A corrupt sidecar must fail loudly — these
+            // values become coreset coordinates and rng seeds.
+            if g >= self.set.n {
+                bail!("{}: line {}: index {g} outside 0..{}", ipath.display(), i + 1, self.set.n);
+            }
+            if let Some(&prev) = global_idx.last() {
+                if g <= prev {
+                    bail!(
+                        "{}: line {}: indices must be strictly ascending ({g} after {prev})",
+                        ipath.display(),
+                        i + 1
+                    );
+                }
+            }
+            global_idx.push(g);
+        }
+        if global_idx.len() != data.n() {
+            bail!("{}: {} indices for {} rows", ipath.display(), global_idx.len(), data.n());
+        }
+        Ok(Shard { data, global_idx })
+    }
+
+    /// Iterate over all shards in order (each loaded on demand).
+    pub fn iter(&self) -> impl Iterator<Item = Result<Shard>> + '_ {
+        (0..self.set.num_shards()).map(move |k| self.read_shard(k))
+    }
+}
+
+/// THE deterministic stratified K-way split: for each class, members
+/// are shuffled under `seed` and dealt round-robin (class `c` starting
+/// at shard `c % k`, so per-class remainders don't all pile on shard
+/// 0); each shard's rows are then sorted ascending by global index.
+///
+/// Properties relied on elsewhere:
+/// * **stratified** — every shard's class counts match the global mix
+///   within ±1 per class;
+/// * **deterministic under seed** — a pure function of
+///   `(labels, k, seed)`, independent of worker count or scheduling;
+/// * **order-preserving at K = 1** — the single shard is exactly
+///   `0..n`, whatever the seed (the streaming-equals-in-memory anchor).
+///
+/// Degenerate splits (more shards than points in every class) may leave
+/// a shard empty; empty shards are dropped, so the returned vector's
+/// length is the *effective* shard count (≤ `k`).
+pub fn stratified_assignment(
+    labels: &[u32],
+    num_classes: usize,
+    k: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let n = labels.len();
+    assert!(k >= 1, "need at least one shard");
+    assert!(n >= 1, "cannot shard an empty dataset");
+    let mut by_class = vec![Vec::new(); num_classes.max(1)];
+    for (i, &c) in labels.iter().enumerate() {
+        by_class[c as usize].push(i);
+    }
+    let mut rng = Rng::new(seed ^ 0x5AAD_5AAD);
+    let mut shards = vec![Vec::new(); k];
+    for (c, members) in by_class.iter_mut().enumerate() {
+        rng.shuffle(members);
+        for (m, &i) in members.iter().enumerate() {
+            shards[(m + c) % k].push(i);
+        }
+    }
+    for s in shards.iter_mut() {
+        s.sort_unstable();
+    }
+    shards.retain(|s| !s.is_empty());
+    shards
+}
+
+/// Split `ds` into (at most) `k` stratified shards under `dir`: LIBSVM
+/// shard files, index sidecars, and the manifest.  Returns the written
+/// [`ShardSet`].  Deterministic under `seed` (see
+/// [`stratified_assignment`]).
+pub fn write_shards(ds: &Dataset, k: usize, seed: u64, dir: &Path) -> Result<ShardSet> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let assign = stratified_assignment(&ds.y, ds.num_classes, k, seed);
+    let mut metas = Vec::with_capacity(assign.len());
+    for (s, idxs) in assign.iter().enumerate() {
+        let file = format!("shard_{s:04}.libsvm");
+        let idx_file = format!("shard_{s:04}.idx");
+        let sub = ds.subset(idxs);
+        libsvm::save(&dir.join(&file), &sub)?;
+        let ipath = dir.join(&idx_file);
+        let f = std::fs::File::create(&ipath)
+            .with_context(|| format!("create {}", ipath.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        for &g in idxs {
+            writeln!(w, "{g}")?;
+        }
+        w.flush()?;
+        metas.push(ShardMeta { file, idx_file, n: idxs.len(), class_counts: sub.class_counts() });
+    }
+    let set = ShardSet {
+        dir: dir.to_path_buf(),
+        n: ds.n(),
+        d: ds.d(),
+        num_classes: ds.num_classes,
+        shards: metas,
+    };
+    set.write_manifest()?;
+    Ok(set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("craig-shard-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn stratified_assignment_partitions_and_balances() {
+        let ds = synthetic::covtype_like(600, 0);
+        let assign = stratified_assignment(&ds.y, ds.num_classes, 4, 7);
+        assert_eq!(assign.len(), 4);
+        let mut seen: Vec<usize> = assign.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..600).collect::<Vec<_>>(), "shards must partition 0..n");
+        // Stratified: per-shard class counts within ±1 of the even deal.
+        let global = ds.class_counts();
+        for s in &assign {
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "shard rows sorted ascending");
+            let mut counts = vec![0usize; ds.num_classes];
+            for &i in s {
+                counts[ds.y[i] as usize] += 1;
+            }
+            for (c, &cnt) in counts.iter().enumerate() {
+                let even = global[c] as f64 / 4.0;
+                assert!(
+                    (cnt as f64 - even).abs() <= 1.0,
+                    "class {c}: {cnt} vs even share {even}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn assignment_deterministic_under_seed_and_identity_at_k1() {
+        let ds = synthetic::ijcnn1_like(400, 1);
+        let a = stratified_assignment(&ds.y, 2, 5, 3);
+        let b = stratified_assignment(&ds.y, 2, 5, 3);
+        assert_eq!(a, b, "same seed ⇒ same split");
+        let c = stratified_assignment(&ds.y, 2, 5, 4);
+        assert_ne!(a, c, "different seed ⇒ different split");
+        // K = 1 is the identity permutation for any seed.
+        for seed in [0u64, 3, 99] {
+            let one = stratified_assignment(&ds.y, 2, 1, seed);
+            assert_eq!(one.len(), 1);
+            assert_eq!(one[0], (0..400).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn degenerate_split_drops_empty_shards() {
+        // 3 points, 8 shards: at most 3 non-empty shards survive.
+        let labels = vec![0u32, 1, 0];
+        let assign = stratified_assignment(&labels, 2, 8, 0);
+        assert!(assign.len() <= 3);
+        let total: usize = assign.iter().map(Vec::len).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let dir = tempdir("manifest");
+        let set = ShardSet {
+            dir: dir.clone(),
+            n: 30,
+            d: 5,
+            num_classes: 2,
+            shards: vec![
+                ShardMeta {
+                    file: "shard_0000.libsvm".into(),
+                    idx_file: "shard_0000.idx".into(),
+                    n: 16,
+                    class_counts: vec![9, 7],
+                },
+                ShardMeta {
+                    file: "shard_0001.libsvm".into(),
+                    idx_file: "shard_0001.idx".into(),
+                    n: 14,
+                    class_counts: vec![7, 7],
+                },
+            ],
+        };
+        let back = ShardSet::parse_manifest(&dir, &set.manifest_string()).unwrap();
+        assert_eq!(back.n, 30);
+        assert_eq!(back.d, 5);
+        assert_eq!(back.num_classes, 2);
+        assert_eq!(back.shards, set.shards);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_rejects_corruption_with_line_numbers() {
+        let dir = PathBuf::from("/nonexistent");
+        let bad_header = "craig-shards v9\nn 1\n";
+        assert!(ShardSet::parse_manifest(&dir, bad_header).is_err());
+        let bad_sum = "craig-shards v1\nn 10\nd 2\nclasses 1\n\
+                       shard a.libsvm a.idx 4 4\n";
+        let err = ShardSet::parse_manifest(&dir, bad_sum).unwrap_err();
+        assert!(format!("{err:#}").contains("sum to 4"));
+        let bad_key = "craig-shards v1\nn 1\nd 1\nclasses 1\nwat 3\n";
+        let err = ShardSet::parse_manifest(&dir, bad_key).unwrap_err();
+        assert!(format!("{err:#}").contains("line 5"));
+    }
+
+    #[test]
+    fn corrupt_idx_sidecar_fails_loudly() {
+        let ds = synthetic::covtype_like(60, 7);
+        let dir = tempdir("badidx");
+        let set = write_shards(&ds, 2, 0, &dir).unwrap();
+        let reader = ShardReader::new(&set);
+        reader.read_shard(0).unwrap();
+        let ipath = dir.join(&set.shards[0].idx_file);
+        let good = std::fs::read_to_string(&ipath).unwrap();
+        // Out-of-range index.
+        std::fs::write(&ipath, good.replacen(good.lines().next().unwrap(), "999999", 1)).unwrap();
+        let err = reader.read_shard(0).unwrap_err();
+        assert!(format!("{err:#}").contains("outside"), "{err:#}");
+        // Non-ascending (duplicate) index.
+        let second = good.lines().nth(1).unwrap().to_string();
+        let dup = good.replacen(good.lines().next().unwrap(), &second, 1);
+        std::fs::write(&ipath, dup).unwrap();
+        let err = reader.read_shard(0).unwrap_err();
+        assert!(format!("{err:#}").contains("strictly ascending"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_then_read_reassembles_dataset_bitwise() {
+        let ds = synthetic::covtype_like(300, 5);
+        let dir = tempdir("roundtrip");
+        let set = write_shards(&ds, 3, 11, &dir).unwrap();
+        assert_eq!(set.num_shards(), 3);
+        assert_eq!(set.shard_sizes().iter().sum::<usize>(), 300);
+        // Reload through the manifest path, not the in-memory struct.
+        let loaded = ShardSet::load(&dir).unwrap();
+        assert_eq!(loaded.n, 300);
+        assert_eq!(loaded.d, ds.d());
+        let reader = ShardReader::new(&loaded);
+        let mut covered = vec![false; 300];
+        for shard in reader.iter() {
+            let shard = shard.unwrap();
+            assert_eq!(shard.data.n(), shard.global_idx.len());
+            assert_eq!(shard.data.d(), ds.d(), "manifest dims must be forced");
+            for (r, &g) in shard.global_idx.iter().enumerate() {
+                assert!(!covered[g], "row {g} served twice");
+                covered[g] = true;
+                assert_eq!(shard.data.y[r], ds.y[g]);
+                assert_eq!(shard.data.x.row(r), ds.x.row(g), "row {g} must round-trip bitwise");
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "every row must appear in exactly one shard");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

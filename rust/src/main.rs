@@ -3,6 +3,10 @@
 //! Subcommands:
 //! * `info`         — environment, artifact registry, dataset summaries.
 //! * `select`       — run CRAIG selection, print coreset stats, dump CSV.
+//! * `shard`        — split a dataset into stratified on-disk shards
+//!                    (LIBSVM files + index sidecars + manifest).
+//! * `select-stream`— out-of-core merge-and-reduce selection over a
+//!                    shard directory (bounded-memory CRAIG).
 //! * `train`        — convex experiment (logreg; SGD/SAGA/SVRG ×
 //!                    full/craig/random), per-epoch CSV trace.
 //! * `train-mlp`    — neural experiment with per-epoch reselection.
@@ -43,7 +47,28 @@ fn app() -> App {
                 .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
                 .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("stream-shards", "0", "merge-and-reduce over K in-memory shards")
                 .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
+                .opt("out", "CSV path for the selected coreset"),
+            Command::new("shard", "split a dataset into stratified on-disk shards")
+                .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
+                .opt_default("n", "50000", "synthetic dataset size")
+                .opt("input", "LIBSVM file to shard (overrides --dataset)")
+                .opt_default("shards", "8", "shard count K")
+                .opt_default("seed", "0", "rng seed (data gen + stratified deal)")
+                .opt("out-dir", "output directory for shards + manifest (required)"),
+            Command::new("select-stream", "out-of-core merge-and-reduce CRAIG over shards")
+                .opt("shards-dir", "shard directory written by `craig shard` (required)")
+                .opt_default("fraction", "0.1", "final subset fraction per class")
+                .opt("count", "absolute final element count (overrides --fraction)")
+                .opt("shard-budget", "per-shard element count override")
+                .opt_default("method", "lazy", "lazy|naive|stochastic")
+                .opt_default("seed", "0", "rng seed")
+                .opt_default("workers", "4", "shard-level worker threads")
+                .opt_default("parallelism", "1", "intra-class selection threads")
+                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
+                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("engine", "auto", "reduce-round backend: native|xla|auto")
                 .opt("out", "CSV path for the selected coreset"),
             Command::new("train", "convex experiment: logreg on full/craig/random")
                 .opt_default("dataset", "covtype", "dataset name")
@@ -59,6 +84,7 @@ fn app() -> App {
                 .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
                 .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("stream-shards", "0", "merge-and-reduce over K in-memory shards")
                 .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
                 .opt("out", "CSV path for the epoch trace"),
             Command::new("train-mlp", "neural experiment with per-epoch reselection")
@@ -74,6 +100,7 @@ fn app() -> App {
                 .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
                 .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("stream-shards", "0", "streamed per-epoch reselection over K shards")
                 .opt("out", "CSV path for the epoch trace"),
             Command::new("run", "run an experiment described by a config file")
                 .opt("config", "path to a TOML-subset experiment config")
@@ -163,6 +190,7 @@ fn cmd_select(a: &Args) -> Result<()> {
         seed,
         parallelism: a.parse_opt("parallelism", 1)?,
         sim_store: parse_sim_store(a)?,
+        stream_shards: a.parse_opt("stream-shards", 0)?,
     };
     let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
     let t0 = std::time::Instant::now();
@@ -198,9 +226,116 @@ fn cmd_select(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `craig shard --out-dir DIR [--shards K]`: split a dataset (synthetic
+/// by name, or an on-disk LIBSVM file via `--input`) into stratified
+/// shards + manifest.  Deterministic under `--seed`.
+fn cmd_shard(a: &Args) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(a.req("out-dir")?);
+    let k: usize = a.parse_opt("shards", 8)?;
+    let seed: u64 = a.parse_opt("seed", 0)?;
+    let ds = match a.opt("input") {
+        Some(path) => craig::data::libsvm::load(std::path::Path::new(path), None)?,
+        None => load_dataset(a)?,
+    };
+    let t0 = std::time::Instant::now();
+    let set = craig::data::shard::write_shards(&ds, k, seed, &out_dir)?;
+    println!(
+        "sharded {} (n={} d={} classes={}) into {} shards in {:.2}s → {}",
+        ds.source,
+        set.n,
+        set.d,
+        set.num_classes,
+        set.num_shards(),
+        t0.elapsed().as_secs_f64(),
+        out_dir.display()
+    );
+    for (i, m) in set.shards.iter().enumerate() {
+        println!("  shard {i:>3}: {:<22} n={:<7} classes={:?}", m.file, m.n, m.class_counts);
+    }
+    Ok(())
+}
+
+/// `craig select-stream --shards-dir DIR`: merge-and-reduce CRAIG over
+/// an on-disk shard set — per-shard memory bounded by `--mem-budget`,
+/// never the full n².  Exits nonzero if an `auto` store policy let a
+/// dense buffer exceed its budget (it cannot, by construction; the
+/// check turns that invariant into a CI-visible guarantee).
+fn cmd_select_stream(a: &Args) -> Result<()> {
+    use craig::coreset::{StreamConfig, StreamingSelector};
+    let dir = std::path::PathBuf::from(a.req("shards-dir")?);
+    let set = craig::data::shard::ShardSet::load(&dir)?;
+    let seed: u64 = a.parse_opt("seed", 0)?;
+    let budget = match a.opt("count") {
+        Some(_) => Budget::Count(a.parse_opt("count", 0)?),
+        None => Budget::Fraction(a.parse_opt("fraction", 0.1)?),
+    };
+    let sim_store = parse_sim_store(a)?;
+    let selector_cfg = SelectorConfig {
+        method: parse_method(a.opt("method").unwrap_or("lazy"))?,
+        budget,
+        per_class: true,
+        seed,
+        parallelism: a.parse_opt("parallelism", 1)?,
+        sim_store,
+        stream_shards: 0, // explicit shard source; the knob is for in-memory callers
+    };
+    let mut scfg = StreamConfig::new(selector_cfg);
+    scfg.workers = a.parse_opt("workers", 4)?;
+    if a.opt("shard-budget").is_some() {
+        scfg.shard_budget = Some(Budget::Count(a.parse_opt("shard-budget", 0)?));
+    }
+    let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
+    let mut streamer = StreamingSelector::new(scfg.workers);
+    let t0 = std::time::Instant::now();
+    let (res, stats) = streamer.select(&set, &scfg, engine.as_mut())?;
+    let dt = t0.elapsed().as_secs_f64();
+    let gamma_total: f32 = res.coreset.gamma.iter().sum();
+    println!(
+        "stream-selected {} / {} points from {} shards in {dt:.2}s  [engine={}, evals={}]",
+        res.coreset.indices.len(),
+        set.n,
+        stats.shards,
+        engine.name(),
+        stats.evaluations
+    );
+    println!(
+        "  union {} → {} (merge ratio {:.3}); shard phase {:.2}s, reduce {:.2}s",
+        stats.union_size,
+        stats.selected,
+        stats.merge_ratio,
+        stats.shard_phase_seconds,
+        stats.reduce_seconds
+    );
+    println!(
+        "  peak_dense_bytes={} peak_resident_bytes≤{} (full n² would be {} bytes)",
+        stats.peak_dense_bytes,
+        stats.peak_resident_bytes,
+        craig::coreset::SimStorePolicy::dense_bytes(set.n)
+    );
+    println!("  per-class sizes: {:?}; Σγ = {gamma_total} (n = {})", res.class_sizes, set.n);
+    if let craig::coreset::SimStorePolicy::Auto { mem_budget_bytes } = sim_store {
+        anyhow::ensure!(
+            stats.peak_dense_bytes <= mem_budget_bytes,
+            "dense similarity buffer ({} B) exceeded the memory budget ({mem_budget_bytes} B)",
+            stats.peak_dense_bytes
+        );
+        println!("  memory bound verified: peak dense ≤ {mem_budget_bytes} B budget");
+    }
+    if let Some(path) = a.opt("out") {
+        let mut w = CsvWriter::create(std::path::Path::new(path), &["index", "gamma"])?;
+        for (i, g) in res.coreset.indices.iter().zip(&res.coreset.gamma) {
+            w.row(&csv_row![i, g])?;
+        }
+        w.flush()?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
 fn subset_mode(a: &Args, frac: f64, reselect: usize, seed: u64) -> Result<SubsetMode> {
     let parallelism: usize = a.parse_opt("parallelism", 1)?;
     let sim_store = parse_sim_store(a)?;
+    let stream_shards: usize = a.parse_opt("stream-shards", 0)?;
     Ok(match a.opt("mode").unwrap_or("craig") {
         "full" => SubsetMode::Full,
         "craig" => SubsetMode::Craig {
@@ -209,6 +344,7 @@ fn subset_mode(a: &Args, frac: f64, reselect: usize, seed: u64) -> Result<Subset
                 seed,
                 parallelism,
                 sim_store,
+                stream_shards,
                 ..Default::default()
             },
             reselect_every: reselect,
@@ -460,6 +596,12 @@ fn cmd_bench(a: &Args) -> Result<()> {
         rep.speedup_warm_workspace, rep.blocked_vs_dense_lazy
     );
     println!(
+        "  stream vs in-memory: objective ratio {:.4}, peak dense {} B vs {} B",
+        rep.stream_vs_inmemory_objective,
+        rep.stream_peak_dense_bytes,
+        rep.inmemory_peak_dense_bytes
+    );
+    println!(
         "  parallel ≡ sequential coresets: {}",
         if rep.parallel_matches_sequential { "yes" } else { "NO — BUG" }
     );
@@ -481,6 +623,8 @@ fn main() {
         Ok((name, args)) => match name {
             "info" => cmd_info(&args),
             "select" => cmd_select(&args),
+            "shard" => cmd_shard(&args),
+            "select-stream" => cmd_select_stream(&args),
             "train" => cmd_train(&args),
             "train-mlp" => cmd_train_mlp(&args),
             "run" => cmd_run(&args),

@@ -35,8 +35,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coreset::{
-    group_by_class, split_budget, NativePairwise, Selector, SelectorConfig, StopRule,
-    WeightedCoreset,
+    group_by_class, split_budget, MemShards, NativePairwise, Selector, SelectorConfig, StopRule,
+    StreamConfig, StreamingSelector, WeightedCoreset,
 };
 use crate::data::Dataset;
 use crate::linalg::Matrix;
@@ -55,11 +55,12 @@ pub struct PipelineStats {
 /// Parallel per-class selection over a thread pool.
 pub struct SelectionPipeline {
     pool: ThreadPool,
+    workers: usize,
 }
 
 impl SelectionPipeline {
     pub fn new(workers: usize) -> Self {
-        SelectionPipeline { pool: ThreadPool::new(workers) }
+        SelectionPipeline { pool: ThreadPool::new(workers), workers: workers.max(1) }
     }
 
     /// Run CRAIG selection sharded by class.  A thin parallel caller of
@@ -69,8 +70,30 @@ impl SelectionPipeline {
     /// [`Selector::select_class`] — so the merged coreset is identical
     /// to the sequential path (verified by
     /// `rust/tests/pipeline_invariants.rs` under both sim stores).
+    ///
+    /// With `cfg.stream_shards > 1` the run instead goes through the
+    /// out-of-core merge-and-reduce path ([`crate::coreset::stream`]),
+    /// the pipeline's worker count doubling as the shard fan-out width
+    /// (output-invariant either way).
     pub fn select(&self, ds: &Dataset, cfg: &SelectorConfig) -> (WeightedCoreset, PipelineStats) {
         let t0 = std::time::Instant::now();
+        if cfg.stream_shards > 1 {
+            let shards = MemShards::new(&ds.x, &ds.y, ds.num_classes, cfg.stream_shards, cfg.seed);
+            let mut scfg = StreamConfig::new(cfg.clone());
+            scfg.workers = self.workers;
+            let mut streamer = StreamingSelector::new(self.workers);
+            let mut engine = NativePairwise;
+            let (res, _) = streamer
+                .select(&shards, &scfg, &mut engine)
+                .expect("in-memory streaming performs no I/O");
+            let stats = PipelineStats {
+                classes: res.class_sizes.len(),
+                selected: res.coreset.indices.len(),
+                evaluations: res.evaluations,
+                select_seconds: t0.elapsed().as_secs_f64(),
+            };
+            return (res.coreset, stats);
+        }
         let n = ds.n();
         let groups = group_by_class(&ds.y, ds.num_classes, cfg.per_class);
         let sizes: Vec<usize> = groups.iter().map(Vec::len).collect();
@@ -258,6 +281,25 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(stats.classes, 2);
         assert!(stats.select_seconds > 0.0);
+    }
+
+    #[test]
+    fn streamed_pipeline_matches_streamed_select() {
+        let ds = synthetic::covtype_like(500, 8);
+        let cfg = SelectorConfig {
+            budget: Budget::Count(40),
+            stream_shards: 3,
+            ..Default::default()
+        };
+        let pipe = SelectionPipeline::new(2);
+        let (wc, stats) = pipe.select(&ds, &cfg);
+        let mut eng = crate::coreset::NativePairwise;
+        let direct = crate::coreset::select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+        assert_eq!(wc.indices, direct.coreset.indices, "pipeline ≡ free select when streaming");
+        assert_eq!(wc.gamma, direct.coreset.gamma);
+        assert_eq!(stats.selected, 40);
+        let total: f32 = wc.gamma.iter().sum();
+        assert_eq!(total, 500.0);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 
-use crate::coreset::{self, PairwiseEngine, Selector, WeightedCoreset};
+use crate::coreset::{self, EpochSelector, PairwiseEngine, WeightedCoreset};
 use crate::data::Dataset;
 use crate::linalg;
 use crate::metrics::Stopwatch;
@@ -90,7 +90,7 @@ fn full_coreset(n: usize) -> WeightedCoreset {
 fn select_subset(
     mode: &SubsetMode,
     train: &Dataset,
-    selector: &mut Selector,
+    selector: &mut EpochSelector,
     engine: &mut dyn PairwiseEngine,
     epoch: usize,
 ) -> (WeightedCoreset, f64) {
@@ -142,8 +142,10 @@ pub fn train_logreg(
 
     // One selector for the whole run: with `reselect_every > 0` the
     // workspace stays warm across reselections (one-shot runs pay one
-    // cold pass either way).
-    let mut selector = Selector::new();
+    // cold pass either way).  `SelectorConfig::stream_shards > 1`
+    // routes each (re)selection through the out-of-core
+    // merge-and-reduce path with the same warm-buffer economics.
+    let mut selector = EpochSelector::new();
 
     // Initial selection (preprocessing; charged to select time).
     let (mut subset, mut epsilon) =
@@ -285,7 +287,7 @@ pub fn train_logreg_weights(
     let d = prob.dim();
     let mut w = vec![0.0f32; d];
     let mut rng = Rng::new(cfg.seed);
-    let mut selector = Selector::new();
+    let mut selector = EpochSelector::new();
     let (subset, _) = select_subset(&cfg.subset, train, &mut selector, engine, 0);
     let mut order: Vec<usize> = (0..subset.indices.len()).collect();
     let mut grad = vec![0.0f32; d];

@@ -9,7 +9,9 @@
 
 use anyhow::Result;
 
-use crate::coreset::{self, Budget, PairwiseEngine, Selector, SelectorConfig, WeightedCoreset};
+use crate::coreset::{
+    self, Budget, EpochSelector, PairwiseEngine, SelectorConfig, WeightedCoreset,
+};
 use crate::data::Dataset;
 use crate::linalg;
 use crate::metrics::Stopwatch;
@@ -58,16 +60,20 @@ fn full_coreset(n: usize) -> WeightedCoreset {
 }
 
 /// Select on proxy features: per class, distances between `p − y` rows
-/// bound gradient distances (Eq. 16).  The caller's [`Selector`] keeps
-/// its workspace across epochs, so every reselection after the first
-/// reuses the kernel/similarity/coverage buffers (Sec. 3.4 protocol:
-/// this path runs once per epoch — the warm path is the hot path).
+/// bound gradient distances (Eq. 16).  The caller's [`EpochSelector`]
+/// keeps its workspace across epochs, so every reselection after the
+/// first reuses the kernel/similarity/coverage buffers (Sec. 3.4
+/// protocol: this path runs once per epoch — the warm path is the hot
+/// path).  With `cfg.stream_shards > 1` each reselection streams
+/// merge-and-reduce over stratified proxy shards instead — the opt-in
+/// that keeps per-epoch similarity memory bounded when `n²` over the
+/// proxies would not fit.
 fn select_neural(
     mode: &SubsetMode,
     mlp: &mut Mlp,
     params: &[f32],
     train: &Dataset,
-    selector: &mut Selector,
+    selector: &mut EpochSelector,
     engine: &mut dyn PairwiseEngine,
     epoch: usize,
 ) -> (WeightedCoreset, f64) {
@@ -118,8 +124,9 @@ pub fn train_mlp(
     let mut train_sw = Stopwatch::new();
 
     // One selector for the whole run: per-epoch reselections after the
-    // first reuse its workspace buffers instead of re-allocating them.
-    let mut selector = Selector::new();
+    // first reuse its workspace buffers instead of re-allocating them
+    // (streamed or in-memory, per `SelectorConfig::stream_shards`).
+    let mut selector = EpochSelector::new();
 
     let (mut subset, mut epsilon) = select_sw.time(|| {
         select_neural(&cfg.subset, &mut mlp, &params, train, &mut selector, engine, 0)
@@ -266,6 +273,28 @@ mod tests {
         assert!(dl >= d0);
         assert!(dl <= tr.n());
         assert!(h.subset_size <= tr.n() / 4);
+        assert!(h.last().select_s > 0.0);
+    }
+
+    #[test]
+    fn streamed_reselection_trains_and_bounds_subset() {
+        // Opt-in out-of-core reselection: every epoch's proxy selection
+        // runs merge-and-reduce over 4 stratified shards.  The run must
+        // train normally and keep the weighted-coreset invariants.
+        let (tr, te) = split(400);
+        let mut cfg = NeuralConfig { epochs: 4, hidden: 16, ..Default::default() };
+        cfg.subset = SubsetMode::Craig {
+            cfg: SelectorConfig {
+                budget: Budget::Fraction(0.2),
+                stream_shards: 4,
+                ..Default::default()
+            },
+            reselect_every: 1,
+        };
+        let mut eng = NativePairwise;
+        let h = train_mlp(&tr, &te, &cfg, &mut eng).unwrap();
+        assert!(h.subset_size > 0 && h.subset_size <= tr.n() / 4);
+        assert!(h.last().train_loss.is_finite());
         assert!(h.last().select_s > 0.0);
     }
 

@@ -151,6 +151,7 @@ fn full_select_identical_across_parallelism() {
                     seed: 5,
                     parallelism: width,
                     sim_store: store,
+                    stream_shards: 0,
                 };
                 let mut eng = craig::coreset::NativePairwise;
                 let res = craig::coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);

@@ -106,6 +106,7 @@ fn blocked_selection_through_selector_tiled_columns() {
             seed: 2,
             parallelism: width,
             sim_store: SimStorePolicy::Blocked,
+            stream_shards: 0,
         };
         let mut eng = craig::coreset::NativePairwise;
         let res = craig::coreset::select(&x, &labels, 1, &cfg, &mut eng);
@@ -134,6 +135,7 @@ fn large_single_class_blocked_never_materializes_n_squared() {
         seed: 1,
         parallelism: 8,
         sim_store: SimStorePolicy::Blocked,
+        stream_shards: 0,
     };
     let mut selector = Selector::new();
     let mut eng = craig::coreset::NativePairwise;

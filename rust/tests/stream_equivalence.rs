@@ -1,0 +1,171 @@
+//! Streaming merge-and-reduce equivalence and degradation suite
+//! (ISSUE 4 satellite):
+//!
+//! * a 1-shard stream — in-memory *and* through an on-disk shard set —
+//!   reproduces `coreset::select` bitwise (indices and γ);
+//! * a K-shard stream's facility-location objective stays ≥ 0.9× the
+//!   in-memory objective on synthetic mixtures;
+//! * shard manifests round-trip and reassemble the dataset bitwise;
+//! * sharding and streaming are deterministic under the seed and
+//!   invariant to worker count.
+
+use std::path::PathBuf;
+
+use craig::coreset::{
+    self, Budget, DenseSim, FacilityLocation, MemShards, NativePairwise, SelectorConfig,
+    SimStorePolicy, StreamConfig, StreamingSelector,
+};
+use craig::data::shard::{write_shards, ShardSet};
+use craig::data::synthetic;
+
+fn tempdir(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("craig-stream-eq-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+#[test]
+fn one_shard_stream_bitwise_reproduces_in_memory_select() {
+    let ds = synthetic::covtype_like(700, 0);
+    let cfg = SelectorConfig { budget: Budget::Fraction(0.1), ..Default::default() };
+    let mut eng = NativePairwise;
+    let inmem = coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+
+    // In-memory 1-shard stream.
+    let shards = MemShards::new(&ds.x, &ds.y, ds.num_classes, 1, cfg.seed);
+    let mut streamer = StreamingSelector::new(4);
+    let (mem_res, mem_stats) =
+        streamer.select(&shards, &StreamConfig::new(cfg.clone()), &mut eng).unwrap();
+    assert_eq!(mem_res.coreset.indices, inmem.coreset.indices, "indices must be bitwise-equal");
+    assert_eq!(mem_res.coreset.gamma, inmem.coreset.gamma, "γ must be bitwise-equal");
+    assert_eq!(mem_res.f_value, inmem.f_value);
+    assert_eq!(mem_res.epsilon, inmem.epsilon);
+    assert_eq!(mem_stats.shards, 1);
+
+    // On-disk 1-shard stream: LIBSVM write → parse round-trips floats
+    // bitwise, so even the disk path must match exactly.
+    let dir = tempdir("one-shard");
+    let set = write_shards(&ds, 1, cfg.seed, &dir).unwrap();
+    let (disk_res, _) = StreamingSelector::new(2)
+        .select(&set, &StreamConfig::new(cfg), &mut eng)
+        .unwrap();
+    assert_eq!(disk_res.coreset.indices, inmem.coreset.indices, "disk path diverged");
+    assert_eq!(disk_res.coreset.gamma, inmem.coreset.gamma);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn k_shard_stream_objective_within_ten_percent() {
+    // Per-class facility-location value of the streamed selection vs the
+    // in-memory selection, measured on the full dataset's similarities.
+    let ds = synthetic::covtype_like(1500, 2);
+    let cfg = SelectorConfig { budget: Budget::Count(90), ..Default::default() };
+    let mut eng = NativePairwise;
+    let inmem = coreset::select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+
+    let shards = MemShards::new(&ds.x, &ds.y, 2, 5, cfg.seed);
+    let mut streamer = StreamingSelector::new(3);
+    let (stream, stats) =
+        streamer.select(&shards, &StreamConfig::new(cfg), &mut eng).unwrap();
+    assert_eq!(stream.coreset.indices.len(), 90);
+    assert!(stats.union_size > 90, "derived budgets oversample for the reduce round");
+    assert!(stats.merge_ratio < 1.0);
+
+    let mut f_stream = 0.0f64;
+    let mut f_inmem = 0.0f64;
+    for (class, idx) in ds.class_indices().into_iter().enumerate() {
+        let class_x = ds.x.gather_rows(&idx);
+        let sim = DenseSim::from_features(&class_x);
+        let mut fl = FacilityLocation::new(&sim);
+        let local = |sel: &[usize]| -> Vec<usize> {
+            sel.iter()
+                .filter_map(|g| idx.iter().position(|&i| i == *g))
+                .collect()
+        };
+        let s = local(&stream.coreset.indices);
+        let m = local(&inmem.coreset.indices);
+        assert!(!s.is_empty() && !m.is_empty(), "class {class} must be represented");
+        f_stream += fl.eval_set(&s);
+        f_inmem += fl.eval_set(&m);
+    }
+    assert!(
+        f_stream >= 0.9 * f_inmem,
+        "stream objective {f_stream} below 0.9× in-memory {f_inmem}"
+    );
+}
+
+#[test]
+fn on_disk_manifest_round_trip_preserves_everything() {
+    let ds = synthetic::ijcnn1_like(600, 4);
+    let dir = tempdir("manifest");
+    let written = write_shards(&ds, 4, 9, &dir).unwrap();
+    let loaded = ShardSet::load(&dir).unwrap();
+    assert_eq!(loaded.n, written.n);
+    assert_eq!(loaded.d, written.d);
+    assert_eq!(loaded.num_classes, written.num_classes);
+    assert_eq!(loaded.shards, written.shards);
+    // Stratification recorded in the manifest matches reality, and the
+    // shards reassemble the dataset bitwise.
+    let reader = craig::data::shard::ShardReader::new(&loaded);
+    let mut covered = 0usize;
+    for (k, shard) in reader.iter().enumerate() {
+        let shard = shard.unwrap();
+        let mut counts = vec![0usize; loaded.num_classes];
+        for (r, &g) in shard.global_idx.iter().enumerate() {
+            counts[shard.data.y[r] as usize] += 1;
+            assert_eq!(shard.data.x.row(r), ds.x.row(g));
+            assert_eq!(shard.data.y[r], ds.y[g]);
+        }
+        assert_eq!(counts, loaded.shards[k].class_counts, "shard {k} manifest counts");
+        covered += shard.data.n();
+    }
+    assert_eq!(covered, 600);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn streaming_deterministic_under_seed_and_worker_count() {
+    let ds = synthetic::covtype_like(800, 6);
+    let cfg = SelectorConfig { budget: Budget::Fraction(0.08), seed: 13, ..Default::default() };
+    let mut eng = NativePairwise;
+    let run = |workers: usize, seed: u64| {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        let shards = MemShards::new(&ds.x, &ds.y, 2, 4, c.seed);
+        let mut streamer = StreamingSelector::new(workers);
+        let (res, _) = streamer.select(&shards, &StreamConfig::new(c), &mut eng).unwrap();
+        (res.coreset.indices, res.coreset.gamma)
+    };
+    let base = run(1, 13);
+    for workers in [2usize, 4, 8] {
+        assert_eq!(run(workers, 13), base, "workers={workers} must not change the coreset");
+    }
+    // And the seed genuinely matters (different shard deal + rng).
+    assert_ne!(run(2, 14).0, base.0, "a different seed must change the selection");
+}
+
+#[test]
+fn memory_budget_bounds_dense_buffers_out_of_core() {
+    // n large enough that the full n² buffer (4n² bytes) dwarfs the
+    // budget: the stream must finish with every dense buffer under the
+    // per-shard budget — the out-of-core guarantee of the subsystem.
+    let n = 4000usize;
+    let ds = synthetic::covtype_like(n, 1);
+    let mem_budget = 1_000_000usize; // 1 MB
+    let cfg = SelectorConfig {
+        budget: Budget::Fraction(0.02),
+        sim_store: SimStorePolicy::Auto { mem_budget_bytes: mem_budget },
+        ..Default::default()
+    };
+    let shards = MemShards::new(&ds.x, &ds.y, 2, 8, cfg.seed);
+    let mut streamer = StreamingSelector::new(2);
+    let mut eng = NativePairwise;
+    let (res, stats) = streamer.select(&shards, &StreamConfig::new(cfg), &mut eng).unwrap();
+    assert!(stats.peak_dense_bytes <= mem_budget, "peak {} > budget", stats.peak_dense_bytes);
+    let full = SimStorePolicy::dense_bytes(n);
+    assert!((stats.peak_dense_bytes as u128) < full, "never the full n² allocation ({full} B)");
+    let total: f32 = res.coreset.gamma.iter().sum();
+    assert_eq!(total, n as f32, "γ still covers the whole dataset");
+}
