@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         momentum: false,
         seed: 1,
         subset,
+        ..Default::default()
     };
     let runs = [
         ("full", mk(SubsetMode::Full)),

@@ -1,53 +1,54 @@
-//! Quickstart: select a CRAIG coreset and train on it — the 60-second
-//! tour of the public API.
+//! Quickstart: describe a run declaratively, execute it, read the
+//! manifest — the 60-second tour of the public API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! Everything here is one composition — data → embedding → selection →
+//! training — captured by a typed [`RunSpec`] built fluently (spec
+//! files in `examples/specs/` are the same thing in TOML; run one with
+//! `craig run examples/specs/smoke.toml`).
 
-use craig::coreset::{self, Budget, NativePairwise, SelectorConfig};
-use craig::data::synthetic;
 use craig::optim::LrSchedule;
-use craig::rng::Rng;
-use craig::trainer::convex::{train_logreg, ConvexConfig};
-use craig::trainer::SubsetMode;
+use craig::pipeline::Runner;
+use craig::spec::{RunSpec, SelectionMode};
+use craig::trainer::convex::IgMethod;
 
 fn main() -> anyhow::Result<()> {
-    // 1. A dataset (synthetic covtype stand-in; drop in a LIBSVM file via
-    //    craig::data::libsvm::load for the real thing).
-    let ds = synthetic::covtype_like(5000, 42);
-    let mut rng = Rng::new(42);
-    let (train, test) = ds.stratified_split(0.5, &mut rng);
-    println!("dataset: {} (train {} / test {})", train.source, train.n(), test.n());
+    // 1. Describe the experiment: synthetic covtype stand-in, 10%
+    //    per-class CRAIG coreset (lazy greedy on raw features), then
+    //    logistic regression on the weighted subset.
+    let spec = RunSpec::builder("quickstart")
+        .synthetic("covtype", 5000)
+        .seed(42)
+        .fraction(0.1)
+        .logreg(IgMethod::Sgd, 15, LrSchedule::ExpDecay { a0: 0.5, b: 0.9 })
+        .build()?;
 
-    // 2. Select a 10% weighted coreset (per class, lazy greedy).
-    let cfg = SelectorConfig { budget: Budget::Fraction(0.1), ..Default::default() };
-    let mut engine = NativePairwise;
-    let res = coreset::select(&train.x, &train.y, train.num_classes, &cfg, &mut engine);
-    println!(
-        "coreset: {} points, certified ε = {:.3}, γ_max = {}",
-        res.coreset.indices.len(),
-        res.epsilon,
-        res.coreset.gamma_max()
-    );
+    // The spec IS the experiment: print it, save it, re-run it with
+    // `craig run` — bitwise the same selection.
+    println!("--- effective spec ---\n{}", spec.to_toml());
 
-    // 3. Train logistic regression on the coreset vs the full data.
-    let mk = |subset| ConvexConfig {
-        schedule: LrSchedule::ExpDecay { a0: 0.5, b: 0.9 },
-        epochs: 15,
-        subset,
-        ..Default::default()
-    };
-    let full = train_logreg(&train, &test, &mk(SubsetMode::Full), &mut engine)?;
-    let craig_run = train_logreg(
-        &train,
-        &test,
-        &mk(SubsetMode::Craig { cfg, reselect_every: 0 }),
-        &mut engine,
-    )?;
+    // 2. Execute.  The Runner handles data → embedding → selection →
+    //    training and returns a full report (plus a JSON manifest when
+    //    the spec asks for one via .manifest("path.json")).
+    let mut runner = Runner::new();
+    let craig_run = runner.run(&spec)?;
 
-    println!("\n{:<8} {:>12} {:>10} {:>12}", "run", "train-loss", "test-err", "wall-clock");
-    for (tag, h) in [("full", &full), ("craig", &craig_run)] {
+    // 3. The full-data baseline is the same spec with selection turned
+    //    off — one field, not another code path.
+    let full_spec = RunSpec::builder("quickstart-full")
+        .synthetic("covtype", 5000)
+        .seed(42)
+        .mode(SelectionMode::Full)
+        .logreg(IgMethod::Sgd, 15, LrSchedule::ExpDecay { a0: 0.5, b: 0.9 })
+        .build()?;
+    let full_run = runner.run(&full_spec)?;
+
+    println!("{:<8} {:>12} {:>10} {:>12}", "run", "train-loss", "test-err", "wall-clock");
+    for (tag, rep) in [("craig", &craig_run), ("full", &full_run)] {
+        let h = rep.history.as_ref().expect("training run");
         println!(
             "{:<8} {:>12.5} {:>10.4} {:>10.2}s",
             tag,
@@ -56,9 +57,16 @@ fn main() -> anyhow::Result<()> {
             h.last().select_s + h.last().train_s
         );
     }
-    let speedup = full.last().train_s / craig_run.last().train_s.max(1e-9);
-    println!("\noptimization speedup: {speedup:.1}x (gradient evals/epoch: {} vs {})",
-        full.records[0].grad_evals, craig_run.records[0].grad_evals);
+    let (hc, hf) = (
+        craig_run.history.as_ref().unwrap(),
+        full_run.history.as_ref().unwrap(),
+    );
+    let speedup = hf.last().train_s / hc.last().train_s.max(1e-9);
+    println!(
+        "\noptimization speedup: {speedup:.1}x (gradient evals/epoch: {} vs {})",
+        hf.records[0].grad_evals, hc.records[0].grad_evals
+    );
+    println!("certified ε (Eq. 15) of the CRAIG subset: {:.3}", craig_run.epsilon);
     println!("(selection is a one-off preprocessing cost — it amortizes at the");
     println!(" paper's 581k-point scale; see benches/fig1 for the full accounting)");
     Ok(())

@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         momentum: false,
         seed: 1,
         subset,
+        ..Default::default()
     };
 
     let dir = craig::bench::results_dir();

@@ -43,7 +43,7 @@ use crate::coreset::{
 use crate::linalg::{self, Matrix};
 use crate::metrics::Summary;
 use crate::rng::Rng;
-use crate::util::ThreadPool;
+use crate::util::{git_rev, json_escape, json_num, ThreadPool};
 
 /// JSON schema version of `BENCH_selection.json`.
 pub const SCHEMA_VERSION: u32 = 3;
@@ -142,6 +142,7 @@ fn run_selection(
         parallelism: threads,
         sim_store: store,
         stream_shards: 0,
+        ..Default::default()
     };
     let mut engine = NativePairwise;
     let cs = selector.select_class(x, &idx, StopRule::Budget(r), &cfg, &mut engine);
@@ -199,6 +200,7 @@ fn run_stream(
         parallelism: 1,
         sim_store: SimStorePolicy::Auto { mem_budget_bytes: mem_budget },
         stream_shards: 0,
+        ..Default::default()
     };
     let shards = MemShards::new(x, labels, 1, k, cfg.seed);
     let mut scfg = StreamConfig::new(cfg);
@@ -370,51 +372,6 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
         stream_peak_dense_bytes,
         inmemory_peak_dense_bytes,
         parallel_matches_sequential: equivalent,
-    }
-}
-
-/// Resolve the git revision for the snapshot: `$GITHUB_SHA` in CI,
-/// `git rev-parse` locally, `"unknown"` offline.
-fn git_rev() -> String {
-    if let Ok(sha) = std::env::var("GITHUB_SHA") {
-        if !sha.is_empty() {
-            return sha;
-        }
-    }
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short=12", "HEAD"])
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .unwrap_or_else(|| "unknown".to_string())
-}
-
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-/// A JSON number literal (f64 `Display` round-trips and emits valid
-/// JSON for all finite values; non-finite degrades to `null`).
-fn json_num(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x}")
-    } else {
-        "null".to_string()
     }
 }
 

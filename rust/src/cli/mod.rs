@@ -147,6 +147,11 @@ impl Command {
                     }
                     out.flags.insert(name.to_string(), true);
                 }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                // Single-dash tokens are never valid here (options are
+                // `--name`); swallowing them as positionals would
+                // silently run with the flag discarded.
+                bail!("unknown option '{tok}' for '{}' (options use --name)", self.name);
             } else {
                 out.positional.push(tok.clone());
             }
@@ -166,6 +171,18 @@ impl Command {
     }
 }
 
+/// What a top-level argv resolves to.
+#[derive(Clone, Debug)]
+pub enum Dispatch {
+    /// Run subcommand `name` with its parsed arguments.
+    Command(&'static str, Args),
+    /// Requested help: print this text to stdout and exit 0
+    /// (`help`, `help <cmd>`, `--help`, `<cmd> --help`).
+    Help(String),
+    /// `--version` / `-V`: the caller prints its version line.
+    Version,
+}
+
 /// Top-level application: dispatches `argv[1]` to a subcommand.
 pub struct App {
     pub name: &'static str,
@@ -182,20 +199,38 @@ impl App {
         s
     }
 
-    /// Returns `(command_name, parsed_args)` or prints usage on help.
-    pub fn dispatch(&self, argv: &[String]) -> Result<(&'static str, Args)> {
-        if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
-            bail!("{}", self.usage());
+    fn find(&self, name: &str) -> Option<&Command> {
+        self.commands.iter().find(|c| c.name == name)
+    }
+
+    /// Resolve argv.  Errors (missing/unknown subcommand, bad flags)
+    /// carry the relevant usage text — the caller prints them to stderr
+    /// and exits nonzero; help/version requests come back as `Ok` so
+    /// they exit 0.
+    pub fn dispatch(&self, argv: &[String]) -> Result<Dispatch> {
+        if argv.is_empty() {
+            bail!("missing command\n\n{}", self.usage());
+        }
+        if argv[0] == "--version" || argv[0] == "-V" {
+            return Ok(Dispatch::Version);
+        }
+        if argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return match argv.get(1) {
+                // `help <cmd>` — that command's usage.
+                Some(name) => match self.find(name) {
+                    Some(cmd) => Ok(Dispatch::Help(cmd.usage())),
+                    None => bail!("unknown command '{name}'\n\n{}", self.usage()),
+                },
+                None => Ok(Dispatch::Help(self.usage())),
+            };
         }
         let cmd = self
-            .commands
-            .iter()
-            .find(|c| c.name == argv[0])
+            .find(&argv[0])
             .ok_or_else(|| anyhow::anyhow!("unknown command '{}'\n\n{}", argv[0], self.usage()))?;
-        if argv.iter().any(|a| a == "--help") {
-            bail!("{}", cmd.usage());
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            return Ok(Dispatch::Help(cmd.usage()));
         }
-        Ok((cmd.name, cmd.parse(&argv[1..])?))
+        Ok(Dispatch::Command(cmd.name, cmd.parse(&argv[1..])?))
     }
 }
 
@@ -254,11 +289,41 @@ mod tests {
     #[test]
     fn app_dispatch() {
         let app = App { name: "craig", about: "coresets", commands: vec![cmd()] };
-        let (name, a) = app.dispatch(&s(&["train", "--dataset", "x"])).unwrap();
-        assert_eq!(name, "train");
-        assert_eq!(a.opt("dataset"), Some("x"));
+        match app.dispatch(&s(&["train", "--dataset", "x"])).unwrap() {
+            Dispatch::Command(name, a) => {
+                assert_eq!(name, "train");
+                assert_eq!(a.opt("dataset"), Some("x"));
+            }
+            other => panic!("expected a command, got {other:?}"),
+        }
         assert!(app.dispatch(&s(&["bogus"])).is_err());
         assert!(app.dispatch(&s(&[])).is_err());
+    }
+
+    #[test]
+    fn help_and_version_dispatch_cleanly() {
+        let app = App { name: "craig", about: "coresets", commands: vec![cmd()] };
+        // `help` / `--help` resolve to Ok(Help) so the caller exits 0.
+        assert!(matches!(app.dispatch(&s(&["help"])).unwrap(), Dispatch::Help(_)));
+        assert!(matches!(app.dispatch(&s(&["--help"])).unwrap(), Dispatch::Help(_)));
+        // `help <cmd>` returns that command's usage.
+        match app.dispatch(&s(&["help", "train"])).unwrap() {
+            Dispatch::Help(text) => assert!(text.contains("--dataset"), "{text}"),
+            other => panic!("{other:?}"),
+        }
+        // `<cmd> --help` too.
+        assert!(matches!(app.dispatch(&s(&["train", "--help"])).unwrap(), Dispatch::Help(_)));
+        // `help <unknown>` is an error (nonzero exit).
+        let err = app.dispatch(&s(&["help", "bogus"])).unwrap_err().to_string();
+        assert!(err.contains("unknown command"), "{err}");
+        // --version resolves.
+        assert!(matches!(app.dispatch(&s(&["--version"])).unwrap(), Dispatch::Version));
+        assert!(matches!(app.dispatch(&s(&["-V"])).unwrap(), Dispatch::Version));
+        // `<cmd> -h` is help too, and stray single-dash tokens error
+        // instead of being swallowed as positionals.
+        assert!(matches!(app.dispatch(&s(&["train", "-h"])).unwrap(), Dispatch::Help(_)));
+        let err = app.dispatch(&s(&["train", "-seed"])).unwrap_err().to_string();
+        assert!(err.contains("-seed"), "{err}");
     }
 
     #[test]

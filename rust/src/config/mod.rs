@@ -4,8 +4,9 @@
 //! the launcher needs: `[section]` headers, `key = value` pairs with
 //! string / integer / float / boolean / homogeneous-array values, `#`
 //! comments, and dotted lookup (`section.key`).  Good error messages with
-//! line numbers; unknown keys are preserved so callers can validate
-//! against a schema (see [`Config::require_known`]).
+//! line numbers; every parsed key remembers its source line
+//! ([`Config::line_of`]) so schema layers like [`crate::spec`] can
+//! reject unknown keys and bad values with the offending line number.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -18,6 +19,9 @@ use anyhow::{bail, Context, Result};
 pub enum Value {
     Str(String),
     Int(i64),
+    /// Integer literals above `i64::MAX` (u64 range) — e.g. 64-bit rng
+    /// seeds, which must round-trip bitwise through spec files.
+    UInt(u64),
     Float(f64),
     Bool(bool),
     Array(Vec<Value>),
@@ -28,6 +32,7 @@ impl fmt::Display for Value {
         match self {
             Value::Str(s) => write!(f, "{s}"),
             Value::Int(i) => write!(f, "{i}"),
+            Value::UInt(u) => write!(f, "{u}"),
             Value::Float(x) => write!(f, "{x}"),
             Value::Bool(b) => write!(f, "{b}"),
             Value::Array(xs) => {
@@ -48,6 +53,10 @@ impl fmt::Display for Value {
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     values: BTreeMap<String, Value>,
+    /// Source line of every parsed key (absent for [`Config::set`]
+    /// overrides) — lets schema layers like [`crate::spec`] reject
+    /// unknown keys and bad values *with the offending line number*.
+    lines: BTreeMap<String, usize>,
 }
 
 fn parse_scalar(tok: &str, lineno: usize) -> Result<Value> {
@@ -66,6 +75,9 @@ fn parse_scalar(tok: &str, lineno: usize) -> Result<Value> {
     if let Ok(i) = t.parse::<i64>() {
         return Ok(Value::Int(i));
     }
+    if let Ok(u) = t.parse::<u64>() {
+        return Ok(Value::UInt(u));
+    }
     if let Ok(x) = t.parse::<f64>() {
         return Ok(Value::Float(x));
     }
@@ -76,6 +88,7 @@ impl Config {
     /// Parse from text.
     pub fn parse(text: &str) -> Result<Config> {
         let mut values = BTreeMap::new();
+        let mut lines = BTreeMap::new();
         let mut section = String::new();
         for (i, raw) in text.lines().enumerate() {
             let lineno = i + 1;
@@ -130,8 +143,9 @@ impl Config {
             if values.insert(full_key.clone(), value).is_some() {
                 bail!("line {lineno}: duplicate key '{full_key}'");
             }
+            lines.insert(full_key, lineno);
         }
-        Ok(Config { values })
+        Ok(Config { values, lines })
     }
 
     /// Load from a file.
@@ -148,11 +162,17 @@ impl Config {
     pub fn set(&mut self, key: &str, raw: &str) -> Result<()> {
         let v = parse_scalar(raw, 0).unwrap_or_else(|_| Value::Str(raw.to_string()));
         self.values.insert(key.to_string(), v);
+        self.lines.remove(key); // overrides have no source line
         Ok(())
     }
 
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.values.get(key)
+    }
+
+    /// Source line a key was parsed from (`None` for `--set` overrides).
+    pub fn line_of(&self, key: &str) -> Option<usize> {
+        self.lines.get(key).copied()
     }
 
     pub fn keys(&self) -> impl Iterator<Item = &str> {
@@ -170,7 +190,20 @@ impl Config {
     pub fn int(&self, key: &str) -> Result<i64> {
         match self.get(key) {
             Some(Value::Int(i)) => Ok(*i),
+            Some(Value::UInt(u)) => bail!("config key '{key}' is {u}, too large for int"),
             Some(v) => bail!("config key '{key}' is {v:?}, expected int"),
+            None => bail!("missing config key '{key}'"),
+        }
+    }
+
+    /// Unsigned integer: accepts any non-negative `Int` and the
+    /// above-`i64::MAX` `UInt` range (full-width rng seeds).
+    pub fn uint(&self, key: &str) -> Result<u64> {
+        match self.get(key) {
+            Some(Value::Int(i)) if *i >= 0 => Ok(*i as u64),
+            Some(Value::Int(i)) => bail!("config key '{key}' is {i}, expected ≥ 0"),
+            Some(Value::UInt(u)) => Ok(*u),
+            Some(v) => bail!("config key '{key}' is {v:?}, expected unsigned int"),
             None => bail!("missing config key '{key}'"),
         }
     }
@@ -179,6 +212,7 @@ impl Config {
         match self.get(key) {
             Some(Value::Float(x)) => Ok(*x),
             Some(Value::Int(i)) => Ok(*i as f64),
+            Some(Value::UInt(u)) => Ok(*u as f64),
             Some(v) => bail!("config key '{key}' is {v:?}, expected float"),
             None => bail!("missing config key '{key}'"),
         }
@@ -192,23 +226,6 @@ impl Config {
         }
     }
 
-    /// Typed getters with defaults.
-    pub fn str_or(&self, key: &str, default: &str) -> String {
-        self.str(key).map(str::to_string).unwrap_or_else(|_| default.to_string())
-    }
-
-    pub fn int_or(&self, key: &str, default: i64) -> i64 {
-        self.int(key).unwrap_or(default)
-    }
-
-    pub fn float_or(&self, key: &str, default: f64) -> f64 {
-        self.float(key).unwrap_or(default)
-    }
-
-    pub fn bool_or(&self, key: &str, default: bool) -> bool {
-        self.bool(key).unwrap_or(default)
-    }
-
     pub fn floats(&self, key: &str) -> Result<Vec<f64>> {
         match self.get(key) {
             Some(Value::Array(xs)) => xs
@@ -216,6 +233,7 @@ impl Config {
                 .map(|v| match v {
                     Value::Float(x) => Ok(*x),
                     Value::Int(i) => Ok(*i as f64),
+                    Value::UInt(u) => Ok(*u as f64),
                     other => bail!("array element {other:?} in '{key}' is not numeric"),
                 })
                 .collect(),
@@ -224,19 +242,6 @@ impl Config {
         }
     }
 
-    /// Validate that every present key is one of `known` — catches typos
-    /// in experiment configs before a multi-minute run starts.
-    pub fn require_known(&self, known: &[&str]) -> Result<()> {
-        for k in self.values.keys() {
-            if !known.contains(&k.as_str()) {
-                bail!(
-                    "unknown config key '{k}'; known keys: {}",
-                    known.join(", ")
-                );
-            }
-        }
-        Ok(())
-    }
 }
 
 #[cfg(test)]
@@ -273,13 +278,6 @@ sizes = [0.1, 0.2, 0.3]
     }
 
     #[test]
-    fn defaults() {
-        let c = Config::parse("").unwrap();
-        assert_eq!(c.int_or("missing", 7), 7);
-        assert_eq!(c.str_or("missing", "d"), "d");
-    }
-
-    #[test]
     fn errors_have_line_numbers() {
         let err = Config::parse("a = 1\nb 2\n").unwrap_err().to_string();
         assert!(err.contains("line 2"), "{err}");
@@ -293,17 +291,33 @@ sizes = [0.1, 0.2, 0.3]
     }
 
     #[test]
-    fn unknown_key_validation() {
-        let c = Config::parse("a = 1\nzz = 2\n").unwrap();
-        assert!(c.require_known(&["a"]).is_err());
-        assert!(c.require_known(&["a", "zz"]).is_ok());
-    }
-
-    #[test]
     fn set_overrides() {
         let mut c = Config::parse("a = 1\n").unwrap();
         c.set("a", "5").unwrap();
         assert_eq!(c.int("a").unwrap(), 5);
+    }
+
+    #[test]
+    fn u64_seeds_round_trip() {
+        // Integer literals above i64::MAX land in the UInt range so
+        // 64-bit rng seeds survive spec files bitwise.
+        let c = Config::parse("seed = 18446744073709551615\nsmall = 7\nneg = -2\n").unwrap();
+        assert_eq!(c.uint("seed").unwrap(), u64::MAX);
+        assert_eq!(c.uint("small").unwrap(), 7);
+        assert!(c.uint("neg").is_err());
+        assert!(c.int("seed").is_err(), "u64-range value must not silently truncate to int");
+        assert_eq!(c.get("seed").unwrap().to_string(), "18446744073709551615");
+    }
+
+    #[test]
+    fn line_of_tracks_keys() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.line_of("name"), Some(3));
+        assert_eq!(c.line_of("data.n"), Some(6));
+        assert_eq!(c.line_of("missing"), None);
+        let mut c = c;
+        c.set("data.n", "9").unwrap();
+        assert_eq!(c.line_of("data.n"), None, "overrides lose their line");
     }
 
     #[test]

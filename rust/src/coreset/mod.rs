@@ -26,7 +26,7 @@ pub use selector::{
     ClassSelection, SelectionWorkspace, Selector, SimStore, SimStorePolicy,
     DEFAULT_SIM_MEM_BUDGET,
 };
-pub use sim::{BlockedSim, DenseSim, RowWeightedSim, SimilaritySource};
+pub use sim::{BlockedSim, DenseSim, Metric, RowWeightedSim, SimilaritySource};
 pub use stream::{
     EpochSelector, MemShards, ShardSource, StreamConfig, StreamStats, StreamingSelector,
 };
@@ -46,7 +46,7 @@ pub enum Method {
 }
 
 /// Selection budget in user terms.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Budget {
     /// Fraction of each class (the paper's "10% subset").
     Fraction(f64),
@@ -74,6 +74,11 @@ pub struct SelectorConfig {
     /// blocked columns, or auto by memory budget (see
     /// [`selector::SimStorePolicy`]).
     pub sim_store: SimStorePolicy,
+    /// Distance metric the similarity transform is built on
+    /// ([`sim::Metric`]): euclidean (the paper's default, bitwise
+    /// unchanged) or cosine (gathered rows are unit-normalized before
+    /// the shared kernels run).
+    pub metric: Metric,
     /// Out-of-core fan-out: when > 1, the streaming-aware entry points
     /// ([`select`], both trainers, the pipeline) run merge-and-reduce
     /// over this many stratified shards ([`stream`]) instead of one
@@ -92,6 +97,7 @@ impl Default for SelectorConfig {
             seed: 0,
             parallelism: 1,
             sim_store: SimStorePolicy::default(),
+            metric: Metric::Euclidean,
             stream_shards: 0,
         }
     }

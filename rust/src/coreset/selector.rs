@@ -29,7 +29,7 @@
 //! sharding cannot perturb stochastic greedy.
 
 use crate::linalg::Matrix;
-use crate::rng::Rng;
+use crate::rng::{mix_seed, Rng};
 use crate::util::ThreadPool;
 
 use super::greedy::StopRule;
@@ -316,16 +316,6 @@ pub struct ClassSelection {
     pub store: SimStore,
 }
 
-/// Rng stream derivation: a pure function of the seed and a subproblem's
-/// first global index, so streams are identical no matter which worker
-/// runs the subproblem or in which order subproblems complete.  THE one
-/// mixing rule — per-class streams here, per-shard streams in
-/// [`crate::coreset::stream`] (which is why a stream whose single shard
-/// starts at index 0 reproduces the in-memory rng exactly).
-pub(crate) fn derive_seed(seed: u64, first_global_idx: usize) -> u64 {
-    seed ^ (first_global_idx as u64).wrapping_mul(0x9E37_79B9)
-}
-
 /// Gather `features[idx]` into a reusable row buffer.
 fn gather_rows_into(features: &Matrix, idx: &[usize], out: &mut Matrix) {
     out.rows = idx.len();
@@ -472,12 +462,17 @@ impl Selector {
         assert!(!idx.is_empty(), "empty class group");
         let n = idx.len();
         let pool = ThreadPool::scoped(cfg.parallelism);
-        let mut rng = Rng::new(derive_seed(cfg.seed, idx[0]));
+        let mut rng = Rng::new(mix_seed(cfg.seed, idx[0]));
         let store = cfg.sim_store.resolve(n);
         self.ws.calls += 1;
 
         let mut class_x = std::mem::replace(&mut self.ws.class_x, Matrix::zeros(0, 0));
         gather_rows_into(features, idx, &mut class_x);
+        // The metric rewrite happens on the gathered copy, before either
+        // store touches the rows — dense and blocked keep sharing one
+        // arithmetic path, so store parity is metric-independent.
+        // Euclidean is a bitwise no-op.
+        cfg.metric.prepare_rows(&mut class_x);
 
         let (sel, wc) = match store {
             SimStore::Dense => {

@@ -16,6 +16,69 @@
 use crate::linalg::{self, Matrix};
 use crate::util::{self, ThreadPool};
 
+/// Which distance the similarity transform is built on.
+///
+/// The paper's objective is metric-agnostic (any `d_ij` with
+/// `s_ij = d_max − d_ij` works); related work varies exactly this knob
+/// (AdaCore's curvature-aware embeddings, cosine-space proxies), so the
+/// metric is a first-class selection parameter rather than a property
+/// baked into the kernels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Metric {
+    /// `d_ij = ‖x_i − x_j‖₂` — the paper's `‖∇f_i − ∇f_j‖` metric.
+    #[default]
+    Euclidean,
+    /// Cosine distance, realized by scaling every row to unit L2 norm
+    /// and reusing the euclidean kernels: on normalized rows
+    /// `d²_ij = 2 − 2·cos θ_ij`, a monotone transform of cosine
+    /// distance.  Zero rows (no direction, so no cosine) are left
+    /// untouched: they sit at the sphere's center, squared distance 1
+    /// from every unit row — nearer than antipodal pairs (d² = 4), so
+    /// filter degenerate all-zero rows upstream if they must never
+    /// cover anything.  Because the rewrite happens *before* the kernels, the
+    /// dense and blocked stores still share one arithmetic path — every
+    /// store/engine/width parity guarantee of the euclidean path
+    /// (tests/selector_stores.rs) carries over verbatim.
+    Cosine,
+}
+
+impl Metric {
+    /// Parse a CLI/spec token: `euclidean` | `cosine`.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        match spec {
+            "euclidean" => Ok(Metric::Euclidean),
+            "cosine" => Ok(Metric::Cosine),
+            other => anyhow::bail!("unknown metric '{other}' (euclidean|cosine)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Euclidean => "euclidean",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    /// Rewrite gathered feature rows in place so the shared euclidean
+    /// distance kernels realize this metric (see [`Metric::Cosine`]).
+    /// Euclidean is the identity — a bitwise no-op, so the default
+    /// path is unchanged byte for byte.
+    pub fn prepare_rows(self, x: &mut Matrix) {
+        if self == Metric::Euclidean {
+            return;
+        }
+        for i in 0..x.rows {
+            let row = x.row_mut(i);
+            let nrm = linalg::norm2(row);
+            if nrm > 0.0 {
+                for v in row.iter_mut() {
+                    *v /= nrm;
+                }
+            }
+        }
+    }
+}
+
 /// Column-oriented access to the similarity matrix: facility-location
 /// gains need `s(i, j)` for a fixed candidate `j` against every `i`.
 ///
@@ -550,6 +613,46 @@ mod tests {
             ws.sim_col(j, &mut b);
             assert_eq!(a, b, "×1.0 must be bitwise identity");
         }
+    }
+
+    #[test]
+    fn metric_parse_and_names() {
+        assert_eq!(Metric::parse("euclidean").unwrap(), Metric::Euclidean);
+        assert_eq!(Metric::parse("cosine").unwrap(), Metric::Cosine);
+        assert!(Metric::parse("manhattan").is_err());
+        assert_eq!(Metric::default(), Metric::Euclidean);
+        assert_eq!(Metric::Cosine.name(), "cosine");
+    }
+
+    #[test]
+    fn euclidean_prepare_is_bitwise_noop() {
+        let x = feats(20, 5, 13);
+        let mut y = x.clone();
+        Metric::Euclidean.prepare_rows(&mut y);
+        assert_eq!(x.data, y.data);
+    }
+
+    #[test]
+    fn cosine_prepare_unit_normalizes_rows() {
+        let mut x = feats(30, 6, 14);
+        // Plant a zero row: it must survive untouched.
+        for v in x.row_mut(4).iter_mut() {
+            *v = 0.0;
+        }
+        Metric::Cosine.prepare_rows(&mut x);
+        for i in 0..30 {
+            let n = linalg::norm2(x.row(i));
+            if i == 4 {
+                assert_eq!(n, 0.0, "zero rows stay zero");
+            } else {
+                assert!((n - 1.0).abs() < 1e-5, "row {i} norm {n}");
+            }
+        }
+        // On unit rows self-similarity is still d_max and scale is gone:
+        // a row and a 100× copy of it land at distance 0.
+        let mut z = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 100.0, 200.0, 300.0]);
+        Metric::Cosine.prepare_rows(&mut z);
+        assert!(linalg::sqdist(z.row(0), z.row(1)) < 1e-10);
     }
 
     #[test]

@@ -34,8 +34,8 @@
 //! The output is a pure function of `(shard contents, StreamConfig)` —
 //! independent of worker count, scheduling, and workspace temperature.
 //! Per-shard rng streams derive from the shard's first global index
-//! through the same `seed ^ (first_idx · 0x9E3779B9)` rule the
-//! per-class streams use, and shard budgets apportion with the same
+//! through the same [`crate::rng::mix_seed`] rule the per-class
+//! streams use, and shard budgets apportion with the same
 //! largest-remainder rule as class budgets.  Consequently a **1-shard
 //! stream is bitwise-identical to the in-memory path**: the single
 //! shard preserves dataset order ([`stratified_assignment`]), its
@@ -50,9 +50,9 @@ use anyhow::{Context, Result};
 use crate::data::shard::{stratified_assignment, Shard, ShardReader, ShardSet};
 use crate::data::Dataset;
 use crate::linalg::Matrix;
+use crate::rng::mix_seed;
 use crate::util::{self, ThreadPool};
 
-use super::selector::derive_seed;
 use super::{
     count_shares, Budget, CoresetResult, NativePairwise, PairwiseEngine, Selector, SelectorConfig,
 };
@@ -273,7 +273,7 @@ fn run_one_shard(
     let mut scfg = cfg.selector.clone();
     scfg.budget = budget;
     scfg.stream_shards = 0; // a shard subproblem is in-memory by construction
-    scfg.seed = derive_seed(cfg.selector.seed, shard.global_idx[0]);
+    scfg.seed = mix_seed(cfg.selector.seed, shard.global_idx[0]);
     // Workers run the native pairwise path (the PJRT client is not
     // `Send` — the same restriction the pipeline's class shards have).
     let mut engine = NativePairwise;

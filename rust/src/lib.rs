@@ -22,6 +22,12 @@
 //! symbol is compiled and the crate builds, tests and benches fully
 //! offline — python never runs on the request path either way.
 //!
+//! The [`spec`] module is the declarative front door: a typed
+//! [`spec::RunSpec`] (data → embedding → selection → training →
+//! outputs) parseable from a TOML-subset spec file or built fluently,
+//! executed by [`pipeline::Runner`] with a JSON run manifest; the CLI
+//! subcommands are thin shims over it ([`spec::shim`]).
+//!
 //! Substrates ([`rng`], [`linalg`], [`data`], [`config`], [`cli`],
 //! [`metrics`], [`bench`], [`prop`], [`util`]) are implemented from
 //! scratch: the build environment's offline registry carries only the
@@ -43,6 +49,7 @@ pub mod pipeline;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod spec;
 pub mod trainer;
 pub mod util;
 

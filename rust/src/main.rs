@@ -1,151 +1,40 @@
 //! `craig` — the L3 coordinator CLI / launcher.
 //!
-//! Subcommands:
-//! * `info`         — environment, artifact registry, dataset summaries.
-//! * `select`       — run CRAIG selection, print coreset stats, dump CSV.
-//! * `shard`        — split a dataset into stratified on-disk shards
-//!                    (LIBSVM files + index sidecars + manifest).
-//! * `select-stream`— out-of-core merge-and-reduce selection over a
-//!                    shard directory (bounded-memory CRAIG).
-//! * `train`        — convex experiment (logreg; SGD/SAGA/SVRG ×
-//!                    full/craig/random), per-epoch CSV trace.
-//! * `train-mlp`    — neural experiment with per-epoch reselection.
-//! * `grad-error`   — Fig. 2 gradient-estimation error measurement.
-//! * `bench`        — fixed perf-snapshot suite; `--json` writes the
-//!                    schema'd `BENCH_selection.json` CI artifact.
+//! The primary entry point is **`craig run <spec.toml>`**: a declarative
+//! [`RunSpec`] (data → embedding → selection → training → outputs,
+//! see `craig::spec` and DESIGN.md §9) executed by the one
+//! [`Runner`], emitting a JSON run manifest.  The historical
+//! subcommands survive as thin shims that desugar their flags into the
+//! equivalent `RunSpec` (each takes `--print-spec` to dump it):
 //!
-//! Every run is reproducible from `--seed`; all randomness flows from it.
+//! * `run`          — execute a spec file (`--set k=v` overrides).
+//! * `select`       — CRAIG selection (shim).
+//! * `select-stream`— out-of-core merge-and-reduce selection (shim).
+//! * `train`        — convex logreg experiment (shim).
+//! * `train-mlp`    — neural experiment with reselection (shim).
+//! * `shard`        — split a dataset into stratified on-disk shards.
+//! * `info`         — environment, artifact registry, dataset summaries.
+//! * `grad-error`   — Fig. 2 gradient-estimation error measurement.
+//! * `bench`        — perf-snapshot suite (`BENCH_selection.json`).
+//!
+//! `craig help <subcommand>` prints one command's usage; `--version`
+//! prints the crate version + git revision.  Every run is reproducible
+//! from its seed; all randomness flows from it.
 
 use anyhow::Result;
 
-use craig::cli::{App, Args, Command};
-use craig::coreset::{self, Budget, Method, PairwiseEngine, SelectorConfig, SimStorePolicy};
+use craig::cli::{Args, Dispatch};
+use craig::coreset::{self, Budget, SelectorConfig};
 use craig::data::{synthetic, Dataset};
-use craig::metrics::CsvWriter;
-use craig::optim::LrSchedule;
+use craig::pipeline::Runner;
 use craig::rng::Rng;
-use craig::runtime;
-use craig::trainer::convex::{train_logreg, ConvexConfig, IgMethod};
-use craig::trainer::neural::{train_mlp, NeuralConfig};
-use craig::trainer::SubsetMode;
-use craig::csv_row;
-
-fn app() -> App {
-    App {
-        name: "craig",
-        about: "Coresets for Data-efficient Training (ICML 2020) — rust+JAX+Pallas reproduction",
-        commands: vec![
-            Command::new("info", "show environment, artifacts and dataset stats")
-                .opt_default("dataset", "covtype", "dataset to summarize")
-                .opt_default("n", "2000", "synthetic dataset size"),
-            Command::new("select", "run CRAIG coreset selection")
-                .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
-                .opt_default("n", "10000", "synthetic dataset size")
-                .opt_default("fraction", "0.1", "subset fraction per class")
-                .opt_default("method", "lazy", "lazy|naive|stochastic")
-                .opt_default("seed", "0", "rng seed")
-                .opt_default("parallelism", "1", "intra-class selection threads")
-                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
-                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
-                .opt_default("stream-shards", "0", "merge-and-reduce over K in-memory shards")
-                .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
-                .opt("out", "CSV path for the selected coreset"),
-            Command::new("shard", "split a dataset into stratified on-disk shards")
-                .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
-                .opt_default("n", "50000", "synthetic dataset size")
-                .opt("input", "LIBSVM file to shard (overrides --dataset)")
-                .opt_default("shards", "8", "shard count K")
-                .opt_default("seed", "0", "rng seed (data gen + stratified deal)")
-                .opt("out-dir", "output directory for shards + manifest (required)"),
-            Command::new("select-stream", "out-of-core merge-and-reduce CRAIG over shards")
-                .opt("shards-dir", "shard directory written by `craig shard` (required)")
-                .opt_default("fraction", "0.1", "final subset fraction per class")
-                .opt("count", "absolute final element count (overrides --fraction)")
-                .opt("shard-budget", "per-shard element count override")
-                .opt_default("method", "lazy", "lazy|naive|stochastic")
-                .opt_default("seed", "0", "rng seed")
-                .opt_default("workers", "4", "shard-level worker threads")
-                .opt_default("parallelism", "1", "intra-class selection threads")
-                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
-                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
-                .opt_default("engine", "auto", "reduce-round backend: native|xla|auto")
-                .opt("out", "CSV path for the selected coreset"),
-            Command::new("train", "convex experiment: logreg on full/craig/random")
-                .opt_default("dataset", "covtype", "dataset name")
-                .opt_default("n", "10000", "synthetic dataset size")
-                .opt_default("mode", "craig", "full|craig|random")
-                .opt_default("fraction", "0.1", "subset fraction")
-                .opt_default("method", "sgd", "sgd|saga|svrg")
-                .opt_default("epochs", "20", "epoch count")
-                .opt_default("batch", "10", "minibatch size (sgd)")
-                .opt_default("lam", "1e-5", "L2 regularization")
-                .opt_default("schedule", "exp:0.5:0.9", "lr schedule spec")
-                .opt_default("seed", "0", "rng seed")
-                .opt_default("parallelism", "1", "intra-class selection threads")
-                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
-                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
-                .opt_default("stream-shards", "0", "merge-and-reduce over K in-memory shards")
-                .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
-                .opt("out", "CSV path for the epoch trace"),
-            Command::new("train-mlp", "neural experiment with per-epoch reselection")
-                .opt_default("dataset", "mnist", "dataset name")
-                .opt_default("n", "2000", "synthetic dataset size")
-                .opt_default("mode", "craig", "full|craig|random")
-                .opt_default("fraction", "0.5", "subset fraction")
-                .opt_default("reselect", "1", "reselect every R epochs")
-                .opt_default("epochs", "10", "epoch count")
-                .opt_default("hidden", "100", "hidden units")
-                .opt_default("lr", "0.01", "constant learning rate")
-                .opt_default("seed", "0", "rng seed")
-                .opt_default("parallelism", "1", "intra-class selection threads")
-                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
-                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
-                .opt_default("stream-shards", "0", "streamed per-epoch reselection over K shards")
-                .opt("out", "CSV path for the epoch trace"),
-            Command::new("run", "run an experiment described by a config file")
-                .opt("config", "path to a TOML-subset experiment config")
-                .repeated("set", "override: --set key=value (repeatable)"),
-            Command::new("grad-error", "measure gradient-estimation error (Fig. 2)")
-                .opt_default("dataset", "covtype", "dataset name")
-                .opt_default("n", "4000", "synthetic dataset size")
-                .opt_default("fraction", "0.1", "subset fraction")
-                .opt_default("samples", "10", "sampled parameter points")
-                .opt_default("seed", "0", "rng seed"),
-            Command::new("bench", "fixed perf-snapshot suite for the selection hot path")
-                .flag("json", "write the schema'd snapshot file")
-                .flag("quick", "tiny suite (the CI smoke variant)")
-                .opt_default("threads", "4", "parallel leg thread count (vs 1 thread)")
-                .opt_default("out", "BENCH_selection.json", "snapshot path for --json"),
-        ],
-    }
-}
+use craig::spec::{self, shim, RunSpec, SelectionMode};
 
 fn load_dataset(a: &Args) -> Result<Dataset> {
     let name = a.opt("dataset").unwrap_or("covtype");
     let n: usize = a.parse_opt("n", 2000)?;
     let seed: u64 = a.parse_opt("seed", 0)?;
     synthetic::by_name(name, n, seed)
-}
-
-/// Resolve the pairwise backend through the [`runtime::Backend`] seam;
-/// `auto` = XLA when it is compiled in and artifacts exist.
-fn make_engine(spec: &str) -> Result<Box<dyn PairwiseEngine>> {
-    runtime::backend_by_name(spec)?.pairwise()
-}
-
-fn parse_method(s: &str) -> Result<Method> {
-    match s {
-        "lazy" => Ok(Method::Lazy),
-        "naive" => Ok(Method::Naive),
-        "stochastic" => Ok(Method::Stochastic { delta: 0.05 }),
-        other => anyhow::bail!("unknown selection method '{other}'"),
-    }
-}
-
-/// `--sim-store` + `--mem-budget` → the per-class store policy.
-fn parse_sim_store(a: &Args) -> Result<SimStorePolicy> {
-    let budget: usize = a.parse_opt("mem-budget", craig::coreset::DEFAULT_SIM_MEM_BUDGET)?;
-    SimStorePolicy::parse(a.opt("sim-store").unwrap_or("auto"), budget)
 }
 
 fn cmd_info(a: &Args) -> Result<()> {
@@ -179,51 +68,109 @@ fn cmd_info(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_select(a: &Args) -> Result<()> {
-    let ds = load_dataset(a)?;
-    let frac: f64 = a.parse_opt("fraction", 0.1)?;
-    let seed: u64 = a.parse_opt("seed", 0)?;
-    let cfg = SelectorConfig {
-        method: parse_method(a.opt("method").unwrap_or("lazy"))?,
-        budget: Budget::Fraction(frac),
-        per_class: true,
-        seed,
-        parallelism: a.parse_opt("parallelism", 1)?,
-        sim_store: parse_sim_store(a)?,
-        stream_shards: a.parse_opt("stream-shards", 0)?,
-    };
-    let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
-    let t0 = std::time::Instant::now();
-    let res = coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, engine.as_mut());
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "selected {} / {} points ({}) in {:.2}s  [engine={}, evals={}]",
-        res.coreset.indices.len(),
-        ds.n(),
-        ds.source,
-        dt,
-        engine.name(),
-        res.evaluations
-    );
-    println!("  per-class sizes: {:?}", res.class_sizes);
-    let store_names: Vec<&str> = res.stores.iter().map(|s| s.name()).collect();
-    println!("  sim stores: {store_names:?}");
-    println!("  certified epsilon (Eq. 15): {:.4}", res.epsilon);
-    println!("  gamma_max: {}", res.coreset.gamma_max());
-    let stats = coreset::diagnostics::subset_stats(&ds.x, &res.coreset);
-    println!(
-        "  coverage={:.4} redundancy={:.4} weight-gini={:.3}",
-        stats.coverage_dist, stats.redundancy_nn_dist, stats.weight_gini
-    );
-    if let Some(path) = a.opt("out") {
-        let mut w = CsvWriter::create(std::path::Path::new(path), &["index", "gamma"])?;
-        for (i, g) in res.coreset.indices.iter().zip(&res.coreset.gamma) {
-            w.row(&csv_row![i, g])?;
+/// Execute (or just print) a desugared spec — the one body behind every
+/// shim subcommand and `craig run`.
+fn run_spec(spec: RunSpec, print_only: bool) -> Result<()> {
+    if print_only {
+        print!("{}", spec.to_toml());
+        return Ok(());
+    }
+    let report = Runner::new().run(&spec)?;
+    print_report(&report);
+    Ok(())
+}
+
+/// Human-readable run summary (the manifest is the machine face).
+fn print_report(rep: &craig::pipeline::RunReport) {
+    let sp = &rep.spec;
+    if let Some(c) = &rep.coreset {
+        println!(
+            "[{}] selected {} / {} points in {:.2}s  [engine={}, mode={}, method={}, \
+             metric={}, evals={}]",
+            sp.name,
+            c.indices.len(),
+            rep.dataset_n,
+            rep.timings.select_s,
+            rep.engine_name,
+            sp.selection.mode.name(),
+            spec::method_name(sp.selection.method),
+            sp.embedding.metric.name(),
+            rep.evaluations,
+        );
+        if !rep.class_sizes.is_empty() {
+            println!("  per-class sizes: {:?}", rep.class_sizes);
         }
-        w.flush()?;
+        if !rep.stores.is_empty() {
+            let names: Vec<&str> = rep.stores.iter().map(|s| s.name()).collect();
+            println!("  sim stores: {names:?}");
+        }
+        if sp.selection.mode == SelectionMode::Craig {
+            println!("  certified epsilon (Eq. 15): {:.4}", rep.epsilon);
+            println!("  gamma_max: {}", c.gamma_max());
+        }
+        if let Some(d) = &rep.diagnostics {
+            println!(
+                "  coverage={:.4} redundancy={:.4} weight-gini={:.3}",
+                d.coverage_dist, d.redundancy_nn_dist, d.weight_gini
+            );
+        }
+        if let Some(st) = &rep.stream {
+            println!(
+                "  stream: {} shards, union {} → {} (merge ratio {:.3}); \
+                 shard phase {:.2}s, reduce {:.2}s",
+                st.shards,
+                st.union_size,
+                st.selected,
+                st.merge_ratio,
+                st.shard_phase_seconds,
+                st.reduce_seconds
+            );
+            println!(
+                "  peak_dense_bytes={} peak_resident_bytes≤{}",
+                st.peak_dense_bytes, st.peak_resident_bytes
+            );
+        }
+    }
+    if let Some(h) = &rep.history {
+        println!(
+            "[{}] mode={} subset={}  final: loss={:.5} test_metric={:.4}  \
+             select={:.2}s train={:.2}s",
+            sp.name,
+            sp.selection.mode.name(),
+            h.subset_size,
+            h.last().train_loss,
+            h.last().test_metric,
+            h.last().select_s,
+            h.last().train_s
+        );
+    }
+    for path in [&sp.output.coreset_csv, &sp.output.history_csv, &sp.output.manifest]
+        .into_iter()
+        .flatten()
+    {
         println!("  wrote {path}");
     }
-    Ok(())
+}
+
+/// `craig run <spec.toml> [--set k=v]…` — the primary entry point.
+fn cmd_run(a: &Args) -> Result<()> {
+    let path = match a.opt("spec") {
+        Some(p) => p.to_string(),
+        None => a
+            .positional
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("usage: craig run <spec.toml> [--set key=value]"))?,
+    };
+    let mut cfg = craig::config::Config::load(std::path::Path::new(&path))?;
+    for ov in a.opt_all("set") {
+        let (k, v) = ov
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{ov}'"))?;
+        cfg.set(k, v)?;
+    }
+    let spec = RunSpec::from_config(&cfg)?;
+    run_spec(spec, a.flag("print-spec"))
 }
 
 /// `craig shard --out-dir DIR [--shards K]`: split a dataset (synthetic
@@ -235,6 +182,8 @@ fn cmd_shard(a: &Args) -> Result<()> {
     let seed: u64 = a.parse_opt("seed", 0)?;
     let ds = match a.opt("input") {
         Some(path) => craig::data::libsvm::load(std::path::Path::new(path), None)?,
+        // The `shard` command table seeds --n's default (50000), so the
+        // shared loader's fallback never engages here.
         None => load_dataset(a)?,
     };
     let t0 = std::time::Instant::now();
@@ -251,292 +200,6 @@ fn cmd_shard(a: &Args) -> Result<()> {
     );
     for (i, m) in set.shards.iter().enumerate() {
         println!("  shard {i:>3}: {:<22} n={:<7} classes={:?}", m.file, m.n, m.class_counts);
-    }
-    Ok(())
-}
-
-/// `craig select-stream --shards-dir DIR`: merge-and-reduce CRAIG over
-/// an on-disk shard set — per-shard memory bounded by `--mem-budget`,
-/// never the full n².  Exits nonzero if an `auto` store policy let a
-/// dense buffer exceed its budget (it cannot, by construction; the
-/// check turns that invariant into a CI-visible guarantee).
-fn cmd_select_stream(a: &Args) -> Result<()> {
-    use craig::coreset::{StreamConfig, StreamingSelector};
-    let dir = std::path::PathBuf::from(a.req("shards-dir")?);
-    let set = craig::data::shard::ShardSet::load(&dir)?;
-    let seed: u64 = a.parse_opt("seed", 0)?;
-    let budget = match a.opt("count") {
-        Some(_) => Budget::Count(a.parse_opt("count", 0)?),
-        None => Budget::Fraction(a.parse_opt("fraction", 0.1)?),
-    };
-    let sim_store = parse_sim_store(a)?;
-    let selector_cfg = SelectorConfig {
-        method: parse_method(a.opt("method").unwrap_or("lazy"))?,
-        budget,
-        per_class: true,
-        seed,
-        parallelism: a.parse_opt("parallelism", 1)?,
-        sim_store,
-        stream_shards: 0, // explicit shard source; the knob is for in-memory callers
-    };
-    let mut scfg = StreamConfig::new(selector_cfg);
-    scfg.workers = a.parse_opt("workers", 4)?;
-    if a.opt("shard-budget").is_some() {
-        scfg.shard_budget = Some(Budget::Count(a.parse_opt("shard-budget", 0)?));
-    }
-    let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
-    let mut streamer = StreamingSelector::new(scfg.workers);
-    let t0 = std::time::Instant::now();
-    let (res, stats) = streamer.select(&set, &scfg, engine.as_mut())?;
-    let dt = t0.elapsed().as_secs_f64();
-    let gamma_total: f32 = res.coreset.gamma.iter().sum();
-    println!(
-        "stream-selected {} / {} points from {} shards in {dt:.2}s  [engine={}, evals={}]",
-        res.coreset.indices.len(),
-        set.n,
-        stats.shards,
-        engine.name(),
-        stats.evaluations
-    );
-    println!(
-        "  union {} → {} (merge ratio {:.3}); shard phase {:.2}s, reduce {:.2}s",
-        stats.union_size,
-        stats.selected,
-        stats.merge_ratio,
-        stats.shard_phase_seconds,
-        stats.reduce_seconds
-    );
-    println!(
-        "  peak_dense_bytes={} peak_resident_bytes≤{} (full n² would be {} bytes)",
-        stats.peak_dense_bytes,
-        stats.peak_resident_bytes,
-        craig::coreset::SimStorePolicy::dense_bytes(set.n)
-    );
-    println!("  per-class sizes: {:?}; Σγ = {gamma_total} (n = {})", res.class_sizes, set.n);
-    if let craig::coreset::SimStorePolicy::Auto { mem_budget_bytes } = sim_store {
-        anyhow::ensure!(
-            stats.peak_dense_bytes <= mem_budget_bytes,
-            "dense similarity buffer ({} B) exceeded the memory budget ({mem_budget_bytes} B)",
-            stats.peak_dense_bytes
-        );
-        println!("  memory bound verified: peak dense ≤ {mem_budget_bytes} B budget");
-    }
-    if let Some(path) = a.opt("out") {
-        let mut w = CsvWriter::create(std::path::Path::new(path), &["index", "gamma"])?;
-        for (i, g) in res.coreset.indices.iter().zip(&res.coreset.gamma) {
-            w.row(&csv_row![i, g])?;
-        }
-        w.flush()?;
-        println!("  wrote {path}");
-    }
-    Ok(())
-}
-
-fn subset_mode(a: &Args, frac: f64, reselect: usize, seed: u64) -> Result<SubsetMode> {
-    let parallelism: usize = a.parse_opt("parallelism", 1)?;
-    let sim_store = parse_sim_store(a)?;
-    let stream_shards: usize = a.parse_opt("stream-shards", 0)?;
-    Ok(match a.opt("mode").unwrap_or("craig") {
-        "full" => SubsetMode::Full,
-        "craig" => SubsetMode::Craig {
-            cfg: SelectorConfig {
-                budget: Budget::Fraction(frac),
-                seed,
-                parallelism,
-                sim_store,
-                stream_shards,
-                ..Default::default()
-            },
-            reselect_every: reselect,
-        },
-        "random" => SubsetMode::Random {
-            budget: Budget::Fraction(frac),
-            reselect_every: reselect,
-            seed,
-        },
-        other => anyhow::bail!("unknown mode '{other}' (full|craig|random)"),
-    })
-}
-
-fn write_history(path: &str, h: &craig::trainer::History) -> Result<()> {
-    let mut w = CsvWriter::create(
-        std::path::Path::new(path),
-        &[
-            "epoch",
-            "train_loss",
-            "test_metric",
-            "lr",
-            "select_s",
-            "train_s",
-            "grad_evals",
-            "distinct_points",
-        ],
-    )?;
-    for r in &h.records {
-        w.row(&csv_row![
-            r.epoch,
-            r.train_loss,
-            r.test_metric,
-            r.lr,
-            r.select_s,
-            r.train_s,
-            r.grad_evals,
-            r.distinct_points_used
-        ])?;
-    }
-    w.flush()?;
-    println!("wrote {path}");
-    Ok(())
-}
-
-fn cmd_train(a: &Args) -> Result<()> {
-    let ds = load_dataset(a)?;
-    let seed: u64 = a.parse_opt("seed", 0)?;
-    let mut rng = Rng::new(seed);
-    let (train, test) = ds.stratified_split(0.5, &mut rng);
-    let frac: f64 = a.parse_opt("fraction", 0.1)?;
-    let cfg = ConvexConfig {
-        method: IgMethod::parse(a.opt("method").unwrap_or("sgd"))?,
-        schedule: LrSchedule::parse(a.opt("schedule").unwrap_or("exp:0.5:0.9"))?,
-        epochs: a.parse_opt("epochs", 20)?,
-        batch_size: a.parse_opt("batch", 10)?,
-        lam: a.parse_opt("lam", 1e-5f32)?,
-        seed,
-        subset: subset_mode(a, frac, 0, seed)?,
-    };
-    let mut engine = make_engine(a.opt("engine").unwrap_or("auto"))?;
-    let h = train_logreg(&train, &test, &cfg, engine.as_mut())?;
-    println!(
-        "mode={} method={} subset={}  final: loss={:.5} test_err={:.4}  select={:.2}s train={:.2}s",
-        cfg.subset.tag(),
-        cfg.method.name(),
-        h.subset_size,
-        h.last().train_loss,
-        h.last().test_metric,
-        h.last().select_s,
-        h.last().train_s
-    );
-    if let Some(p) = a.opt("out") {
-        write_history(p, &h)?;
-    }
-    Ok(())
-}
-
-fn cmd_train_mlp(a: &Args) -> Result<()> {
-    let ds = load_dataset(a)?;
-    let seed: u64 = a.parse_opt("seed", 0)?;
-    let mut rng = Rng::new(seed);
-    let (train, test) = ds.stratified_split(0.8, &mut rng);
-    let frac: f64 = a.parse_opt("fraction", 0.5)?;
-    let reselect: usize = a.parse_opt("reselect", 1)?;
-    let lr: f32 = a.parse_opt("lr", 0.01f32)?;
-    let cfg = NeuralConfig {
-        hidden: a.parse_opt("hidden", 100)?,
-        epochs: a.parse_opt("epochs", 10)?,
-        schedule: craig::optim::schedules::Warmup {
-            warmup_epochs: 0,
-            inner: LrSchedule::Const { a0: lr },
-        },
-        seed,
-        subset: subset_mode(a, frac, reselect, seed)?,
-        ..Default::default()
-    };
-    // Proxy features are low-dimensional (c per row); the native engine
-    // is the right default for the per-epoch reselection path.
-    let mut engine = make_engine("native")?;
-    let h = train_mlp(&train, &test, &cfg, engine.as_mut())?;
-    println!(
-        "mode={} subset={}  final: loss={:.5} test_acc={:.4}  select={:.2}s train={:.2}s",
-        cfg.subset.tag(),
-        h.subset_size,
-        h.last().train_loss,
-        h.last().test_metric,
-        h.last().select_s,
-        h.last().train_s
-    );
-    if let Some(p) = a.opt("out") {
-        write_history(p, &h)?;
-    }
-    Ok(())
-}
-
-/// Config-file driven experiment (the launcher path): see
-/// `configs/fig1_sgd.toml` for the schema.
-fn cmd_run(a: &Args) -> Result<()> {
-    let path = a.req("config")?;
-    let mut cfg = craig::config::Config::load(std::path::Path::new(path))?;
-    for ov in a.opt_all("set") {
-        let (k, v) = ov
-            .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{ov}'"))?;
-        cfg.set(k, v)?;
-    }
-    cfg.require_known(&[
-        "name",
-        "data.dataset",
-        "data.n",
-        "data.train_frac",
-        "data.seed",
-        "train.mode",
-        "train.method",
-        "train.fraction",
-        "train.epochs",
-        "train.batch",
-        "train.lam",
-        "train.schedule",
-        "train.reselect_every",
-        "out.csv",
-    ])?;
-
-    let ds = synthetic::by_name(
-        &cfg.str_or("data.dataset", "covtype"),
-        cfg.int_or("data.n", 10_000) as usize,
-        cfg.int_or("data.seed", 0) as u64,
-    )?;
-    let seed = cfg.int_or("data.seed", 0) as u64;
-    let mut rng = Rng::new(seed);
-    let (train, test) = ds.stratified_split(cfg.float_or("data.train_frac", 0.5), &mut rng);
-
-    let frac = cfg.float_or("train.fraction", 0.1);
-    let reselect = cfg.int_or("train.reselect_every", 0) as usize;
-    let mode = match cfg.str_or("train.mode", "craig").as_str() {
-        "full" => SubsetMode::Full,
-        "craig" => SubsetMode::Craig {
-            cfg: SelectorConfig { budget: Budget::Fraction(frac), seed, ..Default::default() },
-            reselect_every: reselect,
-        },
-        "random" => SubsetMode::Random {
-            budget: Budget::Fraction(frac),
-            reselect_every: reselect,
-            seed,
-        },
-        other => anyhow::bail!("train.mode '{other}' (full|craig|random)"),
-    };
-    let tcfg = ConvexConfig {
-        method: IgMethod::parse(&cfg.str_or("train.method", "sgd"))?,
-        schedule: LrSchedule::parse(&cfg.str_or("train.schedule", "exp:0.5:0.9"))?,
-        epochs: cfg.int_or("train.epochs", 20) as usize,
-        batch_size: cfg.int_or("train.batch", 10) as usize,
-        lam: cfg.float_or("train.lam", 1e-5) as f32,
-        seed,
-        subset: mode,
-    };
-    let mut engine = make_engine("auto")?;
-    let h = train_logreg(&train, &test, &tcfg, engine.as_mut())?;
-    println!(
-        "[{}] mode={} method={} subset={} final: loss={:.5} test_err={:.4} \
-         ({:.2}s select, {:.2}s train)",
-        cfg.str_or("name", "experiment"),
-        tcfg.subset.tag(),
-        tcfg.method.name(),
-        h.subset_size,
-        h.last().train_loss,
-        h.last().test_metric,
-        h.last().select_s,
-        h.last().train_s,
-    );
-    if let Ok(out) = cfg.str("out.csv") {
-        write_history(out, &h)?;
     }
     Ok(())
 }
@@ -619,23 +282,38 @@ fn cmd_bench(a: &Args) -> Result<()> {
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let result = match app().dispatch(&argv) {
-        Ok((name, args)) => match name {
-            "info" => cmd_info(&args),
-            "select" => cmd_select(&args),
-            "shard" => cmd_shard(&args),
-            "select-stream" => cmd_select_stream(&args),
-            "train" => cmd_train(&args),
-            "train-mlp" => cmd_train_mlp(&args),
-            "run" => cmd_run(&args),
-            "grad-error" => cmd_grad_error(&args),
-            "bench" => cmd_bench(&args),
-            _ => unreachable!(),
-        },
+    let dispatch = match shim::app().dispatch(&argv) {
+        Ok(d) => d,
         Err(e) => {
             eprintln!("{e}");
             std::process::exit(2);
         }
+    };
+    let result = match dispatch {
+        Dispatch::Version => {
+            println!("craig {} (rev {})", craig::VERSION, craig::util::git_rev());
+            Ok(())
+        }
+        Dispatch::Help(text) => {
+            println!("{text}");
+            Ok(())
+        }
+        Dispatch::Command(name, args) => match name {
+            "info" => cmd_info(&args),
+            "run" => cmd_run(&args),
+            "select" => shim::spec_for_select(&args)
+                .and_then(|s| run_spec(s, args.flag("print-spec"))),
+            "shard" => cmd_shard(&args),
+            "select-stream" => shim::spec_for_select_stream(&args)
+                .and_then(|s| run_spec(s, args.flag("print-spec"))),
+            "train" => shim::spec_for_train(&args)
+                .and_then(|s| run_spec(s, args.flag("print-spec"))),
+            "train-mlp" => shim::spec_for_train_mlp(&args)
+                .and_then(|s| run_spec(s, args.flag("print-spec"))),
+            "grad-error" => cmd_grad_error(&args),
+            "bench" => cmd_bench(&args),
+            _ => unreachable!(),
+        },
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");

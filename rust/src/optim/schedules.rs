@@ -62,16 +62,36 @@ impl LrSchedule {
             "kinv" => Ok(LrSchedule::KInverse { a0: f(1)?, b: f(2)? }),
             "power" => Ok(LrSchedule::Power { a0: f(1)?, tau: f(2)? }),
             "step" => {
+                // An empty milestones field is a valid (constant-rate)
+                // schedule: `spec_str` of `milestones: vec![]` emits
+                // `step:a:f:` and must parse back losslessly.
                 let milestones = parts
                     .get(3)
                     .ok_or_else(|| anyhow::anyhow!("step schedule needs milestones"))?
                     .split(';')
+                    .filter(|m| !m.is_empty())
                     .map(|m| m.parse::<usize>())
                     .collect::<Result<Vec<_>, _>>()
                     .map_err(|e| anyhow::anyhow!("schedule '{s}': {e}"))?;
                 Ok(LrSchedule::Step { a0: f(1)?, factor: f(2)?, milestones })
             }
             other => anyhow::bail!("unknown schedule kind '{other}'"),
+        }
+    }
+
+    /// Inverse of [`LrSchedule::parse`]: the compact string form used
+    /// by the CLI and spec files.  `parse(s.spec_str()) == s` for every
+    /// schedule (f32 `Display` emits shortest round-tripping decimals).
+    pub fn spec_str(&self) -> String {
+        match self {
+            LrSchedule::Const { a0 } => format!("const:{a0}"),
+            LrSchedule::ExpDecay { a0, b } => format!("exp:{a0}:{b}"),
+            LrSchedule::KInverse { a0, b } => format!("kinv:{a0}:{b}"),
+            LrSchedule::Power { a0, tau } => format!("power:{a0}:{tau}"),
+            LrSchedule::Step { a0, factor, milestones } => {
+                let ms: Vec<String> = milestones.iter().map(|m| m.to_string()).collect();
+                format!("step:{a0}:{factor}:{}", ms.join(";"))
+            }
         }
     }
 }
@@ -107,6 +127,20 @@ mod tests {
         let p = LrSchedule::Power { a0: 1.0, tau: 0.5 };
         assert_eq!(p.at(0), 1.0);
         assert!((p.at(3) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spec_str_round_trips() {
+        for s in [
+            LrSchedule::Const { a0: 0.01 },
+            LrSchedule::ExpDecay { a0: 0.5, b: 0.9 },
+            LrSchedule::KInverse { a0: 0.1, b: 0.25 },
+            LrSchedule::Power { a0: 1.0, tau: 0.5 },
+            LrSchedule::Step { a0: 0.1, factor: 0.1, milestones: vec![10, 20] },
+            LrSchedule::Step { a0: 0.1, factor: 0.5, milestones: vec![] },
+        ] {
+            assert_eq!(LrSchedule::parse(&s.spec_str()).unwrap(), s, "{}", s.spec_str());
+        }
     }
 
     #[test]

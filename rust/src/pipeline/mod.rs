@@ -1,6 +1,11 @@
 //! Streaming selection/training pipeline — the data-pipeline face of the
 //! L3 coordinator.
 //!
+//! [`runner`] holds the [`Runner`]: the one engine that executes a
+//! declarative [`crate::spec::RunSpec`] end to end (data → embedding →
+//! selection → training → outputs + JSON run manifest).  The CLI — both
+//! `craig run` and the legacy shims — is a thin caller of it.
+//!
 //! Two stages connected by bounded channels (backpressure by
 //! construction, `std::sync::mpsc::sync_channel`):
 //!
@@ -28,6 +33,10 @@
 //! intra-class width and scheduling — verified by
 //! `rust/tests/pipeline_invariants.rs` and
 //! `rust/tests/parallel_equivalence.rs`.
+
+pub mod runner;
+
+pub use runner::{PhaseTimings, RunReport, Runner, MANIFEST_SCHEMA_VERSION};
 
 use std::sync::mpsc;
 use std::sync::Arc;

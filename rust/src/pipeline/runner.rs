@@ -1,0 +1,603 @@
+//! The [`Runner`]: one engine that executes any [`RunSpec`].
+//!
+//! Dataflow (DESIGN.md §9):
+//!
+//! ```text
+//!   DataSpec ──▶ rows ──▶ EmbeddingSpec ──▶ SelectionSpec ──▶ C, γ
+//!     synthetic | libsvm    raw | grad-proxy   craig | random
+//!     | shard-dir           × metric           (in-memory | streamed
+//!                                              | out-of-core)
+//!                                    │
+//!                          TrainSpec ▼ (none | logreg | mlp)
+//!                                    │
+//!            OutputSpec ◀── history, coreset, JSON run manifest
+//! ```
+//!
+//! Every run yields a [`RunReport`]; [`RunReport::manifest_json`]
+//! serializes it as the run manifest (effective spec, git rev, seed,
+//! per-phase timings, objective, store resolutions) on the same JSON
+//! conventions as `BENCH_selection.json`.  Execution is deterministic
+//! in the spec: the legacy CLI shims and `craig run` produce
+//! bitwise-identical selections because both are *this* code path.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coreset::{
+    self, diagnostics::SubsetStats, Budget, EpochSelector, SimStore, SimStorePolicy, StreamConfig,
+    StreamStats, StreamingSelector, WeightedCoreset,
+};
+use crate::csv_row;
+use crate::data::shard::ShardSet;
+use crate::data::{libsvm, synthetic};
+use crate::metrics::CsvWriter;
+use crate::optim::schedules::Warmup;
+use crate::optim::LrSchedule;
+use crate::rng::Rng;
+use crate::runtime;
+use crate::spec::{method_name, DataSpec, RunSpec, SelectionMode, TrainSpec};
+use crate::trainer::convex::{train_logreg, ConvexConfig};
+use crate::trainer::neural::{train_mlp, NeuralConfig};
+use crate::trainer::{History, SubsetMode};
+use crate::util::{git_rev, json_escape, json_num};
+
+/// JSON schema version of the run manifest.
+pub const MANIFEST_SCHEMA_VERSION: u32 = 1;
+
+/// Wall-clock cost of each phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimings {
+    /// Dataset load / generation (+ shard-manifest read).
+    pub load_s: f64,
+    /// Selection (for trainers: cumulative in-training selection).
+    pub select_s: f64,
+    /// Optimization.
+    pub train_s: f64,
+    /// Whole run up to output writing (the manifest carries this value,
+    /// so it is captured before the outputs themselves are serialized —
+    /// CSV/manifest write time is intentionally outside it).
+    pub total_s: f64,
+}
+
+/// Everything one executed spec produced.
+#[derive(Debug)]
+pub struct RunReport {
+    /// The effective spec (what [`RunSpec::to_toml`] serializes).
+    pub spec: RunSpec,
+    pub git_rev: String,
+    /// Resolved pairwise backend name (`native` / `xla`).
+    pub engine_name: String,
+    pub dataset_n: usize,
+    pub dataset_d: usize,
+    pub dataset_classes: usize,
+    /// The selected coreset (selection-only runs; trainers consume
+    /// theirs internally).
+    pub coreset: Option<WeightedCoreset>,
+    /// Per-class subset sizes (CRAIG selection-only runs).
+    pub class_sizes: Vec<usize>,
+    /// Which similarity store served each class ([`SimStorePolicy`]
+    /// resolutions, class order).
+    pub stores: Vec<SimStore>,
+    /// Certified ε (Eq. 15); for trainers, the last selection's ε.
+    pub epsilon: f64,
+    /// Facility-location objective across classes (CRAIG selection).
+    pub f_value: f64,
+    /// Gain evaluations.
+    pub evaluations: usize,
+    /// Streaming telemetry (stream_shards > 1 or shard-dir sources).
+    pub stream: Option<StreamStats>,
+    /// Subset diagnostics (in-memory selection-only runs).
+    pub diagnostics: Option<SubsetStats>,
+    /// Per-epoch trace (training runs).
+    pub history: Option<History>,
+    pub timings: PhaseTimings,
+}
+
+/// Executes [`RunSpec`]s.  Stateless today; a value so callers can hold
+/// one across runs when it grows warm state.
+#[derive(Default)]
+pub struct Runner;
+
+impl Runner {
+    pub fn new() -> Self {
+        Runner
+    }
+
+    /// Execute `spec` end to end: load → embed → select → train →
+    /// write outputs (CSVs + manifest per [`crate::spec::OutputSpec`]).
+    pub fn run(&mut self, spec: &RunSpec) -> Result<RunReport> {
+        spec.validate()?;
+        let t_total = Instant::now();
+        let mut report = match &spec.data {
+            DataSpec::ShardDir { dir } => self.run_shard_dir(spec, dir)?,
+            _ => self.run_in_memory(spec)?,
+        };
+        report.timings.total_s = t_total.elapsed().as_secs_f64();
+        report.write_outputs()?;
+        Ok(report)
+    }
+
+    /// Synthetic / LIBSVM sources: rows resident, selection in-memory
+    /// (optionally streamed over `stream_shards` in-memory shards),
+    /// then the optional trainer.
+    fn run_in_memory(&mut self, spec: &RunSpec) -> Result<RunReport> {
+        let t_load = Instant::now();
+        let ds = match &spec.data {
+            DataSpec::Synthetic { dataset, n } => synthetic::by_name(dataset, *n, spec.seed)?,
+            DataSpec::Libsvm { path } => libsvm::load(Path::new(path), None)?,
+            DataSpec::ShardDir { .. } => unreachable!("dispatched to run_shard_dir"),
+        };
+        let load_s = t_load.elapsed().as_secs_f64();
+        let mut engine = runtime::backend_by_name(&spec.engine)?.pairwise()?;
+        let mut report = blank_report(spec, engine.name(), ds.n(), ds.d(), ds.num_classes);
+        report.timings.load_s = load_s;
+
+        match &spec.train {
+            TrainSpec::None => {
+                let t_sel = Instant::now();
+                match spec.selection.mode {
+                    SelectionMode::Craig => {
+                        let scfg = spec.selector_config();
+                        let mut selector = EpochSelector::new();
+                        let res =
+                            selector.select(&ds.x, &ds.y, ds.num_classes, &scfg, engine.as_mut());
+                        report.timings.select_s = t_sel.elapsed().as_secs_f64();
+                        report.stream = selector.last_stream.take();
+                        verify_stream_budget(&report.stream, scfg.sim_store)?;
+                        // The rows are resident even when selection was
+                        // streamed over in-memory shards — diagnostics
+                        // are always computable here (legacy `select`
+                        // printed them unconditionally).
+                        report.diagnostics =
+                            Some(coreset::diagnostics::subset_stats(&ds.x, &res.coreset));
+                        report.class_sizes = res.class_sizes;
+                        report.stores = res.stores;
+                        report.epsilon = res.epsilon;
+                        report.f_value = res.f_value;
+                        report.evaluations = res.evaluations;
+                        report.coreset = Some(res.coreset);
+                    }
+                    SelectionMode::Random => {
+                        let mut rng = Rng::new(spec.seed);
+                        let wc = coreset::random_baseline(
+                            ds.n(),
+                            &ds.y,
+                            ds.num_classes,
+                            &spec.selection.budget,
+                            true,
+                            &mut rng,
+                        );
+                        report.timings.select_s = t_sel.elapsed().as_secs_f64();
+                        report.diagnostics =
+                            Some(coreset::diagnostics::subset_stats(&ds.x, &wc));
+                        report.coreset = Some(wc);
+                    }
+                    SelectionMode::Full => unreachable!("validate rejects full without trainer"),
+                }
+            }
+            TrainSpec::Logreg { method, epochs, batch, lam, schedule, train_frac } => {
+                let mut rng = Rng::new(spec.seed);
+                let (train, test) = ds.stratified_split(*train_frac, &mut rng);
+                let cfg = ConvexConfig {
+                    method: *method,
+                    schedule: schedule.clone(),
+                    epochs: *epochs,
+                    batch_size: *batch,
+                    lam: *lam,
+                    seed: spec.seed,
+                    subset: subset_mode(spec, 0),
+                };
+                let h = train_logreg(&train, &test, &cfg, engine.as_mut())?;
+                finish_train(&mut report, h);
+            }
+            TrainSpec::Mlp { hidden, epochs, lr, reselect, train_frac } => {
+                let mut rng = Rng::new(spec.seed);
+                let (train, test) = ds.stratified_split(*train_frac, &mut rng);
+                let cfg = NeuralConfig {
+                    hidden: *hidden,
+                    epochs: *epochs,
+                    schedule: Warmup {
+                        warmup_epochs: 0,
+                        inner: LrSchedule::Const { a0: *lr },
+                    },
+                    seed: spec.seed,
+                    subset: subset_mode(spec, *reselect),
+                    embedding: spec.embedding.kind,
+                    ..Default::default()
+                };
+                let h = train_mlp(&train, &test, &cfg, engine.as_mut())?;
+                finish_train(&mut report, h);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Shard-dir sources: out-of-core merge-and-reduce selection, the
+    /// reduce round on the configured backend.  Exits with an error if
+    /// an `Auto` store policy ever let a dense buffer exceed its budget
+    /// (it cannot, by construction — the check turns the invariant into
+    /// a CI-visible guarantee).
+    fn run_shard_dir(&mut self, spec: &RunSpec, dir: &str) -> Result<RunReport> {
+        let t_load = Instant::now();
+        let set = ShardSet::load(Path::new(dir))?;
+        let load_s = t_load.elapsed().as_secs_f64();
+        let mut engine = runtime::backend_by_name(&spec.engine)?.pairwise()?;
+        let mut report = blank_report(spec, engine.name(), set.n, set.d, set.num_classes);
+        report.timings.load_s = load_s;
+
+        let mut scfg = StreamConfig::new(spec.selector_config());
+        scfg.workers = spec.selection.workers;
+        if let Some(b) = spec.selection.shard_budget {
+            scfg.shard_budget = Some(Budget::Count(b));
+        }
+        let mut streamer = StreamingSelector::new(scfg.workers);
+        let t_sel = Instant::now();
+        let (res, stats) = streamer.select(&set, &scfg, engine.as_mut())?;
+        report.timings.select_s = t_sel.elapsed().as_secs_f64();
+        let stream = Some(stats);
+        verify_stream_budget(&stream, spec.selection.store)?;
+        report.stream = stream;
+        report.class_sizes = res.class_sizes;
+        report.stores = res.stores;
+        report.epsilon = res.epsilon;
+        report.f_value = res.f_value;
+        report.evaluations = res.evaluations;
+        report.coreset = Some(res.coreset);
+        Ok(report)
+    }
+}
+
+/// Fresh report shell for a resolved dataset.
+fn blank_report(
+    spec: &RunSpec,
+    engine_name: &str,
+    n: usize,
+    d: usize,
+    classes: usize,
+) -> RunReport {
+    RunReport {
+        spec: spec.clone(),
+        git_rev: git_rev(),
+        engine_name: engine_name.to_string(),
+        dataset_n: n,
+        dataset_d: d,
+        dataset_classes: classes,
+        coreset: None,
+        class_sizes: Vec::new(),
+        stores: Vec::new(),
+        epsilon: 0.0,
+        f_value: 0.0,
+        evaluations: 0,
+        stream: None,
+        diagnostics: None,
+        history: None,
+        timings: PhaseTimings::default(),
+    }
+}
+
+/// The one mode → [`SubsetMode`] desugaring for both trainers.
+fn subset_mode(spec: &RunSpec, reselect: usize) -> SubsetMode {
+    match spec.selection.mode {
+        SelectionMode::Full => SubsetMode::Full,
+        SelectionMode::Craig => SubsetMode::Craig {
+            cfg: spec.selector_config(),
+            reselect_every: reselect,
+        },
+        SelectionMode::Random => SubsetMode::Random {
+            budget: spec.selection.budget,
+            reselect_every: reselect,
+            seed: spec.seed,
+        },
+    }
+}
+
+/// Fold a training history into the report (timings come from the
+/// trainer's own stopwatch accounting).
+fn finish_train(report: &mut RunReport, h: History) {
+    report.epsilon = h.epsilon;
+    report.timings.select_s = h.last().select_s;
+    report.timings.train_s = h.last().train_s;
+    report.history = Some(h);
+}
+
+/// The memory-bound guarantee: a streamed run under an `Auto` store
+/// policy must never have materialized a dense buffer past the budget.
+fn verify_stream_budget(stream: &Option<StreamStats>, policy: SimStorePolicy) -> Result<()> {
+    if let (Some(stats), SimStorePolicy::Auto { mem_budget_bytes }) = (stream, policy) {
+        anyhow::ensure!(
+            stats.peak_dense_bytes <= mem_budget_bytes,
+            "dense similarity buffer ({} B) exceeded the memory budget ({mem_budget_bytes} B)",
+            stats.peak_dense_bytes
+        );
+    }
+    Ok(())
+}
+
+impl RunReport {
+    /// Coreset size (selection runs) or trained subset size.
+    pub fn selected(&self) -> usize {
+        match (&self.coreset, &self.history) {
+            (Some(c), _) => c.indices.len(),
+            (None, Some(h)) => h.subset_size,
+            _ => 0,
+        }
+    }
+
+    /// Σγ of the selected coreset (0 when the trainer consumed it).
+    pub fn gamma_sum(&self) -> f64 {
+        self.coreset
+            .as_ref()
+            .map(|c| c.gamma.iter().map(|&g| g as f64).sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Write the CSV / manifest outputs the spec asked for; returns the
+    /// paths written.
+    pub fn write_outputs(&self) -> Result<Vec<String>> {
+        let mut written = Vec::new();
+        if let (Some(path), Some(c)) = (&self.spec.output.coreset_csv, &self.coreset) {
+            let mut w = CsvWriter::create(Path::new(path), &["index", "gamma"])?;
+            for (i, g) in c.indices.iter().zip(&c.gamma) {
+                w.row(&csv_row![i, g])?;
+            }
+            w.flush()?;
+            written.push(path.clone());
+        }
+        if let (Some(path), Some(h)) = (&self.spec.output.history_csv, &self.history) {
+            write_history_csv(Path::new(path), h)?;
+            written.push(path.clone());
+        }
+        if let Some(path) = &self.spec.output.manifest {
+            std::fs::write(path, self.manifest_json())?;
+            written.push(path.clone());
+        }
+        Ok(written)
+    }
+
+    /// The run manifest (schema [`MANIFEST_SCHEMA_VERSION`]).
+    pub fn manifest_json(&self) -> String {
+        self.manifest_json_impl(true)
+    }
+
+    /// Manifest without the wall-clock phase object — byte-identical
+    /// across equivalent runs, the form the shim-equivalence tests
+    /// compare.
+    pub fn manifest_json_deterministic(&self) -> String {
+        self.manifest_json_impl(false)
+    }
+
+    fn manifest_json_impl(&self, with_timings: bool) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema_version\": {MANIFEST_SCHEMA_VERSION},\n"));
+        s.push_str("  \"kind\": \"run_manifest\",\n");
+        s.push_str(&format!("  \"name\": \"{}\",\n", json_escape(&self.spec.name)));
+        s.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&self.git_rev)));
+        s.push_str(&format!("  \"seed\": {},\n", self.spec.seed));
+        s.push_str(&format!("  \"engine\": \"{}\",\n", json_escape(&self.engine_name)));
+        s.push_str(&format!(
+            "  \"spec_toml\": \"{}\",\n",
+            json_escape(&self.spec.to_toml())
+        ));
+        s.push_str(&format!(
+            "  \"dataset\": {{\"n\": {}, \"d\": {}, \"classes\": {}}},\n",
+            self.dataset_n, self.dataset_d, self.dataset_classes
+        ));
+        if with_timings {
+            s.push_str(&format!(
+                "  \"phases\": {{\"load_s\": {}, \"select_s\": {}, \"train_s\": {}, \
+                 \"total_s\": {}}},\n",
+                json_num(self.timings.load_s),
+                json_num(self.timings.select_s),
+                json_num(self.timings.train_s),
+                json_num(self.timings.total_s)
+            ));
+        }
+        let class_sizes: Vec<String> = self.class_sizes.iter().map(|c| c.to_string()).collect();
+        let stores: Vec<String> =
+            self.stores.iter().map(|st| format!("\"{}\"", st.name())).collect();
+        s.push_str(&format!(
+            "  \"selection\": {{\"mode\": \"{}\", \"method\": \"{}\", \"metric\": \"{}\", \
+             \"embedding\": \"{}\", \"selected\": {}, \"class_sizes\": [{}], \
+             \"stores\": [{}], \"epsilon\": {}, \"f_value\": {}, \"evaluations\": {}, \
+             \"gamma_sum\": {}}},\n",
+            self.spec.selection.mode.name(),
+            method_name(self.spec.selection.method),
+            self.spec.embedding.metric.name(),
+            self.spec.embedding.kind.name(),
+            self.selected(),
+            class_sizes.join(", "),
+            stores.join(", "),
+            json_num(self.epsilon),
+            json_num(self.f_value),
+            self.evaluations,
+            json_num(self.gamma_sum())
+        ));
+        match &self.stream {
+            None => s.push_str("  \"stream\": null,\n"),
+            Some(st) => s.push_str(&format!(
+                "  \"stream\": {{\"shards\": {}, \"union_size\": {}, \"merge_ratio\": {}, \
+                 \"peak_dense_bytes\": {}, \"peak_resident_bytes\": {}, \"evaluations\": {}}},\n",
+                st.shards,
+                st.union_size,
+                json_num(st.merge_ratio),
+                st.peak_dense_bytes,
+                st.peak_resident_bytes,
+                st.evaluations
+            )),
+        }
+        match &self.diagnostics {
+            None => s.push_str("  \"diagnostics\": null,\n"),
+            Some(d) => s.push_str(&format!(
+                "  \"diagnostics\": {{\"coverage_dist\": {}, \"redundancy_nn_dist\": {}, \
+                 \"weight_gini\": {}}},\n",
+                json_num(d.coverage_dist),
+                json_num(d.redundancy_nn_dist),
+                json_num(d.weight_gini)
+            )),
+        }
+        match &self.history {
+            None => s.push_str("  \"train\": null\n"),
+            Some(h) => s.push_str(&format!(
+                "  \"train\": {{\"kind\": \"{}\", \"epochs\": {}, \"subset_size\": {}, \
+                 \"final_train_loss\": {}, \"final_test_metric\": {}, \"epsilon\": {}}}\n",
+                self.spec.train.kind_name(),
+                h.records.len(),
+                h.subset_size,
+                json_num(h.last().train_loss),
+                json_num(h.last().test_metric),
+                json_num(h.epsilon)
+            )),
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// The one epoch-trace CSV writer (previously duplicated in `main`).
+pub fn write_history_csv(path: &Path, h: &History) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "epoch",
+            "train_loss",
+            "test_metric",
+            "lr",
+            "select_s",
+            "train_s",
+            "grad_evals",
+            "distinct_points",
+        ],
+    )?;
+    for r in &h.records {
+        w.row(&csv_row![
+            r.epoch,
+            r.train_loss,
+            r.test_metric,
+            r.lr,
+            r.select_s,
+            r.train_s,
+            r.grad_evals,
+            r.distinct_points_used
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::{Metric, NativePairwise, SelectorConfig};
+    use crate::spec::RunSpecBuilder;
+    use crate::trainer::convex::IgMethod;
+
+    fn builder(name: &str) -> RunSpecBuilder {
+        RunSpec::builder(name)
+    }
+
+    #[test]
+    fn select_run_matches_direct_selection() {
+        // The Runner's craig path must be the same arithmetic as calling
+        // coreset::select with the desugared SelectorConfig.
+        let spec = builder("t").synthetic("covtype", 400).seed(3).fraction(0.1).build().unwrap();
+        let rep = Runner::new().run(&spec).unwrap();
+        let ds = synthetic::by_name("covtype", 400, 3).unwrap();
+        let cfg = SelectorConfig { budget: Budget::Fraction(0.1), seed: 3, ..Default::default() };
+        let mut eng = NativePairwise;
+        let direct = coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+        let c = rep.coreset.as_ref().unwrap();
+        assert_eq!(c.indices, direct.coreset.indices);
+        assert_eq!(c.gamma, direct.coreset.gamma);
+        assert_eq!(rep.f_value, direct.f_value);
+        assert_eq!(rep.dataset_n, 400);
+        assert!(rep.diagnostics.is_some());
+        assert!(rep.timings.total_s > 0.0);
+    }
+
+    #[test]
+    fn manifest_is_wellformed_and_deterministic_form_stable() {
+        let spec = builder("m")
+            .synthetic("ijcnn1", 300)
+            .metric(Metric::Cosine)
+            .count(20)
+            .build()
+            .unwrap();
+        let rep = Runner::new().run(&spec).unwrap();
+        let json = rep.manifest_json();
+        assert!(json.contains("\"kind\": \"run_manifest\""));
+        assert!(json.contains("\"schema_version\": 1"));
+        assert!(json.contains("\"metric\": \"cosine\""));
+        assert!(json.contains("\"phases\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        // The deterministic form drops only the timings.
+        let det = rep.manifest_json_deterministic();
+        assert!(!det.contains("\"phases\""));
+        let rep2 = Runner::new().run(&spec).unwrap();
+        assert_eq!(det, rep2.manifest_json_deterministic(), "same spec ⇒ same manifest");
+    }
+
+    #[test]
+    fn random_mode_selects_baseline() {
+        let spec = builder("r")
+            .synthetic("covtype", 300)
+            .mode(SelectionMode::Random)
+            .fraction(0.1)
+            .build()
+            .unwrap();
+        let rep = Runner::new().run(&spec).unwrap();
+        let c = rep.coreset.unwrap();
+        // Per-class rounding: ≈10% of 300 within ±1 per class.
+        assert!((28..=32).contains(&c.indices.len()), "{}", c.indices.len());
+        assert!(rep.f_value == 0.0 && rep.epsilon == 0.0);
+    }
+
+    #[test]
+    fn logreg_run_produces_history() {
+        let spec = builder("lr")
+            .synthetic("covtype", 400)
+            .fraction(0.2)
+            .logreg(IgMethod::Sgd, 4, LrSchedule::ExpDecay { a0: 0.3, b: 0.9 })
+            .build()
+            .unwrap();
+        let rep = Runner::new().run(&spec).unwrap();
+        let h = rep.history.as_ref().unwrap();
+        assert_eq!(h.records.len(), 4);
+        assert!(rep.epsilon > 0.0, "craig training must certify ε");
+        assert!(rep.coreset.is_none(), "the trainer consumes its coreset");
+        assert!(rep.manifest_json().contains("\"kind\": \"logreg\""));
+    }
+
+    #[test]
+    fn mlp_run_trains_on_proxies() {
+        let spec = builder("nn")
+            .synthetic("mnist", 200)
+            .fraction(0.5)
+            .mlp(16, 2, 0.01, 1)
+            .build()
+            .unwrap();
+        assert_eq!(spec.embedding.kind, crate::trainer::EmbeddingKind::GradProxy);
+        let rep = Runner::new().run(&spec).unwrap();
+        let h = rep.history.as_ref().unwrap();
+        assert_eq!(h.records.len(), 2);
+        assert!(h.last().train_loss.is_finite());
+    }
+
+    #[test]
+    fn streamed_select_records_stream_stats() {
+        let spec = builder("st")
+            .synthetic("covtype", 600)
+            .count(40)
+            .stream_shards(3)
+            .build()
+            .unwrap();
+        let rep = Runner::new().run(&spec).unwrap();
+        let st = rep.stream.as_ref().expect("stream telemetry");
+        assert_eq!(st.shards, 3);
+        assert_eq!(rep.coreset.as_ref().unwrap().indices.len(), 40);
+        assert!(rep.manifest_json().contains("\"shards\": 3"));
+    }
+}

@@ -6,6 +6,21 @@
 //! library flows from an explicit [`Rng`] so every experiment row in
 //! EXPERIMENTS.md is reproducible from its seed.
 
+/// THE subproblem seed-derivation rule: mix a run seed with a
+/// subproblem's first global index to get an independent, *pure*
+/// stream seed — per-class streams in [`crate::coreset::selector`],
+/// per-shard streams in [`crate::coreset::stream`].  One rule in one
+/// place so class order, sharding and worker scheduling can never
+/// perturb a stochastic selection, and so a stream whose single shard
+/// starts at index 0 reproduces the in-memory rng exactly
+/// (`mix_seed(s, 0) == s`).  The multiplier is the golden-ratio Weyl
+/// constant (as in [`splitmix64`]), truncated to 32 bits so the
+/// product spreads indices across the word without losing low bits.
+#[inline]
+pub fn mix_seed(seed: u64, first_global_idx: usize) -> u64 {
+    seed ^ (first_global_idx as u64).wrapping_mul(0x9E37_79B9)
+}
+
 /// SplitMix64 step — used to expand a single `u64` seed into a full
 /// Xoshiro state and to derive independent streams.
 #[inline]
@@ -172,6 +187,22 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix_seed_pins_exact_values() {
+        // The derivation rule is part of the determinism contract: any
+        // change silently reshuffles every stochastic selection and
+        // breaks the 1-shard-stream ≡ in-memory bitwise equivalence.
+        // Pin the exact outputs.
+        assert_eq!(mix_seed(0, 0), 0);
+        assert_eq!(mix_seed(0xDEAD_BEEF, 0), 0xDEAD_BEEF, "index 0 is the identity");
+        assert_eq!(mix_seed(0, 1), 0x9E37_79B9);
+        assert_eq!(mix_seed(0, 2), 0x1_3C6E_F372);
+        assert_eq!(mix_seed(1, 1), 0x9E37_79B8);
+        assert_eq!(mix_seed(42, 3), 7_963_307_265);
+        // Huge indices wrap rather than panic.
+        let _ = mix_seed(7, usize::MAX);
+    }
 
     #[test]
     fn deterministic_given_seed() {

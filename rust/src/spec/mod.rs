@@ -1,0 +1,1104 @@
+//! The declarative RunSpec API: one typed front door for
+//! **data → embedding → selection → training**.
+//!
+//! Every CRAIG experiment is the same composition — a dataset, a
+//! per-sample embedding, a submodular selection, an (optional) weighted
+//! IG training run, and some outputs.  Historically the composition was
+//! scattered across six CLI subcommands with hand-duplicated flag
+//! parsing and trainer-private embedding choices; this module makes it
+//! a value:
+//!
+//! * [`RunSpec`] — the typed description, composed of [`DataSpec`],
+//!   [`EmbeddingSpec`], [`SelectionSpec`], [`TrainSpec`] and
+//!   [`OutputSpec`].
+//! * **Spec files** — a hand-rolled zero-dependency TOML subset (the
+//!   [`crate::config`] substrate) with line-numbered errors and strict
+//!   unknown-key rejection, same hardening style as the LIBSVM parser.
+//!   [`RunSpec::to_toml`] emits the *effective* spec (every default
+//!   made explicit); parse → serialize → parse is idempotent.
+//! * **Builder** — [`RunSpec::builder`] for library users
+//!   (`examples/quickstart.rs` is the tour).
+//! * [`shim`] — the legacy CLI subcommands (`select`, `train`,
+//!   `train-mlp`, `select-stream`) desugared into `RunSpec`s, each with
+//!   `--print-spec` to dump the equivalent spec file.
+//!
+//! A spec is executed by [`crate::pipeline::Runner`], which emits a
+//! JSON run manifest (effective spec, git rev, seed, per-phase
+//! timings, objective, store resolutions).  Grammar, dataflow and the
+//! manifest schema are documented in DESIGN.md §9.
+
+pub mod shim;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::coreset::{Budget, Method, Metric, SimStorePolicy, DEFAULT_SIM_MEM_BUDGET};
+use crate::optim::LrSchedule;
+use crate::trainer::convex::IgMethod;
+use crate::trainer::EmbeddingKind;
+
+/// Where the rows come from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSpec {
+    /// A named synthetic stand-in ([`crate::data::synthetic::by_name`]):
+    /// `covtype` | `ijcnn1` | `mnist` | `cifar10` | `mixture:d:c`.
+    Synthetic { dataset: String, n: usize },
+    /// An on-disk LIBSVM file ([`crate::data::libsvm`]).
+    Libsvm { path: String },
+    /// A stratified shard directory written by `craig shard` — selection
+    /// runs out-of-core merge-and-reduce over it.
+    ShardDir { dir: String },
+}
+
+/// What per-sample vectors selection measures distances over.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EmbeddingSpec {
+    /// Raw feature rows (Eq. 9) or last-layer gradient proxies (Eq. 16,
+    /// MLP training only).
+    pub kind: EmbeddingKind,
+    /// Distance metric, lifted into [`crate::coreset::sim`].
+    pub metric: Metric,
+}
+
+/// Which subset the downstream consumer sees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionMode {
+    /// CRAIG facility-location selection (the paper's blue curves).
+    Craig,
+    /// Uniform weighted random baseline of the same size.
+    Random,
+    /// No subsetting — train on everything (needs a trainer).
+    Full,
+}
+
+impl SelectionMode {
+    pub fn parse(spec: &str) -> Result<Self> {
+        match spec {
+            "craig" => Ok(SelectionMode::Craig),
+            "random" => Ok(SelectionMode::Random),
+            "full" => Ok(SelectionMode::Full),
+            other => bail!("unknown selection mode '{other}' (craig|random|full)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SelectionMode::Craig => "craig",
+            SelectionMode::Random => "random",
+            SelectionMode::Full => "full",
+        }
+    }
+}
+
+/// Parse a greedy-engine name; `stochastic` takes its subsampling δ.
+pub fn method_from_name(name: &str, delta: f64) -> Result<Method> {
+    match name {
+        "lazy" => Ok(Method::Lazy),
+        "naive" => Ok(Method::Naive),
+        "stochastic" => Ok(Method::Stochastic { delta }),
+        other => bail!("unknown selection method '{other}' (lazy|naive|stochastic)"),
+    }
+}
+
+/// Engine name for serialization ([`method_from_name`]'s inverse).
+pub fn method_name(m: Method) -> &'static str {
+    match m {
+        Method::Lazy => "lazy",
+        Method::Naive => "naive",
+        Method::Stochastic { .. } => "stochastic",
+    }
+}
+
+/// How the subset is chosen.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectionSpec {
+    pub mode: SelectionMode,
+    pub method: Method,
+    pub budget: Budget,
+    pub store: SimStorePolicy,
+    /// In-memory merge-and-reduce fan-out (0/1 = one whole-dataset
+    /// pass); not valid for a shard-dir source (the directory IS the
+    /// sharding).
+    pub stream_shards: usize,
+    /// Intra-class selection threads (output-invariant).
+    pub parallelism: usize,
+    /// Shard-phase worker threads (shard-dir sources only).
+    pub workers: usize,
+    /// Explicit per-shard element budget (shard-dir sources only).
+    pub shard_budget: Option<usize>,
+}
+
+impl Default for SelectionSpec {
+    fn default() -> Self {
+        SelectionSpec {
+            mode: SelectionMode::Craig,
+            method: Method::Lazy,
+            budget: Budget::Fraction(0.1),
+            store: SimStorePolicy::default(),
+            stream_shards: 0,
+            parallelism: 1,
+            workers: 1,
+            shard_budget: None,
+        }
+    }
+}
+
+/// What (if anything) trains on the subset.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrainSpec {
+    /// Selection only.
+    None,
+    /// L2-logistic regression with an incremental-gradient method
+    /// (Figures 1–3; selection is one-shot preprocessing).
+    Logreg {
+        method: IgMethod,
+        epochs: usize,
+        batch: usize,
+        lam: f32,
+        schedule: LrSchedule,
+        /// Stratified train split fraction (rest is test).
+        train_frac: f64,
+    },
+    /// The 2-layer MLP with per-epoch reselection (Figures 4–5).
+    Mlp {
+        hidden: usize,
+        epochs: usize,
+        lr: f32,
+        /// Reselect every R epochs.
+        reselect: usize,
+        train_frac: f64,
+    },
+}
+
+impl TrainSpec {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            TrainSpec::None => "none",
+            TrainSpec::Logreg { .. } => "logreg",
+            TrainSpec::Mlp { .. } => "mlp",
+        }
+    }
+}
+
+/// Where results land.  All optional; the manifest is the machine face.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OutputSpec {
+    /// CSV of the selected coreset (`index,gamma`).
+    pub coreset_csv: Option<String>,
+    /// CSV of the per-epoch training trace.
+    pub history_csv: Option<String>,
+    /// JSON run-manifest path (see `Runner`'s manifest schema).
+    pub manifest: Option<String>,
+}
+
+/// The typed front door: everything one run needs, in one value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    pub name: String,
+    /// THE seed — every rng stream in the run derives from it (data
+    /// generation, splits, selection via [`crate::rng::mix_seed`],
+    /// training shuffles).
+    pub seed: u64,
+    /// Pairwise backend: `native` | `xla` | `auto`.
+    pub engine: String,
+    pub data: DataSpec,
+    pub embedding: EmbeddingSpec,
+    pub selection: SelectionSpec,
+    pub train: TrainSpec,
+    pub output: OutputSpec,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            name: "run".to_string(),
+            seed: 0,
+            engine: "auto".to_string(),
+            data: DataSpec::Synthetic { dataset: "covtype".to_string(), n: 10_000 },
+            embedding: EmbeddingSpec {
+                kind: EmbeddingKind::RawFeatures,
+                metric: Metric::Euclidean,
+            },
+            selection: SelectionSpec::default(),
+            train: TrainSpec::None,
+            output: OutputSpec::default(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed getters with line-numbered errors.
+// ---------------------------------------------------------------------------
+
+/// Attach the key's source line (when known) to an error.
+fn at_line(cfg: &Config, key: &str, e: anyhow::Error) -> anyhow::Error {
+    match cfg.line_of(key) {
+        Some(l) => anyhow::anyhow!("line {l}: {e}"),
+        None => e,
+    }
+}
+
+fn g_str(cfg: &Config, key: &str, default: &str) -> Result<String> {
+    if cfg.get(key).is_none() {
+        return Ok(default.to_string());
+    }
+    cfg.str(key).map(str::to_string).map_err(|e| at_line(cfg, key, e))
+}
+
+fn g_req_str(cfg: &Config, key: &str) -> Result<String> {
+    if cfg.get(key).is_none() {
+        bail!("missing required key '{key}'");
+    }
+    cfg.str(key).map(str::to_string).map_err(|e| at_line(cfg, key, e))
+}
+
+fn g_opt_str(cfg: &Config, key: &str) -> Result<Option<String>> {
+    if cfg.get(key).is_none() {
+        return Ok(None);
+    }
+    cfg.str(key).map(|s| Some(s.to_string())).map_err(|e| at_line(cfg, key, e))
+}
+
+fn g_nonneg(cfg: &Config, key: &str, default: i64) -> Result<i64> {
+    if cfg.get(key).is_none() {
+        return Ok(default);
+    }
+    let v = cfg.int(key).map_err(|e| at_line(cfg, key, e))?;
+    if v < 0 {
+        return Err(at_line(cfg, key, anyhow::anyhow!("key '{key}' must be ≥ 0, got {v}")));
+    }
+    Ok(v)
+}
+
+fn g_usize(cfg: &Config, key: &str, default: usize) -> Result<usize> {
+    Ok(g_nonneg(cfg, key, default as i64)? as usize)
+}
+
+fn g_f64(cfg: &Config, key: &str, default: f64) -> Result<f64> {
+    if cfg.get(key).is_none() {
+        return Ok(default);
+    }
+    cfg.float(key).map_err(|e| at_line(cfg, key, e))
+}
+
+/// Full-width unsigned getter (rng seeds: all 2⁶⁴ values round-trip).
+fn g_u64(cfg: &Config, key: &str, default: u64) -> Result<u64> {
+    if cfg.get(key).is_none() {
+        return Ok(default);
+    }
+    cfg.uint(key).map_err(|e| at_line(cfg, key, e))
+}
+
+/// The full key vocabulary, used to tell "unknown key" apart from
+/// "known key, wrong context" in rejection messages.
+const ALL_KEYS: &[&str] = &[
+    "name",
+    "seed",
+    "engine",
+    "data.kind",
+    "data.dataset",
+    "data.n",
+    "data.path",
+    "data.dir",
+    "embedding.kind",
+    "embedding.metric",
+    "selection.mode",
+    "selection.method",
+    "selection.delta",
+    "selection.fraction",
+    "selection.count",
+    "selection.cover_epsilon",
+    "selection.store",
+    "selection.mem_budget",
+    "selection.stream_shards",
+    "selection.parallelism",
+    "selection.workers",
+    "selection.shard_budget",
+    "train.kind",
+    "train.method",
+    "train.epochs",
+    "train.batch",
+    "train.lam",
+    "train.schedule",
+    "train.train_frac",
+    "train.hidden",
+    "train.lr",
+    "train.reselect",
+    "output.coreset_csv",
+    "output.history_csv",
+    "output.manifest",
+];
+
+/// Keys legal for this spec instance (conditioned on the kinds).
+fn allowed_keys(data_kind: &str, train_kind: &str, method: &str, store: &str) -> Vec<&'static str> {
+    let mut v = vec![
+        "name",
+        "seed",
+        "engine",
+        "data.kind",
+        "embedding.kind",
+        "embedding.metric",
+        "selection.mode",
+        "selection.method",
+        "selection.fraction",
+        "selection.count",
+        "selection.cover_epsilon",
+        "selection.store",
+        "selection.parallelism",
+        "train.kind",
+        "output.coreset_csv",
+        "output.history_csv",
+        "output.manifest",
+    ];
+    match data_kind {
+        "libsvm" => v.push("data.path"),
+        "shard-dir" => v.extend(["data.dir", "selection.workers", "selection.shard_budget"]),
+        // Unknown kinds already erred; everything else is synthetic.
+        _ => v.extend(["data.dataset", "data.n"]),
+    }
+    if data_kind != "shard-dir" {
+        v.push("selection.stream_shards");
+    }
+    if method == "stochastic" {
+        v.push("selection.delta");
+    }
+    if store == "auto" {
+        v.push("selection.mem_budget");
+    }
+    match train_kind {
+        "logreg" => v.extend([
+            "train.method",
+            "train.epochs",
+            "train.batch",
+            "train.lam",
+            "train.schedule",
+            "train.train_frac",
+        ]),
+        "mlp" => v.extend([
+            "train.hidden",
+            "train.epochs",
+            "train.lr",
+            "train.reselect",
+            "train.train_frac",
+        ]),
+        _ => {}
+    }
+    v
+}
+
+/// Reject string values the spec format cannot serialize losslessly:
+/// the TOML subset has no escape sequences, so quotes, `#` (the
+/// comment-strip heuristic) and newlines would corrupt `to_toml`.
+fn check_plain(field: &str, v: &str) -> Result<()> {
+    if v.contains(&['"', '#', '\n', '\r'][..]) {
+        bail!("{field} contains characters spec files cannot round-trip (\" # newline): {v:?}");
+    }
+    Ok(())
+}
+
+/// Strict key validation: every present key must be legal *for this
+/// spec* — unknown keys and contextually-invalid keys are both
+/// rejected, with the offending line number.
+fn check_keys(cfg: &Config, allowed: &[&'static str]) -> Result<()> {
+    for k in cfg.keys() {
+        if allowed.iter().any(|a| *a == k) {
+            continue;
+        }
+        let msg = if ALL_KEYS.iter().any(|a| *a == k) {
+            format!("key '{k}' is not valid for this spec's kinds (see DESIGN.md §9)")
+        } else {
+            let sect = k.split_once('.').map(|(s, _)| s).unwrap_or("");
+            let hint: Vec<&str> = allowed
+                .iter()
+                .copied()
+                .filter(|a| a.split_once('.').map(|(s, _)| s).unwrap_or("") == sect)
+                .collect();
+            format!("unknown key '{k}' (allowed here: {})", hint.join(", "))
+        };
+        return Err(at_line(cfg, k, anyhow::anyhow!("{msg}")));
+    }
+    Ok(())
+}
+
+impl RunSpec {
+    /// Parse a spec from TOML-subset text.
+    pub fn parse(text: &str) -> Result<RunSpec> {
+        Self::from_config(&Config::parse(text)?)
+    }
+
+    /// Load a spec file.
+    pub fn load(path: &Path) -> Result<RunSpec> {
+        Self::from_config(&Config::load(path)?)
+    }
+
+    /// Build from a parsed [`Config`] (the `--set` override path goes
+    /// through here too).  Strict: unknown or out-of-context keys are
+    /// rejected with line numbers, as are ill-typed or out-of-range
+    /// values, before anything runs.
+    pub fn from_config(cfg: &Config) -> Result<RunSpec> {
+        // Kinds first — they decide which keys are legal.
+        let data_kind = g_str(cfg, "data.kind", "synthetic")?;
+        if !["synthetic", "libsvm", "shard-dir"].contains(&data_kind.as_str()) {
+            return Err(at_line(
+                cfg,
+                "data.kind",
+                anyhow::anyhow!("data.kind '{data_kind}' (synthetic|libsvm|shard-dir)"),
+            ));
+        }
+        let train_kind = g_str(cfg, "train.kind", "none")?;
+        if !["none", "logreg", "mlp"].contains(&train_kind.as_str()) {
+            return Err(at_line(
+                cfg,
+                "train.kind",
+                anyhow::anyhow!("train.kind '{train_kind}' (none|logreg|mlp)"),
+            ));
+        }
+        let method_kind = g_str(cfg, "selection.method", "lazy")?;
+        let store_kind = g_str(cfg, "selection.store", "auto")?;
+        check_keys(cfg, &allowed_keys(&data_kind, &train_kind, &method_kind, &store_kind))?;
+
+        let data = match data_kind.as_str() {
+            "libsvm" => DataSpec::Libsvm { path: g_req_str(cfg, "data.path")? },
+            "shard-dir" => DataSpec::ShardDir { dir: g_req_str(cfg, "data.dir")? },
+            _ => DataSpec::Synthetic {
+                dataset: g_str(cfg, "data.dataset", "covtype")?,
+                n: g_usize(cfg, "data.n", 10_000)?,
+            },
+        };
+
+        // Proxies are the neural default; raw features everywhere else.
+        let embed_default = if train_kind == "mlp" { "grad-proxy" } else { "raw" };
+        let embedding = EmbeddingSpec {
+            kind: EmbeddingKind::parse(&g_str(cfg, "embedding.kind", embed_default)?)
+                .map_err(|e| at_line(cfg, "embedding.kind", e))?,
+            metric: Metric::parse(&g_str(cfg, "embedding.metric", "euclidean")?)
+                .map_err(|e| at_line(cfg, "embedding.metric", e))?,
+        };
+
+        let budget_keys = ["selection.fraction", "selection.count", "selection.cover_epsilon"];
+        let present: Vec<&str> =
+            budget_keys.iter().copied().filter(|k| cfg.get(k).is_some()).collect();
+        if present.len() > 1 {
+            return Err(at_line(
+                cfg,
+                present[1],
+                anyhow::anyhow!("budget keys are mutually exclusive, got {}", present.join(" + ")),
+            ));
+        }
+        let budget = if cfg.get("selection.count").is_some() {
+            Budget::Count(g_usize(cfg, "selection.count", 0)?)
+        } else if cfg.get("selection.cover_epsilon").is_some() {
+            Budget::Cover { epsilon: g_f64(cfg, "selection.cover_epsilon", 0.0)? }
+        } else {
+            Budget::Fraction(g_f64(cfg, "selection.fraction", 0.1)?)
+        };
+
+        let method = method_from_name(&method_kind, g_f64(cfg, "selection.delta", 0.05)?)
+            .map_err(|e| at_line(cfg, "selection.method", e))?;
+        let store = SimStorePolicy::parse(
+            &store_kind,
+            g_usize(cfg, "selection.mem_budget", DEFAULT_SIM_MEM_BUDGET)?,
+        )
+        .map_err(|e| at_line(cfg, "selection.store", e))?;
+        let shard_budget = match cfg.get("selection.shard_budget") {
+            None => None,
+            Some(_) => Some(g_usize(cfg, "selection.shard_budget", 0)?),
+        };
+        let selection = SelectionSpec {
+            mode: SelectionMode::parse(&g_str(cfg, "selection.mode", "craig")?)
+                .map_err(|e| at_line(cfg, "selection.mode", e))?,
+            method,
+            budget,
+            store,
+            stream_shards: g_usize(cfg, "selection.stream_shards", 0)?,
+            parallelism: g_usize(cfg, "selection.parallelism", 1)?,
+            workers: g_usize(cfg, "selection.workers", 1)?,
+            shard_budget,
+        };
+
+        let train = match train_kind.as_str() {
+            "none" => TrainSpec::None,
+            "logreg" => TrainSpec::Logreg {
+                method: IgMethod::parse(&g_str(cfg, "train.method", "sgd")?)
+                    .map_err(|e| at_line(cfg, "train.method", e))?,
+                epochs: g_usize(cfg, "train.epochs", 20)?,
+                batch: g_usize(cfg, "train.batch", 10)?,
+                lam: g_f64(cfg, "train.lam", 1e-5)? as f32,
+                schedule: LrSchedule::parse(&g_str(cfg, "train.schedule", "exp:0.5:0.9")?)
+                    .map_err(|e| at_line(cfg, "train.schedule", e))?,
+                train_frac: g_f64(cfg, "train.train_frac", 0.5)?,
+            },
+            _ => TrainSpec::Mlp {
+                hidden: g_usize(cfg, "train.hidden", 100)?,
+                epochs: g_usize(cfg, "train.epochs", 10)?,
+                lr: g_f64(cfg, "train.lr", 0.01)? as f32,
+                reselect: g_usize(cfg, "train.reselect", 1)?,
+                train_frac: g_f64(cfg, "train.train_frac", 0.8)?,
+            },
+        };
+
+        let spec = RunSpec {
+            name: g_str(cfg, "name", "run")?,
+            seed: g_u64(cfg, "seed", 0)?,
+            engine: g_str(cfg, "engine", "auto")?,
+            data,
+            embedding,
+            selection,
+            train,
+            output: OutputSpec {
+                coreset_csv: g_opt_str(cfg, "output.coreset_csv")?,
+                history_csv: g_opt_str(cfg, "output.history_csv")?,
+                manifest: g_opt_str(cfg, "output.manifest")?,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Cross-field validation (parse and builder both funnel through
+    /// here; the [`crate::pipeline::Runner`] re-checks on entry).
+    pub fn validate(&self) -> Result<()> {
+        // Every string the serializer emits must survive the TOML
+        // subset's quoted-string rules — reject the characters the
+        // format cannot round-trip, keeping `parse(to_toml(spec)) ==
+        // spec` airtight for every spec this function admits.
+        check_plain("name", &self.name)?;
+        check_plain("engine", &self.engine)?;
+        match &self.data {
+            DataSpec::Synthetic { dataset, .. } => check_plain("data.dataset", dataset)?,
+            DataSpec::Libsvm { path } => check_plain("data.path", path)?,
+            DataSpec::ShardDir { dir } => check_plain("data.dir", dir)?,
+        }
+        for (field, v) in [
+            ("output.coreset_csv", &self.output.coreset_csv),
+            ("output.history_csv", &self.output.history_csv),
+            ("output.manifest", &self.output.manifest),
+        ] {
+            if let Some(v) = v {
+                check_plain(field, v)?;
+            }
+        }
+        if self.embedding.kind == EmbeddingKind::GradProxy
+            && !matches!(self.train, TrainSpec::Mlp { .. })
+        {
+            bail!(
+                "embedding.kind = \"grad-proxy\" requires train.kind = \"mlp\" \
+                 (the proxies are the MLP's last-layer gradients, Eq. 16)"
+            );
+        }
+        if self.selection.mode == SelectionMode::Full && matches!(self.train, TrainSpec::None) {
+            bail!("selection.mode = \"full\" without a trainer is a no-op; set train.kind");
+        }
+        if let DataSpec::ShardDir { .. } = self.data {
+            if !matches!(self.train, TrainSpec::None) {
+                bail!("training over a shard-dir source is not supported; select, then train");
+            }
+            if self.selection.mode != SelectionMode::Craig {
+                bail!("a shard-dir source supports only selection.mode = \"craig\"");
+            }
+            if self.selection.stream_shards > 0 {
+                bail!("selection.stream_shards conflicts with a shard-dir source");
+            }
+        }
+        if !matches!(self.data, DataSpec::ShardDir { .. }) {
+            // Keeps `parse(to_toml(spec)) == spec` airtight: these keys
+            // are neither honored nor serialized off the shard-dir path.
+            if self.selection.workers != 1 {
+                bail!(
+                    "selection.workers applies only to a shard-dir source \
+                     (in-memory streaming fans out with selection.parallelism)"
+                );
+            }
+            if self.selection.shard_budget.is_some() {
+                bail!("selection.shard_budget applies only to a shard-dir source");
+            }
+        }
+        if let DataSpec::Synthetic { n, .. } = &self.data {
+            if *n == 0 {
+                bail!("data.n must be ≥ 1");
+            }
+        }
+        match self.selection.budget {
+            Budget::Fraction(f) if !(f > 0.0 && f <= 1.0) => {
+                bail!("selection.fraction must be in (0, 1], got {f}")
+            }
+            Budget::Count(0) => bail!("selection.count must be ≥ 1"),
+            Budget::Cover { epsilon } if !(epsilon > 0.0 && epsilon < f64::INFINITY) => {
+                bail!("selection.cover_epsilon must be a positive finite number, got {epsilon}")
+            }
+            _ => {}
+        }
+        if let Method::Stochastic { delta } = self.selection.method {
+            // δ outside (0, 1) silently degenerates stochastic greedy
+            // (per-round sample size (n/r)·ln(1/δ) goes NaN/0/n).
+            if !(delta > 0.0 && delta < 1.0) {
+                bail!("selection.delta must be in (0, 1), got {delta}");
+            }
+        }
+        if self.output.coreset_csv.is_some() && !matches!(self.train, TrainSpec::None) {
+            bail!("output.coreset_csv requires train.kind = \"none\" (trainers emit history_csv)");
+        }
+        if self.output.history_csv.is_some() && matches!(self.train, TrainSpec::None) {
+            bail!("output.history_csv requires a trainer (train.kind = logreg|mlp)");
+        }
+        let (epochs, train_frac) = match &self.train {
+            TrainSpec::None => (1, 0.5),
+            TrainSpec::Logreg { epochs, train_frac, .. } => (*epochs, *train_frac),
+            TrainSpec::Mlp { epochs, train_frac, .. } => (*epochs, *train_frac),
+        };
+        if epochs == 0 {
+            bail!("train.epochs must be ≥ 1");
+        }
+        if !(train_frac > 0.0 && train_frac < 1.0) {
+            bail!("train.train_frac must be in (0, 1), got {train_frac}");
+        }
+        Ok(())
+    }
+
+    /// Desugar the selection-relevant fields into the engine-level
+    /// [`crate::coreset::SelectorConfig`].
+    pub fn selector_config(&self) -> crate::coreset::SelectorConfig {
+        crate::coreset::SelectorConfig {
+            method: self.selection.method,
+            budget: self.selection.budget,
+            per_class: true,
+            seed: self.seed,
+            parallelism: self.selection.parallelism,
+            sim_store: self.selection.store,
+            metric: self.embedding.metric,
+            stream_shards: self.selection.stream_shards,
+        }
+    }
+
+    /// Serialize the **effective** spec (defaults made explicit) in the
+    /// TOML subset; `RunSpec::parse(&spec.to_toml()) == spec` for every
+    /// valid spec, and serialization is idempotent under re-parsing.
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        let w = &mut s;
+        let _ = writeln!(w, "# craig RunSpec (TOML subset; grammar in DESIGN.md §9)");
+        let _ = writeln!(w, "name = \"{}\"", self.name);
+        let _ = writeln!(w, "seed = {}", self.seed);
+        let _ = writeln!(w, "engine = \"{}\"", self.engine);
+        let _ = writeln!(w, "\n[data]");
+        match &self.data {
+            DataSpec::Synthetic { dataset, n } => {
+                let _ = writeln!(w, "kind = \"synthetic\"");
+                let _ = writeln!(w, "dataset = \"{dataset}\"");
+                let _ = writeln!(w, "n = {n}");
+            }
+            DataSpec::Libsvm { path } => {
+                let _ = writeln!(w, "kind = \"libsvm\"");
+                let _ = writeln!(w, "path = \"{path}\"");
+            }
+            DataSpec::ShardDir { dir } => {
+                let _ = writeln!(w, "kind = \"shard-dir\"");
+                let _ = writeln!(w, "dir = \"{dir}\"");
+            }
+        }
+        let _ = writeln!(w, "\n[embedding]");
+        let _ = writeln!(w, "kind = \"{}\"", self.embedding.kind.name());
+        let _ = writeln!(w, "metric = \"{}\"", self.embedding.metric.name());
+        let _ = writeln!(w, "\n[selection]");
+        let _ = writeln!(w, "mode = \"{}\"", self.selection.mode.name());
+        let _ = writeln!(w, "method = \"{}\"", method_name(self.selection.method));
+        if let Method::Stochastic { delta } = self.selection.method {
+            let _ = writeln!(w, "delta = {delta}");
+        }
+        match self.selection.budget {
+            Budget::Fraction(f) => {
+                let _ = writeln!(w, "fraction = {f}");
+            }
+            Budget::Count(r) => {
+                let _ = writeln!(w, "count = {r}");
+            }
+            Budget::Cover { epsilon } => {
+                let _ = writeln!(w, "cover_epsilon = {epsilon}");
+            }
+        }
+        match self.selection.store {
+            SimStorePolicy::Dense => {
+                let _ = writeln!(w, "store = \"dense\"");
+            }
+            SimStorePolicy::Blocked => {
+                let _ = writeln!(w, "store = \"blocked\"");
+            }
+            SimStorePolicy::Auto { mem_budget_bytes } => {
+                let _ = writeln!(w, "store = \"auto\"");
+                let _ = writeln!(w, "mem_budget = {mem_budget_bytes}");
+            }
+        }
+        if !matches!(self.data, DataSpec::ShardDir { .. }) {
+            let _ = writeln!(w, "stream_shards = {}", self.selection.stream_shards);
+        }
+        let _ = writeln!(w, "parallelism = {}", self.selection.parallelism);
+        if matches!(self.data, DataSpec::ShardDir { .. }) {
+            let _ = writeln!(w, "workers = {}", self.selection.workers);
+            if let Some(b) = self.selection.shard_budget {
+                let _ = writeln!(w, "shard_budget = {b}");
+            }
+        }
+        let _ = writeln!(w, "\n[train]");
+        let _ = writeln!(w, "kind = \"{}\"", self.train.kind_name());
+        match &self.train {
+            TrainSpec::None => {}
+            TrainSpec::Logreg { method, epochs, batch, lam, schedule, train_frac } => {
+                let _ = writeln!(w, "method = \"{}\"", method.name());
+                let _ = writeln!(w, "epochs = {epochs}");
+                let _ = writeln!(w, "batch = {batch}");
+                let _ = writeln!(w, "lam = {lam}");
+                let _ = writeln!(w, "schedule = \"{}\"", schedule.spec_str());
+                let _ = writeln!(w, "train_frac = {train_frac}");
+            }
+            TrainSpec::Mlp { hidden, epochs, lr, reselect, train_frac } => {
+                let _ = writeln!(w, "hidden = {hidden}");
+                let _ = writeln!(w, "epochs = {epochs}");
+                let _ = writeln!(w, "lr = {lr}");
+                let _ = writeln!(w, "reselect = {reselect}");
+                let _ = writeln!(w, "train_frac = {train_frac}");
+            }
+        }
+        let out = [
+            ("coreset_csv", &self.output.coreset_csv),
+            ("history_csv", &self.output.history_csv),
+            ("manifest", &self.output.manifest),
+        ];
+        if out.iter().any(|(_, v)| v.is_some()) {
+            let _ = writeln!(w, "\n[output]");
+            for (k, v) in out {
+                if let Some(v) = v {
+                    let _ = writeln!(w, "{k} = \"{v}\"");
+                }
+            }
+        }
+        s
+    }
+
+    /// Start a fluent builder.
+    pub fn builder(name: &str) -> RunSpecBuilder {
+        RunSpecBuilder {
+            spec: RunSpec { name: name.to_string(), ..Default::default() },
+            embedding_set: false,
+        }
+    }
+}
+
+/// Fluent construction for library users — the builder twin of the
+/// spec-file grammar.  `build()` runs the same [`RunSpec::validate`]
+/// the parser does.
+pub struct RunSpecBuilder {
+    spec: RunSpec,
+    /// Whether the user pinned the embedding kind (otherwise `.mlp()`
+    /// flips the default to grad-proxy, mirroring the parse default).
+    embedding_set: bool,
+}
+
+impl RunSpecBuilder {
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    pub fn engine(mut self, engine: &str) -> Self {
+        self.spec.engine = engine.to_string();
+        self
+    }
+
+    pub fn synthetic(mut self, dataset: &str, n: usize) -> Self {
+        self.spec.data = DataSpec::Synthetic { dataset: dataset.to_string(), n };
+        self
+    }
+
+    pub fn libsvm(mut self, path: &str) -> Self {
+        self.spec.data = DataSpec::Libsvm { path: path.to_string() };
+        self
+    }
+
+    pub fn shard_dir(mut self, dir: &str) -> Self {
+        self.spec.data = DataSpec::ShardDir { dir: dir.to_string() };
+        self
+    }
+
+    pub fn embedding(mut self, kind: EmbeddingKind) -> Self {
+        self.spec.embedding.kind = kind;
+        self.embedding_set = true;
+        self
+    }
+
+    pub fn metric(mut self, metric: Metric) -> Self {
+        self.spec.embedding.metric = metric;
+        self
+    }
+
+    pub fn mode(mut self, mode: SelectionMode) -> Self {
+        self.spec.selection.mode = mode;
+        self
+    }
+
+    pub fn method(mut self, method: Method) -> Self {
+        self.spec.selection.method = method;
+        self
+    }
+
+    pub fn fraction(mut self, f: f64) -> Self {
+        self.spec.selection.budget = Budget::Fraction(f);
+        self
+    }
+
+    pub fn count(mut self, r: usize) -> Self {
+        self.spec.selection.budget = Budget::Count(r);
+        self
+    }
+
+    pub fn cover(mut self, epsilon: f64) -> Self {
+        self.spec.selection.budget = Budget::Cover { epsilon };
+        self
+    }
+
+    pub fn store(mut self, policy: SimStorePolicy) -> Self {
+        self.spec.selection.store = policy;
+        self
+    }
+
+    pub fn stream_shards(mut self, k: usize) -> Self {
+        self.spec.selection.stream_shards = k;
+        self
+    }
+
+    pub fn parallelism(mut self, p: usize) -> Self {
+        self.spec.selection.parallelism = p;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.spec.selection.workers = workers;
+        self
+    }
+
+    pub fn shard_budget(mut self, per_shard: usize) -> Self {
+        self.spec.selection.shard_budget = Some(per_shard);
+        self
+    }
+
+    /// Train logistic regression (Figures 1–3 defaults: batch 10,
+    /// λ = 1e-5, 50/50 split — refine with [`RunSpecBuilder::train`]).
+    pub fn logreg(mut self, method: IgMethod, epochs: usize, schedule: LrSchedule) -> Self {
+        self.spec.train = TrainSpec::Logreg {
+            method,
+            epochs,
+            batch: 10,
+            lam: 1e-5,
+            schedule,
+            train_frac: 0.5,
+        };
+        self
+    }
+
+    /// Train the 2-layer MLP (constant lr, 80/20 split); flips the
+    /// embedding default to grad-proxy unless explicitly pinned.
+    pub fn mlp(mut self, hidden: usize, epochs: usize, lr: f32, reselect: usize) -> Self {
+        self.spec.train = TrainSpec::Mlp { hidden, epochs, lr, reselect, train_frac: 0.8 };
+        if !self.embedding_set {
+            self.spec.embedding.kind = EmbeddingKind::GradProxy;
+        }
+        self
+    }
+
+    /// Escape hatch: set the whole [`TrainSpec`] directly.
+    pub fn train(mut self, train: TrainSpec) -> Self {
+        self.spec.train = train;
+        self
+    }
+
+    pub fn coreset_csv(mut self, path: &str) -> Self {
+        self.spec.output.coreset_csv = Some(path.to_string());
+        self
+    }
+
+    pub fn history_csv(mut self, path: &str) -> Self {
+        self.spec.output.history_csv = Some(path.to_string());
+        self
+    }
+
+    pub fn manifest(mut self, path: &str) -> Self {
+        self.spec.output.manifest = Some(path.to_string());
+        self
+    }
+
+    /// Validate and return the spec.
+    pub fn build(self) -> Result<RunSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_spec_gets_defaults() {
+        let spec = RunSpec::parse("").unwrap();
+        assert_eq!(spec, RunSpec::default());
+        assert_eq!(spec.selection.budget, Budget::Fraction(0.1));
+        assert_eq!(spec.embedding.kind, EmbeddingKind::RawFeatures);
+    }
+
+    #[test]
+    fn mlp_train_defaults_embedding_to_proxy() {
+        let spec = RunSpec::parse("[train]\nkind = \"mlp\"\n").unwrap();
+        assert_eq!(spec.embedding.kind, EmbeddingKind::GradProxy);
+        assert!(matches!(spec.train, TrainSpec::Mlp { hidden: 100, epochs: 10, .. }));
+    }
+
+    #[test]
+    fn builder_matches_parsed_spec() {
+        let text = "name = \"b\"\nseed = 7\n[data]\ndataset = \"mnist\"\nn = 500\n\
+                    [embedding]\nmetric = \"cosine\"\n[selection]\ncount = 40\n";
+        let parsed = RunSpec::parse(text).unwrap();
+        let built = RunSpec::builder("b")
+            .seed(7)
+            .synthetic("mnist", 500)
+            .metric(Metric::Cosine)
+            .count(40)
+            .build()
+            .unwrap();
+        assert_eq!(parsed, built);
+    }
+
+    #[test]
+    fn unknown_key_rejected_with_line() {
+        let err = RunSpec::parse("seed = 1\n[selection]\nbogus = 2\n").unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("bogus"), "{err}");
+    }
+
+    #[test]
+    fn out_of_context_key_rejected_with_line() {
+        // `train.hidden` is a real key — but not for logreg.
+        let text = "[train]\nkind = \"logreg\"\nhidden = 4\n";
+        let err = RunSpec::parse(text).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("train.hidden"), "{err}");
+    }
+
+    #[test]
+    fn bad_values_rejected_with_line() {
+        let err = RunSpec::parse("[selection]\nmethod = \"bogus\"\n").unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("bogus"), "{err}");
+        let err = RunSpec::parse("seed = -4\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        let err = RunSpec::parse("[selection]\nfraction = 1.5\n").unwrap_err().to_string();
+        assert!(err.contains("1.5"), "{err}");
+        let err = RunSpec::parse("[selection]\nfraction = 0.2\ncount = 9\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        let text = "[selection]\nmethod = \"stochastic\"\ndelta = 2.0\n";
+        let err = RunSpec::parse(text).unwrap_err().to_string();
+        assert!(err.contains("delta"), "{err}");
+        let err = RunSpec::parse("[selection]\ncover_epsilon = -1.0\n").unwrap_err().to_string();
+        assert!(err.contains("cover_epsilon"), "{err}");
+    }
+
+    #[test]
+    fn validation_catches_cross_field_conflicts() {
+        let err = RunSpec::parse("[embedding]\nkind = \"grad-proxy\"\n").unwrap_err().to_string();
+        assert!(err.contains("grad-proxy"), "{err}");
+        let err =
+            RunSpec::parse("[selection]\nmode = \"full\"\n").unwrap_err().to_string();
+        assert!(err.contains("no-op"), "{err}");
+        let text = "[data]\nkind = \"shard-dir\"\ndir = \"x\"\n[train]\nkind = \"logreg\"\n";
+        assert!(RunSpec::parse(text).is_err());
+    }
+
+    #[test]
+    fn non_serializable_strings_rejected() {
+        // The TOML subset has no escapes: strings that would corrupt
+        // to_toml() are rejected up front, keeping the round-trip
+        // guarantee total over admitted specs.
+        for bad in ["a\nb.csv", "a\"x", "a#y"] {
+            let err = RunSpec::builder("x")
+                .coreset_csv(bad)
+                .build()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("round-trip"), "{bad:?}: {err}");
+        }
+        let err = RunSpec::builder("na#me").count(3).build().unwrap_err().to_string();
+        assert!(err.contains("name"), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_is_idempotent() {
+        let specs = vec![
+            RunSpec::default(),
+            RunSpec::builder("s1")
+                .seed(3)
+                .synthetic("ijcnn1", 777)
+                .metric(Metric::Cosine)
+                .method(Method::Stochastic { delta: 0.1 })
+                .count(25)
+                .store(SimStorePolicy::Blocked)
+                .parallelism(4)
+                .coreset_csv("c.csv")
+                .build()
+                .unwrap(),
+            RunSpec::builder("s2")
+                .synthetic("covtype", 900)
+                .fraction(0.2)
+                .logreg(IgMethod::Saga, 5, LrSchedule::Const { a0: 0.02 })
+                .history_csv("h.csv")
+                .manifest("m.json")
+                .build()
+                .unwrap(),
+            RunSpec::builder("s3")
+                .synthetic("mnist", 400)
+                .fraction(0.5)
+                .mlp(32, 4, 0.01, 1)
+                .build()
+                .unwrap(),
+            RunSpec::builder("s4")
+                .shard_dir("/tmp/shards")
+                .count(50)
+                .workers(3)
+                .shard_budget(64)
+                .build()
+                .unwrap(),
+            RunSpec::builder("s5").synthetic("covtype", 600).cover(2.5).build().unwrap(),
+            // Full-width seeds must survive the spec file bitwise
+            // (integer literals above i64::MAX parse as Value::UInt).
+            RunSpec::builder("s6").seed(u64::MAX).count(5).build().unwrap(),
+        ];
+        for spec in specs {
+            let toml = spec.to_toml();
+            let reparsed = RunSpec::parse(&toml).unwrap_or_else(|e| {
+                panic!("reparse of {}: {e}\n{toml}", spec.name);
+            });
+            assert_eq!(reparsed, spec, "parse(to_toml) must be the identity\n{toml}");
+            assert_eq!(reparsed.to_toml(), toml, "serialization must be idempotent");
+        }
+    }
+
+    #[test]
+    fn selector_config_desugars() {
+        let spec = RunSpec::builder("x")
+            .seed(9)
+            .metric(Metric::Cosine)
+            .count(12)
+            .parallelism(2)
+            .stream_shards(3)
+            .build()
+            .unwrap();
+        let cfg = spec.selector_config();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.metric, Metric::Cosine);
+        assert_eq!(cfg.budget, Budget::Count(12));
+        assert_eq!(cfg.parallelism, 2);
+        assert_eq!(cfg.stream_shards, 3);
+        assert!(cfg.per_class);
+    }
+}

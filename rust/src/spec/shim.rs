@@ -1,0 +1,360 @@
+//! Legacy-CLI shims: the `select` / `select-stream` / `train` /
+//! `train-mlp` subcommands desugared into [`RunSpec`]s.
+//!
+//! The subcommands survive as a stable flag surface, but they no longer
+//! own any execution logic: each parses its flags, desugars them into
+//! the equivalent [`RunSpec`] (the functions in this module), and hands
+//! it to [`crate::pipeline::Runner`] — the same engine `craig run
+//! <spec.toml>` uses.  Every shim takes `--print-spec` to dump the
+//! equivalent spec file instead of running, so
+//! `craig select … --print-spec > s.toml && craig run s.toml` is
+//! guaranteed to reproduce `craig select …` bitwise (asserted by
+//! `rust/tests/spec_roundtrip.rs`; the desugaring table lives in
+//! DESIGN.md §9).
+
+use anyhow::Result;
+
+use crate::cli::{App, Args, Command};
+use crate::coreset::{Budget, Metric, SimStorePolicy};
+use crate::optim::LrSchedule;
+use crate::trainer::convex::IgMethod;
+use crate::trainer::EmbeddingKind;
+
+use super::{
+    method_from_name, DataSpec, EmbeddingSpec, OutputSpec, RunSpec, SelectionMode, SelectionSpec,
+    TrainSpec,
+};
+
+/// The `craig` command table (one source of truth for `main` and the
+/// shim-equivalence tests).
+pub fn app() -> App {
+    App {
+        name: "craig",
+        about: "Coresets for Data-efficient Training (ICML 2020) — rust+JAX+Pallas reproduction",
+        commands: vec![
+            Command::new("info", "show environment, artifacts and dataset stats")
+                .opt_default("dataset", "covtype", "dataset to summarize")
+                .opt_default("n", "2000", "synthetic dataset size"),
+            Command::new("run", "execute a RunSpec file (the primary entry point)")
+                .opt("spec", "spec path (or pass it as the positional argument)")
+                .repeated("set", "override: --set key=value (repeatable)")
+                .flag("print-spec", "print the effective spec and exit"),
+            Command::new("select", "run CRAIG coreset selection (shim over `run`)")
+                .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
+                .opt_default("n", "10000", "synthetic dataset size")
+                .opt_default("fraction", "0.1", "subset fraction per class")
+                .opt_default("method", "lazy", "lazy|naive|stochastic")
+                .opt_default("metric", "euclidean", "distance metric: euclidean|cosine")
+                .opt_default("seed", "0", "rng seed")
+                .opt_default("parallelism", "1", "intra-class selection threads")
+                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
+                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("stream-shards", "0", "merge-and-reduce over K in-memory shards")
+                .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
+                .opt("out", "CSV path for the selected coreset")
+                .flag("print-spec", "print the equivalent spec file and exit"),
+            Command::new("shard", "split a dataset into stratified on-disk shards")
+                .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
+                .opt_default("n", "50000", "synthetic dataset size")
+                .opt("input", "LIBSVM file to shard (overrides --dataset)")
+                .opt_default("shards", "8", "shard count K")
+                .opt_default("seed", "0", "rng seed (data gen + stratified deal)")
+                .opt("out-dir", "output directory for shards + manifest (required)"),
+            Command::new("select-stream", "out-of-core CRAIG over shards (shim over `run`)")
+                .opt("shards-dir", "shard directory written by `craig shard` (required)")
+                .opt_default("fraction", "0.1", "final subset fraction per class")
+                .opt("count", "absolute final element count (overrides --fraction)")
+                .opt("shard-budget", "per-shard element count override")
+                .opt_default("method", "lazy", "lazy|naive|stochastic")
+                .opt_default("metric", "euclidean", "distance metric: euclidean|cosine")
+                .opt_default("seed", "0", "rng seed")
+                .opt_default("workers", "4", "shard-level worker threads")
+                .opt_default("parallelism", "1", "intra-class selection threads")
+                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
+                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("engine", "auto", "reduce-round backend: native|xla|auto")
+                .opt("out", "CSV path for the selected coreset")
+                .flag("print-spec", "print the equivalent spec file and exit"),
+            Command::new("train", "convex logreg experiment (shim over `run`)")
+                .opt_default("dataset", "covtype", "dataset name")
+                .opt_default("n", "10000", "synthetic dataset size")
+                .opt_default("mode", "craig", "full|craig|random")
+                .opt_default("fraction", "0.1", "subset fraction")
+                .opt_default("method", "sgd", "sgd|saga|svrg")
+                .opt_default("epochs", "20", "epoch count")
+                .opt_default("batch", "10", "minibatch size (sgd)")
+                .opt_default("lam", "1e-5", "L2 regularization")
+                .opt_default("schedule", "exp:0.5:0.9", "lr schedule spec")
+                .opt_default("metric", "euclidean", "distance metric: euclidean|cosine")
+                .opt_default("seed", "0", "rng seed")
+                .opt_default("parallelism", "1", "intra-class selection threads")
+                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
+                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("stream-shards", "0", "merge-and-reduce over K in-memory shards")
+                .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
+                .opt("out", "CSV path for the epoch trace")
+                .flag("print-spec", "print the equivalent spec file and exit"),
+            Command::new("train-mlp", "neural experiment (shim over `run`)")
+                .opt_default("dataset", "mnist", "dataset name")
+                .opt_default("n", "2000", "synthetic dataset size")
+                .opt_default("mode", "craig", "full|craig|random")
+                .opt_default("fraction", "0.5", "subset fraction")
+                .opt_default("reselect", "1", "reselect every R epochs")
+                .opt_default("epochs", "10", "epoch count")
+                .opt_default("hidden", "100", "hidden units")
+                .opt_default("lr", "0.01", "constant learning rate")
+                .opt_default("embedding", "grad-proxy", "selection embedding: raw|grad-proxy")
+                .opt_default("metric", "euclidean", "distance metric: euclidean|cosine")
+                .opt_default("seed", "0", "rng seed")
+                .opt_default("parallelism", "1", "intra-class selection threads")
+                .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
+                .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("stream-shards", "0", "streamed per-epoch reselection over K shards")
+                .opt("out", "CSV path for the epoch trace")
+                .flag("print-spec", "print the equivalent spec file and exit"),
+            Command::new("grad-error", "measure gradient-estimation error (Fig. 2)")
+                .opt_default("dataset", "covtype", "dataset name")
+                .opt_default("n", "4000", "synthetic dataset size")
+                .opt_default("fraction", "0.1", "subset fraction")
+                .opt_default("samples", "10", "sampled parameter points")
+                .opt_default("seed", "0", "rng seed"),
+            Command::new("bench", "fixed perf-snapshot suite for the selection hot path")
+                .flag("json", "write the schema'd snapshot file")
+                .flag("quick", "tiny suite (the CI smoke variant)")
+                .opt_default("threads", "4", "parallel leg thread count (vs 1 thread)")
+                .opt_default("out", "BENCH_selection.json", "snapshot path for --json"),
+        ],
+    }
+}
+
+/// Flags shared by every selection-bearing shim.  `method` is passed
+/// in because the convex/neural shims overload `--method` for the IG
+/// engine (their greedy engine is always lazy, as it always was).
+fn common_selection(
+    a: &Args,
+    mode: SelectionMode,
+    method: crate::coreset::Method,
+    budget: Budget,
+) -> Result<SelectionSpec> {
+    let mem: usize = a.parse_opt("mem-budget", crate::coreset::DEFAULT_SIM_MEM_BUDGET)?;
+    Ok(SelectionSpec {
+        mode,
+        method,
+        budget,
+        store: SimStorePolicy::parse(a.opt("sim-store").unwrap_or("auto"), mem)?,
+        stream_shards: a.parse_opt("stream-shards", 0)?,
+        parallelism: a.parse_opt("parallelism", 1)?,
+        workers: 1,
+        shard_budget: None,
+    })
+}
+
+fn embedding(a: &Args, kind: EmbeddingKind) -> Result<EmbeddingSpec> {
+    Ok(EmbeddingSpec {
+        kind,
+        metric: Metric::parse(a.opt("metric").unwrap_or("euclidean"))?,
+    })
+}
+
+fn synthetic_data(a: &Args, default_dataset: &str, default_n: usize) -> Result<DataSpec> {
+    Ok(DataSpec::Synthetic {
+        dataset: a.opt("dataset").unwrap_or(default_dataset).to_string(),
+        n: a.parse_opt("n", default_n)?,
+    })
+}
+
+fn mode_of(a: &Args) -> Result<SelectionMode> {
+    SelectionMode::parse(a.opt("mode").unwrap_or("craig"))
+}
+
+/// `craig select …` ⇒ spec.
+pub fn spec_for_select(a: &Args) -> Result<RunSpec> {
+    let budget = Budget::Fraction(a.parse_opt("fraction", 0.1)?);
+    let spec = RunSpec {
+        name: "select".to_string(),
+        seed: a.parse_opt("seed", 0)?,
+        engine: a.opt("engine").unwrap_or("auto").to_string(),
+        data: synthetic_data(a, "covtype", 10_000)?,
+        embedding: embedding(a, EmbeddingKind::RawFeatures)?,
+        selection: common_selection(
+            a,
+            SelectionMode::Craig,
+            method_from_name(a.opt("method").unwrap_or("lazy"), 0.05)?,
+            budget,
+        )?,
+        train: TrainSpec::None,
+        output: OutputSpec {
+            coreset_csv: a.opt("out").map(str::to_string),
+            ..Default::default()
+        },
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// `craig select-stream …` ⇒ spec.
+pub fn spec_for_select_stream(a: &Args) -> Result<RunSpec> {
+    let budget = match a.opt("count") {
+        Some(_) => Budget::Count(a.parse_opt("count", 0)?),
+        None => Budget::Fraction(a.parse_opt("fraction", 0.1)?),
+    };
+    let mut selection = common_selection(
+        a,
+        SelectionMode::Craig,
+        method_from_name(a.opt("method").unwrap_or("lazy"), 0.05)?,
+        budget,
+    )?;
+    selection.workers = a.parse_opt("workers", 4)?;
+    if a.opt("shard-budget").is_some() {
+        selection.shard_budget = Some(a.parse_opt("shard-budget", 0)?);
+    }
+    let spec = RunSpec {
+        name: "select-stream".to_string(),
+        seed: a.parse_opt("seed", 0)?,
+        engine: a.opt("engine").unwrap_or("auto").to_string(),
+        data: DataSpec::ShardDir { dir: a.req("shards-dir")?.to_string() },
+        embedding: embedding(a, EmbeddingKind::RawFeatures)?,
+        selection,
+        train: TrainSpec::None,
+        output: OutputSpec {
+            coreset_csv: a.opt("out").map(str::to_string),
+            ..Default::default()
+        },
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// `craig train …` ⇒ spec.
+pub fn spec_for_train(a: &Args) -> Result<RunSpec> {
+    let budget = Budget::Fraction(a.parse_opt("fraction", 0.1)?);
+    let spec = RunSpec {
+        name: "train".to_string(),
+        seed: a.parse_opt("seed", 0)?,
+        engine: a.opt("engine").unwrap_or("auto").to_string(),
+        data: synthetic_data(a, "covtype", 10_000)?,
+        embedding: embedding(a, EmbeddingKind::RawFeatures)?,
+        selection: common_selection(a, mode_of(a)?, crate::coreset::Method::Lazy, budget)?,
+        train: TrainSpec::Logreg {
+            method: IgMethod::parse(a.opt("method").unwrap_or("sgd"))?,
+            epochs: a.parse_opt("epochs", 20)?,
+            batch: a.parse_opt("batch", 10)?,
+            lam: a.parse_opt("lam", 1e-5f32)?,
+            schedule: LrSchedule::parse(a.opt("schedule").unwrap_or("exp:0.5:0.9"))?,
+            train_frac: 0.5,
+        },
+        output: OutputSpec {
+            history_csv: a.opt("out").map(str::to_string),
+            ..Default::default()
+        },
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// `craig train-mlp …` ⇒ spec.  Proxy features are low-dimensional, so
+/// the shim pins the native engine (the historical behaviour).
+pub fn spec_for_train_mlp(a: &Args) -> Result<RunSpec> {
+    let budget = Budget::Fraction(a.parse_opt("fraction", 0.5)?);
+    let selection = common_selection(a, mode_of(a)?, crate::coreset::Method::Lazy, budget)?;
+    let spec = RunSpec {
+        name: "train-mlp".to_string(),
+        seed: a.parse_opt("seed", 0)?,
+        engine: "native".to_string(),
+        data: synthetic_data(a, "mnist", 2000)?,
+        embedding: embedding(
+            a,
+            EmbeddingKind::parse(a.opt("embedding").unwrap_or("grad-proxy"))?,
+        )?,
+        selection,
+        train: TrainSpec::Mlp {
+            hidden: a.parse_opt("hidden", 100)?,
+            epochs: a.parse_opt("epochs", 10)?,
+            lr: a.parse_opt("lr", 0.01f32)?,
+            reselect: a.parse_opt("reselect", 1)?,
+            train_frac: 0.8,
+        },
+        output: OutputSpec {
+            history_csv: a.opt("out").map(str::to_string),
+            ..Default::default()
+        },
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Dispatch;
+
+    fn args_for(cmd: &str, argv: &[&str]) -> Args {
+        let mut full: Vec<String> = vec![cmd.to_string()];
+        full.extend(argv.iter().map(|s| s.to_string()));
+        match app().dispatch(&full).unwrap() {
+            Dispatch::Command(name, a) => {
+                assert_eq!(name, cmd);
+                a
+            }
+            other => panic!("expected a command, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn select_defaults_desugar() {
+        let spec = spec_for_select(&args_for("select", &[])).unwrap();
+        assert_eq!(spec.name, "select");
+        assert_eq!(spec.data, DataSpec::Synthetic { dataset: "covtype".into(), n: 10_000 });
+        assert_eq!(spec.selection.budget, Budget::Fraction(0.1));
+        assert_eq!(spec.train, TrainSpec::None);
+        // The printed spec re-parses to the same value (the --print-spec
+        // → `craig run` contract).
+        assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+    }
+
+    #[test]
+    fn train_flags_desugar() {
+        let a = args_for(
+            "train",
+            &["--mode", "random", "--method", "saga", "--epochs", "7", "--metric", "cosine"],
+        );
+        let spec = spec_for_train(&a).unwrap();
+        assert_eq!(spec.selection.mode, SelectionMode::Random);
+        assert_eq!(spec.embedding.metric, Metric::Cosine);
+        match &spec.train {
+            TrainSpec::Logreg { method, epochs, .. } => {
+                assert_eq!(*method, IgMethod::Saga);
+                assert_eq!(*epochs, 7);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+    }
+
+    #[test]
+    fn select_stream_flags_desugar() {
+        let a = args_for(
+            "select-stream",
+            &["--shards-dir", "/tmp/s", "--count", "64", "--workers", "2", "--shard-budget", "9"],
+        );
+        let spec = spec_for_select_stream(&a).unwrap();
+        assert_eq!(spec.data, DataSpec::ShardDir { dir: "/tmp/s".into() });
+        assert_eq!(spec.selection.budget, Budget::Count(64));
+        assert_eq!(spec.selection.workers, 2);
+        assert_eq!(spec.selection.shard_budget, Some(9));
+        assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+    }
+
+    #[test]
+    fn train_mlp_embedding_flag() {
+        let a = args_for("train-mlp", &["--embedding", "raw", "--fraction", "0.25"]);
+        let spec = spec_for_train_mlp(&a).unwrap();
+        assert_eq!(spec.embedding.kind, EmbeddingKind::RawFeatures);
+        assert_eq!(spec.engine, "native");
+        assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+        // Proxy default survives the round trip too.
+        let spec = spec_for_train_mlp(&args_for("train-mlp", &[])).unwrap();
+        assert_eq!(spec.embedding.kind, EmbeddingKind::GradProxy);
+        assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+    }
+}

@@ -14,6 +14,39 @@ pub mod neural;
 
 use crate::coreset::{Budget, SelectorConfig};
 
+/// Which per-sample embedding CRAIG distances are computed over — the
+/// axis related work varies (AdaCore swaps in curvature-aware
+/// embeddings, CREST swaps objectives per training region), lifted out
+/// of the trainers so the spec layer can set it declaratively.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EmbeddingKind {
+    /// Raw feature rows — the convex protocol, where Eq. 9 bounds
+    /// gradient distances by feature distances.
+    RawFeatures,
+    /// Last-layer gradient proxies `p − y` (Eq. 16) recomputed at the
+    /// current parameters — the neural protocol (Sec. 3.4).  Only
+    /// meaningful where a model provides proxies (the MLP trainer).
+    GradProxy,
+}
+
+impl EmbeddingKind {
+    /// Parse a CLI/spec token: `raw` | `grad-proxy`.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        match spec {
+            "raw" => Ok(EmbeddingKind::RawFeatures),
+            "grad-proxy" => Ok(EmbeddingKind::GradProxy),
+            other => anyhow::bail!("unknown embedding '{other}' (raw|grad-proxy)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EmbeddingKind::RawFeatures => "raw",
+            EmbeddingKind::GradProxy => "grad-proxy",
+        }
+    }
+}
+
 /// What data the trainer feeds the optimizer.
 #[derive(Clone, Debug)]
 pub enum SubsetMode {

@@ -20,7 +20,7 @@ use crate::optim::schedules::Warmup;
 use crate::optim::{Momentum, Optimizer, Sgd};
 use crate::rng::Rng;
 
-use super::{EpochRecord, History, SubsetMode};
+use super::{EmbeddingKind, EpochRecord, History, SubsetMode};
 
 /// Neural experiment configuration.
 #[derive(Clone, Debug)]
@@ -35,6 +35,13 @@ pub struct NeuralConfig {
     pub momentum: bool,
     pub seed: u64,
     pub subset: SubsetMode,
+    /// What CRAIG measures distances over when (re)selecting: the
+    /// last-layer gradient proxies of Eq. 16 (the paper's neural
+    /// protocol, the default) or the raw feature rows (parameter-free —
+    /// selection happens once, effectively, since the embedding never
+    /// moves).  Historically hard-wired to proxies inside this module;
+    /// lifted into config so the spec layer can vary the axis.
+    pub embedding: EmbeddingKind,
 }
 
 impl Default for NeuralConfig {
@@ -51,6 +58,7 @@ impl Default for NeuralConfig {
             momentum: false,
             seed: 0,
             subset: SubsetMode::Full,
+            embedding: EmbeddingKind::GradProxy,
         }
     }
 }
@@ -69,7 +77,7 @@ fn full_coreset(n: usize) -> WeightedCoreset {
 /// that keeps per-epoch similarity memory bounded when `n²` over the
 /// proxies would not fit.
 fn select_neural(
-    mode: &SubsetMode,
+    ncfg: &NeuralConfig,
     mlp: &mut Mlp,
     params: &[f32],
     train: &Dataset,
@@ -78,12 +86,19 @@ fn select_neural(
     epoch: usize,
 ) -> (WeightedCoreset, f64) {
     let n = mlp.num_examples();
-    match mode {
+    match &ncfg.subset {
         SubsetMode::Full => (full_coreset(n), 0.0),
         SubsetMode::Craig { cfg, .. } => {
-            let all: Vec<usize> = (0..n).collect();
-            let proxies = mlp.proxy_features(params, &all);
-            let res = selector.select(&proxies, &train.y, train.num_classes, cfg, engine);
+            let res = match ncfg.embedding {
+                EmbeddingKind::GradProxy => {
+                    let all: Vec<usize> = (0..n).collect();
+                    let proxies = mlp.proxy_features(params, &all);
+                    selector.select(&proxies, &train.y, train.num_classes, cfg, engine)
+                }
+                EmbeddingKind::RawFeatures => {
+                    selector.select(&train.x, &train.y, train.num_classes, cfg, engine)
+                }
+            };
             (res.coreset, res.epsilon)
         }
         SubsetMode::Random { budget, seed, .. } => {
@@ -128,9 +143,8 @@ pub fn train_mlp(
     // (streamed or in-memory, per `SelectorConfig::stream_shards`).
     let mut selector = EpochSelector::new();
 
-    let (mut subset, mut epsilon) = select_sw.time(|| {
-        select_neural(&cfg.subset, &mut mlp, &params, train, &mut selector, engine, 0)
-    });
+    let (mut subset, mut epsilon) = select_sw
+        .time(|| select_neural(cfg, &mut mlp, &params, train, &mut selector, engine, 0));
     let mut distinct: std::collections::HashSet<usize> =
         subset.indices.iter().copied().collect();
 
@@ -145,7 +159,7 @@ pub fn train_mlp(
     for epoch in 0..cfg.epochs {
         if period > 0 && epoch > 0 && epoch % period == 0 {
             let (s, e) = select_sw.time(|| {
-                select_neural(&cfg.subset, &mut mlp, &params, train, &mut selector, engine, epoch)
+                select_neural(cfg, &mut mlp, &params, train, &mut selector, engine, epoch)
             });
             subset = s;
             epsilon = e;
@@ -296,6 +310,37 @@ mod tests {
         assert!(h.subset_size > 0 && h.subset_size <= tr.n() / 4);
         assert!(h.last().train_loss.is_finite());
         assert!(h.last().select_s > 0.0);
+    }
+
+    #[test]
+    fn raw_feature_embedding_selects_without_proxies() {
+        // The lifted embedding knob: selection over raw feature rows
+        // instead of the Eq. 16 proxies.  Features never move, so every
+        // same-seed reselection returns the same subset — distinct
+        // points stay flat across epochs.
+        let (tr, te) = split(300);
+        let mut cfg = NeuralConfig { epochs: 3, hidden: 12, ..Default::default() };
+        cfg.embedding = EmbeddingKind::RawFeatures;
+        cfg.subset = SubsetMode::Craig {
+            cfg: SelectorConfig { budget: Budget::Fraction(0.25), ..Default::default() },
+            reselect_every: 1,
+        };
+        let mut eng = NativePairwise;
+        let h = train_mlp(&tr, &te, &cfg, &mut eng).unwrap();
+        assert!(h.subset_size > 0 && h.last().train_loss.is_finite());
+        assert_eq!(
+            h.records[0].distinct_points_used,
+            h.last().distinct_points_used,
+            "a static embedding reselects the same points"
+        );
+    }
+
+    #[test]
+    fn embedding_kind_parse() {
+        assert_eq!(EmbeddingKind::parse("raw").unwrap(), EmbeddingKind::RawFeatures);
+        assert_eq!(EmbeddingKind::parse("grad-proxy").unwrap(), EmbeddingKind::GradProxy);
+        assert!(EmbeddingKind::parse("ntk").is_err());
+        assert_eq!(EmbeddingKind::GradProxy.name(), "grad-proxy");
     }
 
     #[test]

@@ -1,10 +1,65 @@
 //! Small shared utilities: a thread pool with both a resident job queue
 //! and a scoped (borrowing) fan-out API, deterministic range grids for
-//! tiled kernels, and argmin/argmax.
+//! tiled kernels, argmin/argmax, and the JSON-emission / git-revision
+//! substrate shared by the bench snapshot and the run manifest.
 
 pub mod threadpool;
 
 pub use threadpool::{even_ranges, triangular_ranges, ThreadPool};
+
+/// Resolve the git revision for machine-readable artifacts and the
+/// CLI's `--version` line: `$GITHUB_SHA` in CI, `git rev-parse`
+/// locally, `"unknown"` offline.  Cached process-wide — the first call
+/// pays the subprocess, every later `Runner::run` / bench snapshot
+/// reads the cache.
+pub fn git_rev() -> String {
+    static REV: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    REV.get_or_init(|| {
+        if let Ok(sha) = std::env::var("GITHUB_SHA") {
+            if !sha.is_empty() {
+                return sha;
+            }
+        }
+        std::process::Command::new("git")
+            .args(["rev-parse", "--short=12", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string())
+    })
+    .clone()
+}
+
+/// Escape a string for a JSON literal (shared by `BENCH_selection.json`
+/// and the run manifest — no serde in the offline registry).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A JSON number literal (f64 `Display` round-trips and emits valid
+/// JSON for all finite values; non-finite degrades to `null`).
+pub fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
 
 /// Index of the maximum value (first on ties). Empty slice → None.
 pub fn argmax(xs: &[f32]) -> Option<usize> {

@@ -152,6 +152,7 @@ fn full_select_identical_across_parallelism() {
                     parallelism: width,
                     sim_store: store,
                     stream_shards: 0,
+                    ..Default::default()
                 };
                 let mut eng = craig::coreset::NativePairwise;
                 let res = craig::coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);

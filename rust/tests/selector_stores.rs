@@ -16,8 +16,8 @@
 
 use craig::coreset::{
     lazy_greedy_par, naive_greedy_par, stochastic_greedy_par, BlockedSim, Budget, DenseSim,
-    Method, Selection, Selector, SelectorConfig, SimStore, SimStorePolicy, SimilaritySource,
-    StopRule, WeightedCoreset,
+    Method, Metric, Selection, Selector, SelectorConfig, SimStore, SimStorePolicy,
+    SimilaritySource, StopRule, WeightedCoreset,
 };
 use craig::linalg::Matrix;
 use craig::rng::Rng;
@@ -53,23 +53,92 @@ fn run_engine<S: SimilaritySource + ?Sized>(
 fn blocked_parity_with_dense_all_engines_shared_d_max() {
     // Same d_max ⇒ bitwise-equal similarity columns ⇒ the stores are
     // indistinguishable to every engine: indices, gains, F(S), ε and
-    // weights all match exactly, at every width.
-    let x = features(650, 6, 9);
-    let pool = ThreadPool::scoped(4);
-    let dense = DenseSim::from_features_par(&x, &pool);
-    let blocked = BlockedSim::with_d_max(&x, dense.d_max());
-    for method in ["lazy", "naive", "stochastic"] {
-        let want = run_engine(&dense, method, 30, 1);
-        for width in [1usize, 2, 8] {
-            let got = run_engine(&blocked, method, 30, width);
-            let tag = format!("{method}/w{width}");
-            assert_eq!(want.0.order, got.0.order, "{tag}: indices");
-            assert_eq!(want.0.gains, got.0.gains, "{tag}: gains");
-            assert_eq!(want.0.f_value, got.0.f_value, "{tag}: F(S)");
-            assert_eq!(want.0.epsilon, got.0.epsilon, "{tag}: epsilon");
-            assert_eq!(want.1, got.1, "{tag}: weights");
+    // weights all match exactly, at every width.  The metric rewrite
+    // happens before either store sees the rows (Metric::prepare_rows),
+    // so the cosine path must satisfy the exact same 3-engine × 2-store
+    // parity as euclidean.
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let mut x = features(650, 6, 9);
+        metric.prepare_rows(&mut x);
+        let pool = ThreadPool::scoped(4);
+        let dense = DenseSim::from_features_par(&x, &pool);
+        let blocked = BlockedSim::with_d_max(&x, dense.d_max());
+        for method in ["lazy", "naive", "stochastic"] {
+            let want = run_engine(&dense, method, 30, 1);
+            for width in [1usize, 2, 8] {
+                let got = run_engine(&blocked, method, 30, width);
+                let tag = format!("{}/{method}/w{width}", metric.name());
+                assert_eq!(want.0.order, got.0.order, "{tag}: indices");
+                assert_eq!(want.0.gains, got.0.gains, "{tag}: gains");
+                assert_eq!(want.0.f_value, got.0.f_value, "{tag}: F(S)");
+                assert_eq!(want.0.epsilon, got.0.epsilon, "{tag}: epsilon");
+                assert_eq!(want.1, got.1, "{tag}: weights");
+            }
         }
     }
+}
+
+#[test]
+fn cosine_metric_through_selector_store_parity() {
+    // End-to-end through Selector::select: under the cosine metric the
+    // dense and blocked stores must still pick identical coresets with
+    // identical weights for every engine (the stores share one
+    // arithmetic path on the normalized rows).
+    let ds = {
+        let mut x = features(500, 6, 21);
+        // Scale half the rows 50×: cosine ignores magnitude, euclidean
+        // does not — this keeps the test sensitive to the metric knob.
+        for i in 0..250 {
+            for v in x.row_mut(i).iter_mut() {
+                *v *= 50.0;
+            }
+        }
+        x
+    };
+    let labels: Vec<u32> = (0..500).map(|i| (i % 2) as u32).collect();
+    for method in [Method::Lazy, Method::Naive, Method::Stochastic { delta: 0.1 }] {
+        let mk = |store: SimStorePolicy| SelectorConfig {
+            method,
+            budget: Budget::Count(40),
+            seed: 5,
+            sim_store: store,
+            metric: Metric::Cosine,
+            ..Default::default()
+        };
+        let mut eng = craig::coreset::NativePairwise;
+        let dense = craig::coreset::select(&ds, &labels, 2, &mk(SimStorePolicy::Dense), &mut eng);
+        let blocked =
+            craig::coreset::select(&ds, &labels, 2, &mk(SimStorePolicy::Blocked), &mut eng);
+        assert_eq!(dense.coreset.indices, blocked.coreset.indices, "{method:?}: indices");
+        assert_eq!(dense.coreset.gamma, blocked.coreset.gamma, "{method:?}: weights");
+        assert_eq!(dense.stores, vec![SimStore::Dense, SimStore::Dense]);
+        assert_eq!(blocked.stores, vec![SimStore::Blocked, SimStore::Blocked]);
+        let total: f32 = dense.coreset.gamma.iter().sum();
+        assert_eq!(total, 500.0, "γ still covers every point under cosine");
+    }
+    // And the knob is not a no-op: euclidean and cosine disagree on
+    // scale-varied data.
+    let mut eng = craig::coreset::NativePairwise;
+    let e = craig::coreset::select(
+        &ds,
+        &labels,
+        2,
+        &SelectorConfig { budget: Budget::Count(40), seed: 5, ..Default::default() },
+        &mut eng,
+    );
+    let c = craig::coreset::select(
+        &ds,
+        &labels,
+        2,
+        &SelectorConfig {
+            budget: Budget::Count(40),
+            seed: 5,
+            metric: Metric::Cosine,
+            ..Default::default()
+        },
+        &mut eng,
+    );
+    assert_ne!(e.coreset.indices, c.coreset.indices, "metric must change the selection");
 }
 
 #[test]
@@ -107,6 +176,7 @@ fn blocked_selection_through_selector_tiled_columns() {
             parallelism: width,
             sim_store: SimStorePolicy::Blocked,
             stream_shards: 0,
+            ..Default::default()
         };
         let mut eng = craig::coreset::NativePairwise;
         let res = craig::coreset::select(&x, &labels, 1, &cfg, &mut eng);
@@ -136,6 +206,7 @@ fn large_single_class_blocked_never_materializes_n_squared() {
         parallelism: 8,
         sim_store: SimStorePolicy::Blocked,
         stream_shards: 0,
+        ..Default::default()
     };
     let mut selector = Selector::new();
     let mut eng = craig::coreset::NativePairwise;

@@ -1,0 +1,204 @@
+//! Spec-layer integration suite (ISSUE 5):
+//!
+//! * parse → serialize → parse is the identity, and serialization is
+//!   idempotent, for specs covering every data/train kind;
+//! * unknown keys and bad values are rejected with line numbers;
+//! * the legacy CLI shims are **bitwise-equivalent** to their `RunSpec`
+//!   desugarings: `craig <shim> --print-spec > s.toml && craig run
+//!   s.toml` reproduces the shim's selection and deterministic manifest
+//!   exactly, and the desugared craig path matches a direct
+//!   `coreset::select` with the equivalent `SelectorConfig`;
+//! * the checked-in `examples/specs/*.toml` parse and (for the smoke
+//!   spec) execute offline.
+
+use std::path::PathBuf;
+
+use craig::cli::{Args, Dispatch};
+use craig::coreset::{self, Budget, SelectorConfig, StreamConfig};
+use craig::data::shard::write_shards;
+use craig::data::synthetic;
+use craig::pipeline::Runner;
+use craig::spec::{shim, RunSpec, TrainSpec};
+
+fn tempdir(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("craig-spec-rt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// Parse shim flags exactly as `main` does.
+fn shim_args(cmd: &str, argv: &[&str]) -> Args {
+    let mut full = vec![cmd.to_string()];
+    full.extend(argv.iter().map(|s| s.to_string()));
+    match shim::app().dispatch(&full).unwrap() {
+        Dispatch::Command(name, a) => {
+            assert_eq!(name, cmd);
+            a
+        }
+        other => panic!("expected a command, got {other:?}"),
+    }
+}
+
+#[test]
+fn every_shim_print_spec_reparses_to_the_same_spec() {
+    // The --print-spec contract: the dumped file IS the shim invocation.
+    let cases: Vec<(&str, Vec<&str>, RunSpec)> = vec![
+        ("select", vec!["--n", "500", "--fraction", "0.2", "--seed", "9"], {
+            let a = shim_args("select", &["--n", "500", "--fraction", "0.2", "--seed", "9"]);
+            shim::spec_for_select(&a).unwrap()
+        }),
+        ("train", vec!["--n", "400", "--method", "svrg", "--metric", "cosine"], {
+            let a = shim_args("train", &["--n", "400", "--method", "svrg", "--metric", "cosine"]);
+            shim::spec_for_train(&a).unwrap()
+        }),
+        ("train-mlp", vec!["--n", "300", "--embedding", "raw", "--reselect", "2"], {
+            let mlp_flags = ["--n", "300", "--embedding", "raw", "--reselect", "2"];
+            let a = shim_args("train-mlp", &mlp_flags);
+            shim::spec_for_train_mlp(&a).unwrap()
+        }),
+        ("select-stream", vec!["--shards-dir", "/tmp/x", "--count", "32"], {
+            let a = shim_args("select-stream", &["--shards-dir", "/tmp/x", "--count", "32"]);
+            shim::spec_for_select_stream(&a).unwrap()
+        }),
+    ];
+    for (cmd, flags, spec) in cases {
+        let toml = spec.to_toml();
+        let reparsed = RunSpec::parse(&toml)
+            .unwrap_or_else(|e| panic!("{cmd} {flags:?}: reparse failed: {e}\n{toml}"));
+        assert_eq!(reparsed, spec, "{cmd} {flags:?}: print-spec must round-trip\n{toml}");
+        assert_eq!(reparsed.to_toml(), toml, "{cmd}: serialization must be idempotent");
+    }
+}
+
+#[test]
+fn shim_select_is_bitwise_equivalent_to_spec_run_and_legacy_path() {
+    let flags = ["--n", "400", "--fraction", "0.1", "--seed", "3", "--dataset", "covtype"];
+    let spec = shim::spec_for_select(&shim_args("select", &flags)).unwrap();
+
+    // Shim path (what `craig select` executes).
+    let shim_rep = Runner::new().run(&spec).unwrap();
+    // Spec-file path (what `craig run <printed spec>` executes).
+    let reparsed = RunSpec::parse(&spec.to_toml()).unwrap();
+    let spec_rep = Runner::new().run(&reparsed).unwrap();
+
+    let (a, b) = (shim_rep.coreset.as_ref().unwrap(), spec_rep.coreset.as_ref().unwrap());
+    assert_eq!(a.indices, b.indices, "selections must be bitwise-identical");
+    assert_eq!(a.gamma, b.gamma);
+    assert_eq!(
+        shim_rep.manifest_json_deterministic(),
+        spec_rep.manifest_json_deterministic(),
+        "deterministic manifests must be byte-identical"
+    );
+
+    // And both equal the pre-redesign arithmetic: coreset::select with
+    // the hand-built SelectorConfig the legacy subcommand used.
+    let ds = synthetic::by_name("covtype", 400, 3).unwrap();
+    let legacy_cfg =
+        SelectorConfig { budget: Budget::Fraction(0.1), seed: 3, ..Default::default() };
+    let mut eng = coreset::NativePairwise;
+    let legacy = coreset::select(&ds.x, &ds.y, ds.num_classes, &legacy_cfg, &mut eng);
+    assert_eq!(a.indices, legacy.coreset.indices, "shim must preserve legacy selections");
+    assert_eq!(a.gamma, legacy.coreset.gamma);
+    assert_eq!(shim_rep.f_value, legacy.f_value);
+}
+
+#[test]
+fn shim_select_stream_is_bitwise_equivalent_over_disk_shards() {
+    // Real on-disk shards: the shim's desugared spec must reproduce a
+    // hand-wired StreamingSelector run exactly, and the printed spec
+    // must reproduce the shim.
+    let dir = tempdir("stream");
+    let ds = synthetic::covtype_like(1200, 5);
+    write_shards(&ds, 3, 5, &dir).unwrap();
+    let dir_s = dir.to_str().unwrap();
+
+    let flags = ["--shards-dir", dir_s, "--count", "48", "--seed", "5", "--workers", "2"];
+    let spec = shim::spec_for_select_stream(&shim_args("select-stream", &flags)).unwrap();
+    let shim_rep = Runner::new().run(&spec).unwrap();
+    let spec_rep = Runner::new().run(&RunSpec::parse(&spec.to_toml()).unwrap()).unwrap();
+    let (a, b) = (shim_rep.coreset.as_ref().unwrap(), spec_rep.coreset.as_ref().unwrap());
+    assert_eq!(a.indices, b.indices);
+    assert_eq!(a.gamma, b.gamma);
+    assert_eq!(
+        shim_rep.manifest_json_deterministic(),
+        spec_rep.manifest_json_deterministic()
+    );
+
+    // Legacy arithmetic: StreamingSelector straight over the ShardSet.
+    let set = craig::data::shard::ShardSet::load(&dir).unwrap();
+    let scfg = SelectorConfig { budget: Budget::Count(48), seed: 5, ..Default::default() };
+    let mut stream_cfg = StreamConfig::new(scfg);
+    stream_cfg.workers = 2;
+    let mut streamer = craig::coreset::StreamingSelector::new(2);
+    let mut eng = coreset::NativePairwise;
+    let (legacy, _) = streamer.select(&set, &stream_cfg, &mut eng).unwrap();
+    assert_eq!(a.indices, legacy.coreset.indices);
+    assert_eq!(a.gamma, legacy.coreset.gamma);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shim_train_specs_execute_equivalently() {
+    // A tiny convex run through both faces of the API; histories must
+    // match bitwise (same selection, same shuffles, same steps).
+    let flags = ["--n", "300", "--epochs", "3", "--fraction", "0.2", "--seed", "2"];
+    let spec = shim::spec_for_train(&shim_args("train", &flags)).unwrap();
+    assert!(matches!(spec.train, TrainSpec::Logreg { epochs: 3, .. }));
+    let shim_rep = Runner::new().run(&spec).unwrap();
+    let spec_rep = Runner::new().run(&RunSpec::parse(&spec.to_toml()).unwrap()).unwrap();
+    let (ha, hb) = (shim_rep.history.as_ref().unwrap(), spec_rep.history.as_ref().unwrap());
+    assert_eq!(ha.subset_size, hb.subset_size);
+    assert_eq!(ha.records.len(), hb.records.len());
+    for (ra, rb) in ha.records.iter().zip(&hb.records) {
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {}: loss must be bitwise", ra.epoch);
+        assert_eq!(ra.test_metric, rb.test_metric);
+        assert_eq!(ra.grad_evals, rb.grad_evals);
+    }
+    // Bitwise-identical histories ⇒ byte-identical deterministic
+    // manifests.
+    assert_eq!(
+        shim_rep.manifest_json_deterministic(),
+        spec_rep.manifest_json_deterministic()
+    );
+}
+
+#[test]
+fn checked_in_example_specs_parse_and_smoke_executes() {
+    // Tests run from the package root (rust/); the specs live one up.
+    let specs_dir = PathBuf::from("../examples/specs");
+    for name in ["smoke.toml", "covtype-logreg.toml", "mnist-mlp.toml", "streaming.toml"] {
+        let path = specs_dir.join(name);
+        let spec = RunSpec::load(&path)
+            .unwrap_or_else(|e| panic!("{name} must parse: {e}"));
+        assert!(!spec.name.is_empty());
+    }
+    // Execute the smoke spec end-to-end, manifest redirected to a temp
+    // path so the repo stays clean.
+    let dir = tempdir("smoke");
+    let manifest = dir.join("manifest.json");
+    let mut spec = RunSpec::load(&specs_dir.join("smoke.toml")).unwrap();
+    spec.output.manifest = Some(manifest.to_str().unwrap().to_string());
+    let rep = Runner::new().run(&spec).unwrap();
+    assert!(rep.coreset.is_some());
+    let json = std::fs::read_to_string(&manifest).unwrap();
+    assert!(json.contains("\"kind\": \"run_manifest\""));
+    assert!(json.contains("\"schema_version\": 1"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cosine_spec_runs_through_the_front_door() {
+    // The acceptance knob: metric = cosine flows spec → SelectorConfig
+    // → stores, and changes the selection on scale-varied data.
+    let base = "name = \"cos\"\n[data]\ndataset = \"covtype\"\nn = 400\n\
+                [selection]\ncount = 30\n";
+    let cosine = format!("{base}[embedding]\nmetric = \"cosine\"\n");
+    let e_rep = Runner::new().run(&RunSpec::parse(base).unwrap()).unwrap();
+    let c_rep = Runner::new().run(&RunSpec::parse(&cosine).unwrap()).unwrap();
+    let (e, c) = (e_rep.coreset.unwrap(), c_rep.coreset.unwrap());
+    assert_eq!(e.indices.len(), 30);
+    assert_eq!(c.indices.len(), 30);
+    assert!(c_rep.manifest_json().contains("\"metric\": \"cosine\""));
+}
