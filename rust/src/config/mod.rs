@@ -140,9 +140,15 @@ impl Config {
             } else {
                 parse_scalar(vt, lineno)?
             };
-            if values.insert(full_key.clone(), value).is_some() {
-                bail!("line {lineno}: duplicate key '{full_key}'");
+            if values.contains_key(&full_key) {
+                // Last-write-wins would silently drop one of the two
+                // settings; name both sites so the fix is one edit.
+                let first = lines.get(&full_key).copied().unwrap_or(0);
+                bail!(
+                    "line {lineno}: duplicate key '{full_key}' (first defined on line {first})"
+                );
             }
+            values.insert(full_key.clone(), value);
             lines.insert(full_key, lineno);
         }
         Ok(Config { values, lines })
@@ -286,8 +292,21 @@ sizes = [0.1, 0.2, 0.3]
     }
 
     #[test]
-    fn duplicate_keys_rejected() {
-        assert!(Config::parse("a = 1\na = 2\n").is_err());
+    fn duplicate_keys_rejected_with_both_lines() {
+        let err = Config::parse("a = 1\na = 2\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("first defined on line 1"), "{err}");
+        assert!(err.contains("'a'"), "{err}");
+        // Same rule across sections: the flat key is section.key, so a
+        // repeat inside one section collides and the same key name in a
+        // *different* section does not.
+        let text = "[data]\nn = 1\n[select]\nn = 2\n";
+        assert!(Config::parse(text).is_ok(), "same key in different sections is legal");
+        let text = "[data]\nn = 1\nx = 0\nn = 2\n";
+        let err = Config::parse(text).unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("first defined on line 2"), "{err}");
+        assert!(err.contains("'data.n'"), "{err}");
     }
 
     #[test]

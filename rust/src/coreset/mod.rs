@@ -28,7 +28,8 @@ pub use selector::{
 };
 pub use sim::{BlockedSim, DenseSim, Metric, RowWeightedSim, SimilaritySource};
 pub use stream::{
-    EpochSelector, MemShards, ShardSource, StreamConfig, StreamStats, StreamingSelector,
+    EpochSelector, MemShards, ShardSource, ShardStat, StreamConfig, StreamStats,
+    StreamingSelector,
 };
 pub use weights::WeightedCoreset;
 

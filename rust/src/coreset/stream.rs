@@ -171,6 +171,21 @@ impl StreamConfig {
     }
 }
 
+/// One shard's telemetry row: what the shard phase learned about shard
+/// `shard` — population, union contribution, wall time.  Feeds the
+/// per-shard `--trace` events (`crate::trace`), one event per row.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStat {
+    /// Shard id (rows are in shard order).
+    pub shard: usize,
+    /// Shard population (rows loaded).
+    pub n: usize,
+    /// Rows this shard contributed to the merged union.
+    pub selected: usize,
+    /// Wall seconds (load + select) for this shard.
+    pub seconds: f64,
+}
+
 /// Telemetry from one streaming run.
 #[derive(Clone, Debug, Default)]
 pub struct StreamStats {
@@ -185,6 +200,10 @@ pub struct StreamStats {
     pub merge_ratio: f64,
     /// Per-shard wall seconds (load + select), in shard order.
     pub shard_seconds: Vec<f64>,
+    /// Per-shard telemetry rows (shard order) — population, union
+    /// contribution and wall time per shard; the trace's `shard`
+    /// events render one line per row.
+    pub shard_stats: Vec<ShardStat>,
     /// Wall seconds of the whole fanned-out shard phase.
     pub shard_phase_seconds: f64,
     /// Wall seconds of the merge + reduce round.
@@ -353,6 +372,15 @@ impl StreamingSelector {
             self.shard_selectors.iter().map(|s| s.workspace().peak_dense_bytes).max().unwrap_or(0);
         let max_shard_bytes = outcomes.iter().map(|o| o.shard_bytes).max().unwrap_or(0);
         let shard_seconds: Vec<f64> = outcomes.iter().map(|o| o.seconds).collect();
+        let shard_stats: Vec<ShardStat> = outcomes
+            .iter()
+            .map(|o| ShardStat {
+                shard: o.k,
+                n: sizes[o.k],
+                selected: o.res.coreset.indices.len(),
+                seconds: o.seconds,
+            })
+            .collect();
         let shard_evals: usize = outcomes.iter().map(|o| o.res.evaluations).sum();
 
         if k == 1 {
@@ -366,6 +394,7 @@ impl StreamingSelector {
                 selected: res.coreset.indices.len(),
                 merge_ratio: 1.0,
                 shard_seconds,
+                shard_stats,
                 shard_phase_seconds,
                 reduce_seconds: 0.0,
                 peak_dense_bytes: peak_shard_dense,
@@ -418,6 +447,7 @@ impl StreamingSelector {
             selected,
             merge_ratio: selected as f64 / union_size.max(1) as f64,
             shard_seconds,
+            shard_stats,
             shard_phase_seconds,
             reduce_seconds,
             peak_dense_bytes: peak_dense,
@@ -565,6 +595,15 @@ mod tests {
         assert!(stats.union_size >= 60, "union at least as large as the final budget");
         assert!(stats.merge_ratio <= 1.0);
         assert_eq!(stats.shard_seconds.len(), 4);
+        // Per-shard telemetry rows: in shard order, populations cover
+        // the dataset, contributions sum to the union.
+        assert_eq!(stats.shard_stats.len(), 4);
+        assert!(stats.shard_stats.iter().enumerate().all(|(i, s)| s.shard == i));
+        assert_eq!(stats.shard_stats.iter().map(|s| s.n).sum::<usize>(), 900);
+        assert_eq!(
+            stats.shard_stats.iter().map(|s| s.selected).sum::<usize>(),
+            stats.union_size
+        );
         // Final indices are valid, distinct dataset coordinates.
         let mut seen = res.coreset.indices.clone();
         seen.sort_unstable();

@@ -50,6 +50,7 @@ pub mod prop;
 pub mod rng;
 pub mod runtime;
 pub mod spec;
+pub mod trace;
 pub mod trainer;
 pub mod util;
 

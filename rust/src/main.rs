@@ -7,7 +7,11 @@
 //! subcommands survive as thin shims that desugar their flags into the
 //! equivalent `RunSpec` (each takes `--print-spec` to dump it):
 //!
-//! * `run`          — execute a spec file (`--set k=v` overrides).
+//! * `run`          — execute a spec file (`--set k=v` overrides,
+//!   `--trace` for the per-phase JSONL event stream).
+//! * `replay`       — re-execute a run manifest and verify bitwise
+//!   reproduction (exits nonzero with a field diff on divergence).
+//! * `doctor`       — preflight the environment / a spec / a manifest.
 //! * `select`       — CRAIG selection (shim).
 //! * `select-stream`— out-of-core merge-and-reduce selection (shim).
 //! * `train`        — convex logreg experiment (shim).
@@ -69,14 +73,22 @@ fn cmd_info(a: &Args) -> Result<()> {
 }
 
 /// Execute (or just print) a desugared spec — the one body behind every
-/// shim subcommand and `craig run`.
-fn run_spec(spec: RunSpec, print_only: bool) -> Result<()> {
+/// shim subcommand and `craig run`.  `trace` (the `--trace` opt) routes
+/// the per-phase JSONL event stream to a file.
+fn run_spec(spec: RunSpec, print_only: bool, trace: Option<&str>) -> Result<()> {
     if print_only {
         print!("{}", spec.to_toml());
         return Ok(());
     }
-    let report = Runner::new().run(&spec)?;
+    let mut runner = Runner::new();
+    if let Some(p) = trace {
+        runner.trace = Some(craig::trace::Trace::with_file(&spec.name, std::path::Path::new(p))?);
+    }
+    let report = runner.run(&spec)?;
     print_report(&report);
+    if let (Some(p), Some(t)) = (trace, runner.trace.as_ref()) {
+        println!("  wrote {p} (trace, {} events)", t.events().len());
+    }
     Ok(())
 }
 
@@ -170,7 +182,83 @@ fn cmd_run(a: &Args) -> Result<()> {
         cfg.set(k, v)?;
     }
     let spec = RunSpec::from_config(&cfg)?;
-    run_spec(spec, a.flag("print-spec"))
+    run_spec(spec, a.flag("print-spec"), a.opt("trace"))
+}
+
+/// `craig replay <manifest.json> [--set k=v] [--trace PATH]`: re-run
+/// the manifest's embedded spec through the same engine and assert the
+/// coreset indices, weights, Σγ, objective and manifest bytes
+/// reproduce exactly.  Exits nonzero with a field-level diff on any
+/// divergence; git-rev mismatches are warnings (provenance, not
+/// arithmetic).
+fn cmd_replay(a: &Args) -> Result<()> {
+    let path = match a.opt("manifest") {
+        Some(p) => p.to_string(),
+        None => a.positional.first().cloned().ok_or_else(|| {
+            anyhow::anyhow!("usage: craig replay <manifest.json> [--set key=value] [--trace PATH]")
+        })?,
+    };
+    if a.flag("print-spec") {
+        let text = std::fs::read_to_string(&path)?;
+        let doc = craig::pipeline::replay::parse_manifest(&text)?;
+        print!("{}", doc.get("spec_toml").and_then(|v| v.as_str()).unwrap_or_default());
+        return Ok(());
+    }
+    let mut overrides = Vec::new();
+    for ov in a.opt_all("set") {
+        let (k, v) = ov
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{ov}'"))?;
+        overrides.push((k.to_string(), v.to_string()));
+    }
+    let trace = match a.opt("trace") {
+        Some(p) => Some(craig::trace::Trace::with_file("replay", std::path::Path::new(p))?),
+        None => None,
+    };
+    let out = craig::pipeline::replay_manifest(std::path::Path::new(&path), &overrides, trace)?;
+    for w in &out.warnings {
+        eprintln!("warning: {w}");
+    }
+    if out.matched {
+        println!(
+            "replay OK: {path} reproduced bitwise ({} points, gamma_sum={}, f_value={})",
+            out.report.selected(),
+            out.report.gamma_sum(),
+            out.report.f_value
+        );
+        Ok(())
+    } else {
+        eprintln!("replay FAILED: {} field(s) diverged:", out.diffs.len());
+        for d in &out.diffs {
+            eprintln!("  {}", d.render());
+        }
+        anyhow::bail!("replay of {path} did not reproduce the manifest")
+    }
+}
+
+/// `craig doctor [<spec.toml>] [--manifest m.json]`: run the preflight
+/// check list and print one line per check.  Exits nonzero only on
+/// `FAIL` — warnings (no git, Auto-store fallback) are supported
+/// environments.
+fn cmd_doctor(a: &Args) -> Result<()> {
+    let spec_path = a.opt("spec").map(str::to_string).or_else(|| a.positional.first().cloned());
+    let spec = match &spec_path {
+        Some(p) => {
+            let cfg = craig::config::Config::load(std::path::Path::new(p))?;
+            Some(RunSpec::from_config(&cfg)?)
+        }
+        None => None,
+    };
+    let manifest = a.opt("manifest").map(std::path::PathBuf::from);
+    let checks = craig::pipeline::run_checks(spec.as_ref(), manifest.as_deref());
+    for c in &checks {
+        println!("{:>5}  {:<12} {}", c.status.name(), c.name, c.detail);
+    }
+    anyhow::ensure!(
+        !craig::pipeline::any_failed(&checks),
+        "doctor found failing checks"
+    );
+    Ok(())
 }
 
 /// `craig shard --out-dir DIR [--shards K]`: split a dataset (synthetic
@@ -301,15 +389,17 @@ fn main() {
         Dispatch::Command(name, args) => match name {
             "info" => cmd_info(&args),
             "run" => cmd_run(&args),
+            "replay" => cmd_replay(&args),
+            "doctor" => cmd_doctor(&args),
             "select" => shim::spec_for_select(&args)
-                .and_then(|s| run_spec(s, args.flag("print-spec"))),
+                .and_then(|s| run_spec(s, args.flag("print-spec"), None)),
             "shard" => cmd_shard(&args),
             "select-stream" => shim::spec_for_select_stream(&args)
-                .and_then(|s| run_spec(s, args.flag("print-spec"))),
+                .and_then(|s| run_spec(s, args.flag("print-spec"), None)),
             "train" => shim::spec_for_train(&args)
-                .and_then(|s| run_spec(s, args.flag("print-spec"))),
+                .and_then(|s| run_spec(s, args.flag("print-spec"), None)),
             "train-mlp" => shim::spec_for_train_mlp(&args)
-                .and_then(|s| run_spec(s, args.flag("print-spec"))),
+                .and_then(|s| run_spec(s, args.flag("print-spec"), None)),
             "grad-error" => cmd_grad_error(&args),
             "bench" => cmd_bench(&args),
             _ => unreachable!(),

@@ -1,0 +1,340 @@
+//! `craig doctor`: environment and artifact preflight.
+//!
+//! Answers "will a run (or a replay) behave here?" before hours are
+//! spent: thread availability, backend resolution, git-rev provenance,
+//! and — when a spec or manifest is given — data-source reachability,
+//! shard-manifest parseability, and the dense-similarity memory
+//! estimate against the spec's budget.
+//!
+//! Three-level verdicts ([`CheckStatus`]): `Ok` is informational,
+//! `Warn` flags degraded-but-correct behavior (no git rev, Auto store
+//! falling back to the blocked path), `Fail` means a run would error
+//! (unreadable shard dir, missing LIBSVM file, unknown backend).  The
+//! CLI exits nonzero only on `Fail` — a container without git is a
+//! supported environment, not a broken one.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coreset::SimStorePolicy;
+use crate::data::shard::ShardSet;
+use crate::runtime;
+use crate::spec::{DataSpec, RunSpec};
+use crate::util::{git_rev, GIT_REV_UNKNOWN};
+
+use super::replay::parse_manifest;
+
+/// Verdict of one check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckStatus {
+    Ok,
+    Warn,
+    Fail,
+}
+
+impl CheckStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            CheckStatus::Ok => "ok",
+            CheckStatus::Warn => "warn",
+            CheckStatus::Fail => "FAIL",
+        }
+    }
+}
+
+/// One named check with its verdict and a one-line detail.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub name: String,
+    pub status: CheckStatus,
+    pub detail: String,
+}
+
+impl Check {
+    fn new(name: &str, status: CheckStatus, detail: String) -> Check {
+        Check { name: name.to_string(), status, detail }
+    }
+}
+
+/// True iff any check failed (the CLI's exit-code predicate).
+pub fn any_failed(checks: &[Check]) -> bool {
+    checks.iter().any(|c| c.status == CheckStatus::Fail)
+}
+
+/// Run the full check list.  `spec` adds the spec-scoped checks
+/// (backend, data source, memory budget); `manifest` adds manifest
+/// parse + rev-provenance checks.
+pub fn run_checks(spec: Option<&RunSpec>, manifest: Option<&Path>) -> Vec<Check> {
+    let mut checks = Vec::new();
+    checks.push(threads_check());
+    checks.push(git_check());
+    match spec {
+        Some(s) => {
+            checks.push(backend_check(&s.engine));
+            checks.push(data_check(s));
+            if let Some(c) = memory_check(s) {
+                checks.push(c);
+            }
+        }
+        None => checks.push(backend_check("native")),
+    }
+    if let Some(p) = manifest {
+        checks.extend(manifest_checks(p));
+    }
+    checks
+}
+
+fn threads_check() -> Check {
+    match std::thread::available_parallelism() {
+        Ok(n) => Check::new("threads", CheckStatus::Ok, format!("{n} hardware threads")),
+        Err(e) => Check::new(
+            "threads",
+            CheckStatus::Warn,
+            format!("available_parallelism unknown ({e}) — pools fall back to 1"),
+        ),
+    }
+}
+
+fn git_check() -> Check {
+    let rev = git_rev();
+    if rev == GIT_REV_UNKNOWN {
+        Check::new(
+            "git",
+            CheckStatus::Warn,
+            "no git revision (no $GITHUB_SHA, git binary, or checkout) — manifests will \
+             record \"unknown\"; replay treats that as a warning"
+                .to_string(),
+        )
+    } else {
+        Check::new("git", CheckStatus::Ok, format!("revision {rev}"))
+    }
+}
+
+fn backend_check(engine: &str) -> Check {
+    match runtime::backend_by_name(engine) {
+        Ok(b) => Check::new("backend", CheckStatus::Ok, format!("{engine} → {}", b.name())),
+        Err(e) => Check::new("backend", CheckStatus::Fail, format!("{engine}: {e:#}")),
+    }
+}
+
+/// Data-source reachability: synthetic always works; LIBSVM needs its
+/// file; a shard dir needs a parseable manifest whose header agrees
+/// with itself.
+fn data_check(spec: &RunSpec) -> Check {
+    match &spec.data {
+        DataSpec::Synthetic { dataset, n } => Check::new(
+            "data",
+            CheckStatus::Ok,
+            format!("synthetic:{dataset} (n = {n}, generated on demand)"),
+        ),
+        DataSpec::Libsvm { path } => {
+            if Path::new(path).is_file() {
+                Check::new("data", CheckStatus::Ok, format!("libsvm:{path} present"))
+            } else {
+                Check::new("data", CheckStatus::Fail, format!("libsvm:{path} not found"))
+            }
+        }
+        DataSpec::ShardDir { dir } => match ShardSet::load(Path::new(dir)) {
+            Ok(set) => Check::new(
+                "data",
+                CheckStatus::Ok,
+                format!(
+                    "shard-dir:{dir} — {} shards, n = {}, d = {}, {} classes",
+                    set.shards.len(),
+                    set.n,
+                    set.d,
+                    set.num_classes
+                ),
+            ),
+            Err(e) => Check::new("data", CheckStatus::Fail, format!("shard-dir:{dir}: {e:#}")),
+        },
+    }
+}
+
+/// Dense-similarity memory estimate: the worst-case n² f32 buffer per
+/// selection subproblem (whole dataset, or ≈n/K rows per stream
+/// shard) against the spec's store policy.  Under `Auto` an estimate
+/// over budget is a *warning* — the selector falls back to the blocked
+/// store by design; under `Dense` it is what the run will genuinely
+/// allocate, still the user's explicit choice.  Returns `None` when
+/// the row count is unknowable without loading (LIBSVM).
+fn memory_check(spec: &RunSpec) -> Option<Check> {
+    let n = match &spec.data {
+        DataSpec::Synthetic { n, .. } => *n,
+        DataSpec::ShardDir { dir } => ShardSet::load(Path::new(dir)).ok()?.n,
+        DataSpec::Libsvm { .. } => return None,
+    };
+    let shards = match &spec.data {
+        DataSpec::ShardDir { dir } => {
+            ShardSet::load(Path::new(dir)).ok()?.shards.len().max(1)
+        }
+        _ => spec.selection.stream_shards.max(1),
+    };
+    let rows = n.div_ceil(shards);
+    let dense_bytes = rows * rows * std::mem::size_of::<f32>();
+    let detail = format!(
+        "worst-case dense buffer ≈ {dense_bytes} B ({rows}² f32, {shards} shard{})",
+        if shards == 1 { "" } else { "s" }
+    );
+    let check = match spec.selection.store {
+        SimStorePolicy::Auto { mem_budget_bytes } if dense_bytes > mem_budget_bytes => Check::new(
+            "memory",
+            CheckStatus::Warn,
+            format!("{detail} exceeds the {mem_budget_bytes} B budget — Auto falls back to \
+                     the blocked store (slower, O(n·d) memory, same output)"),
+        ),
+        SimStorePolicy::Auto { mem_budget_bytes } => Check::new(
+            "memory",
+            CheckStatus::Ok,
+            format!("{detail} fits the {mem_budget_bytes} B budget"),
+        ),
+        SimStorePolicy::Dense => {
+            Check::new("memory", CheckStatus::Ok, format!("{detail}, store = dense"))
+        }
+        SimStorePolicy::Blocked => Check::new(
+            "memory",
+            CheckStatus::Ok,
+            format!("store = blocked (no dense buffer; {rows} rows/shard)"),
+        ),
+    };
+    Some(check)
+}
+
+/// Manifest checks: the file parses as a schema-compatible run
+/// manifest (Fail otherwise), and its recorded rev matches this
+/// checkout (Warn otherwise — provenance, not arithmetic).
+fn manifest_checks(path: &Path) -> Vec<Check> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            return vec![Check::new(
+                "manifest",
+                CheckStatus::Fail,
+                format!("{}: {e}", path.display()),
+            )]
+        }
+    };
+    let doc = match parse_manifest(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            return vec![Check::new(
+                "manifest",
+                CheckStatus::Fail,
+                format!("{}: {e:#}", path.display()),
+            )]
+        }
+    };
+    let mut checks = vec![Check::new(
+        "manifest",
+        CheckStatus::Ok,
+        format!(
+            "{} — run \"{}\", schema v{}",
+            path.display(),
+            doc.get("name").and_then(|v| v.as_str()).unwrap_or("?"),
+            doc.get("schema_version").and_then(|v| v.as_u64()).unwrap_or(0)
+        ),
+    )];
+    let recorded = doc.get("git_rev").and_then(|v| v.as_str()).unwrap_or(GIT_REV_UNKNOWN);
+    let current = git_rev();
+    if recorded == GIT_REV_UNKNOWN || current == GIT_REV_UNKNOWN {
+        checks.push(Check::new(
+            "manifest-rev",
+            CheckStatus::Warn,
+            format!("rev unverifiable (manifest: {recorded}, current: {current})"),
+        ));
+    } else if recorded != current {
+        checks.push(Check::new(
+            "manifest-rev",
+            CheckStatus::Warn,
+            format!("manifest from {recorded}, checkout at {current}"),
+        ));
+    } else {
+        checks.push(Check::new("manifest-rev", CheckStatus::Ok, format!("both at {current}")));
+    }
+    checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::Runner;
+    use crate::spec::RunSpec;
+
+    #[test]
+    fn baseline_environment_has_no_failures() {
+        // threads/git/backend on the build machine: warnings are
+        // acceptable (no git in some containers), failures are not.
+        let checks = run_checks(None, None);
+        assert!(!any_failed(&checks), "{checks:?}");
+        assert!(checks.iter().any(|c| c.name == "threads"));
+        assert!(checks.iter().any(|c| c.name == "git"));
+        assert!(checks.iter().any(|c| c.name == "backend"));
+    }
+
+    #[test]
+    fn spec_checks_cover_data_and_memory() {
+        let spec = RunSpec::builder("d").synthetic("covtype", 500).count(10).build().unwrap();
+        let checks = run_checks(Some(&spec), None);
+        assert!(!any_failed(&checks), "{checks:?}");
+        let mem = checks.iter().find(|c| c.name == "memory").expect("memory check");
+        assert!(mem.detail.contains("dense buffer"), "{}", mem.detail);
+        assert!(checks.iter().any(|c| c.name == "data" && c.detail.contains("synthetic")));
+    }
+
+    #[test]
+    fn missing_libsvm_file_fails() {
+        let spec = RunSpec::builder("d")
+            .libsvm("/no/such/file.libsvm")
+            .count(10)
+            .build()
+            .unwrap();
+        let checks = run_checks(Some(&spec), None);
+        assert!(any_failed(&checks));
+        let data = checks.iter().find(|c| c.name == "data").unwrap();
+        assert_eq!(data.status, CheckStatus::Fail);
+    }
+
+    #[test]
+    fn unknown_backend_fails() {
+        let mut spec = RunSpec::builder("d").synthetic("covtype", 100).count(5).build().unwrap();
+        spec.engine = "not-a-backend".to_string();
+        let checks = run_checks(Some(&spec), None);
+        assert!(any_failed(&checks));
+    }
+
+    #[test]
+    fn tiny_auto_budget_warns_not_fails() {
+        let mut spec = RunSpec::builder("d").synthetic("covtype", 800).count(5).build().unwrap();
+        spec.selection.store = crate::coreset::SimStorePolicy::Auto { mem_budget_bytes: 1024 };
+        let checks = run_checks(Some(&spec), None);
+        assert!(!any_failed(&checks), "{checks:?}");
+        let mem = checks.iter().find(|c| c.name == "memory").unwrap();
+        assert_eq!(mem.status, CheckStatus::Warn);
+        assert!(mem.detail.contains("blocked"), "{}", mem.detail);
+    }
+
+    #[test]
+    fn manifest_checks_parse_and_compare_rev() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("craig-doctor-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = dir.join("manifest.json");
+        let spec = RunSpec::builder("doc")
+            .synthetic("covtype", 200)
+            .count(10)
+            .manifest(m.to_str().unwrap())
+            .build()
+            .unwrap();
+        Runner::new().run(&spec).unwrap();
+        let checks = run_checks(None, Some(&m));
+        assert!(!any_failed(&checks), "{checks:?}");
+        assert!(checks.iter().any(|c| c.name == "manifest" && c.status == CheckStatus::Ok));
+        assert!(checks.iter().any(|c| c.name == "manifest-rev"));
+        // Garbage manifest: Fail, not error.
+        std::fs::write(&m, "not json").unwrap();
+        let checks = run_checks(None, Some(&m));
+        assert!(any_failed(&checks));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

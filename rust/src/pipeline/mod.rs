@@ -5,6 +5,11 @@
 //! declarative [`crate::spec::RunSpec`] end to end (data → embedding →
 //! selection → training → outputs + JSON run manifest).  The CLI — both
 //! `craig run` and the legacy shims — is a thin caller of it.
+//! [`replay`] and [`doctor`] are the operational-verification face:
+//! `craig replay` re-executes a manifest's embedded spec and asserts
+//! bitwise reproduction (DESIGN.md §10), `craig doctor` preflights the
+//! environment, and attaching a [`crate::trace::Trace`] to the
+//! [`Runner`] yields the per-phase JSONL event stream.
 //!
 //! Two stages connected by bounded channels (backpressure by
 //! construction, `std::sync::mpsc::sync_channel`):
@@ -34,8 +39,12 @@
 //! `rust/tests/pipeline_invariants.rs` and
 //! `rust/tests/parallel_equivalence.rs`.
 
+pub mod doctor;
+pub mod replay;
 pub mod runner;
 
+pub use doctor::{any_failed, run_checks, Check, CheckStatus};
+pub use replay::{comparable_image, replay_manifest, FieldDiff, ReplayOutcome};
 pub use runner::{PhaseTimings, RunReport, Runner, MANIFEST_SCHEMA_VERSION};
 
 use std::sync::mpsc;

@@ -1,0 +1,432 @@
+//! `craig replay`: re-execute a run manifest and verify bitwise
+//! reproduction.
+//!
+//! A run manifest embeds the *effective* spec (`spec_toml`), so it is a
+//! self-contained replay recipe: parse the manifest, re-parse the spec,
+//! re-execute it through [`Runner::execute`] (no outputs are written —
+//! a replay never clobbers the original run's artifacts), and compare
+//! what the replay *would* have written against what the manifest
+//! recorded.
+//!
+//! ## The comparable image
+//!
+//! Two manifest fields are legitimately non-reproducible and are
+//! stripped from both sides before the byte comparison
+//! ([`comparable_image`]):
+//!
+//! * `phases` — wall-clock timings;
+//! * `git_rev` — provenance, not arithmetic.  A rev mismatch (or the
+//!   [`GIT_REV_UNKNOWN`] sentinel from a container without git) is
+//!   surfaced as a **warning**, never a failure.
+//!
+//! Everything else — seed, effective spec, dataset shape, selected
+//! indices count, per-class sizes, store resolutions, ε, the
+//! facility-location objective, Σγ, stream/diagnostics/train blocks —
+//! must reproduce *byte for byte*.  The manifest writer emits one field
+//! per line, so line filtering is exact.  On divergence the two parsed
+//! documents are recursively diffed into field-level [`FieldDiff`]s
+//! (`selection.f_value: manifest=… replay=…`) so the first broken
+//! quantity is named, not just "bytes differ".
+//!
+//! When the spec declared a `coreset_csv` output, the replayed coreset
+//! is additionally rendered through the same CSV format and compared
+//! byte-wise against the file on disk — this is what extends the
+//! guarantee from the manifest's summary scalars to every selected
+//! index and weight.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::spec::RunSpec;
+use crate::trace::Trace;
+use crate::util::{git_rev, JsonValue, GIT_REV_UNKNOWN};
+
+use super::{RunReport, Runner, MANIFEST_SCHEMA_VERSION};
+
+/// One field-level divergence between the recorded manifest and the
+/// replayed run.
+#[derive(Clone, Debug)]
+pub struct FieldDiff {
+    /// Dot path into the manifest document (`seed`,
+    /// `selection.f_value`, `coreset_csv`, …).
+    pub path: String,
+    /// The recorded value (compact JSON rendering).
+    pub manifest: String,
+    /// The replayed value.
+    pub replay: String,
+}
+
+impl FieldDiff {
+    /// The one-line form the CLI prints per divergence.
+    pub fn render(&self) -> String {
+        format!("{}: manifest={} replay={}", self.path, self.manifest, self.replay)
+    }
+}
+
+/// Everything a replay produced: the verdict, the named divergences,
+/// the non-fatal warnings, and the re-executed report itself.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    /// True iff the comparable manifest images are byte-identical and
+    /// every declared artifact (coreset CSV) matched.
+    pub matched: bool,
+    /// Field-level divergences (empty when `matched`).
+    pub diffs: Vec<FieldDiff>,
+    /// Non-fatal observations (git-rev mismatch, unverifiable CSV).
+    pub warnings: Vec<String>,
+    /// The replayed run's report.
+    pub report: RunReport,
+}
+
+/// Strip the non-reproducible manifest lines — the `phases` timing
+/// object and the `git_rev` provenance line — leaving the byte image
+/// replay compares.  Exact because the manifest writer emits one field
+/// per line.
+pub fn comparable_image(manifest: &str) -> String {
+    let mut out = String::with_capacity(manifest.len());
+    for line in manifest.lines() {
+        let t = line.trim_start();
+        if t.starts_with("\"phases\":") || t.starts_with("\"git_rev\":") {
+            continue;
+        }
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse + structurally validate a manifest document: JSON, `kind ==
+/// "run_manifest"`, supported `schema_version`, `spec_toml` present.
+/// Returns the parsed document (truncated or edited files fail here
+/// with a positioned parse error).
+pub fn parse_manifest(text: &str) -> Result<JsonValue> {
+    let doc = JsonValue::parse(text).context("manifest is not valid JSON")?;
+    let kind = doc.get("kind").and_then(|v| v.as_str());
+    if kind != Some("run_manifest") {
+        bail!("not a run manifest (kind = {:?})", kind.unwrap_or("<missing>"));
+    }
+    match doc.get("schema_version").and_then(|v| v.as_u64()) {
+        Some(v) if v == MANIFEST_SCHEMA_VERSION as u64 => {}
+        other => bail!(
+            "unsupported manifest schema_version {:?} (this binary speaks {})",
+            other,
+            MANIFEST_SCHEMA_VERSION
+        ),
+    }
+    if doc.get("spec_toml").and_then(|v| v.as_str()).is_none() {
+        bail!("manifest has no spec_toml — nothing to replay");
+    }
+    Ok(doc)
+}
+
+/// Re-execute the manifest at `path` and compare.  `overrides` are
+/// `key=value` spec overrides applied *after* the embedded spec parses
+/// — the mechanism the regression suite uses to prove that a perturbed
+/// replay (seed flip, budget change) is *detected*: any override that
+/// changes the arithmetic must surface as diffs.  `trace` (optional)
+/// receives the replay's own per-phase events.
+pub fn replay_manifest(
+    path: &Path,
+    overrides: &[(String, String)],
+    trace: Option<Trace>,
+) -> Result<ReplayOutcome> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read manifest {}", path.display()))?;
+    let doc = parse_manifest(&text)
+        .with_context(|| format!("manifest {}", path.display()))?;
+
+    let spec_toml = doc
+        .get("spec_toml")
+        .and_then(|v| v.as_str())
+        .expect("validated by parse_manifest")
+        .to_string();
+    let mut cfg = Config::parse(&spec_toml).context("embedded spec_toml does not parse")?;
+    for (k, v) in overrides {
+        cfg.set(k, v)?;
+    }
+    let spec = RunSpec::from_config(&cfg).context("embedded spec_toml is not a valid spec")?;
+
+    let mut warnings = Vec::new();
+    let recorded_rev = doc.get("git_rev").and_then(|v| v.as_str()).unwrap_or(GIT_REV_UNKNOWN);
+    let current_rev = git_rev();
+    if recorded_rev == GIT_REV_UNKNOWN || current_rev == GIT_REV_UNKNOWN {
+        warnings.push(format!(
+            "git rev unverifiable (manifest: {recorded_rev}, current: {current_rev}) — \
+             provenance only, reproduction is still checked"
+        ));
+    } else if recorded_rev != current_rev {
+        warnings.push(format!(
+            "git rev mismatch (manifest: {recorded_rev}, current: {current_rev}) — \
+             replaying across revisions; divergence below, if any, may be intended"
+        ));
+    }
+
+    let mut runner = Runner { trace };
+    let report = runner.execute(&spec)?;
+
+    let recorded_image = comparable_image(&text);
+    let replayed_manifest = report.manifest_json_deterministic();
+    let replayed_image = comparable_image(&replayed_manifest);
+
+    let mut diffs = Vec::new();
+    if recorded_image != replayed_image {
+        let replayed_doc = JsonValue::parse(&replayed_manifest)
+            .expect("the manifest writer emits valid JSON");
+        diff_values("", &doc, &replayed_doc, &mut diffs);
+        if diffs.is_empty() {
+            // Byte-different but structurally equal cannot happen with
+            // one writer on both sides; keep the failure visible anyway.
+            diffs.push(FieldDiff {
+                path: "manifest_bytes".to_string(),
+                manifest: format!("{} bytes", recorded_image.len()),
+                replay: format!("{} bytes", replayed_image.len()),
+            });
+        }
+    }
+
+    verify_coreset_csv(path, &spec, &report, &mut diffs, &mut warnings);
+
+    Ok(ReplayOutcome { matched: diffs.is_empty(), diffs, warnings, report })
+}
+
+/// Recursive field-level diff of two parsed manifests, skipping the
+/// top-level non-reproducible fields.  Number literals compare as
+/// text — both sides come from the same deterministic emitter, so any
+/// textual difference is a real value difference.
+fn diff_values(path: &str, a: &JsonValue, b: &JsonValue, out: &mut Vec<FieldDiff>) {
+    if path == "phases" || path == "git_rev" {
+        return;
+    }
+    match (a, b) {
+        (JsonValue::Obj(ka), JsonValue::Obj(kb)) => {
+            for (k, va) in ka {
+                let child = join_path(path, k);
+                match b.get(k) {
+                    Some(vb) => diff_values(&child, va, vb, out),
+                    None => out.push(FieldDiff {
+                        path: child,
+                        manifest: va.render(),
+                        replay: "<absent>".to_string(),
+                    }),
+                }
+            }
+            for (k, vb) in kb {
+                if a.get(k).is_none() {
+                    out.push(FieldDiff {
+                        path: join_path(path, k),
+                        manifest: "<absent>".to_string(),
+                        replay: vb.render(),
+                    });
+                }
+            }
+        }
+        (JsonValue::Arr(xa), JsonValue::Arr(xb)) => {
+            if xa.len() != xb.len() {
+                out.push(FieldDiff {
+                    path: path.to_string(),
+                    manifest: a.render(),
+                    replay: b.render(),
+                });
+                return;
+            }
+            for (i, (va, vb)) in xa.iter().zip(xb).enumerate() {
+                diff_values(&format!("{path}[{i}]"), va, vb, out);
+            }
+        }
+        _ => {
+            if a != b {
+                out.push(FieldDiff {
+                    path: path.to_string(),
+                    manifest: a.render(),
+                    replay: b.render(),
+                });
+            }
+        }
+    }
+}
+
+fn join_path(parent: &str, key: &str) -> String {
+    if parent.is_empty() {
+        key.to_string()
+    } else {
+        format!("{parent}.{key}")
+    }
+}
+
+/// Extend the guarantee to every index and weight: render the replayed
+/// coreset through the exact CSV format `write_outputs` uses and
+/// compare byte-wise against the recorded file.  The path resolves
+/// as written, then relative to the manifest's directory; a missing
+/// file is a warning (the artifact may have been archived), a present-
+/// but-different file is a failure.
+fn verify_coreset_csv(
+    manifest_path: &Path,
+    spec: &RunSpec,
+    report: &RunReport,
+    diffs: &mut Vec<FieldDiff>,
+    warnings: &mut Vec<String>,
+) {
+    let (Some(csv_rel), Some(c)) = (&spec.output.coreset_csv, &report.coreset) else {
+        return;
+    };
+    let direct = Path::new(csv_rel);
+    let candidate = if direct.exists() {
+        direct.to_path_buf()
+    } else {
+        match manifest_path.parent() {
+            Some(dir) if dir.join(csv_rel).exists() => dir.join(csv_rel),
+            _ => {
+                warnings.push(format!(
+                    "coreset csv {csv_rel} not found next to the manifest — \
+                     indices/weights verified via manifest scalars only"
+                ));
+                return;
+            }
+        }
+    };
+    let recorded = match std::fs::read_to_string(&candidate) {
+        Ok(s) => s,
+        Err(e) => {
+            warnings.push(format!("coreset csv {}: {e}", candidate.display()));
+            return;
+        }
+    };
+    let mut expected = String::from("index,gamma\n");
+    for (i, g) in c.indices.iter().zip(&c.gamma) {
+        expected.push_str(&format!("{i},{g}\n"));
+    }
+    if recorded != expected {
+        let n = first_differing_line(&recorded, &expected);
+        diffs.push(FieldDiff {
+            path: "coreset_csv".to_string(),
+            manifest: format!("line {n}: {:?}", recorded.lines().nth(n - 1).unwrap_or("<eof>")),
+            replay: format!("line {n}: {:?}", expected.lines().nth(n - 1).unwrap_or("<eof>")),
+        });
+    }
+}
+
+/// 1-based index of the first line where the two texts differ.
+fn first_differing_line(a: &str, b: &str) -> usize {
+    let mut la = a.lines();
+    let mut lb = b.lines();
+    let mut n = 1;
+    loop {
+        match (la.next(), lb.next()) {
+            (None, None) => return n,
+            (x, y) if x == y => n += 1,
+            _ => return n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::RunSpec;
+
+    fn smoke_spec(dir: &Path) -> RunSpec {
+        RunSpec::builder("replay-t")
+            .synthetic("covtype", 300)
+            .seed(5)
+            .count(20)
+            .coreset_csv(dir.join("coreset.csv").to_str().unwrap())
+            .manifest(dir.join("manifest.json").to_str().unwrap())
+            .build()
+            .unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let mut d = std::env::temp_dir();
+        d.push(format!("craig-replay-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn replay_reproduces_a_fresh_run_bitwise() {
+        let dir = tmpdir("ok");
+        let spec = smoke_spec(&dir);
+        Runner::new().run(&spec).unwrap();
+        let out = replay_manifest(&dir.join("manifest.json"), &[], None).unwrap();
+        assert!(out.matched, "diffs: {:?}", out.diffs);
+        assert!(out.diffs.is_empty());
+        assert_eq!(out.report.selected(), 20);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn seed_override_is_detected_with_named_fields() {
+        let dir = tmpdir("seed");
+        let spec = smoke_spec(&dir);
+        Runner::new().run(&spec).unwrap();
+        let overrides = vec![("seed".to_string(), "6".to_string())];
+        let out = replay_manifest(&dir.join("manifest.json"), &overrides, None).unwrap();
+        assert!(!out.matched);
+        // The flipped seed itself, and through it spec_toml, must be
+        // named; the selection scalars typically diverge too.
+        assert!(out.diffs.iter().any(|d| d.path == "seed"), "{:?}", out.diffs);
+        assert!(out.diffs.iter().any(|d| d.path == "spec_toml"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_coreset_csv_is_detected() {
+        let dir = tmpdir("csv");
+        let spec = smoke_spec(&dir);
+        Runner::new().run(&spec).unwrap();
+        let csv = dir.join("coreset.csv");
+        let mut text = std::fs::read_to_string(&csv).unwrap();
+        text.push_str("999,1\n");
+        std::fs::write(&csv, text).unwrap();
+        let out = replay_manifest(&dir.join("manifest.json"), &[], None).unwrap();
+        assert!(!out.matched);
+        assert!(out.diffs.iter().any(|d| d.path == "coreset_csv"), "{:?}", out.diffs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_manifest_fails_to_parse() {
+        let dir = tmpdir("trunc");
+        let spec = smoke_spec(&dir);
+        Runner::new().run(&spec).unwrap();
+        let m = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&m).unwrap();
+        let mut cut = text.len() / 2;
+        while !text.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        std::fs::write(&m, &text[..cut]).unwrap();
+        let err = replay_manifest(&m, &[], None).unwrap_err();
+        assert!(format!("{err:#}").contains("JSON"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn comparable_image_strips_only_the_volatile_lines() {
+        let dir = tmpdir("img");
+        let spec = smoke_spec(&dir);
+        let rep = Runner::new().run(&spec).unwrap();
+        let full = rep.manifest_json();
+        let img = comparable_image(&full);
+        assert!(!img.contains("\"phases\""));
+        assert!(!img.contains("\"git_rev\""));
+        assert!(img.contains("\"spec_toml\""));
+        assert!(img.contains("\"selection\""));
+        // Identical to the deterministic form minus git_rev.
+        assert_eq!(img, comparable_image(&rep.manifest_json_deterministic()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_manifest_json_is_rejected() {
+        let err = parse_manifest("{\"kind\": \"bench_snapshot\"}").unwrap_err();
+        assert!(format!("{err}").contains("not a run manifest"));
+        let err = parse_manifest(
+            "{\"kind\": \"run_manifest\", \"schema_version\": 99}",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("schema_version"));
+    }
+}

@@ -38,6 +38,7 @@ use crate::optim::LrSchedule;
 use crate::rng::Rng;
 use crate::runtime;
 use crate::spec::{method_name, DataSpec, RunSpec, SelectionMode, TrainSpec};
+use crate::trace::{self, Trace};
 use crate::trainer::convex::{train_logreg, ConvexConfig};
 use crate::trainer::neural::{train_mlp, NeuralConfig};
 use crate::trainer::{History, SubsetMode};
@@ -95,28 +96,155 @@ pub struct RunReport {
     pub timings: PhaseTimings,
 }
 
-/// Executes [`RunSpec`]s.  Stateless today; a value so callers can hold
-/// one across runs when it grows warm state.
+/// Executes [`RunSpec`]s.  Attach a [`Trace`] before running to get the
+/// per-phase JSONL event stream (`--trace` on `run` / `replay`).
 #[derive(Default)]
-pub struct Runner;
+pub struct Runner {
+    /// Optional per-phase event collector; when set, [`Runner::execute`]
+    /// emits `run_start` … `run_end` events into it (and through its
+    /// file sink, if any).
+    pub trace: Option<Trace>,
+}
 
 impl Runner {
     pub fn new() -> Self {
-        Runner
+        Runner { trace: None }
     }
 
     /// Execute `spec` end to end: load → embed → select → train →
     /// write outputs (CSVs + manifest per [`crate::spec::OutputSpec`]).
     pub fn run(&mut self, spec: &RunSpec) -> Result<RunReport> {
+        let report = self.execute(spec)?;
+        report.write_outputs()?;
+        Ok(report)
+    }
+
+    /// [`Runner::run`] minus the output writing: the replay seam.
+    /// `craig replay` re-executes a manifest's spec through this and
+    /// compares in memory, so a replay never clobbers the original
+    /// run's CSVs or manifest.
+    pub fn execute(&mut self, spec: &RunSpec) -> Result<RunReport> {
         spec.validate()?;
+        if let Some(t) = self.trace.as_mut() {
+            t.set_run(&spec.name);
+            t.emit(
+                "run_start",
+                &spec.name,
+                None,
+                &[
+                    ("seed", spec.seed.to_string()),
+                    ("engine", trace::str_lit(&spec.engine)),
+                    ("mode", trace::str_lit(spec.selection.mode.name())),
+                ],
+            )?;
+        }
         let t_total = Instant::now();
         let mut report = match &spec.data {
             DataSpec::ShardDir { dir } => self.run_shard_dir(spec, dir)?,
             _ => self.run_in_memory(spec)?,
         };
         report.timings.total_s = t_total.elapsed().as_secs_f64();
-        report.write_outputs()?;
+        self.trace_phases(&report)?;
         Ok(report)
+    }
+
+    /// Emit the phase events a finished report implies: load / embed /
+    /// select, per-shard + merge + reduce for streamed runs, one
+    /// `train_epoch` per history record, and the `run_end` bookend.
+    /// Durations and peak-memory come from the report's own telemetry
+    /// ([`PhaseTimings`], [`StreamStats`], [`History`]), so the trace
+    /// is a faithful record of the run that actually happened.
+    fn trace_phases(&mut self, report: &RunReport) -> Result<()> {
+        let Some(t) = self.trace.as_mut() else { return Ok(()) };
+        let source = match &report.spec.data {
+            DataSpec::Synthetic { dataset, .. } => format!("synthetic:{dataset}"),
+            DataSpec::Libsvm { path } => format!("libsvm:{path}"),
+            DataSpec::ShardDir { dir } => format!("shard-dir:{dir}"),
+        };
+        t.emit(
+            "load",
+            &source,
+            Some(report.timings.load_s),
+            &[
+                ("n", trace::int(report.dataset_n)),
+                ("d", trace::int(report.dataset_d)),
+                ("classes", trace::int(report.dataset_classes)),
+            ],
+        )?;
+        t.emit(
+            "embed",
+            report.spec.embedding.kind.name(),
+            None,
+            &[("metric", trace::str_lit(report.spec.embedding.metric.name()))],
+        )?;
+        t.emit(
+            "select",
+            report.spec.selection.mode.name(),
+            Some(report.timings.select_s),
+            &[
+                ("selected", trace::int(report.selected())),
+                ("evaluations", trace::int(report.evaluations)),
+                ("epsilon", trace::num(report.epsilon)),
+                ("f_value", trace::num(report.f_value)),
+                ("gamma_sum", trace::num(report.gamma_sum())),
+            ],
+        )?;
+        if let Some(st) = &report.stream {
+            for s in &st.shard_stats {
+                t.emit(
+                    "shard",
+                    &format!("shard:{}", s.shard),
+                    Some(s.seconds),
+                    &[("n", trace::int(s.n)), ("selected", trace::int(s.selected))],
+                )?;
+            }
+            t.emit(
+                "merge",
+                "union",
+                Some(st.shard_phase_seconds),
+                &[
+                    ("shards", trace::int(st.shards)),
+                    ("union_size", trace::int(st.union_size)),
+                ],
+            )?;
+            t.emit(
+                "reduce",
+                "reduce",
+                Some(st.reduce_seconds),
+                &[
+                    ("selected", trace::int(st.selected)),
+                    ("merge_ratio", trace::num(st.merge_ratio)),
+                    ("peak_dense_bytes", trace::int(st.peak_dense_bytes)),
+                    ("peak_resident_bytes", trace::int(st.peak_resident_bytes)),
+                ],
+            )?;
+        }
+        if let Some(h) = &report.history {
+            for r in &h.records {
+                t.emit(
+                    "train_epoch",
+                    &format!("epoch:{}", r.epoch),
+                    Some(r.train_s),
+                    &[
+                        ("train_loss", trace::num(r.train_loss)),
+                        ("test_metric", trace::num(r.test_metric)),
+                        ("lr", trace::num(r.lr as f64)),
+                        ("select_s", trace::num(r.select_s)),
+                        ("grad_evals", trace::int(r.grad_evals)),
+                    ],
+                )?;
+            }
+        }
+        t.emit(
+            "run_end",
+            &report.spec.name,
+            Some(report.timings.total_s),
+            &[
+                ("selected", trace::int(report.selected())),
+                ("train_s", trace::num(report.timings.train_s)),
+            ],
+        )?;
+        Ok(())
     }
 
     /// Synthetic / LIBSVM sources: rows resident, selection in-memory
@@ -599,5 +727,52 @@ mod tests {
         assert_eq!(st.shards, 3);
         assert_eq!(rep.coreset.as_ref().unwrap().indices.len(), 40);
         assert!(rep.manifest_json().contains("\"shards\": 3"));
+    }
+
+    #[test]
+    fn trace_records_every_phase() {
+        let spec = builder("tr")
+            .synthetic("covtype", 500)
+            .count(30)
+            .stream_shards(3)
+            .build()
+            .unwrap();
+        let mut runner = Runner::new();
+        runner.trace = Some(Trace::new("pending"));
+        let rep = runner.run(&spec).unwrap();
+        let t = runner.trace.as_ref().unwrap();
+        let names: Vec<&str> = t.events().iter().map(|e| e.event.as_str()).collect();
+        assert_eq!(names.first(), Some(&"run_start"));
+        assert_eq!(names.last(), Some(&"run_end"));
+        assert!(names.contains(&"load") && names.contains(&"embed") && names.contains(&"select"));
+        assert_eq!(names.iter().filter(|&&n| n == "shard").count(), 3, "one event per shard");
+        assert!(names.contains(&"merge") && names.contains(&"reduce"));
+        // seq is a gapless total order and every line reparses under
+        // the trace schema with the spec's name stamped as the run.
+        for (i, line) in t.to_jsonl().lines().enumerate() {
+            let v = crate::util::JsonValue::parse(line).unwrap();
+            assert_eq!(v.get("kind").unwrap().as_str(), Some("trace_event"));
+            assert_eq!(v.get("seq").unwrap().as_u64(), Some(i as u64));
+            assert_eq!(v.get("run").unwrap().as_str(), Some("tr"));
+        }
+        assert_eq!(rep.selected(), 30);
+    }
+
+    #[test]
+    fn execute_skips_output_writing() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("craig-execute-test-{}", std::process::id()));
+        let csv = dir.join("coreset.csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = builder("ex")
+            .synthetic("covtype", 300)
+            .count(20)
+            .coreset_csv(csv.to_str().unwrap())
+            .build()
+            .unwrap();
+        let rep = Runner::new().execute(&spec).unwrap();
+        assert!(rep.coreset.is_some());
+        assert!(!csv.exists(), "execute must not write spec outputs");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

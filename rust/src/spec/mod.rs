@@ -977,6 +977,18 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_key_rejected_with_both_lines() {
+        // Repeating a key in a spec file is ambiguous config, not
+        // last-write-wins — the parse must name both source lines.
+        let err = RunSpec::parse("seed = 1\n[selection]\nfraction = 0.1\nfraction = 0.2\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("first defined on line 3"), "{err}");
+        assert!(err.contains("selection.fraction"), "{err}");
+    }
+
+    #[test]
     fn out_of_context_key_rejected_with_line() {
         // `train.hidden` is a real key — but not for logreg.
         let text = "[train]\nkind = \"logreg\"\nhidden = 4\n";

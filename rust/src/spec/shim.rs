@@ -38,7 +38,16 @@ pub fn app() -> App {
             Command::new("run", "execute a RunSpec file (the primary entry point)")
                 .opt("spec", "spec path (or pass it as the positional argument)")
                 .repeated("set", "override: --set key=value (repeatable)")
+                .opt("trace", "write a per-phase JSONL event trace to this path")
                 .flag("print-spec", "print the effective spec and exit"),
+            Command::new("replay", "re-execute a run manifest and verify bitwise reproduction")
+                .opt("manifest", "manifest path (or pass it as the positional argument)")
+                .repeated("set", "perturb the embedded spec: --set key=value (repeatable)")
+                .opt("trace", "write the replay's per-phase JSONL event trace to this path")
+                .flag("print-spec", "print the embedded spec and exit"),
+            Command::new("doctor", "preflight the environment (and optionally a spec/manifest)")
+                .opt("spec", "spec file to check (or pass it as the positional argument)")
+                .opt("manifest", "run manifest to check (parse + git-rev provenance)"),
             Command::new("select", "run CRAIG coreset selection (shim over `run`)")
                 .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
                 .opt_default("n", "10000", "synthetic dataset size")
@@ -343,6 +352,17 @@ mod tests {
         assert_eq!(spec.selection.workers, 2);
         assert_eq!(spec.selection.shard_budget, Some(9));
         assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+    }
+
+    #[test]
+    fn replay_and_doctor_commands_parse() {
+        let a = args_for("replay", &["MANIFEST.json", "--set", "seed=9", "--trace", "t.jsonl"]);
+        assert_eq!(a.positional, vec!["MANIFEST.json".to_string()]);
+        assert_eq!(a.opt_all("set"), ["seed=9".to_string()]);
+        assert_eq!(a.opt("trace"), Some("t.jsonl"));
+        let a = args_for("doctor", &["--manifest", "m.json", "--spec", "s.toml"]);
+        assert_eq!(a.opt("manifest"), Some("m.json"));
+        assert_eq!(a.opt("spec"), Some("s.toml"));
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Structured per-phase run tracing (`--trace <path>` on `craig run` /
+//! `craig replay`).
+//!
+//! A [`Trace`] collects [`TraceEvent`]s — one per pipeline phase
+//! (load / embed / select, per-shard + merge + reduce for streamed
+//! runs, per-epoch train records) plus `run_start` / `run_end`
+//! bookends — and serializes each as one JSONL line on the same
+//! hand-rolled JSON conventions as the run manifest and the bench
+//! snapshot.  Events carry wall-clock durations and, for streamed
+//! runs, the peak-memory telemetry from
+//! [`crate::coreset::StreamStats`], so a long merge-and-reduce run
+//! leaves a phase-by-phase record of where the time and bytes went.
+//!
+//! The sink (when a path is given) is opened eagerly and flushed after
+//! every event, so a partial trace survives a crash.  Events are also
+//! kept in memory ([`Trace::events`]) for in-process consumers — the
+//! golden tests and the `craig serve` daemon's future job-status
+//! endpoint.  Event `data` values are pre-rendered JSON literals
+//! (produced via [`num`] / [`int`] / [`str_lit`]); the writer never
+//! re-interprets them.  Schema: DESIGN.md §10.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::{json_escape, json_num};
+
+/// JSONL schema version of trace events.
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// One traced phase.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// 0-based emission index (total order within the run).
+    pub seq: usize,
+    /// Phase name: `run_start` | `load` | `embed` | `select` | `shard`
+    /// | `merge` | `reduce` | `train_epoch` | `run_end`.
+    pub event: String,
+    /// Human-scoped qualifier (dataset name, `shard:3`, `epoch:7`).
+    pub label: String,
+    /// Wall seconds of the phase (None for instantaneous markers).
+    pub dur_s: Option<f64>,
+    /// Phase payload: key → pre-rendered JSON literal, in insertion
+    /// order.
+    pub data: Vec<(String, String)>,
+}
+
+impl TraceEvent {
+    /// Serialize as one JSONL line (no trailing newline).
+    pub fn to_jsonl(&self, run: &str) -> String {
+        let mut s = format!(
+            "{{\"schema_version\": {TRACE_SCHEMA_VERSION}, \"kind\": \"trace_event\", \
+             \"seq\": {}, \"run\": \"{}\", \"event\": \"{}\", \"label\": \"{}\", ",
+            self.seq,
+            json_escape(run),
+            json_escape(&self.event),
+            json_escape(&self.label),
+        );
+        match self.dur_s {
+            Some(d) => s.push_str(&format!("\"dur_s\": {}, ", json_num(d))),
+            None => s.push_str("\"dur_s\": null, "),
+        }
+        s.push_str("\"data\": {");
+        for (i, (k, v)) in self.data.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\": {v}", json_escape(k)));
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+/// Render a float payload value (JSON literal; non-finite → `null`).
+pub fn num(x: f64) -> String {
+    json_num(x)
+}
+
+/// Render an integer payload value.
+pub fn int(x: usize) -> String {
+    x.to_string()
+}
+
+/// Render a string payload value (quoted + escaped).
+pub fn str_lit(s: &str) -> String {
+    format!("\"{}\"", json_escape(s))
+}
+
+/// An event collector with an optional always-flushed JSONL file sink.
+#[derive(Debug, Default)]
+pub struct Trace {
+    run: String,
+    events: Vec<TraceEvent>,
+    sink: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl Trace {
+    /// In-memory trace for run `run` (no file sink).
+    pub fn new(run: &str) -> Trace {
+        Trace { run: run.to_string(), events: Vec::new(), sink: None }
+    }
+
+    /// Trace with a JSONL file sink at `path` (created/truncated now,
+    /// flushed after every event).
+    pub fn with_file(run: &str, path: &Path) -> Result<Trace> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create trace {}", path.display()))?;
+        Ok(Trace {
+            run: run.to_string(),
+            events: Vec::new(),
+            sink: Some(std::io::BufWriter::new(f)),
+        })
+    }
+
+    /// Rename the run after construction (the runner stamps the spec
+    /// name once it has parsed the spec).
+    pub fn set_run(&mut self, run: &str) {
+        self.run = run.to_string();
+    }
+
+    /// Append (and, with a sink, write + flush) one event.  `data`
+    /// values must be pre-rendered JSON literals ([`num`] / [`int`] /
+    /// [`str_lit`]).
+    pub fn emit(
+        &mut self,
+        event: &str,
+        label: &str,
+        dur_s: Option<f64>,
+        data: &[(&str, String)],
+    ) -> Result<()> {
+        let ev = TraceEvent {
+            seq: self.events.len(),
+            event: event.to_string(),
+            label: label.to_string(),
+            dur_s,
+            data: data.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        };
+        if let Some(w) = self.sink.as_mut() {
+            writeln!(w, "{}", ev.to_jsonl(&self.run)).context("write trace event")?;
+            w.flush().context("flush trace event")?;
+        }
+        self.events.push(ev);
+        Ok(())
+    }
+
+    /// All events emitted so far, in order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// The full trace as JSONL text (what the file sink contains).
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for ev in &self.events {
+            s.push_str(&ev.to_jsonl(&self.run));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::JsonValue;
+
+    #[test]
+    fn events_serialize_and_reparse() {
+        let mut t = Trace::new("smoke");
+        t.emit("run_start", "smoke", None, &[("seed", int(7))]).unwrap();
+        t.emit(
+            "load",
+            "covtype",
+            Some(0.25),
+            &[("n", int(2000)), ("source", str_lit("synthetic"))],
+        )
+        .unwrap();
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.events()[0].seq, 0);
+        assert_eq!(t.events()[1].seq, 1);
+        for (i, line) in t.to_jsonl().lines().enumerate() {
+            let v = JsonValue::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}\n{line}"));
+            assert_eq!(v.get("schema_version").unwrap().as_u64(), Some(1));
+            assert_eq!(v.get("kind").unwrap().as_str(), Some("trace_event"));
+            assert_eq!(v.get("seq").unwrap().as_u64(), Some(i as u64));
+            assert_eq!(v.get("run").unwrap().as_str(), Some("smoke"));
+        }
+        let v = JsonValue::parse(t.to_jsonl().lines().nth(1).unwrap()).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str(), Some("load"));
+        assert_eq!(v.get("dur_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(v.get("data").unwrap().get("n").unwrap().as_u64(), Some(2000));
+        assert_eq!(
+            v.get("data").unwrap().get("source").unwrap().as_str(),
+            Some("synthetic")
+        );
+    }
+
+    #[test]
+    fn file_sink_flushes_per_event() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("craig-trace-test-{}.jsonl", std::process::id()));
+        let mut t = Trace::with_file("r", &p).unwrap();
+        t.emit("run_start", "r", None, &[]).unwrap();
+        // Flushed immediately: the line is on disk before the trace is
+        // dropped (crash-survivability).
+        let on_disk = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(on_disk.lines().count(), 1);
+        t.emit("run_end", "r", Some(1.0), &[("selected", int(3))]).unwrap();
+        let on_disk = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(on_disk, t.to_jsonl());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn labels_and_strings_are_escaped() {
+        let mut t = Trace::new("we\"ird\nname");
+        t.emit("load", "a\\b", None, &[("s", str_lit("x\ty"))]).unwrap();
+        let line = t.to_jsonl();
+        let v = JsonValue::parse(line.trim()).unwrap();
+        assert_eq!(v.get("run").unwrap().as_str(), Some("we\"ird\nname"));
+        assert_eq!(v.get("label").unwrap().as_str(), Some("a\\b"));
+        assert_eq!(v.get("data").unwrap().get("s").unwrap().as_str(), Some("x\ty"));
+    }
+}

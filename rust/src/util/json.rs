@@ -1,0 +1,381 @@
+//! A minimal JSON reader — the parsing twin of the emission helpers in
+//! [`crate::util`] (`json_escape` / `json_num`).  No `serde` in the
+//! offline registry, so the consumers that *read* machine artifacts
+//! (`craig replay` re-loading a run manifest, `craig doctor` probing
+//! one) share this hand-rolled recursive-descent parser.
+//!
+//! Two deliberate deviations from a general-purpose JSON library:
+//!
+//! * **Numbers stay raw text** ([`JsonValue::Num`] holds the literal as
+//!   it appeared).  Replay compares manifests *bitwise*; round-tripping
+//!   `0.30000000000000004` through an `f64` and back could normalize
+//!   the text and mask a real divergence.  Callers opt into numeric
+//!   views via [`JsonValue::as_f64`] / [`JsonValue::as_u64`].
+//! * **Objects preserve key order** (`Vec<(String, JsonValue)>`, not a
+//!   map) so a structural diff reports fields in manifest order.
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value (see the module docs for the number/object
+/// representation choices).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    /// The number literal exactly as written.
+    Num(String),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    /// Key/value pairs in document order.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(text: &str) -> Result<JsonValue> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { bytes, pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != bytes.len() {
+            bail!("byte {}: trailing content after JSON document", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(raw) => raw.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(raw) => raw.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Compact single-line rendering (diff/debug display; strings are
+    /// re-escaped through the shared emission helper).
+    pub fn render(&self) -> String {
+        match self {
+            JsonValue::Null => "null".to_string(),
+            JsonValue::Bool(b) => b.to_string(),
+            JsonValue::Num(raw) => raw.clone(),
+            JsonValue::Str(s) => format!("\"{}\"", super::json_escape(s)),
+            JsonValue::Arr(items) => {
+                let parts: Vec<String> = items.iter().map(JsonValue::render).collect();
+                format!("[{}]", parts.join(", "))
+            }
+            JsonValue::Obj(fields) => {
+                let parts: Vec<String> = fields
+                    .iter()
+                    .map(|(k, v)| format!("\"{}\": {}", super::json_escape(k), v.render()))
+                    .collect();
+                format!("{{{}}}", parts.join(", "))
+            }
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        match self.bytes.get(self.pos) {
+            Some(&b) => Ok(b),
+            None => bail!("byte {}: unexpected end of JSON", self.pos),
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != b {
+            bail!("byte {}: expected '{}', got '{}'", self.pos, b as char, got as char);
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue> {
+        let end = self.pos + word.len();
+        if self.bytes.get(self.pos..end) == Some(word.as_bytes()) {
+            self.pos = end;
+            Ok(v)
+        } else {
+            bail!("byte {}: expected '{word}'", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue> {
+        match self.peek()? {
+            b'n' => self.literal("null", JsonValue::Null),
+            b't' => self.literal("true", JsonValue::Bool(true)),
+            b'f' => self.literal("false", JsonValue::Bool(false)),
+            b'"' => Ok(JsonValue::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            b'-' | b'0'..=b'9' => self.number(),
+            other => bail!("byte {}: unexpected character '{}'", self.pos, other as char),
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        if self.peek()? == b'-' {
+            self.pos += 1;
+        }
+        let mut saw_digit = false;
+        while let Some(&b) = self.bytes.get(self.pos) {
+            match b {
+                b'0'..=b'9' => {
+                    saw_digit = true;
+                    self.pos += 1;
+                }
+                b'.' | b'e' | b'E' | b'+' | b'-' => self.pos += 1,
+                _ => break,
+            }
+        }
+        if !saw_digit {
+            bail!("byte {start}: malformed number");
+        }
+        let raw = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii number");
+        // Validate the shape once so Num always holds a real number.
+        if raw.parse::<f64>().is_err() {
+            bail!("byte {start}: malformed number '{raw}'");
+        }
+        Ok(JsonValue::Num(raw.to_string()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = self.peek()?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = self.peek()?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let end = self.pos + 4;
+                            let hex = self
+                                .bytes
+                                .get(self.pos..end)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("byte {}: truncated \\u escape", self.pos)
+                                })?;
+                            let code = u32::from_str_radix(hex, 16).map_err(|_| {
+                                anyhow::anyhow!("byte {}: bad \\u escape '{hex}'", self.pos)
+                            })?;
+                            // Manifests only emit control-range escapes;
+                            // surrogate pairs degrade to U+FFFD.
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            self.pos = end;
+                        }
+                        other => {
+                            bail!("byte {}: bad escape '\\{}'", self.pos - 1, other as char)
+                        }
+                    }
+                }
+                _ => {
+                    // Re-walk UTF-8 from the byte position: strings may
+                    // hold multi-byte characters.
+                    let rest = std::str::from_utf8(&self.bytes[self.pos - 1..])
+                        .map_err(|_| anyhow::anyhow!("byte {}: invalid UTF-8", self.pos - 1))?;
+                    let c = rest.chars().next().expect("non-empty");
+                    out.push(c);
+                    self.pos += c.len_utf8() - 1;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                other => bail!("byte {}: expected ',' or ']', got '{}'", self.pos, other as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(fields));
+                }
+                other => bail!("byte {}: expected ',' or '}}', got '{}'", self.pos, other as char),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_containers() {
+        let v = JsonValue::parse(
+            "{\"a\": 1, \"b\": [true, null, -2.5e3], \"c\": {\"d\": \"x\"}}",
+        )
+        .unwrap();
+        assert_eq!(v.get("a"), Some(&JsonValue::Num("1".into())));
+        match v.get("b") {
+            Some(JsonValue::Arr(items)) => {
+                assert_eq!(items[0], JsonValue::Bool(true));
+                assert_eq!(items[1], JsonValue::Null);
+                assert_eq!(items[2], JsonValue::Num("-2.5e3".into()));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(v.get("c").unwrap().get("d").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn numbers_keep_their_literal_text() {
+        // The whole point of Num(String): no normalization.
+        let v = JsonValue::parse("[0.30000000000000004, 1e2, -0.0]").unwrap();
+        match v {
+            JsonValue::Arr(items) => {
+                assert_eq!(items[0], JsonValue::Num("0.30000000000000004".into()));
+                assert_eq!(items[1], JsonValue::Num("1e2".into()));
+                assert_eq!(items[1].as_f64(), Some(100.0));
+                assert_eq!(items[2], JsonValue::Num("-0.0".into()));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn object_order_is_preserved() {
+        let v = JsonValue::parse("{\"z\": 1, \"a\": 2}").unwrap();
+        match &v {
+            JsonValue::Obj(fields) => {
+                assert_eq!(fields[0].0, "z");
+                assert_eq!(fields[1].0, "a");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn string_escapes_round_trip_the_emitter() {
+        // json_escape output must parse back to the original text.
+        let original = "a\"b\\c\nd\te\u{0001}f#€";
+        let doc = format!("\"{}\"", crate::util::json_escape(original));
+        let v = JsonValue::parse(&doc).unwrap();
+        assert_eq!(v.as_str(), Some(original));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\" 1}",
+            "{\"a\": 1} trailing",
+            "\"unterminated",
+            "nul",
+            "[--3]",
+        ] {
+            assert!(JsonValue::parse(bad).is_err(), "{bad:?} must fail");
+        }
+    }
+
+    #[test]
+    fn parses_a_real_manifest_shape() {
+        // A trimmed run manifest: the exact consumer this parser serves.
+        let doc = "{\n  \"schema_version\": 1,\n  \"kind\": \"run_manifest\",\n  \
+                   \"spec_toml\": \"name = \\\"x\\\"\\nseed = 0\\n\",\n  \
+                   \"stream\": null,\n  \"selection\": {\"class_sizes\": [3, 4]}\n}\n";
+        let v = JsonValue::parse(doc).unwrap();
+        assert_eq!(v.get("schema_version").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("run_manifest"));
+        assert_eq!(v.get("spec_toml").unwrap().as_str(), Some("name = \"x\"\nseed = 0\n"));
+        assert_eq!(v.get("stream"), Some(&JsonValue::Null));
+        assert_eq!(
+            v.get("selection").unwrap().get("class_sizes").unwrap().render(),
+            "[3, 4]"
+        );
+    }
+}

@@ -3,34 +3,58 @@
 //! tiled kernels, argmin/argmax, and the JSON-emission / git-revision
 //! substrate shared by the bench snapshot and the run manifest.
 
+pub mod json;
 pub mod threadpool;
 
+pub use json::JsonValue;
 pub use threadpool::{even_ranges, triangular_ranges, ThreadPool};
+
+/// The sentinel recorded when no revision can be resolved (no CI env,
+/// no git binary, or not a git checkout).  Manifests written in such
+/// environments carry this value, and `craig replay` treats any rev
+/// mismatch — including against this sentinel — as a *warning*, never a
+/// failure: the revision is provenance metadata, not part of the
+/// reproducibility contract.
+pub const GIT_REV_UNKNOWN: &str = "unknown";
 
 /// Resolve the git revision for machine-readable artifacts and the
 /// CLI's `--version` line: `$GITHUB_SHA` in CI, `git rev-parse`
-/// locally, `"unknown"` offline.  Cached process-wide — the first call
-/// pays the subprocess, every later `Runner::run` / bench snapshot
-/// reads the cache.
+/// locally, [`GIT_REV_UNKNOWN`] offline.  Cached process-wide — the
+/// first call pays the subprocess, every later `Runner::run` / bench
+/// snapshot reads the cache.
 pub fn git_rev() -> String {
     static REV: std::sync::OnceLock<String> = std::sync::OnceLock::new();
-    REV.get_or_init(|| {
-        if let Ok(sha) = std::env::var("GITHUB_SHA") {
-            if !sha.is_empty() {
-                return sha;
-            }
+    REV.get_or_init(detect_git_rev).clone()
+}
+
+/// Uncached revision detection ([`git_rev`] without the process-wide
+/// cache) — the testable seam: every failure mode (env unset, missing
+/// binary, non-repo checkout, empty output) degrades to
+/// [`GIT_REV_UNKNOWN`] instead of an error.
+pub fn detect_git_rev() -> String {
+    let env_sha = std::env::var("GITHUB_SHA").ok();
+    detect_git_rev_with(env_sha.as_deref(), "git")
+}
+
+/// The injectable core of [`detect_git_rev`]: `env_sha` stands in for
+/// `$GITHUB_SHA`, `git_program` for the `git` binary (tests pass a
+/// nonexistent program name to exercise the no-git container path
+/// hermetically).
+fn detect_git_rev_with(env_sha: Option<&str>, git_program: &str) -> String {
+    if let Some(sha) = env_sha {
+        if !sha.is_empty() {
+            return sha.to_string();
         }
-        std::process::Command::new("git")
-            .args(["rev-parse", "--short=12", "HEAD"])
-            .output()
-            .ok()
-            .filter(|o| o.status.success())
-            .and_then(|o| String::from_utf8(o.stdout).ok())
-            .map(|s| s.trim().to_string())
-            .filter(|s| !s.is_empty())
-            .unwrap_or_else(|| "unknown".to_string())
-    })
-    .clone()
+    }
+    std::process::Command::new(git_program)
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| GIT_REV_UNKNOWN.to_string())
 }
 
 /// Escape a string for a JSON literal (shared by `BENCH_selection.json`
@@ -111,5 +135,33 @@ mod tests {
         assert_eq!(div_ceil(10, 3), 4);
         assert_eq!(div_ceil(9, 3), 3);
         assert_eq!(div_ceil(1, 3), 1);
+    }
+
+    #[test]
+    fn git_rev_env_sha_wins() {
+        assert_eq!(detect_git_rev_with(Some("abc123"), "git"), "abc123");
+        // An empty $GITHUB_SHA must not shadow the git fallback chain.
+        assert_ne!(detect_git_rev_with(Some(""), "craig-no-such-binary"), "");
+    }
+
+    #[test]
+    fn git_rev_missing_git_degrades_to_unknown() {
+        // A container without git (or a non-repo checkout): the helper
+        // must return the sentinel, never error — replay treats rev
+        // mismatches as warnings, so "unknown" has to be representable.
+        let rev = detect_git_rev_with(None, "craig-no-such-binary");
+        assert_eq!(rev, GIT_REV_UNKNOWN);
+        let rev = detect_git_rev_with(Some(""), "craig-no-such-binary");
+        assert_eq!(rev, GIT_REV_UNKNOWN);
+    }
+
+    #[test]
+    fn git_rev_cache_is_stable() {
+        // Two calls return the same value (OnceLock semantics) and the
+        // value is never empty — manifests always get *something*.
+        let a = git_rev();
+        let b = git_rev();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
     }
 }

@@ -197,6 +197,110 @@ fn prop_schedules_positive_and_monotone() {
     });
 }
 
+/// Generator: random labels for n∈[5,120] points over c∈[2,6] classes,
+/// a shard count k∈[1,9], and an independent deal seed.
+struct LabelsGen;
+
+impl Gen for LabelsGen {
+    type Item = (Vec<u32>, usize, usize, u64);
+    fn gen(&self, rng: &mut Rng) -> Self::Item {
+        let n = rng.range(5, 121);
+        let classes = rng.range(2, 7);
+        let k = rng.range(1, 10);
+        let labels: Vec<u32> = (0..n).map(|_| rng.range(0, classes) as u32).collect();
+        (labels, classes, k, rng.next_u64())
+    }
+}
+
+#[test]
+fn prop_stratified_assignment_partitions_exactly() {
+    use craig::data::shard::stratified_assignment;
+    forall(8, 60, &LabelsGen, |(labels, classes, k, seed)| {
+        let shards = stratified_assignment(labels, *classes, *k, *seed);
+        // Every global index appears exactly once across shards.
+        let mut seen = vec![0usize; labels.len()];
+        for shard in &shards {
+            for &i in shard {
+                if i >= labels.len() {
+                    return Err(format!("index {i} out of range n={}", labels.len()));
+                }
+                seen[i] += 1;
+            }
+        }
+        if seen.iter().any(|&c| c != 1) {
+            let bad: Vec<usize> =
+                (0..labels.len()).filter(|&i| seen[i] != 1).take(5).collect();
+            return Err(format!("not an exact partition at indices {bad:?}"));
+        }
+        // Shards are non-empty and internally sorted ascending (the
+        // order-preservation the 1-shard ≡ in-memory contract rides on).
+        for (s, shard) in shards.iter().enumerate() {
+            if shard.is_empty() {
+                return Err(format!("shard {s} empty (retained shards must be non-empty)"));
+            }
+            if shard.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("shard {s} not sorted ascending"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stratified_assignment_k1_is_identity() {
+    use craig::data::shard::stratified_assignment;
+    forall(9, 40, &LabelsGen, |(labels, classes, _, seed)| {
+        let shards = stratified_assignment(labels, *classes, 1, *seed);
+        if shards.len() != 1 {
+            return Err(format!("K=1 must yield one shard, got {}", shards.len()));
+        }
+        let identity: Vec<usize> = (0..labels.len()).collect();
+        if shards[0] != identity {
+            return Err(format!(
+                "K=1 must preserve dataset order for every seed (seed {seed}), got {:?}",
+                &shards[0][..shards[0].len().min(8)]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stratified_assignment_balances_classes_within_one() {
+    use craig::data::shard::stratified_assignment;
+    forall(10, 60, &LabelsGen, |(labels, classes, k, seed)| {
+        let shards = stratified_assignment(labels, *classes, *k, *seed);
+        for c in 0..*classes {
+            let per_shard: Vec<usize> = shards
+                .iter()
+                .map(|s| s.iter().filter(|&&i| labels[i] == c as u32).count())
+                .collect();
+            let (lo, hi) = (
+                per_shard.iter().copied().min().unwrap_or(0),
+                per_shard.iter().copied().max().unwrap_or(0),
+            );
+            // Across the *retained* shards a class deals round-robin, so
+            // counts differ by at most 1 — unless the class is so small
+            // that some retained shard got none of it (another class
+            // kept that shard alive); zeros are excluded from the floor.
+            let nonzero_lo =
+                per_shard.iter().copied().filter(|&x| x > 0).min().unwrap_or(0);
+            let class_total: usize = per_shard.iter().sum();
+            if class_total >= shards.len() && hi > lo + 1 {
+                return Err(format!(
+                    "class {c} imbalanced across shards: {per_shard:?} (seed {seed})"
+                ));
+            }
+            if class_total < shards.len() && hi > nonzero_lo.max(1) {
+                return Err(format!(
+                    "small class {c} over-concentrated: {per_shard:?} (seed {seed})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_saga_table_mean_is_full_gradient() {
     // SAGA invariant: right after init, avg + λ_eff·w == ∇f(w)/m.
