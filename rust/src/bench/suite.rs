@@ -29,6 +29,17 @@
 //! streamed vs the in-memory run (the memory the subsystem exists to
 //! bound).  Stream runs at 1 worker and N workers must produce the
 //! same coreset; that check folds into `parallel_matches_sequential`.
+//!
+//! Schema v4 (ISSUE 7) replaces the single kernel row with per-tier
+//! rows — `kernel/ref/tN` and `kernel/tiled/tN` build the n² distance
+//! matrix through the reference and register-blocked tiled kernels,
+//! `kernel/tiled_f32/tN` builds the halved-storage f16 similarity
+//! store end to end (tiled kernel + encode; that *is* the tier's
+//! pipeline) — plus the `speedup_vs_reference` object and
+//! `tiled_f32_objective_ratio`.  The tiled kernel must reproduce the
+//! reference build bitwise and per-tier selections must be
+//! deterministic across thread widths; both checks fold into
+//! `parallel_matches_sequential`.
 
 use std::path::Path;
 use std::time::Duration;
@@ -37,8 +48,9 @@ use anyhow::Result;
 
 use super::{bench, BenchConfig, BenchResult};
 use crate::coreset::{
-    Budget, DenseSim, FacilityLocation, MemShards, Method, NativePairwise, Selector,
-    SelectorConfig, SimStorePolicy, StopRule, StreamConfig, StreamingSelector,
+    Budget, DenseSim, FacilityLocation, HalfDenseSim, KernelTier, MemShards, Method,
+    NativePairwise, Selector, SelectorConfig, SimStorePolicy, StopRule, StreamConfig,
+    StreamingSelector,
 };
 use crate::linalg::{self, Matrix};
 use crate::metrics::Summary;
@@ -46,7 +58,7 @@ use crate::rng::Rng;
 use crate::util::{git_rev, json_escape, json_num, ThreadPool};
 
 /// JSON schema version of `BENCH_selection.json`.
-pub const SCHEMA_VERSION: u32 = 3;
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// Suite knobs (everything else is fixed by design).
 pub struct SuiteConfig {
@@ -81,8 +93,20 @@ pub struct SuiteReport {
     pub cases: Vec<SuiteCase>,
     /// 1-thread mean / N-thread mean for end-to-end lazy selection.
     pub speedup_lazy_selection: f64,
-    /// Same ratio for the bare kernel build.
+    /// Same ratio for the bare kernel build (reference tier).
     pub speedup_kernel_build: f64,
+    /// Reference-tier mean / tiled-tier mean for the kernel build at
+    /// 1 thread and at N threads (> 1 when register blocking pays).
+    pub speedup_tiled_t1: f64,
+    pub speedup_tiled_tn: f64,
+    /// Reference kernel-build mean / tiled-f32 *store* build mean (the
+    /// f16 leg also pays the encode, so this prices the whole tier).
+    pub speedup_tiled_f32_t1: f64,
+    pub speedup_tiled_f32_tn: f64,
+    /// F(tiled-f32-selected set) / F(reference-selected set) on the
+    /// full-precision facility-location objective — the quality price
+    /// of f16 similarity storage (acceptance requires ≥ 0.999).
+    pub tiled_f32_objective_ratio: f64,
     /// Cold-workspace mean / warm-workspace mean for lazy selection at
     /// N threads (≥ 1 when buffer reuse pays).
     pub speedup_warm_workspace: f64,
@@ -132,6 +156,7 @@ fn run_selection(
     method: Method,
     threads: usize,
     store: SimStorePolicy,
+    tier: KernelTier,
 ) -> (Vec<usize>, Vec<f32>) {
     let idx: Vec<usize> = (0..x.rows).collect();
     let cfg = SelectorConfig {
@@ -141,6 +166,7 @@ fn run_selection(
         seed: 7,
         parallelism: threads,
         sim_store: store,
+        kernel: tier,
         stream_shards: 0,
         ..Default::default()
     };
@@ -156,8 +182,9 @@ fn run_selection_cold(
     method: Method,
     threads: usize,
     store: SimStorePolicy,
+    tier: KernelTier,
 ) -> (Vec<usize>, Vec<f32>) {
-    run_selection(&mut Selector::new(), x, r, method, threads, store)
+    run_selection(&mut Selector::new(), x, r, method, threads, store, tier)
 }
 
 /// Build a [`BenchResult`] from pre-collected samples (the streaming
@@ -241,30 +268,57 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
         ("stochastic", Method::Stochastic { delta: 0.05 }),
     ];
 
-    // Bare kernel build (the L1 hot spot): n² pair entries per iter.
-    for (w, pool) in [(1usize, &pool1), (threads, &pool_n)] {
-        let res = bench(&format!("kernel/pairwise_self/t{w}"), &bc, |_| {
+    // Kernel build per tier (the L1 hot spot): n² pair entries per
+    // iter.  `ref` and `tiled` build the same f32 distance matrix —
+    // and must agree bitwise, checked here at both widths; `tiled_f32`
+    // builds its f16 similarity store end to end (kernel + encode),
+    // the real cost of the reduced-storage tier.
+    let mut equivalent = true;
+    let mut kernel_means = [[0.0f64; 2]; 3]; // [tier][width] mean_s
+    for (wi, (w, pool)) in [(1usize, &pool1), (threads, &pool_n)].into_iter().enumerate() {
+        let ref_out = linalg::pairwise_sqdist_self_par(&x, pool);
+        let mut tiled_out = Matrix::zeros(n, n);
+        linalg::pairwise_sqdist_self_tiled_into(&x, &mut tiled_out, pool);
+        equivalent &= ref_out.data == tiled_out.data;
+        let res = bench(&format!("kernel/ref/t{w}"), &bc, |_| {
             linalg::pairwise_sqdist_self_par(&x, pool)
         });
+        kernel_means[0][wi] = res.mean_s;
+        cases.push(SuiteCase { result: res, threads: w, items: (n * n) as f64 });
+        let res = bench(&format!("kernel/tiled/t{w}"), &bc, |_| {
+            let mut out = Matrix::zeros(n, n);
+            linalg::pairwise_sqdist_self_tiled_into(&x, &mut out, pool);
+            out
+        });
+        kernel_means[1][wi] = res.mean_s;
+        cases.push(SuiteCase { result: res, threads: w, items: (n * n) as f64 });
+        let res = bench(&format!("kernel/tiled_f32/t{w}"), &bc, |_| {
+            HalfDenseSim::from_features_par(&x, pool, Vec::new())
+        });
+        kernel_means[2][wi] = res.mean_s;
         cases.push(SuiteCase { result: res, threads: w, items: (n * n) as f64 });
     }
-    let speedup_kernel_build = cases[0].result.mean_s / cases[1].result.mean_s;
+    let speedup_kernel_build = kernel_means[0][0] / kernel_means[0][1];
+    let speedup_tiled_t1 = kernel_means[0][0] / kernel_means[1][0];
+    let speedup_tiled_tn = kernel_means[0][1] / kernel_means[1][1];
+    let speedup_tiled_f32_t1 = kernel_means[0][0] / kernel_means[2][0];
+    let speedup_tiled_f32_tn = kernel_means[0][1] / kernel_means[2][1];
 
     // End-to-end single-class selection per engine (dense store), 1 vs
     // N threads, with the determinism contract checked on the side.
-    let mut equivalent = true;
     let mut speedup_lazy_selection = 0.0;
     let mut dense_lazy_tn = 0.0;
     let dense = SimStorePolicy::Dense;
+    let reference = KernelTier::Reference;
     for (name, method) in methods {
         let budget = if name == "naive" { r_naive } else { r };
-        let seq = run_selection_cold(&x, budget, method, 1, dense);
-        let par = run_selection_cold(&x, budget, method, threads, dense);
+        let seq = run_selection_cold(&x, budget, method, 1, dense, KernelTier::Reference);
+        let par = run_selection_cold(&x, budget, method, threads, dense, KernelTier::Reference);
         equivalent &= seq == par;
         let mut pair = Vec::with_capacity(2);
         for w in [1usize, threads] {
             let res = bench(&format!("select/{name}/t{w}"), &bc, |_| {
-                run_selection_cold(&x, budget, method, w, dense)
+                run_selection_cold(&x, budget, method, w, dense, KernelTier::Reference)
             });
             pair.push(res.mean_s);
             cases.push(SuiteCase { result: res, threads: w, items: n as f64 });
@@ -278,13 +332,14 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
     // Dense vs blocked (lazy): the blocked store trades the n² matrix
     // for recomputed columns; this row prices that trade.
     let blocked = SimStorePolicy::Blocked;
-    let blk_seq = run_selection_cold(&x, r, Method::Lazy, 1, blocked);
-    let blk_par = run_selection_cold(&x, r, Method::Lazy, threads, blocked);
+    let blk_seq = run_selection_cold(&x, r, Method::Lazy, 1, blocked, KernelTier::Reference);
+    let blk_par =
+        run_selection_cold(&x, r, Method::Lazy, threads, blocked, KernelTier::Reference);
     equivalent &= blk_seq == blk_par;
     let mut blocked_tn = 0.0;
     for w in [1usize, threads] {
         let res = bench(&format!("select/lazy/blocked/t{w}"), &bc, |_| {
-            run_selection_cold(&x, r, Method::Lazy, w, blocked)
+            run_selection_cold(&x, r, Method::Lazy, w, blocked, KernelTier::Reference)
         });
         if w == threads {
             blocked_tn = res.mean_s;
@@ -297,16 +352,18 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
     // reuses one Selector's buffers across iterations — the per-epoch
     // reselection profile.  Warm output must equal cold output.
     let cold_res = bench(&format!("workspace/cold/t{threads}"), &bc, |_| {
-        run_selection_cold(&x, r, Method::Lazy, threads, dense)
+        run_selection_cold(&x, r, Method::Lazy, threads, dense, KernelTier::Reference)
     });
     let mut warm_selector = Selector::new();
-    run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense); // pre-warm
+    // Pre-warm the workspace.
+    run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense, KernelTier::Reference);
     let warm_res = bench(&format!("workspace/warm/t{threads}"), &bc, |_| {
-        run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense)
+        run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense, reference)
     });
     let speedup_warm_workspace = cold_res.mean_s / warm_res.mean_s;
-    let cold_out = run_selection_cold(&x, r, Method::Lazy, threads, dense);
-    let warm_out = run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense);
+    let cold_out = run_selection_cold(&x, r, Method::Lazy, threads, dense, KernelTier::Reference);
+    let warm_out =
+        run_selection(&mut warm_selector, &x, r, Method::Lazy, threads, dense, reference);
     equivalent &= cold_out == warm_out;
     cases.push(SuiteCase { result: cold_res, threads, items: n as f64 });
     cases.push(SuiteCase { result: warm_res, threads, items: n as f64 });
@@ -348,7 +405,8 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
     });
     // Quality + memory comparison against the in-memory dense run.
     let mut inmem_selector = Selector::new();
-    let (inmem_set, _) = run_selection(&mut inmem_selector, &x, r, Method::Lazy, threads, dense);
+    let (inmem_set, _) =
+        run_selection(&mut inmem_selector, &x, r, Method::Lazy, threads, dense, reference);
     let inmemory_peak_dense_bytes = inmem_selector.workspace().peak_dense_bytes;
     let sim = DenseSim::from_features_par(&x, &pool_n);
     let mut fl = FacilityLocation::new(&sim);
@@ -356,6 +414,19 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
     let f_stream = fl.eval_set(&stream_indices);
     let f_inmem = fl.eval_set(&inmem_set);
     let stream_vs_inmemory_objective = f_stream / f_inmem;
+
+    // Kernel-tier selection contract (schema v4): the tiled tier must
+    // reproduce the reference selection exactly at every width; the
+    // f16 tier must be width-deterministic, and its quality is priced
+    // on the full-precision objective against the reference set.
+    let ref_lazy = run_selection_cold(&x, r, Method::Lazy, 1, dense, reference);
+    let tiled_1 = run_selection_cold(&x, r, Method::Lazy, 1, dense, KernelTier::Tiled);
+    let tiled_n = run_selection_cold(&x, r, Method::Lazy, threads, dense, KernelTier::Tiled);
+    equivalent &= ref_lazy == tiled_1 && tiled_1 == tiled_n;
+    let tf32_1 = run_selection_cold(&x, r, Method::Lazy, 1, dense, KernelTier::TiledF32);
+    let tf32_n = run_selection_cold(&x, r, Method::Lazy, threads, dense, KernelTier::TiledF32);
+    equivalent &= tf32_1 == tf32_n;
+    let tiled_f32_objective_ratio = fl.eval_set(&tf32_n.0) / fl.eval_set(&ref_lazy.0);
 
     SuiteReport {
         git_rev: git_rev(),
@@ -366,6 +437,11 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
         cases,
         speedup_lazy_selection,
         speedup_kernel_build,
+        speedup_tiled_t1,
+        speedup_tiled_tn,
+        speedup_tiled_f32_t1,
+        speedup_tiled_f32_tn,
+        tiled_f32_objective_ratio,
         speedup_warm_workspace,
         blocked_vs_dense_lazy,
         stream_vs_inmemory_objective,
@@ -400,6 +476,18 @@ pub fn to_json(rep: &SuiteReport) -> String {
         json_num(rep.speedup_kernel_build),
         json_num(rep.speedup_warm_workspace),
         json_num(rep.blocked_vs_dense_lazy)
+    ));
+    s.push_str(&format!(
+        "  \"speedup_vs_reference\": {{\"tiled_t1\": {}, \"tiled_tn\": {}, \
+         \"tiled_f32_t1\": {}, \"tiled_f32_tn\": {}}},\n",
+        json_num(rep.speedup_tiled_t1),
+        json_num(rep.speedup_tiled_tn),
+        json_num(rep.speedup_tiled_f32_t1),
+        json_num(rep.speedup_tiled_f32_tn)
+    ));
+    s.push_str(&format!(
+        "  \"tiled_f32_objective_ratio\": {},\n",
+        json_num(rep.tiled_f32_objective_ratio)
     ));
     s.push_str(&format!(
         "  \"stream\": {{\"objective_ratio_vs_inmemory\": {}, \"peak_dense_bytes\": {}, \
@@ -445,8 +533,9 @@ mod tests {
         assert!(rep.parallel_matches_sequential, "parallel must equal sequential");
         assert_eq!(
             rep.cases.len(),
-            14,
-            "2 kernel + 3 engines x 2 widths + 2 blocked + 2 workspace + 2 stream"
+            18,
+            "3 kernel tiers x 2 widths + 3 engines x 2 widths + 2 blocked + 2 workspace \
+             + 2 stream"
         );
         assert!(rep.cases.iter().all(|c| c.result.mean_s > 0.0));
         assert!(rep.speedup_lazy_selection > 0.0);
@@ -462,8 +551,19 @@ mod tests {
             rep.stream_peak_dense_bytes < rep.inmemory_peak_dense_bytes,
             "streaming must not materialize the full n² buffer"
         );
+        assert!(
+            rep.tiled_f32_objective_ratio >= 0.999,
+            "f16 similarity storage must not cost objective: {}",
+            rep.tiled_f32_objective_ratio
+        );
+        assert!(rep.speedup_tiled_t1 > 0.0 && rep.speedup_tiled_f32_tn > 0.0);
         let json = to_json(&rep);
-        assert!(json.contains("\"schema_version\": 3"));
+        assert!(json.contains("\"schema_version\": 4"));
+        assert!(json.contains("kernel/ref/t1"));
+        assert!(json.contains("kernel/tiled/t2"));
+        assert!(json.contains("kernel/tiled_f32/t1"));
+        assert!(json.contains("\"speedup_vs_reference\":"));
+        assert!(json.contains("\"tiled_f32_objective_ratio\":"));
         assert!(json.contains("select/lazy/t1"));
         assert!(json.contains("select/lazy/t2"));
         assert!(json.contains("select/lazy/blocked/t1"));

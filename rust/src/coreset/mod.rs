@@ -26,12 +26,14 @@ pub use selector::{
     ClassSelection, SelectionWorkspace, Selector, SimStore, SimStorePolicy,
     DEFAULT_SIM_MEM_BUDGET,
 };
-pub use sim::{BlockedSim, DenseSim, Metric, RowWeightedSim, SimilaritySource};
+pub use sim::{BlockedSim, DenseSim, HalfDenseSim, Metric, RowWeightedSim, SimilaritySource};
 pub use stream::{
     EpochSelector, MemShards, ShardSource, ShardStat, StreamConfig, StreamStats,
     StreamingSelector,
 };
 pub use weights::WeightedCoreset;
+
+pub use crate::linalg::KernelTier;
 
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -87,6 +89,14 @@ pub struct SelectorConfig {
     /// 0/1 = plain in-memory selection.  [`Selector::select`] itself
     /// ignores the knob (it *is* the per-shard engine).
     pub stream_shards: usize,
+    /// Pairwise-kernel tier serving the dense store
+    /// ([`crate::linalg::KernelTier`]): `Reference` (scalar baseline),
+    /// `Tiled` (lane-vectorized, **bitwise-identical** to reference) or
+    /// `TiledF32` (tiled arithmetic + f16 similarity storage — half the
+    /// dense bytes, bounded relative error).  Pure perf/memory knob for
+    /// the first two; the determinism contract above is stated per tier
+    /// (see DESIGN.md §11).
+    pub kernel: KernelTier,
 }
 
 impl Default for SelectorConfig {
@@ -100,6 +110,7 @@ impl Default for SelectorConfig {
             sim_store: SimStorePolicy::default(),
             metric: Metric::Euclidean,
             stream_shards: 0,
+            kernel: KernelTier::Reference,
         }
     }
 }
@@ -132,6 +143,23 @@ pub trait PairwiseEngine {
         *out = self.sqdist_self_par(x, pool);
     }
 
+    /// [`sqdist_self_into`](Self::sqdist_self_into) with a kernel-tier
+    /// request.  Backends without tiered kernels ignore the tier and
+    /// fall back to their single path — safe, because `Tiled` is
+    /// bitwise-equal to `Reference` by contract, so for such backends
+    /// the tiers are indistinguishable by construction.  The native
+    /// engine dispatches to the lane-packed kernels.
+    fn sqdist_self_tiered_into(
+        &mut self,
+        x: &Matrix,
+        out: &mut Matrix,
+        pool: &ThreadPool,
+        tier: KernelTier,
+    ) {
+        let _ = tier;
+        self.sqdist_self_into(x, out, pool);
+    }
+
     /// Human-readable backend name for logs.
     fn name(&self) -> &'static str {
         "unknown"
@@ -156,6 +184,23 @@ impl PairwiseEngine for NativePairwise {
 
     fn sqdist_self_into(&mut self, x: &Matrix, out: &mut Matrix, pool: &ThreadPool) {
         crate::linalg::pairwise_sqdist_self_into(x, out, pool);
+    }
+
+    fn sqdist_self_tiered_into(
+        &mut self,
+        x: &Matrix,
+        out: &mut Matrix,
+        pool: &ThreadPool,
+        tier: KernelTier,
+    ) {
+        match tier {
+            KernelTier::Reference => crate::linalg::pairwise_sqdist_self_into(x, out, pool),
+            // TiledF32 shares the tiled arithmetic; its storage
+            // reduction happens in the sim store, not the kernel.
+            KernelTier::Tiled | KernelTier::TiledF32 => {
+                crate::linalg::pairwise_sqdist_self_tiled_into(x, out, pool)
+            }
+        }
     }
 
     fn name(&self) -> &'static str {

@@ -28,12 +28,12 @@
 //! `cfg.seed` and the class's first global index, so class order and
 //! sharding cannot perturb stochastic greedy.
 
-use crate::linalg::Matrix;
+use crate::linalg::{KernelTier, Matrix};
 use crate::rng::{mix_seed, Rng};
 use crate::util::ThreadPool;
 
 use super::greedy::StopRule;
-use super::sim::{BlockedSim, DenseSim, RowWeightedSim, SimilaritySource};
+use super::sim::{BlockedSim, DenseSim, HalfDenseSim, RowWeightedSim, SimilaritySource};
 use super::weights::WeightedCoreset;
 use super::{run_greedy, Budget, CoresetResult, Method, PairwiseEngine, SelectorConfig};
 
@@ -76,18 +76,33 @@ impl Default for SimStorePolicy {
 }
 
 impl SimStorePolicy {
-    /// Bytes a dense store needs for a class of `n` points.
+    /// Bytes a dense store needs for a class of `n` points (at the
+    /// reference element width; see [`dense_bytes_for`](Self::dense_bytes_for)).
     pub fn dense_bytes(n: usize) -> u128 {
-        (n as u128) * (n as u128) * std::mem::size_of::<f32>() as u128
+        Self::dense_bytes_for(n, KernelTier::Reference)
     }
 
-    /// Resolve the policy at a concrete class size.
+    /// Bytes a dense store needs for a class of `n` points under a
+    /// kernel tier: `n²` f32 for the full-precision tiers, `n²` f16 for
+    /// `TiledF32` — the halving that lets `Auto` admit √2× the rows.
+    pub fn dense_bytes_for(n: usize, tier: KernelTier) -> u128 {
+        (n as u128) * (n as u128) * tier.sim_elem_bytes() as u128
+    }
+
+    /// Resolve the policy at a concrete class size (reference tier).
     pub fn resolve(&self, n: usize) -> SimStore {
+        self.resolve_for(n, KernelTier::Reference)
+    }
+
+    /// Resolve the policy at a concrete class size under a kernel tier:
+    /// the `Auto` budget check uses the tier's element width, so the
+    /// reduced-storage tier keeps classes dense up to √2× the rows.
+    pub fn resolve_for(&self, n: usize, tier: KernelTier) -> SimStore {
         match *self {
             SimStorePolicy::Dense => SimStore::Dense,
             SimStorePolicy::Blocked => SimStore::Blocked,
             SimStorePolicy::Auto { mem_budget_bytes } => {
-                if Self::dense_bytes(n) <= mem_budget_bytes as u128 {
+                if Self::dense_bytes_for(n, tier) <= mem_budget_bytes as u128 {
                     SimStore::Dense
                 } else {
                     SimStore::Blocked
@@ -272,6 +287,9 @@ pub struct SelectionWorkspace {
     class_x: Matrix,
     /// The n² squared-distance / similarity buffer (dense store only).
     sq: Vec<f32>,
+    /// The n² f16 similarity buffer (dense store under the
+    /// reduced-storage `TiledF32` tier — half the bytes of `sq`).
+    sq16: Vec<u16>,
     /// Coverage state for weight assignment (best similarity per point).
     cover_best: Vec<f32>,
     /// Column scratch for weight assignment over non-borrowable stores.
@@ -295,6 +313,7 @@ impl SelectionWorkspace {
         SelectionWorkspace {
             class_x: Matrix::zeros(0, 0),
             sq: Vec::new(),
+            sq16: Vec::new(),
             cover_best: Vec::new(),
             cover_scratch: Vec::new(),
             calls: 0,
@@ -463,7 +482,7 @@ impl Selector {
         let n = idx.len();
         let pool = ThreadPool::scoped(cfg.parallelism);
         let mut rng = Rng::new(mix_seed(cfg.seed, idx[0]));
-        let store = cfg.sim_store.resolve(n);
+        let store = cfg.sim_store.resolve_for(n, cfg.kernel);
         self.ws.calls += 1;
 
         let mut class_x = std::mem::replace(&mut self.ws.class_x, Matrix::zeros(0, 0));
@@ -475,6 +494,24 @@ impl Selector {
         cfg.metric.prepare_rows(&mut class_x);
 
         let (sel, wc) = match store {
+            // The reduced-storage tier builds its f16 store natively
+            // (streamed through the tiled lane kernel — there is no
+            // batch-engine shape for the strip-staged f16 build), the
+            // same native-arithmetic restriction the blocked store
+            // already has.
+            SimStore::Dense if cfg.kernel == KernelTier::TiledF32 => {
+                let scratch = std::mem::take(&mut self.ws.sq16);
+                if scratch.capacity() >= n * n {
+                    self.ws.warm_hits += 1;
+                }
+                self.ws.peak_dense_bytes =
+                    self.ws.peak_dense_bytes.max(n * n * cfg.kernel.sim_elem_bytes());
+                let sim = HalfDenseSim::from_features_par(&class_x, &pool, scratch);
+                let (sel, wc) =
+                    run_store(&sim, weights, cfg.method, rule, &mut rng, &pool, &mut self.ws);
+                self.ws.sq16 = sim.into_scratch();
+                (sel, wc)
+            }
             SimStore::Dense => {
                 let mut data = std::mem::take(&mut self.ws.sq);
                 if data.capacity() >= n * n {
@@ -484,7 +521,7 @@ impl Selector {
                 let mut sq = Matrix::from_vec(n, n, data);
                 self.ws.peak_dense_bytes =
                     self.ws.peak_dense_bytes.max(n * n * std::mem::size_of::<f32>());
-                engine.sqdist_self_into(&class_x, &mut sq, &pool);
+                engine.sqdist_self_tiered_into(&class_x, &mut sq, &pool, cfg.kernel);
                 let sim = DenseSim::from_sqdist_par(sq, &pool);
                 let (sel, wc) =
                     run_store(&sim, weights, cfg.method, rule, &mut rng, &pool, &mut self.ws);
@@ -786,6 +823,75 @@ mod tests {
             SimStorePolicy::Auto { mem_budget_bytes: 123 }
         );
         assert!(SimStorePolicy::parse("mmap", 0).is_err());
+    }
+
+    #[test]
+    fn auto_policy_is_tier_aware() {
+        // 2-byte elements admit √2× the rows under the same budget.
+        let auto = SimStorePolicy::Auto { mem_budget_bytes: 4 * 100 * 100 };
+        assert_eq!(auto.resolve_for(100, KernelTier::Reference), SimStore::Dense);
+        assert_eq!(auto.resolve_for(101, KernelTier::Reference), SimStore::Blocked);
+        assert_eq!(auto.resolve_for(101, KernelTier::Tiled), SimStore::Blocked);
+        assert_eq!(auto.resolve_for(141, KernelTier::TiledF32), SimStore::Dense);
+        assert_eq!(auto.resolve_for(142, KernelTier::TiledF32), SimStore::Blocked);
+        assert_eq!(SimStorePolicy::dense_bytes_for(100, KernelTier::TiledF32), 2 * 100 * 100);
+        assert_eq!(SimStorePolicy::dense_bytes(100), 4 * 100 * 100);
+    }
+
+    #[test]
+    fn tiled_tier_is_bitwise_identical_to_reference() {
+        let ds = synthetic::covtype_like(600, 6);
+        let mut eng = NativePairwise;
+        for parallelism in [1usize, 4] {
+            let refcfg = SelectorConfig {
+                budget: Budget::Count(48),
+                parallelism,
+                ..Default::default()
+            };
+            let tiledcfg = SelectorConfig { kernel: KernelTier::Tiled, ..refcfg.clone() };
+            let a = Selector::new().select(&ds.x, &ds.y, 2, &refcfg, &mut eng);
+            let b = Selector::new().select(&ds.x, &ds.y, 2, &tiledcfg, &mut eng);
+            assert_eq!(a.coreset.indices, b.coreset.indices, "parallelism {parallelism}");
+            assert_eq!(a.coreset.gamma, b.coreset.gamma, "parallelism {parallelism}");
+            assert_eq!(a.f_value, b.f_value, "tiled must be bitwise at width {parallelism}");
+            assert_eq!(a.stores, b.stores);
+        }
+    }
+
+    #[test]
+    fn tiled_f32_tier_objective_ratio_near_one() {
+        let ds = synthetic::covtype_like(500, 7);
+        let mut eng = NativePairwise;
+        let refcfg = SelectorConfig { budget: Budget::Count(40), ..Default::default() };
+        let halfcfg = SelectorConfig { kernel: KernelTier::TiledF32, ..refcfg.clone() };
+        let a = Selector::new().select(&ds.x, &ds.y, 2, &refcfg, &mut eng);
+        let b = Selector::new().select(&ds.x, &ds.y, 2, &halfcfg, &mut eng);
+        // Same budget shape and store resolution; bounded-error values.
+        assert_eq!(b.class_sizes.iter().sum::<usize>(), 40);
+        assert_eq!(a.stores, b.stores);
+        let ratio = b.f_value / a.f_value;
+        assert!(ratio >= 0.999, "objective ratio {ratio} under the f16 store");
+        let (sa, sb): (f32, f32) = (a.coreset.gamma.iter().sum(), b.coreset.gamma.iter().sum());
+        assert_eq!(sa, sb, "γ still covers the dataset exactly");
+    }
+
+    #[test]
+    fn tiled_f32_tier_is_deterministic_across_widths() {
+        let ds = synthetic::covtype_like(400, 8);
+        let mut eng = NativePairwise;
+        let base = SelectorConfig {
+            budget: Budget::Count(30),
+            kernel: KernelTier::TiledF32,
+            ..Default::default()
+        };
+        let a = Selector::new().select(&ds.x, &ds.y, 2, &base, &mut eng);
+        for parallelism in [2usize, 8] {
+            let cfg = SelectorConfig { parallelism, ..base.clone() };
+            let b = Selector::new().select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+            assert_eq!(a.coreset.indices, b.coreset.indices, "width {parallelism}");
+            assert_eq!(a.coreset.gamma, b.coreset.gamma, "width {parallelism}");
+            assert_eq!(a.f_value, b.f_value, "width {parallelism}");
+        }
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! Distances are **Euclidean** (square root of the kernel's squared
 //! distances) to match the paper's `‖∇f_i − ∇f_j‖` metric.
 
+use crate::linalg::half::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::linalg::tiled::LANES;
 use crate::linalg::{self, Matrix};
 use crate::util::{self, ThreadPool};
 
@@ -251,6 +253,114 @@ impl SimilaritySource for DenseSim {
             None
         }
     }
+
+    fn d_max(&self) -> f32 {
+        self.d_max
+    }
+}
+
+/// Rows per f32 staging strip of the [`HalfDenseSim`] build: large
+/// enough to amortize the panel packing, small enough that the strip
+/// (`64·n` floats) is noise next to the `n²` u16 store it feeds.
+const HALF_BUILD_STRIP_ROWS: usize = 64;
+
+/// Reduced-storage dense similarity store — the
+/// [`KernelTier::TiledF32`](crate::linalg::KernelTier) tier: `n²`
+/// **f16** elements (2 bytes each), half of [`DenseSim`]'s footprint,
+/// so twice the rows fit under a
+/// [`SimStorePolicy`](super::SimStorePolicy) `Auto` memory budget.
+///
+/// The build never materializes the `n²` f32 matrix: distances stream
+/// through a [`HALF_BUILD_STRIP_ROWS`]`×n` f32 staging strip (computed
+/// by the tiled lane kernel), are encoded to f16 on the fly, and the
+/// `s = d_max − d` flip runs in the f16 domain.  Each element therefore
+/// rounds at most three times (distance encode, `d_max` subtract in
+/// f32, similarity encode), keeping the relative error per similarity
+/// at a few times 2⁻¹¹ — the bound `tests/prop_invariants.rs` checks.
+/// The matrix is symmetric **by construction**: `d_ij` and `d_ji` are
+/// computed independently by the same lane recipe, whose f32 products
+/// and sums are commutative-exact, so both cells encode identical bits
+/// and a row read serves a column exactly.
+///
+/// Deterministic at any pool width (every cell's value is a pure
+/// function of its inputs; `d_max` is a partition-invariant max), but
+/// **not** bitwise-equal to [`DenseSim`] — the selection-level
+/// guarantees for this store are the bounded-error and objective-ratio
+/// acceptance tests, not the bitwise parity suite (DESIGN.md §11).
+pub struct HalfDenseSim {
+    n: usize,
+    /// `(n, n)` row-major f16 bits; `f16_bits_to_f32(bits[i·n+j]) = s_ij`.
+    bits: Vec<u16>,
+    d_max: f32,
+}
+
+impl HalfDenseSim {
+    /// Build from feature rows, recycling `scratch` as the u16 backing
+    /// buffer (the workspace hands its buffer back in, same lifecycle
+    /// as [`DenseSim::into_scratch`]).
+    pub fn from_features_par(x: &Matrix, pool: &ThreadPool, scratch: Vec<u16>) -> Self {
+        let n = x.rows;
+        let xn = x.row_sqnorms();
+        let mut bits = scratch;
+        bits.clear();
+        bits.resize(n * n, 0);
+        let strip_rows = HALF_BUILD_STRIP_ROWS.min(n.max(1));
+        let mut strip = vec![0.0f32; strip_rows * n];
+        // Pass 1: tiled distances per strip, sqrt + f16-encode on the
+        // fly.  `d_max` is the max of the *stored* (decoded) distances,
+        // so the flip below can never go negative on a real distance.
+        let mut d_max = 0.0f32;
+        for i0 in (0..n).step_by(strip_rows.max(1)) {
+            let i1 = (i0 + strip_rows).min(n);
+            let rows = i1 - i0;
+            let ranges = util::even_ranges(rows, pool.size());
+            let bounds: Vec<(usize, usize)> =
+                ranges.iter().map(|&(a, b)| (a * n, b * n)).collect();
+            let (xn_ref, ranges) = (&xn, &ranges);
+            pool.scope_map_chunks(&mut strip[..rows * n], &bounds, |p, chunk| {
+                let (r0, r1) = ranges[p];
+                let mut panel = vec![0.0f32; x.cols * LANES];
+                linalg::pairwise_sqdist_rows_tiled(x, xn_ref, i0 + r0, i0 + r1, chunk, &mut panel);
+            });
+            for (cell, out) in strip[..rows * n].iter().zip(&mut bits[i0 * n..i1 * n]) {
+                let enc = f32_to_f16_bits(cell.max(0.0).sqrt());
+                d_max = d_max.max(f16_bits_to_f32(enc));
+                *out = enc;
+            }
+        }
+        if !(d_max > 0.0) || !d_max.is_finite() {
+            d_max = 1.0;
+        }
+        // Pass 2: flip distances into similarities in the f16 domain.
+        for b in bits.iter_mut() {
+            *b = f32_to_f16_bits((d_max - f16_bits_to_f32(*b)).max(0.0));
+        }
+        HalfDenseSim { n, bits, d_max }
+    }
+
+    /// Tear down into the backing u16 buffer for workspace recycling
+    /// (the half-store twin of [`DenseSim::into_scratch`]).
+    pub fn into_scratch(self) -> Vec<u16> {
+        self.bits
+    }
+}
+
+impl SimilaritySource for HalfDenseSim {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn sim_col(&self, j: usize, out: &mut [f32]) {
+        // Symmetric by construction: row j decodes to column j exactly.
+        let row = &self.bits[j * self.n..(j + 1) * self.n];
+        for (o, &b) in out.iter_mut().zip(row) {
+            *o = f16_bits_to_f32(b);
+        }
+    }
+
+    // No `sim_col_ref`: columns exist only in f16 and must be decoded
+    // into the caller's scratch — the storage/bandwidth trade this
+    // store makes.
 
     fn d_max(&self) -> f32 {
         self.d_max
@@ -613,6 +723,58 @@ mod tests {
             ws.sim_col(j, &mut b);
             assert_eq!(a, b, "×1.0 must be bitwise identity");
         }
+    }
+
+    #[test]
+    fn half_dense_matches_dense_within_f16_error() {
+        let x = feats(90, 8, 17);
+        let dense = DenseSim::from_features(&x);
+        let pool = ThreadPool::scoped(1);
+        let half = HalfDenseSim::from_features_par(&x, &pool, Vec::new());
+        assert_eq!(half.n(), 90);
+        // d_max only moved by one f16 rounding of the largest distance.
+        assert!((half.d_max() - dense.d_max()).abs() <= dense.d_max() / 1024.0);
+        let mut a = vec![0.0f32; 90];
+        let mut b = vec![0.0f32; 90];
+        // Three roundings per element ⇒ a few × 2⁻¹¹ of the d_max scale.
+        let tol = dense.d_max() * 4.0 / 1024.0;
+        for j in 0..90 {
+            dense.sim_col(j, &mut a);
+            half.sim_col(j, &mut b);
+            for i in 0..90 {
+                assert!((a[i] - b[i]).abs() <= tol, "({i},{j}): {} vs {}", a[i], b[i]);
+            }
+            assert_eq!(b[j], half.d_max(), "diagonal similarity is exactly d_max");
+        }
+    }
+
+    #[test]
+    fn half_dense_bitwise_stable_across_widths() {
+        // Strides the strip boundary (n > HALF_BUILD_STRIP_ROWS) so the
+        // staged build genuinely runs multiple strips.
+        let x = feats(150, 6, 19);
+        let pool1 = ThreadPool::scoped(1);
+        let base = HalfDenseSim::from_features_par(&x, &pool1, Vec::new());
+        for width in [2usize, 8] {
+            let pool = ThreadPool::scoped(width);
+            let par = HalfDenseSim::from_features_par(&x, &pool, Vec::new());
+            assert_eq!(par.d_max(), base.d_max(), "width {width}");
+            assert_eq!(par.bits, base.bits, "width {width}: stored bits must be identical");
+        }
+    }
+
+    #[test]
+    fn half_dense_scratch_recycles_allocation() {
+        let x = feats(80, 5, 23);
+        let pool = ThreadPool::scoped(2);
+        let first = HalfDenseSim::from_features_par(&x, &pool, Vec::new());
+        let scratch = first.into_scratch();
+        assert_eq!(scratch.len(), 80 * 80);
+        let cap = scratch.capacity();
+        let y = feats(60, 5, 24);
+        let second = HalfDenseSim::from_features_par(&y, &pool, scratch);
+        assert_eq!(second.n(), 60);
+        assert_eq!(second.into_scratch().capacity(), cap, "warm reuse must not reallocate");
     }
 
     #[test]

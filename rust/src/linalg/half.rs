@@ -1,0 +1,145 @@
+//! Hand-rolled IEEE 754 binary16 ⇄ binary32 conversions (safe Rust, no
+//! deps) — the element codec behind the reduced-storage similarity
+//! store of [`KernelTier::TiledF32`].
+//!
+//! Encoding rounds to nearest-even, the same rule hardware f16 units
+//! use, so the stored value is within half a ulp of the f32 input:
+//! relative error ≤ 2⁻¹¹ across the f16 normal range (values below
+//! ≈ 6.1e-5 degrade gracefully through the subnormals to an absolute
+//! error ≤ 2⁻²⁵, and magnitudes ≥ 65520 saturate to ±∞ — similarity
+//! values are bounded by `d_max`, far inside the normal range, so in
+//! practice only the relative bound matters).  Decoding is exact: every
+//! f16 value is representable in f32.  Both directions are pure integer
+//! bit manipulation — deterministic on every platform.
+//!
+//! [`KernelTier::TiledF32`]: super::tiled::KernelTier
+
+/// Encode an f32 into IEEE binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: preserve the class, quiet the payload.
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Re-bias the exponent (f32 bias 127 → f16 bias 15).
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±∞
+    }
+    if e <= 0 {
+        // Result is f16-subnormal (or underflows to zero).
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // restore the implicit leading 1
+        let shift = (14 - e) as u32; // ∈ [14, 24]
+        let m16 = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (m16 & 1) == 1);
+        // A rounded-up max subnormal carries into the smallest normal —
+        // the bit pattern increments into the exponent field, which is
+        // exactly the right value.
+        return sign | (m16 + round_up as u32) as u16;
+    }
+    // Normal range: drop 13 mantissa bits with round-to-nearest-even.
+    // A mantissa carry ripples into the exponent field (up to ∞ at the
+    // top), which is again exactly the right bit pattern.
+    let m16 = mant >> 13;
+    let rem = mant & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (m16 & 1) == 1);
+    sign | (((e as u32) << 10) | m16).wrapping_add(round_up as u32) as u16
+}
+
+/// Decode IEEE binary16 bits into the exactly-representable f32.
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let mant = (bits & 0x03ff) as u32;
+    let out = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: shift the leading 1 up into the implicit
+            // position, decrementing the exponent per step.
+            let mut e = 127 - 15 + 1;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x03ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_round_trip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1024.0, 65504.0, 6.103515625e-5] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back, v, "{v} is exactly representable");
+            assert_eq!(back.is_sign_negative(), v.is_sign_negative());
+        }
+    }
+
+    #[test]
+    fn all_f16_bit_patterns_round_trip() {
+        // decode → encode is the identity on every non-NaN pattern (the
+        // exhaustive proof that neither direction loses f16 information).
+        for b in 0u32..=0xffff {
+            let b = b as u16;
+            let v = f16_bits_to_f32(b);
+            if v.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(v)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(v), b, "pattern {b:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded_in_normal_range() {
+        // Deterministic sweep across magnitudes the similarity store
+        // actually holds (sims ∈ [0, d_max], d_max ~ O(10)).
+        let mut v = 6.2e-5f32;
+        while v < 6.0e4 {
+            for s in [v, -v] {
+                let q = f16_bits_to_f32(f32_to_f16_bits(s));
+                let rel = ((q - s) / s).abs();
+                assert!(rel <= 1.0 / 2048.0, "v={s} q={q} rel={rel}");
+            }
+            v *= 1.37;
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1 + 2⁻¹¹ sits exactly halfway between 1.0 and the next f16
+        // (1 + 2⁻¹⁰): ties-to-even keeps the even mantissa (1.0).
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0 + 0.000_488_281_25)), 1.0);
+        // 1 + 3·2⁻¹¹ is halfway between odd 1+2⁻¹⁰ and even 1+2⁻⁹.
+        let up = f16_bits_to_f32(f32_to_f16_bits(1.0 + 3.0 * 0.000_488_281_25));
+        assert_eq!(up, 1.0 + 2.0 * 0.000_976_562_5);
+    }
+
+    #[test]
+    fn saturation_and_specials() {
+        assert_eq!(f32_to_f16_bits(1.0e9), 0x7c00, "overflow saturates to +∞");
+        assert_eq!(f32_to_f16_bits(-1.0e9), 0xfc00);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(1.0e-10), 0x0000, "underflow flushes to +0");
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+}

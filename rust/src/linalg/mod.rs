@@ -11,6 +11,14 @@
 //! decides *which worker* computes it — so parallel output is
 //! bitwise-identical to sequential output at any thread count.
 
+pub mod half;
+pub mod tiled;
+
+pub use tiled::{
+    pairwise_sqdist_rows_tiled, pairwise_sqdist_self_tiled, pairwise_sqdist_self_tiled_into,
+    pairwise_sqdist_tiled, KernelTier,
+};
+
 use crate::util::{self, ThreadPool};
 
 /// Below this many rows the scoped fan-out costs more than it saves.

@@ -1,0 +1,374 @@
+//! Cache-tiled, lane-vectorized twins of the pairwise kernels, and the
+//! [`KernelTier`] knob that selects between them.
+//!
+//! The reference kernels in the parent module compute one `dot` per
+//! output cell, reloading the second operand row every time.  The tiled
+//! path packs a panel of [`LANES`] candidate rows into a k-major
+//! register block and accumulates all [`LANES`] partial dots at once —
+//! the inner loop over lanes carries no dependency, so the compiler can
+//! keep it in one vector register per accumulator (explicit
+//! vectorization in safe Rust, no intrinsics, no new deps).
+//!
+//! **Bitwise contract** (`KernelTier::Tiled`): every lane replicates the
+//! exact summation recipe of [`super::dot`] — the same 4-way unrolled
+//! chunk accumulators in the same order, the same left-associated
+//! `s0 + s1 + s2 + s3` merge, the same sequential tail — and the output
+//! cell applies the same `(‖a‖² + ‖b‖² − 2⟨a,b⟩).max(0)` formula.  f32
+//! addition and multiplication are exactly rounded and Rust never
+//! contracts `a * b + c` into an FMA, so each cell's value is a pure
+//! function of its inputs: the tiled kernels are bitwise-identical to
+//! the reference kernels at any tile position, panel width, or thread
+//! count.  `tests/prop_invariants.rs` asserts this on random shapes
+//! including ragged tails; `bench::suite` folds it into the determinism
+//! verdict.
+//!
+//! `KernelTier::TiledF32` runs the same tiled arithmetic but stores the
+//! dense similarity matrix in half-precision ([`super::half`]), halving
+//! the n² store bytes at a bounded relative error — see
+//! [`crate::coreset::sim::HalfDenseSim`] and DESIGN.md §11.
+
+use crate::util::{self, ThreadPool};
+
+use super::{Matrix, PAR_MIN_ROWS};
+
+/// Register-block width: how many candidate rows one packed panel
+/// holds.  Eight f32 lanes is one AVX2 register (and two NEON
+/// registers); the accumulator arrays below are `[f32; LANES]` so the
+/// lane loop vectorizes without any explicit SIMD types.
+pub const LANES: usize = 8;
+
+/// Which pairwise-kernel implementation serves the dense store.
+///
+/// * `Reference` — the historical scalar kernels ([`super::pairwise_sqdist`]
+///   and friends).  The provenance baseline.
+/// * `Tiled` — the lane-packed kernels in this module.  **Bitwise
+///   identical** to `Reference` (see the module docs), so it folds into
+///   every determinism/parity guarantee unchanged; it is purely a
+///   throughput knob.
+/// * `TiledF32` — tiled arithmetic plus a reduced-storage dense sim
+///   store (f16 elements, 2 bytes instead of 4): twice the rows fit
+///   under a `SimStorePolicy::Auto` budget, at a bounded relative error
+///   of ≈ 2⁻¹¹ per similarity.  Deterministic, but **not** bitwise
+///   equal to `Reference`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelTier {
+    #[default]
+    Reference,
+    Tiled,
+    TiledF32,
+}
+
+impl KernelTier {
+    /// Parse a CLI/spec token: `reference` | `tiled` | `tiled-f32`.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        match spec {
+            "reference" => Ok(KernelTier::Reference),
+            "tiled" => Ok(KernelTier::Tiled),
+            "tiled-f32" => Ok(KernelTier::TiledF32),
+            other => anyhow::bail!("unknown kernel tier '{other}' (reference|tiled|tiled-f32)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Reference => "reference",
+            KernelTier::Tiled => "tiled",
+            KernelTier::TiledF32 => "tiled-f32",
+        }
+    }
+
+    /// Bytes per element of the dense similarity store under this tier
+    /// (f32 for the full-precision tiers, f16 for `TiledF32`).
+    pub fn sim_elem_bytes(self) -> usize {
+        match self {
+            KernelTier::TiledF32 => std::mem::size_of::<u16>(),
+            _ => std::mem::size_of::<f32>(),
+        }
+    }
+
+    /// Whether selections under this tier are bitwise-identical to
+    /// `Reference` (true for everything except the reduced-storage
+    /// tier, which is deterministic but rounds).
+    pub fn is_bitwise(self) -> bool {
+        !matches!(self, KernelTier::TiledF32)
+    }
+}
+
+/// Pack rows `[j0, j1)` of `y` into a k-major panel:
+/// `panel[k * LANES + l] = y[j0 + l][k]`, unused lanes zero-filled (the
+/// panel is reused across tiles, so stale lanes must be cleared).  The
+/// zero padding is arithmetically inert — padded lanes are simply never
+/// read back.
+fn pack_panel(y: &Matrix, j0: usize, j1: usize, panel: &mut [f32]) {
+    let d = y.cols;
+    let lw = j1 - j0;
+    debug_assert!(lw <= LANES && panel.len() >= d * LANES);
+    for l in 0..lw {
+        let row = y.row(j0 + l);
+        for k in 0..d {
+            panel[k * LANES + l] = row[k];
+        }
+    }
+    if lw < LANES {
+        for k in 0..d {
+            for l in lw..LANES {
+                panel[k * LANES + l] = 0.0;
+            }
+        }
+    }
+}
+
+/// [`LANES`] dot products of `xi` against a packed panel, each lane
+/// replicating [`super::dot`]'s exact summation order (4-way unrolled
+/// chunk accumulators, left-associated merge, sequential tail) so every
+/// lane's result is bitwise-equal to the scalar `dot` on the same pair.
+#[inline]
+fn lane_dots(xi: &[f32], panel: &[f32]) -> [f32; LANES] {
+    let d = xi.len();
+    let chunks = d / 4;
+    let mut s0 = [0.0f32; LANES];
+    let mut s1 = [0.0f32; LANES];
+    let mut s2 = [0.0f32; LANES];
+    let mut s3 = [0.0f32; LANES];
+    for c in 0..chunks {
+        let k = c * 4;
+        let (a0, a1, a2, a3) = (xi[k], xi[k + 1], xi[k + 2], xi[k + 3]);
+        let p = &panel[k * LANES..(k + 4) * LANES];
+        for l in 0..LANES {
+            s0[l] += a0 * p[l];
+            s1[l] += a1 * p[LANES + l];
+            s2[l] += a2 * p[2 * LANES + l];
+            s3[l] += a3 * p[3 * LANES + l];
+        }
+    }
+    let mut s = [0.0f32; LANES];
+    for l in 0..LANES {
+        s[l] = s0[l] + s1[l] + s2[l] + s3[l];
+    }
+    for k in chunks * 4..d {
+        let a = xi[k];
+        let p = &panel[k * LANES..k * LANES + LANES];
+        for l in 0..LANES {
+            s[l] += a * p[l];
+        }
+    }
+    s
+}
+
+/// Tiled twin of [`super::pairwise_sqdist`]: bitwise-identical output,
+/// one packed y-panel amortized over every row of `x`.
+pub fn pairwise_sqdist_tiled(x: &Matrix, y: &Matrix) -> Matrix {
+    assert_eq!(x.cols, y.cols, "feature dims");
+    let xn = x.row_sqnorms();
+    let yn = y.row_sqnorms();
+    let mut out = Matrix::zeros(x.rows, y.rows);
+    let mut panel = vec![0.0f32; x.cols * LANES];
+    for j0 in (0..y.rows).step_by(LANES) {
+        let j1 = (j0 + LANES).min(y.rows);
+        pack_panel(y, j0, j1, &mut panel);
+        for i in 0..x.rows {
+            let s = lane_dots(x.row(i), &panel);
+            let orow = &mut out.data[i * y.rows..(i + 1) * y.rows];
+            for l in 0..(j1 - j0) {
+                orow[j0 + l] = (xn[i] + yn[j0 + l] - 2.0 * s[l]).max(0.0);
+            }
+        }
+    }
+    out
+}
+
+/// Upper-triangle tile sweep for rows `[r0, r1)` of the self-distance
+/// matrix: for every panel of candidate columns, compute the lane dots
+/// once per row and write only the `j > i` cells (the masked lanes cost
+/// arithmetic but never touch memory, so masking cannot perturb
+/// values).  `chunk` holds rows `[r0, r1)` (row-major, width `n`).
+fn self_upper_tiles(
+    x: &Matrix,
+    xn: &[f32],
+    r0: usize,
+    r1: usize,
+    n: usize,
+    chunk: &mut [f32],
+    panel: &mut [f32],
+) {
+    for j0 in (0..n).step_by(LANES) {
+        let j1 = (j0 + LANES).min(n);
+        // Rows i ≥ r0 only need panels holding some j > r0.
+        if j1 <= r0 + 1 {
+            continue;
+        }
+        pack_panel(x, j0, j1, panel);
+        // `j ∈ (i, j1)` is nonempty iff `i < j1 − 1`.
+        for i in r0..r1.min(j1 - 1) {
+            let s = lane_dots(x.row(i), panel);
+            let orow = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
+            let lo = (i + 1).saturating_sub(j0);
+            for l in lo..(j1 - j0) {
+                orow[j0 + l] = (xn[i] + xn[j0 + l] - 2.0 * s[l]).max(0.0);
+            }
+        }
+    }
+}
+
+/// Tiled twin of [`super::pairwise_sqdist_self_into`]: identical
+/// partitioning (triangular row ranges over the pool), identical
+/// mirror-and-clear merge, bitwise-identical output at any width — only
+/// the per-cell compute path is the panel kernel.
+pub fn pairwise_sqdist_self_tiled_into(x: &Matrix, out: &mut Matrix, pool: &ThreadPool) {
+    let n = x.rows;
+    out.rows = n;
+    out.cols = n;
+    out.data.resize(n * n, 0.0);
+    let xn = x.row_sqnorms();
+    if pool.size() <= 1 || n < PAR_MIN_ROWS {
+        let mut panel = vec![0.0f32; x.cols * LANES];
+        self_upper_tiles(x, &xn, 0, n, n, &mut out.data, &mut panel);
+    } else {
+        let ranges = util::triangular_ranges(n, pool.size());
+        let bounds: Vec<(usize, usize)> = ranges.iter().map(|&(a, b)| (a * n, b * n)).collect();
+        let (xn, ranges) = (&xn, &ranges);
+        pool.scope_map_chunks(&mut out.data, &bounds, |p, chunk| {
+            let (r0, r1) = ranges[p];
+            let mut panel = vec![0.0f32; x.cols * LANES];
+            self_upper_tiles(x, xn, r0, r1, n, chunk, &mut panel);
+        });
+    }
+    // Mirror the upper triangle and clear the diagonal — the same
+    // deterministic merge as the reference kernel (the buffer may be a
+    // dirty reuse; every cell must be written).
+    for i in 0..n {
+        out.data[i * n + i] = 0.0;
+        for j in (i + 1)..n {
+            out.data[j * n + i] = out.data[i * n + j];
+        }
+    }
+}
+
+/// Allocating shim over [`pairwise_sqdist_self_tiled_into`].
+pub fn pairwise_sqdist_self_tiled(x: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    pairwise_sqdist_self_tiled_into(x, &mut out, &ThreadPool::scoped(1));
+    out
+}
+
+/// Full self-distance rows `[i0, i1)` (no triangle masking) written
+/// into `strip` (row-major, width `n`).  The [`HalfDenseSim`] build
+/// uses this to stream row strips through a small f32 staging buffer
+/// instead of materializing the n² f32 matrix.  Cell values are the
+/// same lane recipe as everywhere else; `d(i,i)` is written as exactly
+/// `0.0` to match the reference kernels' cleared diagonal.
+///
+/// [`HalfDenseSim`]: crate::coreset::sim::HalfDenseSim
+pub fn pairwise_sqdist_rows_tiled(
+    x: &Matrix,
+    xn: &[f32],
+    i0: usize,
+    i1: usize,
+    strip: &mut [f32],
+    panel: &mut [f32],
+) {
+    let n = x.rows;
+    debug_assert!(strip.len() >= (i1 - i0) * n);
+    for j0 in (0..n).step_by(LANES) {
+        let j1 = (j0 + LANES).min(n);
+        pack_panel(x, j0, j1, panel);
+        for i in i0..i1 {
+            let s = lane_dots(x.row(i), panel);
+            let orow = &mut strip[(i - i0) * n..(i - i0 + 1) * n];
+            for l in 0..(j1 - j0) {
+                let j = j0 + l;
+                orow[j] = if i == j { 0.0 } else { (xn[i] + xn[j] - 2.0 * s[l]).max(0.0) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{pairwise_sqdist, pairwise_sqdist_self, pairwise_sqdist_self_par};
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(r: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, r.normal_vec(rows * cols, 0.0, 1.0))
+    }
+
+    #[test]
+    fn tier_parse_and_names() {
+        assert_eq!(KernelTier::parse("reference").unwrap(), KernelTier::Reference);
+        assert_eq!(KernelTier::parse("tiled").unwrap(), KernelTier::Tiled);
+        assert_eq!(KernelTier::parse("tiled-f32").unwrap(), KernelTier::TiledF32);
+        assert!(KernelTier::parse("avx512").is_err());
+        assert_eq!(KernelTier::default(), KernelTier::Reference);
+        for t in [KernelTier::Reference, KernelTier::Tiled, KernelTier::TiledF32] {
+            assert_eq!(KernelTier::parse(t.name()).unwrap(), t, "name/parse round trip");
+        }
+        assert_eq!(KernelTier::Reference.sim_elem_bytes(), 4);
+        assert_eq!(KernelTier::Tiled.sim_elem_bytes(), 4);
+        assert_eq!(KernelTier::TiledF32.sim_elem_bytes(), 2);
+        assert!(KernelTier::Tiled.is_bitwise());
+        assert!(!KernelTier::TiledF32.is_bitwise());
+    }
+
+    #[test]
+    fn tiled_general_bitwise_equals_reference() {
+        let mut r = Rng::new(31);
+        // Ragged on every axis: rows not multiples of LANES, d not a
+        // multiple of the dot unroll.
+        for (xr, yr, d) in [(13, 7, 6), (16, 8, 4), (33, 29, 11), (1, 9, 1), (5, 1, 3)] {
+            let x = randmat(&mut r, xr, d);
+            let y = randmat(&mut r, yr, d);
+            let a = pairwise_sqdist(&x, &y);
+            let b = pairwise_sqdist_tiled(&x, &y);
+            assert_eq!(a.data, b.data, "({xr},{yr},{d}) must be bitwise-identical");
+        }
+    }
+
+    #[test]
+    fn tiled_self_bitwise_equals_reference_all_widths() {
+        let mut r = Rng::new(32);
+        // 170 > PAR_MIN_ROWS engages the triangular fan-out; 37 stays
+        // sequential and ragged.
+        for (n, d) in [(170, 7), (37, 5)] {
+            let x = randmat(&mut r, n, d);
+            let seq = pairwise_sqdist_self(&x);
+            for width in [1usize, 3, 8] {
+                let pool = ThreadPool::scoped(width);
+                let mut out = Matrix::zeros(0, 0);
+                pairwise_sqdist_self_tiled_into(&x, &mut out, &pool);
+                assert_eq!(out.data, seq.data, "n={n} width={width} bitwise");
+                let par = pairwise_sqdist_self_par(&x, &pool);
+                assert_eq!(out.data, par.data, "tiled ≡ reference at width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_self_reuses_dirty_buffer() {
+        let mut r = Rng::new(33);
+        let big = randmat(&mut r, 150, 6);
+        let small = randmat(&mut r, 30, 6);
+        let pool = ThreadPool::scoped(4);
+        let mut buf = Matrix::zeros(0, 0);
+        pairwise_sqdist_self_tiled_into(&big, &mut buf, &pool);
+        pairwise_sqdist_self_tiled_into(&small, &mut buf, &pool);
+        assert_eq!(buf.data, pairwise_sqdist_self(&small).data, "dirty cells must not leak");
+    }
+
+    #[test]
+    fn rows_strip_matches_reference_rows() {
+        let mut r = Rng::new(34);
+        let x = randmat(&mut r, 45, 9);
+        let xn = x.row_sqnorms();
+        let full = pairwise_sqdist_self(&x);
+        let (i0, i1) = (10, 27);
+        let mut strip = vec![f32::NAN; (i1 - i0) * 45];
+        let mut panel = vec![0.0f32; 9 * LANES];
+        pairwise_sqdist_rows_tiled(&x, &xn, i0, i1, &mut strip, &mut panel);
+        for i in i0..i1 {
+            for j in 0..45 {
+                assert_eq!(strip[(i - i0) * 45 + j], full.get(i, j), "({i},{j})");
+            }
+        }
+    }
+}

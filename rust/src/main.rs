@@ -98,7 +98,7 @@ fn print_report(rep: &craig::pipeline::RunReport) {
     if let Some(c) = &rep.coreset {
         println!(
             "[{}] selected {} / {} points in {:.2}s  [engine={}, mode={}, method={}, \
-             metric={}, evals={}]",
+             kernel={}, metric={}, evals={}]",
             sp.name,
             c.indices.len(),
             rep.dataset_n,
@@ -106,6 +106,7 @@ fn print_report(rep: &craig::pipeline::RunReport) {
             rep.engine_name,
             sp.selection.mode.name(),
             spec::method_name(sp.selection.method),
+            sp.selection.kernel.name(),
             sp.embedding.metric.name(),
             rep.evaluations,
         );
@@ -341,6 +342,16 @@ fn cmd_bench(a: &Args) -> Result<()> {
     println!(
         "  speedup: lazy selection {:.2}x, kernel build {:.2}x  (t{} vs t1)",
         rep.speedup_lazy_selection, rep.speedup_kernel_build, rep.threads
+    );
+    println!(
+        "  kernel tiers vs reference: tiled {:.2}x/{:.2}x, tiled-f32 {:.2}x/{:.2}x \
+         (t1/t{}); tiled-f32 objective ratio {:.4}",
+        rep.speedup_tiled_t1,
+        rep.speedup_tiled_tn,
+        rep.speedup_tiled_f32_t1,
+        rep.speedup_tiled_f32_tn,
+        rep.threads,
+        rep.tiled_f32_objective_ratio
     );
     println!(
         "  warm workspace {:.2}x vs cold; blocked store {:.2}x the dense lazy time",

@@ -152,10 +152,12 @@ fn data_check(spec: &RunSpec) -> Check {
     }
 }
 
-/// Dense-similarity memory estimate: the worst-case n² f32 buffer per
+/// Dense-similarity memory estimate: the worst-case n² buffer per
 /// selection subproblem (whole dataset, or ≈n/K rows per stream
-/// shard) against the spec's store policy.  Under `Auto` an estimate
-/// over budget is a *warning* — the selector falls back to the blocked
+/// shard) against the spec's store policy, at the kernel tier's
+/// element width (f16 under `tiled-f32` halves the estimate; the
+/// selector allocates exactly that).  Under `Auto` an estimate over
+/// budget is a *warning* — the selector falls back to the blocked
 /// store by design; under `Dense` it is what the run will genuinely
 /// allocate, still the user's explicit choice.  Returns `None` when
 /// the row count is unknowable without loading (LIBSVM).
@@ -172,18 +174,26 @@ fn memory_check(spec: &RunSpec) -> Option<Check> {
         _ => spec.selection.stream_shards.max(1),
     };
     let rows = n.div_ceil(shards);
-    let dense_bytes = rows * rows * std::mem::size_of::<f32>();
+    let tier = spec.selection.kernel;
+    let dense_bytes = SimStorePolicy::dense_bytes_for(rows, tier);
+    let elem = if tier.sim_elem_bytes() == 2 { "f16" } else { "f32" };
     let detail = format!(
-        "worst-case dense buffer ≈ {dense_bytes} B ({rows}² f32, {shards} shard{})",
+        "worst-case dense buffer ≈ {dense_bytes} B ({rows}² {elem}, kernel = {}, {shards} \
+         shard{})",
+        tier.name(),
         if shards == 1 { "" } else { "s" }
     );
     let check = match spec.selection.store {
-        SimStorePolicy::Auto { mem_budget_bytes } if dense_bytes > mem_budget_bytes => Check::new(
-            "memory",
-            CheckStatus::Warn,
-            format!("{detail} exceeds the {mem_budget_bytes} B budget — Auto falls back to \
-                     the blocked store (slower, O(n·d) memory, same output)"),
-        ),
+        SimStorePolicy::Auto { mem_budget_bytes } if dense_bytes > mem_budget_bytes as u128 => {
+            Check::new(
+                "memory",
+                CheckStatus::Warn,
+                format!(
+                    "{detail} exceeds the {mem_budget_bytes} B budget — Auto falls back to \
+                     the blocked store (slower, O(n·d) memory, same output)"
+                ),
+            )
+        }
         SimStorePolicy::Auto { mem_budget_bytes } => Check::new(
             "memory",
             CheckStatus::Ok,
@@ -312,6 +322,28 @@ mod tests {
         let mem = checks.iter().find(|c| c.name == "memory").unwrap();
         assert_eq!(mem.status, CheckStatus::Warn);
         assert!(mem.detail.contains("blocked"), "{}", mem.detail);
+    }
+
+    #[test]
+    fn memory_estimate_is_kernel_tier_aware() {
+        // A budget between the f16 and f32 estimates: the reference
+        // tier warns (Auto would go blocked), tiled-f32 fits — the
+        // doctor mirrors the selector's tier-aware Auto resolution,
+        // and the check row names the tier either way.
+        let mut spec =
+            RunSpec::builder("d").synthetic("covtype", 800).count(5).build().unwrap();
+        spec.selection.store =
+            crate::coreset::SimStorePolicy::Auto { mem_budget_bytes: 2_000_000 };
+        let mem = |s: &RunSpec| {
+            run_checks(Some(s), None).into_iter().find(|c| c.name == "memory").unwrap()
+        };
+        let c = mem(&spec);
+        assert_eq!(c.status, CheckStatus::Warn);
+        assert!(c.detail.contains("kernel = reference"), "{}", c.detail);
+        spec.selection.kernel = crate::coreset::KernelTier::TiledF32;
+        let c = mem(&spec);
+        assert_eq!(c.status, CheckStatus::Ok);
+        assert!(c.detail.contains("f16") && c.detail.contains("tiled-f32"), "{}", c.detail);
     }
 
     #[test]

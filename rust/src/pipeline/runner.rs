@@ -182,6 +182,7 @@ impl Runner {
             report.spec.selection.mode.name(),
             Some(report.timings.select_s),
             &[
+                ("kernel", trace::str_lit(report.spec.selection.kernel.name())),
                 ("selected", trace::int(report.selected())),
                 ("evaluations", trace::int(report.evaluations)),
                 ("epsilon", trace::num(report.epsilon)),
@@ -527,12 +528,14 @@ impl RunReport {
         let stores: Vec<String> =
             self.stores.iter().map(|st| format!("\"{}\"", st.name())).collect();
         s.push_str(&format!(
-            "  \"selection\": {{\"mode\": \"{}\", \"method\": \"{}\", \"metric\": \"{}\", \
+            "  \"selection\": {{\"mode\": \"{}\", \"method\": \"{}\", \"kernel\": \"{}\", \
+             \"metric\": \"{}\", \
              \"embedding\": \"{}\", \"selected\": {}, \"class_sizes\": [{}], \
              \"stores\": [{}], \"epsilon\": {}, \"f_value\": {}, \"evaluations\": {}, \
              \"gamma_sum\": {}}},\n",
             self.spec.selection.mode.name(),
             method_name(self.spec.selection.method),
+            self.spec.selection.kernel.name(),
             self.spec.embedding.metric.name(),
             self.spec.embedding.kind.name(),
             self.selected(),
@@ -658,6 +661,7 @@ mod tests {
         assert!(json.contains("\"kind\": \"run_manifest\""));
         assert!(json.contains("\"schema_version\": 1"));
         assert!(json.contains("\"metric\": \"cosine\""));
+        assert!(json.contains("\"kernel\": \"reference\""));
         assert!(json.contains("\"phases\""));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());

@@ -35,7 +35,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::config::Config;
-use crate::coreset::{Budget, Method, Metric, SimStorePolicy, DEFAULT_SIM_MEM_BUDGET};
+use crate::coreset::{Budget, KernelTier, Method, Metric, SimStorePolicy, DEFAULT_SIM_MEM_BUDGET};
 use crate::optim::LrSchedule;
 use crate::trainer::convex::IgMethod;
 use crate::trainer::EmbeddingKind;
@@ -119,6 +119,9 @@ pub struct SelectionSpec {
     pub method: Method,
     pub budget: Budget,
     pub store: SimStorePolicy,
+    /// Pairwise-kernel tier ([`KernelTier`]): `reference` and `tiled`
+    /// are bitwise-identical; `tiled-f32` halves dense sim-store bytes.
+    pub kernel: KernelTier,
     /// In-memory merge-and-reduce fan-out (0/1 = one whole-dataset
     /// pass); not valid for a shard-dir source (the directory IS the
     /// sharding).
@@ -138,6 +141,7 @@ impl Default for SelectionSpec {
             method: Method::Lazy,
             budget: Budget::Fraction(0.1),
             store: SimStorePolicy::default(),
+            kernel: KernelTier::Reference,
             stream_shards: 0,
             parallelism: 1,
             workers: 1,
@@ -313,6 +317,7 @@ const ALL_KEYS: &[&str] = &[
     "selection.cover_epsilon",
     "selection.store",
     "selection.mem_budget",
+    "selection.kernel",
     "selection.stream_shards",
     "selection.parallelism",
     "selection.workers",
@@ -347,6 +352,7 @@ fn allowed_keys(data_kind: &str, train_kind: &str, method: &str, store: &str) ->
         "selection.count",
         "selection.cover_epsilon",
         "selection.store",
+        "selection.kernel",
         "selection.parallelism",
         "train.kind",
         "output.coreset_csv",
@@ -513,6 +519,8 @@ impl RunSpec {
             method,
             budget,
             store,
+            kernel: KernelTier::parse(&g_str(cfg, "selection.kernel", "reference")?)
+                .map_err(|e| at_line(cfg, "selection.kernel", e))?,
             stream_shards: g_usize(cfg, "selection.stream_shards", 0)?,
             parallelism: g_usize(cfg, "selection.parallelism", 1)?,
             workers: g_usize(cfg, "selection.workers", 1)?,
@@ -668,6 +676,7 @@ impl RunSpec {
             seed: self.seed,
             parallelism: self.selection.parallelism,
             sim_store: self.selection.store,
+            kernel: self.selection.kernel,
             metric: self.embedding.metric,
             stream_shards: self.selection.stream_shards,
         }
@@ -731,6 +740,7 @@ impl RunSpec {
                 let _ = writeln!(w, "mem_budget = {mem_budget_bytes}");
             }
         }
+        let _ = writeln!(w, "kernel = \"{}\"", self.selection.kernel.name());
         if !matches!(self.data, DataSpec::ShardDir { .. }) {
             let _ = writeln!(w, "stream_shards = {}", self.selection.stream_shards);
         }
@@ -860,6 +870,11 @@ impl RunSpecBuilder {
 
     pub fn store(mut self, policy: SimStorePolicy) -> Self {
         self.spec.selection.store = policy;
+        self
+    }
+
+    pub fn kernel(mut self, tier: KernelTier) -> Self {
+        self.spec.selection.kernel = tier;
         self
     }
 
@@ -1017,6 +1032,18 @@ mod tests {
     }
 
     #[test]
+    fn bad_kernel_tier_rejected_with_line() {
+        let err = RunSpec::parse("seed = 1\n[selection]\nkernel = \"avx512\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("avx512"), "{err}");
+        assert!(err.contains("tiled-f32"), "should list the legal tiers: {err}");
+        let spec = RunSpec::parse("[selection]\nkernel = \"tiled-f32\"\n").unwrap();
+        assert_eq!(spec.selection.kernel, KernelTier::TiledF32);
+    }
+
+    #[test]
     fn validation_catches_cross_field_conflicts() {
         let err = RunSpec::parse("[embedding]\nkind = \"grad-proxy\"\n").unwrap_err().to_string();
         assert!(err.contains("grad-proxy"), "{err}");
@@ -1055,6 +1082,7 @@ mod tests {
                 .method(Method::Stochastic { delta: 0.1 })
                 .count(25)
                 .store(SimStorePolicy::Blocked)
+                .kernel(KernelTier::Tiled)
                 .parallelism(4)
                 .coreset_csv("c.csv")
                 .build()
@@ -1080,7 +1108,12 @@ mod tests {
                 .shard_budget(64)
                 .build()
                 .unwrap(),
-            RunSpec::builder("s5").synthetic("covtype", 600).cover(2.5).build().unwrap(),
+            RunSpec::builder("s5")
+                .synthetic("covtype", 600)
+                .cover(2.5)
+                .kernel(KernelTier::TiledF32)
+                .build()
+                .unwrap(),
             // Full-width seeds must survive the spec file bitwise
             // (integer literals above i64::MAX parse as Value::UInt).
             RunSpec::builder("s6").seed(u64::MAX).count(5).build().unwrap(),
@@ -1101,6 +1134,7 @@ mod tests {
             .seed(9)
             .metric(Metric::Cosine)
             .count(12)
+            .kernel(KernelTier::Tiled)
             .parallelism(2)
             .stream_shards(3)
             .build()
@@ -1109,6 +1143,7 @@ mod tests {
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.metric, Metric::Cosine);
         assert_eq!(cfg.budget, Budget::Count(12));
+        assert_eq!(cfg.kernel, KernelTier::Tiled);
         assert_eq!(cfg.parallelism, 2);
         assert_eq!(cfg.stream_shards, 3);
         assert!(cfg.per_class);

@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use crate::cli::{App, Args, Command};
-use crate::coreset::{Budget, Metric, SimStorePolicy};
+use crate::coreset::{Budget, KernelTier, Metric, SimStorePolicy};
 use crate::optim::LrSchedule;
 use crate::trainer::convex::IgMethod;
 use crate::trainer::EmbeddingKind;
@@ -58,6 +58,7 @@ pub fn app() -> App {
                 .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
                 .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("kernel", "reference", "kernel tier: reference|tiled|tiled-f32")
                 .opt_default("stream-shards", "0", "merge-and-reduce over K in-memory shards")
                 .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
                 .opt("out", "CSV path for the selected coreset")
@@ -81,6 +82,7 @@ pub fn app() -> App {
                 .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
                 .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("kernel", "reference", "kernel tier: reference|tiled|tiled-f32")
                 .opt_default("engine", "auto", "reduce-round backend: native|xla|auto")
                 .opt("out", "CSV path for the selected coreset")
                 .flag("print-spec", "print the equivalent spec file and exit"),
@@ -99,6 +101,7 @@ pub fn app() -> App {
                 .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
                 .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("kernel", "reference", "kernel tier: reference|tiled|tiled-f32")
                 .opt_default("stream-shards", "0", "merge-and-reduce over K in-memory shards")
                 .opt_default("engine", "auto", "pairwise backend: native|xla|auto")
                 .opt("out", "CSV path for the epoch trace")
@@ -118,6 +121,7 @@ pub fn app() -> App {
                 .opt_default("parallelism", "1", "intra-class selection threads")
                 .opt_default("sim-store", "auto", "similarity store: dense|blocked|auto")
                 .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
+                .opt_default("kernel", "reference", "kernel tier: reference|tiled|tiled-f32")
                 .opt_default("stream-shards", "0", "streamed per-epoch reselection over K shards")
                 .opt("out", "CSV path for the epoch trace")
                 .flag("print-spec", "print the equivalent spec file and exit"),
@@ -151,6 +155,7 @@ fn common_selection(
         method,
         budget,
         store: SimStorePolicy::parse(a.opt("sim-store").unwrap_or("auto"), mem)?,
+        kernel: KernelTier::parse(a.opt("kernel").unwrap_or("reference"))?,
         stream_shards: a.parse_opt("stream-shards", 0)?,
         parallelism: a.parse_opt("parallelism", 1)?,
         workers: 1,
@@ -319,6 +324,16 @@ mod tests {
         // The printed spec re-parses to the same value (the --print-spec
         // → `craig run` contract).
         assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+    }
+
+    #[test]
+    fn kernel_flag_desugars() {
+        let spec = spec_for_select(&args_for("select", &["--kernel", "tiled-f32"])).unwrap();
+        assert_eq!(spec.selection.kernel, KernelTier::TiledF32);
+        assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+        let spec = spec_for_train(&args_for("train", &["--kernel", "tiled"])).unwrap();
+        assert_eq!(spec.selection.kernel, KernelTier::Tiled);
+        assert!(spec_for_select(&args_for("select", &["--kernel", "avx512"])).is_err());
     }
 
     #[test]

@@ -170,6 +170,40 @@ fn full_select_identical_across_parallelism() {
 }
 
 #[test]
+fn full_select_tier_grid_identical_across_parallelism() {
+    use craig::coreset::KernelTier;
+    // The kernel-tier axis joins the width axis: Tiled must reproduce
+    // the Reference coreset exactly at every width (bitwise contract),
+    // while TiledF32 may shift similarity values (f16 storage) but must
+    // itself be invariant in `parallelism`.
+    let ds = synthetic::covtype_like(700, 9);
+    let mut reference: Option<(Vec<usize>, Vec<f32>)> = None;
+    let mut half: Option<(Vec<usize>, Vec<f32>)> = None;
+    for tier in [KernelTier::Reference, KernelTier::Tiled, KernelTier::TiledF32] {
+        for width in WIDTHS {
+            let cfg = SelectorConfig {
+                budget: Budget::Fraction(0.08),
+                seed: 5,
+                parallelism: width,
+                kernel: tier,
+                ..Default::default()
+            };
+            let mut eng = craig::coreset::NativePairwise;
+            let res = craig::coreset::select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
+            let got = (res.coreset.indices.clone(), res.coreset.gamma.clone());
+            let slot = if tier == KernelTier::TiledF32 { &mut half } else { &mut reference };
+            match slot {
+                None => *slot = Some(got),
+                Some(b) => {
+                    assert_eq!(b.0, got.0, "{} w{width}: indices", tier.name());
+                    assert_eq!(b.1, got.1, "{} w{width}: weights", tier.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn pipeline_workers_by_parallelism_grid_identical() {
     let ds = synthetic::ijcnn1_like(1200, 6);
     for store in [SimStorePolicy::Dense, SimStorePolicy::Blocked] {

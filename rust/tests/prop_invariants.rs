@@ -6,13 +6,14 @@
 //! ≡ sequential selection, optimizer-state invariants.
 
 use craig::coreset::{
-    self, lazy_greedy, naive_greedy, Budget, DenseSim, FacilityLocation, NativePairwise,
-    SelectorConfig, StopRule, WeightedCoreset,
+    self, lazy_greedy, naive_greedy, Budget, DenseSim, FacilityLocation, HalfDenseSim,
+    NativePairwise, SelectorConfig, SimilaritySource, StopRule, WeightedCoreset,
 };
 use craig::data::synthetic::{self, MixtureSpec};
-use craig::linalg::Matrix;
+use craig::linalg::{self, Matrix};
 use craig::prop::{forall, Gen, IntRange, PairOf};
 use craig::rng::Rng;
+use craig::util::ThreadPool;
 
 /// Generator: a random feature matrix of n∈[6,40] points, d∈[2,8].
 struct FeatGen;
@@ -295,6 +296,109 @@ fn prop_stratified_assignment_balances_classes_within_one() {
                 return Err(format!(
                     "small class {c} over-concentrated: {per_shard:?} (seed {seed})"
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Generator: feature matrices whose shapes deliberately stride the
+/// tiled kernel's lane width (8) and the dot unroll (4) — n∈[1,70],
+/// d∈[1,19] — so ragged row panels and ragged feature tails both occur.
+struct RaggedFeatGen;
+
+impl Gen for RaggedFeatGen {
+    type Item = (Matrix, u64);
+    fn gen(&self, rng: &mut Rng) -> Self::Item {
+        let n = rng.range(1, 71);
+        let d = rng.range(1, 20);
+        let seed = rng.next_u64();
+        let mut r2 = Rng::new(seed);
+        (Matrix::from_vec(n, d, r2.normal_vec(n * d, 0.0, 1.0)), seed)
+    }
+}
+
+#[test]
+fn prop_tiled_kernel_bitwise_equals_reference() {
+    forall(11, 40, &RaggedFeatGen, |(x, seed)| {
+        let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        let reference = linalg::pairwise_sqdist_self(x);
+        let tiled = linalg::pairwise_sqdist_self_tiled(x);
+        if bits(&reference) != bits(&tiled) {
+            return Err(format!("self: tiled ≠ reference at n={} d={}", x.rows, x.cols));
+        }
+        // The parallel tiled path must stay bitwise at every width.
+        for width in [2usize, 5] {
+            let pool = ThreadPool::scoped(width);
+            let mut out = Matrix::zeros(x.rows, x.rows);
+            linalg::pairwise_sqdist_self_tiled_into(x, &mut out, &pool);
+            if bits(&reference) != bits(&out) {
+                return Err(format!(
+                    "self t{width}: tiled ≠ reference at n={} d={} (seed {seed})",
+                    x.rows, x.cols
+                ));
+            }
+        }
+        // General-rectangle leg with its own ragged column count.
+        let mut r2 = Rng::new(seed ^ 0x51D);
+        let m = r2.range(1, 23);
+        let y = Matrix::from_vec(m, x.cols, r2.normal_vec(m * x.cols, 0.0, 1.0));
+        let a = linalg::pairwise_sqdist(x, &y);
+        let b = linalg::pairwise_sqdist_tiled(x, &y);
+        if bits(&a) != bits(&b) {
+            return Err(format!("rect: tiled ≠ reference at {}×{} d={}", x.rows, m, x.cols));
+        }
+        Ok(())
+    });
+}
+
+/// Generator: wide feature matrices (d∈[32,96]) where accumulated dot
+/// products are largest and the f16 storage of the tiled-f32 tier is
+/// the binding error source.
+struct WideFeatGen;
+
+impl Gen for WideFeatGen {
+    type Item = Matrix;
+    fn gen(&self, rng: &mut Rng) -> Self::Item {
+        let n = rng.range(8, 49);
+        let d = rng.range(32, 97);
+        let seed = rng.next_u64();
+        let mut r2 = Rng::new(seed);
+        Matrix::from_vec(n, d, r2.normal_vec(n * d, 0.0, 1.0))
+    }
+}
+
+#[test]
+fn prop_half_sim_error_bounded_at_large_d() {
+    forall(12, 12, &WideFeatGen, |x| {
+        let n = x.rows;
+        let dense = DenseSim::from_features(x);
+        let pool = ThreadPool::scoped(2);
+        let half = HalfDenseSim::from_features_par(x, &pool, Vec::new());
+        if (half.d_max() - dense.d_max()).abs() > dense.d_max() / 1024.0 {
+            return Err(format!(
+                "d_max drifted beyond one f16 rounding: {} vs {}",
+                half.d_max(),
+                dense.d_max()
+            ));
+        }
+        // Three roundings per element ⇒ a few × 2⁻¹¹ of the d_max scale.
+        let tol = dense.d_max() * 4.0 / 1024.0;
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        for j in 0..n {
+            dense.sim_col(j, &mut a);
+            half.sim_col(j, &mut b);
+            for i in 0..n {
+                if (a[i] - b[i]).abs() > tol {
+                    return Err(format!(
+                        "({i},{j}): |{} − {}| > {tol} at n={n} d={}",
+                        a[i], b[i], x.cols
+                    ));
+                }
+            }
+            if b[j] != half.d_max() {
+                return Err(format!("diagonal similarity must be exactly d_max at j={j}"));
             }
         }
         Ok(())

@@ -223,6 +223,36 @@ fn large_single_class_blocked_never_materializes_n_squared() {
 }
 
 #[test]
+fn auto_policy_admits_more_rows_under_reduced_storage_tier() {
+    use craig::coreset::KernelTier;
+    // 300² f32 = 360 kB busts a 200 kB budget; 300² f16 = 180 kB fits —
+    // the reduced-storage tier keeps the class dense where the
+    // reference tier falls back to the blocked store.
+    let x = features(300, 4, 11);
+    let labels = vec![0u32; 300];
+    let mk = |kernel: KernelTier| SelectorConfig {
+        budget: Budget::Count(12),
+        per_class: false,
+        sim_store: SimStorePolicy::Auto { mem_budget_bytes: 200_000 },
+        kernel,
+        ..Default::default()
+    };
+    let mut eng = craig::coreset::NativePairwise;
+    let mut sel_ref = Selector::new();
+    let a = sel_ref.select(&x, &labels, 1, &mk(KernelTier::Reference), &mut eng);
+    assert_eq!(a.stores, vec![SimStore::Blocked], "f32 dense must bust the budget");
+    assert_eq!(sel_ref.workspace().peak_dense_bytes, 0, "blocked never allocates n²");
+    let mut sel_half = Selector::new();
+    let b = sel_half.select(&x, &labels, 1, &mk(KernelTier::TiledF32), &mut eng);
+    assert_eq!(b.stores, vec![SimStore::Dense], "f16 dense fits the same budget");
+    assert_eq!(sel_half.workspace().peak_dense_bytes, 300 * 300 * 2, "n² f16 bytes");
+    assert_eq!(a.coreset.indices.len(), b.coreset.indices.len());
+    let (ta, tb): (f32, f32) = (a.coreset.gamma.iter().sum(), b.coreset.gamma.iter().sum());
+    assert_eq!(ta, 300.0, "γ covers every point on the blocked path");
+    assert_eq!(tb, 300.0, "γ covers every point on the f16 dense path");
+}
+
+#[test]
 fn auto_policy_splits_stores_by_class_size() {
     // A budget sized between the two classes' n² footprints makes Auto
     // pick dense for the small class and blocked for the large one —
