@@ -40,6 +40,17 @@
 //! reference build bitwise and per-tier selections must be
 //! deterministic across thread widths; both checks fold into
 //! `parallel_matches_sequential`.
+//!
+//! Schema v5 (ISSUE 8) adds the on-disk I/O rows: the same workload is
+//! written as LIBSVM text shards and converted to `.cshard` binary;
+//! `stream/io/text/t1` and `stream/io/binary/t1` time a full-directory
+//! decode in each format, and `stream/overlap/tN` times a prefetch-on
+//! streamed selection over the binary set.  The `stream` object gains
+//! `io_text_mean_s` / `io_binary_mean_s` / `binary_decode_speedup`
+//! (text-parse mean over binary-decode mean — CI requires > 1).  The
+//! on-disk prefetch-on selection must reproduce the in-memory
+//! sequential stream exactly (`write_shards` and `MemShards` share the
+//! stratified deal), folding into `parallel_matches_sequential`.
 
 use std::path::Path;
 use std::time::Duration;
@@ -58,7 +69,7 @@ use crate::rng::Rng;
 use crate::util::{git_rev, json_escape, json_num, ThreadPool};
 
 /// JSON schema version of `BENCH_selection.json`.
-pub const SCHEMA_VERSION: u32 = 4;
+pub const SCHEMA_VERSION: u32 = 5;
 
 /// Suite knobs (everything else is fixed by design).
 pub struct SuiteConfig {
@@ -123,6 +134,14 @@ pub struct SuiteReport {
     pub stream_peak_dense_bytes: usize,
     /// …vs the in-memory dense run's n² buffer.
     pub inmemory_peak_dense_bytes: usize,
+    /// Full-directory decode mean for LIBSVM text shards…
+    pub io_text_mean_s: f64,
+    /// …and for the converted `.cshard` binary shards.
+    pub io_binary_mean_s: f64,
+    /// `io_text_mean_s / io_binary_mean_s`: how much faster the binary
+    /// codec decodes the same rows (> 1 is the format's reason to
+    /// exist; CI gates on it).
+    pub binary_decode_speedup: f64,
     /// Every engine produced identical indices and weights at 1 and N
     /// threads, blocked matched its own sequential run, warm workspaces
     /// reproduced cold ones, and the streamed selection was identical
@@ -245,6 +264,46 @@ fn run_stream(
         .collect();
     pairs.sort_by_key(|p| p.0);
     (pairs, stats.shard_phase_seconds, stats.reduce_seconds, stats.peak_dense_bytes)
+}
+
+/// One streamed run over an on-disk shard directory (same config shape
+/// as [`run_stream`]), with prefetch on: the overlap leg of the v5 I/O
+/// rows.  Returns the sorted `(index, γ)` pairs and the end-to-end
+/// selection seconds.
+fn run_stream_disk(
+    set: &crate::data::shard::ShardSet,
+    r: usize,
+    workers: usize,
+    mem_budget: usize,
+) -> (Vec<(usize, f32)>, f64) {
+    let cfg = SelectorConfig {
+        method: Method::Lazy,
+        budget: Budget::Count(r),
+        per_class: false,
+        seed: 7,
+        parallelism: 1,
+        sim_store: SimStorePolicy::Auto { mem_budget_bytes: mem_budget },
+        stream_shards: 0,
+        ..Default::default()
+    };
+    let mut scfg = StreamConfig::new(cfg);
+    scfg.workers = workers;
+    scfg.prefetch = true;
+    let mut streamer = StreamingSelector::new(workers);
+    let mut engine = NativePairwise;
+    let t0 = std::time::Instant::now();
+    let (res, _stats) =
+        streamer.select(set, &scfg, &mut engine).expect("on-disk stream over a fresh dir");
+    let secs = t0.elapsed().as_secs_f64();
+    let mut pairs: Vec<(usize, f32)> = res
+        .coreset
+        .indices
+        .iter()
+        .copied()
+        .zip(res.coreset.gamma.iter().copied())
+        .collect();
+    pairs.sort_by_key(|p| p.0);
+    (pairs, secs)
 }
 
 /// Run the fixed suite.  Case names are stable identifiers — CI and
@@ -403,6 +462,62 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
         threads,
         items: n as f64,
     });
+    // On-disk shard I/O (schema v5): the same workload written as text
+    // shards and converted to binary.  The io rows time a
+    // full-directory decode per format at 1 thread; the overlap row
+    // times a prefetch-on streamed selection over the binary set.
+    // `write_shards(seed 7)` and `MemShards::new(seed 7)` share the
+    // stratified deal, so the on-disk prefetch-on answer must equal
+    // `seq_set` bitwise — binary decode and prefetch join the verdict.
+    let ds = crate::data::Dataset {
+        x: x.clone(),
+        y: labels.clone(),
+        num_classes: 1,
+        source: "bench:clustered".to_string(),
+    };
+    let mut io_dir = std::env::temp_dir();
+    io_dir.push(format!("craig-bench-io-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&io_dir);
+    let text_dir = io_dir.join("text");
+    let bin_dir = io_dir.join("binary");
+    crate::data::shard::write_shards(&ds, stream_k, 7, &text_dir).expect("bench shard write");
+    let bin_set = crate::data::shard::convert_shards(
+        &text_dir,
+        &bin_dir,
+        crate::data::shard::ShardFormat::Binary,
+    )
+    .expect("bench shard convert");
+    let text_set = crate::data::shard::ShardSet::load(&text_dir).expect("bench shard reload");
+    let decode_all = |set: &crate::data::shard::ShardSet| -> usize {
+        let reader = crate::data::shard::ShardReader::new(set);
+        let mut rows = 0usize;
+        for k in 0..set.num_shards() {
+            rows += reader.read_shard(k).expect("bench shard decode").data.n();
+        }
+        rows
+    };
+    assert_eq!(decode_all(&text_set), n);
+    assert_eq!(decode_all(&bin_set), n);
+    let io_text = bench("stream/io/text/t1", &bc, |_| decode_all(&text_set));
+    let io_binary = bench("stream/io/binary/t1", &bc, |_| decode_all(&bin_set));
+    let io_text_mean_s = io_text.mean_s;
+    let io_binary_mean_s = io_binary.mean_s;
+    let binary_decode_speedup = io_text_mean_s / io_binary_mean_s;
+    cases.push(SuiteCase { result: io_text, threads: 1, items: n as f64 });
+    cases.push(SuiteCase { result: io_binary, threads: 1, items: n as f64 });
+    let mut overlap_samples = Vec::with_capacity(bc.measure_iters);
+    for _ in 0..bc.measure_iters {
+        let (disk_set, secs) = run_stream_disk(&bin_set, r, threads, stream_budget);
+        equivalent &= disk_set == seq_set;
+        overlap_samples.push(secs);
+    }
+    cases.push(SuiteCase {
+        result: result_from_samples(&format!("stream/overlap/t{threads}"), &overlap_samples),
+        threads,
+        items: n as f64,
+    });
+    let _ = std::fs::remove_dir_all(&io_dir);
+
     // Quality + memory comparison against the in-memory dense run.
     let mut inmem_selector = Selector::new();
     let (inmem_set, _) =
@@ -447,6 +562,9 @@ pub fn run_selection_suite(cfg: &SuiteConfig) -> SuiteReport {
         stream_vs_inmemory_objective,
         stream_peak_dense_bytes,
         inmemory_peak_dense_bytes,
+        io_text_mean_s,
+        io_binary_mean_s,
+        binary_decode_speedup,
         parallel_matches_sequential: equivalent,
     }
 }
@@ -491,10 +609,14 @@ pub fn to_json(rep: &SuiteReport) -> String {
     ));
     s.push_str(&format!(
         "  \"stream\": {{\"objective_ratio_vs_inmemory\": {}, \"peak_dense_bytes\": {}, \
-         \"inmemory_peak_dense_bytes\": {}}},\n",
+         \"inmemory_peak_dense_bytes\": {}, \"io_text_mean_s\": {}, \"io_binary_mean_s\": {}, \
+         \"binary_decode_speedup\": {}}},\n",
         json_num(rep.stream_vs_inmemory_objective),
         rep.stream_peak_dense_bytes,
-        rep.inmemory_peak_dense_bytes
+        rep.inmemory_peak_dense_bytes,
+        json_num(rep.io_text_mean_s),
+        json_num(rep.io_binary_mean_s),
+        json_num(rep.binary_decode_speedup)
     ));
     s.push_str("  \"results\": [\n");
     for (i, c) in rep.cases.iter().enumerate() {
@@ -533,9 +655,9 @@ mod tests {
         assert!(rep.parallel_matches_sequential, "parallel must equal sequential");
         assert_eq!(
             rep.cases.len(),
-            18,
+            21,
             "3 kernel tiers x 2 widths + 3 engines x 2 widths + 2 blocked + 2 workspace \
-             + 2 stream"
+             + 2 stream + 2 io + 1 overlap"
         );
         assert!(rep.cases.iter().all(|c| c.result.mean_s > 0.0));
         assert!(rep.speedup_lazy_selection > 0.0);
@@ -557,8 +679,21 @@ mod tests {
             rep.tiled_f32_objective_ratio
         );
         assert!(rep.speedup_tiled_t1 > 0.0 && rep.speedup_tiled_f32_tn > 0.0);
+        assert!(
+            rep.io_text_mean_s > 0.0 && rep.io_binary_mean_s > 0.0,
+            "io rows must have real timings"
+        );
+        assert!(
+            rep.binary_decode_speedup.is_finite() && rep.binary_decode_speedup > 0.0,
+            "binary_decode_speedup must be a real ratio: {}",
+            rep.binary_decode_speedup
+        );
         let json = to_json(&rep);
-        assert!(json.contains("\"schema_version\": 4"));
+        assert!(json.contains("\"schema_version\": 5"));
+        assert!(json.contains("stream/io/text/t1"));
+        assert!(json.contains("stream/io/binary/t1"));
+        assert!(json.contains("stream/overlap/t2"));
+        assert!(json.contains("\"binary_decode_speedup\":"));
         assert!(json.contains("kernel/ref/t1"));
         assert!(json.contains("kernel/tiled/t2"));
         assert!(json.contains("kernel/tiled_f32/t1"));

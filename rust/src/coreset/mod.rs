@@ -28,7 +28,7 @@ pub use selector::{
 };
 pub use sim::{BlockedSim, DenseSim, HalfDenseSim, Metric, RowWeightedSim, SimilaritySource};
 pub use stream::{
-    EpochSelector, MemShards, ShardSource, ShardStat, StreamConfig, StreamStats,
+    EpochSelector, MemShards, PrefetchReader, ShardSource, ShardStat, StreamConfig, StreamStats,
     StreamingSelector,
 };
 pub use weights::WeightedCoreset;

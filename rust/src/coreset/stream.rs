@@ -32,7 +32,10 @@
 //! ## Determinism contract
 //!
 //! The output is a pure function of `(shard contents, StreamConfig)` —
-//! independent of worker count, scheduling, and workspace temperature.
+//! independent of worker count, scheduling, workspace temperature,
+//! shard encoding (text vs binary decode bitwise-identical rows), and
+//! whether shards arrive synchronously or through a [`PrefetchReader`]
+//! (prefetch re-times the loads, it never re-orders a lane).
 //! Per-shard rng streams derive from the shard's first global index
 //! through the same [`crate::rng::mix_seed`] rule the per-class
 //! streams use, and shard budgets apportion with the same
@@ -163,11 +166,15 @@ pub struct StreamConfig {
     pub shard_budget: Option<Budget>,
     /// Shard-level fan-out width (worker threads; output-invariant).
     pub workers: usize,
+    /// Overlap shard I/O with selection: each worker lane gets a
+    /// [`PrefetchReader`] decoding shard `k+1` while the selector runs
+    /// on shard `k`.  Output-invariant — only the timing split moves.
+    pub prefetch: bool,
 }
 
 impl StreamConfig {
     pub fn new(selector: SelectorConfig) -> Self {
-        StreamConfig { selector, shard_budget: None, workers: 1 }
+        StreamConfig { selector, shard_budget: None, workers: 1, prefetch: false }
     }
 }
 
@@ -182,8 +189,20 @@ pub struct ShardStat {
     pub n: usize,
     /// Rows this shard contributed to the merged union.
     pub selected: usize,
-    /// Wall seconds (load + select) for this shard.
+    /// Wall seconds (load + select) attributed to this shard.  Always
+    /// `io_s + select_s`; with prefetch on, the `io_s` part overlapped
+    /// another shard's selection, so lane wall-clock is less than the
+    /// sum of its shards' `seconds`.
     pub seconds: f64,
+    /// Seconds loading/decoding this shard (in the I/O thread when
+    /// prefetching).
+    pub io_s: f64,
+    /// Seconds of pure selection on the loaded shard.
+    pub select_s: f64,
+    /// Seconds the selector sat blocked waiting for this shard to come
+    /// out of the prefetch channel (0 on the synchronous path; for a
+    /// lane's first shard this is the inherent initial fill).
+    pub prefetch_stall_s: f64,
 }
 
 /// Telemetry from one streaming run.
@@ -217,6 +236,18 @@ pub struct StreamStats {
     pub peak_resident_bytes: usize,
     /// Gain evaluations across all shards and the reduce round.
     pub evaluations: usize,
+    /// Effective shard-phase width (`workers.min(shards)`).
+    pub workers: usize,
+    /// Whether shard I/O was prefetched ([`StreamConfig::prefetch`]).
+    pub prefetch: bool,
+    /// Σ per-shard load/decode seconds ([`ShardStat::io_s`]).
+    pub io_seconds: f64,
+    /// Σ per-shard pure-selection seconds ([`ShardStat::select_s`]).
+    pub select_seconds: f64,
+    /// Σ per-shard prefetch stalls ([`ShardStat::prefetch_stall_s`]);
+    /// near `io_seconds` means the stream is disk-bound, near 0 means
+    /// selection fully hides the I/O.
+    pub prefetch_stall_seconds: f64,
 }
 
 /// One shard's contribution to the union.
@@ -232,7 +263,11 @@ struct ShardOutcome {
     labels: Vec<u32>,
     /// Shard population (for resident-memory accounting).
     shard_bytes: usize,
+    /// `io_s + select_s` (see [`ShardStat::seconds`]).
     seconds: f64,
+    io_s: f64,
+    select_s: f64,
+    stall_s: f64,
 }
 
 /// Oversampling factor for *derived* shard budgets: the union carries
@@ -269,10 +304,8 @@ fn derive_shard_budgets(cfg: &StreamConfig, sizes: &[usize]) -> Vec<Budget> {
     }
 }
 
-/// Select one shard end-to-end: load, select with the shard-derived
-/// seed and budget, lift to dataset coordinates, keep only the coreset
-/// rows.  Pure in `(source[k], cfg, budget)` — worker identity and
-/// workspace temperature are invisible.
+/// Select one shard end-to-end on the synchronous path: load (timed as
+/// `io_s`), then [`select_loaded_shard`].
 fn run_one_shard(
     source: &dyn ShardSource,
     k: usize,
@@ -282,6 +315,28 @@ fn run_one_shard(
 ) -> Result<ShardOutcome> {
     let t0 = Instant::now();
     let shard = source.load_shard(k)?;
+    let io_s = t0.elapsed().as_secs_f64();
+    select_loaded_shard(shard, source.num_classes(), k, budget, cfg, selector, io_s, 0.0)
+}
+
+/// Select an already-loaded shard: shard-derived seed and budget, lift
+/// to dataset coordinates, keep only the coreset rows.  Pure in
+/// `(shard, cfg, budget)` — worker identity, workspace temperature and
+/// whether the shard arrived synchronously or out of a
+/// [`PrefetchReader`] are invisible; `io_s`/`stall_s` only pass through
+/// into telemetry.
+#[allow(clippy::too_many_arguments)]
+fn select_loaded_shard(
+    shard: Shard,
+    num_classes: usize,
+    k: usize,
+    budget: Budget,
+    cfg: &StreamConfig,
+    selector: &mut Selector,
+    io_s: f64,
+    stall_s: f64,
+) -> Result<ShardOutcome> {
+    let t0 = Instant::now();
     anyhow::ensure!(
         shard.data.n() == shard.global_idx.len(),
         "shard {k}: {} rows vs {} indices",
@@ -297,13 +352,82 @@ fn run_one_shard(
     // `Send` — the same restriction the pipeline's class shards have).
     let mut engine = NativePairwise;
     let mut res =
-        selector.select(&shard.data.x, &shard.data.y, source.num_classes(), &scfg, &mut engine);
+        selector.select(&shard.data.x, &shard.data.y, num_classes, &scfg, &mut engine);
     let rows = shard.data.x.gather_rows(&res.coreset.indices);
     let labels: Vec<u32> = res.coreset.indices.iter().map(|&i| shard.data.y[i]).collect();
     for i in res.coreset.indices.iter_mut() {
         *i = shard.global_idx[*i];
     }
-    Ok(ShardOutcome { k, res, rows, labels, shard_bytes, seconds: t0.elapsed().as_secs_f64() })
+    let select_s = t0.elapsed().as_secs_f64();
+    Ok(ShardOutcome {
+        k,
+        res,
+        rows,
+        labels,
+        shard_bytes,
+        seconds: io_s + select_s,
+        io_s,
+        select_s,
+        stall_s,
+    })
+}
+
+/// Double-buffered shard supply for one worker lane: a background I/O
+/// thread loads/decodes the lane's shards **in lane order** and hands
+/// them over a bounded channel, so shard `k+1` decodes while the warm
+/// [`Selector`] runs on shard `k`.
+///
+/// Determinism: the channel is FIFO over a single producer, so the
+/// consumer sees exactly the sequence `w, w+W, ...` it would have
+/// loaded itself — prefetch changes *when* bytes are read, never what
+/// the selector computes.  Memory: at most `depth + 1` decoded shards
+/// per lane are resident (one in the selector's hands, `depth` parked
+/// in the channel) plus one being decoded — the doctor's prefetch
+/// estimate budgets for that.
+pub struct PrefetchReader {
+    rx: std::sync::mpsc::Receiver<(usize, Result<Shard>, f64)>,
+    last_stall_s: f64,
+}
+
+impl PrefetchReader {
+    /// Spawn the lane's I/O thread inside `scope`, loading `lane`'s
+    /// shard ids in order from `source` with a channel bound of
+    /// `depth` decoded shards (1 = double buffering).
+    pub fn spawn<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        source: &'env dyn ShardSource,
+        lane: Vec<usize>,
+        depth: usize,
+    ) -> PrefetchReader {
+        let (tx, rx) = std::sync::mpsc::sync_channel(depth.max(1));
+        scope.spawn(move || {
+            for k in lane {
+                let t0 = Instant::now();
+                let shard = source.load_shard(k);
+                let io_s = t0.elapsed().as_secs_f64();
+                if tx.send((k, shard, io_s)).is_err() {
+                    return; // consumer dropped out (error path): stop reading
+                }
+            }
+        });
+        PrefetchReader { rx, last_stall_s: 0.0 }
+    }
+
+    /// Next `(shard id, shard, io seconds)` in lane order, or `None`
+    /// once the lane is exhausted.  Blocks while the I/O thread is
+    /// still decoding; the blocked time is [`last_stall_s`](Self::last_stall_s).
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<(usize, Result<Shard>, f64)> {
+        let t0 = Instant::now();
+        let item = self.rx.recv().ok();
+        self.last_stall_s = t0.elapsed().as_secs_f64();
+        item
+    }
+
+    /// Seconds the most recent [`next`](Self::next) spent blocked.
+    pub fn last_stall_s(&self) -> f64 {
+        self.last_stall_s
+    }
 }
 
 /// The merge-and-reduce engine.  Holds one warm [`Selector`] per shard
@@ -325,6 +449,18 @@ impl StreamingSelector {
             shard_selectors: Vec::new(),
             reduce: Selector::new(),
         }
+    }
+
+    /// Re-pin the shard-phase width.  Warm per-worker selectors are
+    /// kept (shrinking just idles the extras); output is
+    /// width-invariant, so this only changes scheduling.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+    }
+
+    /// The configured shard-phase width.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Run merge-and-reduce selection over `source`.  `engine` serves
@@ -371,6 +507,9 @@ impl StreamingSelector {
         let peak_shard_dense =
             self.shard_selectors.iter().map(|s| s.workspace().peak_dense_bytes).max().unwrap_or(0);
         let max_shard_bytes = outcomes.iter().map(|o| o.shard_bytes).max().unwrap_or(0);
+        // Prefetching lanes hold up to three decoded shards at once:
+        // one being selected, one parked in the channel, one decoding.
+        let resident_shards = if cfg.prefetch { 3 } else { 1 };
         let shard_seconds: Vec<f64> = outcomes.iter().map(|o| o.seconds).collect();
         let shard_stats: Vec<ShardStat> = outcomes
             .iter()
@@ -379,8 +518,14 @@ impl StreamingSelector {
                 n: sizes[o.k],
                 selected: o.res.coreset.indices.len(),
                 seconds: o.seconds,
+                io_s: o.io_s,
+                select_s: o.select_s,
+                prefetch_stall_s: o.stall_s,
             })
             .collect();
+        let io_seconds: f64 = outcomes.iter().map(|o| o.io_s).sum();
+        let select_seconds: f64 = outcomes.iter().map(|o| o.select_s).sum();
+        let prefetch_stall_seconds: f64 = outcomes.iter().map(|o| o.stall_s).sum();
         let shard_evals: usize = outcomes.iter().map(|o| o.res.evaluations).sum();
 
         if k == 1 {
@@ -398,8 +543,13 @@ impl StreamingSelector {
                 shard_phase_seconds,
                 reduce_seconds: 0.0,
                 peak_dense_bytes: peak_shard_dense,
-                peak_resident_bytes: max_shard_bytes + peak_shard_dense,
+                peak_resident_bytes: resident_shards * max_shard_bytes + peak_shard_dense,
                 evaluations: shard_evals,
+                workers: w_count,
+                prefetch: cfg.prefetch,
+                io_seconds,
+                select_seconds,
+                prefetch_stall_seconds,
             };
             return Ok((res, stats));
         }
@@ -451,10 +601,15 @@ impl StreamingSelector {
             shard_phase_seconds,
             reduce_seconds,
             peak_dense_bytes: peak_dense,
-            peak_resident_bytes: w_count * (max_shard_bytes + peak_shard_dense)
+            peak_resident_bytes: w_count * (resident_shards * max_shard_bytes + peak_shard_dense)
                 + union_bytes
                 + self.reduce.workspace().peak_dense_bytes,
             evaluations: res.evaluations,
+            workers: w_count,
+            prefetch: cfg.prefetch,
+            io_seconds,
+            select_seconds,
+            prefetch_stall_seconds,
         };
         Ok((res, stats))
     }
@@ -473,17 +628,37 @@ fn run_shard_phase(
 ) -> Result<Vec<ShardOutcome>> {
     let w_count = selectors.len();
     let num_shards = budgets.len();
+    let num_classes = source.num_classes();
     let pool = ThreadPool::scoped(w_count);
     let bounds = util::even_ranges(w_count, w_count);
     let nested = pool.scope_map_chunks(selectors, &bounds, |w, chunk| {
         let selector = &mut chunk[0];
-        let mut out = Vec::new();
-        let mut k = w;
-        while k < num_shards {
-            out.push(run_one_shard(source, k, budgets[k], cfg, selector));
-            k += w_count;
+        if cfg.prefetch {
+            // Same lane, same order — the PrefetchReader only moves the
+            // load onto an I/O thread one shard ahead of the selector.
+            let lane: Vec<usize> = (w..num_shards).step_by(w_count).collect();
+            std::thread::scope(|s| {
+                let mut reader = PrefetchReader::spawn(s, source, lane, 1);
+                let mut out = Vec::new();
+                while let Some((k, shard, io_s)) = reader.next() {
+                    let stall_s = reader.last_stall_s();
+                    out.push(shard.and_then(|sh| {
+                        select_loaded_shard(
+                            sh, num_classes, k, budgets[k], cfg, selector, io_s, stall_s,
+                        )
+                    }));
+                }
+                out
+            })
+        } else {
+            let mut out = Vec::new();
+            let mut k = w;
+            while k < num_shards {
+                out.push(run_one_shard(source, k, budgets[k], cfg, selector));
+                k += w_count;
+            }
+            out
         }
-        out
     });
     let mut outcomes = Vec::with_capacity(num_shards);
     for o in nested.into_iter().flatten() {
@@ -500,6 +675,10 @@ fn run_shard_phase(
 pub struct EpochSelector {
     inmem: Selector,
     streamer: StreamingSelector,
+    /// Shard-phase width pinned at construction
+    /// ([`with_workers`](Self::with_workers)); `None` derives the width
+    /// from each call's `cfg.parallelism`.
+    workers_override: Option<usize>,
     /// Telemetry of the most recent streamed call (None after an
     /// in-memory call).
     pub last_stream: Option<StreamStats>,
@@ -512,10 +691,30 @@ impl Default for EpochSelector {
 }
 
 impl EpochSelector {
+    /// An epoch selector whose streamed calls fan out `cfg.parallelism`
+    /// wide (the width is re-derived per call).
     pub fn new() -> Self {
         EpochSelector {
             inmem: Selector::new(),
             streamer: StreamingSelector::new(1),
+            workers_override: None,
+            last_stream: None,
+        }
+    }
+
+    /// An epoch selector whose streamed calls always fan out `workers`
+    /// wide, whatever each call's `cfg.parallelism` says.  Use this
+    /// when the caller plans thread budgets up front; the plain
+    /// [`new`](Self::new) used to *look* like it accepted a width too
+    /// (via `StreamingSelector::new`) but every call silently clobbered
+    /// it — the precedence is now explicit: constructor pin > per-call
+    /// `parallelism`.
+    pub fn with_workers(workers: usize) -> Self {
+        let workers = workers.max(1);
+        EpochSelector {
+            inmem: Selector::new(),
+            streamer: StreamingSelector::new(workers),
+            workers_override: Some(workers),
             last_stream: None,
         }
     }
@@ -535,7 +734,12 @@ impl EpochSelector {
         if cfg.stream_shards > 1 {
             let shards = MemShards::new(features, labels, num_classes, cfg.stream_shards, cfg.seed);
             let mut scfg = StreamConfig::new(cfg.clone());
-            scfg.workers = cfg.parallelism.max(1);
+            // Width precedence, explicit: a width pinned at construction
+            // (`with_workers`) wins; otherwise this call's `parallelism`
+            // drives.  (Output is width-invariant either way — this
+            // only decides thread scheduling.)
+            let workers = self.workers_override.unwrap_or_else(|| cfg.parallelism.max(1));
+            scfg.workers = workers;
             // The one `parallelism` knob already fans out at the shard
             // level here; keeping it inside each shard's config too
             // would square the thread count (W shards × W-wide pools).
@@ -543,7 +747,7 @@ impl EpochSelector {
             // way.  (`select-stream`'s separate --workers/--parallelism
             // knobs compose the two levels explicitly instead.)
             scfg.selector.parallelism = 1;
-            self.streamer.workers = scfg.workers;
+            self.streamer.set_workers(workers);
             let (res, stats) = self
                 .streamer
                 .select(&shards, &scfg, engine)
@@ -699,5 +903,66 @@ mod tests {
         assert_eq!(via_free.coreset.indices, streamed.coreset.indices);
         assert_eq!(via_free.coreset.gamma, streamed.coreset.gamma);
         let _ = plain;
+    }
+
+    #[test]
+    fn prefetch_is_bitwise_identical_to_sync_at_any_width() {
+        let ds = synthetic::covtype_like(700, 4);
+        let cfg = SelectorConfig { budget: Budget::Count(48), ..Default::default() };
+        let mut eng = NativePairwise;
+        let shards = MemShards::new(&ds.x, &ds.y, 2, 5, cfg.seed);
+        let mut streamer = StreamingSelector::new(2);
+        let sync_cfg = StreamConfig::new(cfg.clone());
+        let (a, sa) = streamer.select(&shards, &sync_cfg, &mut eng).unwrap();
+        assert!(!sa.prefetch);
+        // The sync path still splits io vs select, and attributes the
+        // whole shard wall to their sum.
+        for s in &sa.shard_stats {
+            assert_eq!(s.seconds, s.io_s + s.select_s);
+            assert_eq!(s.prefetch_stall_s, 0.0, "no stalls without a prefetch channel");
+        }
+        assert!(sa.select_seconds > 0.0);
+        let mut pre_cfg = StreamConfig::new(cfg);
+        pre_cfg.prefetch = true;
+        for workers in [1usize, 2, 4] {
+            streamer.set_workers(workers);
+            let (sync_res, sync_stats) = streamer.select(&shards, &sync_cfg, &mut eng).unwrap();
+            let (b, sb) = streamer.select(&shards, &pre_cfg, &mut eng).unwrap();
+            assert_eq!(sync_res.coreset.indices, a.coreset.indices, "workers={workers}");
+            assert_eq!(b.coreset.indices, a.coreset.indices, "workers={workers}");
+            assert_eq!(b.coreset.gamma, a.coreset.gamma, "workers={workers}");
+            assert_eq!(b.f_value, a.f_value, "workers={workers}");
+            assert!(sb.prefetch);
+            assert_eq!(sb.workers, workers.min(5));
+            assert!(sb.prefetch_stall_seconds >= 0.0);
+            assert!(
+                sb.peak_resident_bytes > sync_stats.peak_resident_bytes,
+                "prefetch at the same width must account for the extra buffered shards"
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_selector_worker_precedence_is_explicit() {
+        let ds = synthetic::covtype_like(400, 2);
+        let mut eng = NativePairwise;
+        let cfg = SelectorConfig {
+            budget: Budget::Count(30),
+            stream_shards: 4,
+            parallelism: 2,
+            ..Default::default()
+        };
+        // Pinned width wins over the call's parallelism...
+        let mut pinned = EpochSelector::with_workers(3);
+        let r1 = pinned.select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+        assert_eq!(pinned.last_stream.as_ref().unwrap().workers, 3);
+        assert_eq!(pinned.streamer.workers(), 3);
+        // ...an unpinned selector derives it from the call.
+        let mut derived = EpochSelector::new();
+        let r2 = derived.select(&ds.x, &ds.y, 2, &cfg, &mut eng);
+        assert_eq!(derived.last_stream.as_ref().unwrap().workers, 2);
+        // Width is scheduling only: both produce the same coreset.
+        assert_eq!(r1.coreset.indices, r2.coreset.indices);
+        assert_eq!(r1.coreset.gamma, r2.coreset.gamma);
     }
 }

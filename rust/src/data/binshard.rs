@@ -1,0 +1,622 @@
+//! Binary shard codec: the `.cshard` on-disk format.
+//!
+//! The streaming path (DESIGN.md §7) originally read LIBSVM *text*
+//! shards, so shard-phase wall-clock was dominated by float parsing,
+//! not disk.  A `.cshard` file stores the same `Shard` payload — rows,
+//! labels, global indices — in a versioned little-endian layout that
+//! decodes with `f32::from_le_bytes` copies instead of a parser, so
+//! loading is disk-bound.  Layout (see DESIGN.md §12 for the diagram):
+//!
+//! ```text
+//! header   magic "CSHRD\0" · version u16 · flags u32 · n u64 · d u64
+//!          · classes u32 · crc32(header bytes)
+//! classes  per-class row counts, u64 × classes            · crc32
+//! features dense:  f32 × n·d
+//!          sparse: nnz u64 · row offsets u64 × (n+1)
+//!                  · col ids u32 × nnz · values f32 × nnz  · crc32
+//! labels   u32 × n                                         · crc32
+//! indices  global row indices, u64 × n                     · crc32
+//! ```
+//!
+//! Every multi-byte value is little-endian; every section carries a
+//! CRC-32 (IEEE) of its payload, so truncation and bit-rot fail loudly
+//! with the section named.  The sparse layout stores the *exact* f32
+//! bits of every non-zero (a `-0.0` counts as non-zero so round-trips
+//! keep the sign bit), which makes binary ↔ text conversion bitwise.
+//!
+//! Files load either by one `read()` into an owned buffer (default,
+//! portable) or through an opt-in `mmap` path ([`LoadMode::Mmap`],
+//! `CRAIG_BINSHARD_MMAP=1`; unix only, silently falls back to `read()`
+//! elsewhere).  Decoding copies out of the buffer either way — the map
+//! only avoids the read-side copy, it never aliases live selection
+//! state, and drops (unmaps) before [`read`] returns.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+
+/// File extension for binary shards (`shard_0000.cshard`).
+pub const EXT: &str = "cshard";
+
+/// First six bytes of every `.cshard` file.
+pub const MAGIC: &[u8; 6] = b"CSHRD\0";
+
+/// Format version (bump on any layout change).
+pub const VERSION: u16 = 1;
+
+/// Fixed header size: magic + version + flags + n + d + classes + crc.
+pub const HEADER_LEN: usize = 6 + 2 + 4 + 8 + 8 + 4 + 4;
+
+/// Flag bit: the feature section is CSR-sparse, not dense.
+const FLAG_SPARSE: u32 = 1;
+
+/// How to bring the file's bytes into memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadMode {
+    /// One `read()` into an owned, allocator-aligned buffer (default).
+    Read,
+    /// `mmap` the file read-only (unix only; elsewhere behaves as
+    /// [`LoadMode::Read`]).  Opt-in: decode still copies, so this only
+    /// saves the kernel→user copy on cold reads.
+    Mmap,
+}
+
+/// Mode the shard reader uses: [`LoadMode::Mmap`] iff the
+/// `CRAIG_BINSHARD_MMAP` environment variable is `1` or `true`.
+pub fn default_mode() -> LoadMode {
+    match std::env::var("CRAIG_BINSHARD_MMAP") {
+        Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => LoadMode::Mmap,
+        _ => LoadMode::Read,
+    }
+}
+
+/// Feature-section layout choice for [`write_with`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// Pick whichever of dense/sparse is smaller on disk.
+    Auto,
+    Dense,
+    Sparse,
+}
+
+/// A decoded binary shard (validated: labels in range, indices strictly
+/// ascending, class table consistent with labels).
+#[derive(Clone, Debug)]
+pub struct BinShard {
+    /// `(n, d)` dense feature rows (CSR files are densified on read).
+    pub x: Matrix,
+    /// Class id per row, each `< num_classes` from the header.
+    pub labels: Vec<u32>,
+    /// Dataset coordinate of each row, strictly ascending.
+    pub global_idx: Vec<usize>,
+    pub num_classes: usize,
+}
+
+// ---------------------------------------------------------------- CRC
+
+/// CRC-32 (IEEE 802.3, polynomial 0xEDB88320) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// -------------------------------------------------------------- write
+
+/// Encode one shard at `path`, choosing dense vs CSR automatically.
+pub fn write(
+    path: &Path,
+    x: &Matrix,
+    labels: &[u32],
+    global_idx: &[usize],
+    num_classes: usize,
+) -> Result<()> {
+    write_with(path, x, labels, global_idx, num_classes, Layout::Auto)
+}
+
+/// Encode one shard at `path` with an explicit feature layout.
+pub fn write_with(
+    path: &Path,
+    x: &Matrix,
+    labels: &[u32],
+    global_idx: &[usize],
+    num_classes: usize,
+    layout: Layout,
+) -> Result<()> {
+    let (n, d) = (x.rows, x.cols);
+    assert_eq!(labels.len(), n, "one label per row");
+    assert_eq!(global_idx.len(), n, "one global index per row");
+    assert!(d <= u32::MAX as usize, "column ids are u32");
+    let mut class_counts = vec![0u64; num_classes];
+    for &c in labels {
+        assert!((c as usize) < num_classes, "label {c} outside 0..{num_classes}");
+        class_counts[c as usize] += 1;
+    }
+
+    // A value participates in the sparse encoding iff its *bits* are
+    // non-zero: `-0.0` must survive, so `v != 0.0` would be lossy.
+    let nnz = x.data.iter().filter(|v| v.to_bits() != 0).count();
+    let sparse_bytes = 8 + (n + 1) * 8 + nnz * 8;
+    let dense_bytes = n * d * 4;
+    let sparse = match layout {
+        Layout::Dense => false,
+        Layout::Sparse => true,
+        Layout::Auto => sparse_bytes < dense_bytes,
+    };
+
+    let mut out = Vec::with_capacity(HEADER_LEN + dense_bytes.min(sparse_bytes) + 16 * n);
+    let mut header = Vec::with_capacity(HEADER_LEN - 4);
+    header.extend_from_slice(MAGIC);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    header.extend_from_slice(&(if sparse { FLAG_SPARSE } else { 0u32 }).to_le_bytes());
+    header.extend_from_slice(&(n as u64).to_le_bytes());
+    header.extend_from_slice(&(d as u64).to_le_bytes());
+    header.extend_from_slice(&(num_classes as u32).to_le_bytes());
+    push_section(&mut out, &header);
+
+    let mut classes = Vec::with_capacity(num_classes * 8);
+    for &c in &class_counts {
+        classes.extend_from_slice(&c.to_le_bytes());
+    }
+    push_section(&mut out, &classes);
+
+    let mut feats = Vec::with_capacity(if sparse { sparse_bytes } else { dense_bytes });
+    if sparse {
+        feats.extend_from_slice(&(nnz as u64).to_le_bytes());
+        let mut off = 0u64;
+        feats.extend_from_slice(&off.to_le_bytes());
+        for i in 0..n {
+            off += x.row(i).iter().filter(|v| v.to_bits() != 0).count() as u64;
+            feats.extend_from_slice(&off.to_le_bytes());
+        }
+        for i in 0..n {
+            for (j, v) in x.row(i).iter().enumerate() {
+                if v.to_bits() != 0 {
+                    feats.extend_from_slice(&(j as u32).to_le_bytes());
+                }
+            }
+        }
+        for v in &x.data {
+            if v.to_bits() != 0 {
+                feats.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    } else {
+        for v in &x.data {
+            feats.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    push_section(&mut out, &feats);
+
+    let mut labs = Vec::with_capacity(n * 4);
+    for &c in labels {
+        labs.extend_from_slice(&c.to_le_bytes());
+    }
+    push_section(&mut out, &labs);
+
+    let mut idxs = Vec::with_capacity(n * 8);
+    for &g in global_idx {
+        idxs.extend_from_slice(&(g as u64).to_le_bytes());
+    }
+    push_section(&mut out, &idxs);
+
+    std::fs::write(path, &out).with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+fn push_section(out: &mut Vec<u8>, payload: &[u8]) {
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+}
+
+// --------------------------------------------------------------- read
+
+/// Decode the shard at `path`.  Every structural defect — wrong magic,
+/// version, flags, truncation, checksum mismatch, out-of-range label,
+/// non-ascending index, class table that disagrees with the labels —
+/// fails with the offending section and byte offset named.
+pub fn read(path: &Path, mode: LoadMode) -> Result<BinShard> {
+    let bytes = load_bytes(path, mode)?;
+    decode(bytes.bytes()).with_context(|| format!("decode {}", path.display()))
+}
+
+fn decode(buf: &[u8]) -> Result<BinShard> {
+    let mut cur = Cur { buf, pos: 0 };
+    let header = cur.section(HEADER_LEN - 4, "header")?;
+    if &header[0..6] != MAGIC {
+        bail!("header: bad magic {:?} (not a .cshard file)", &header[0..6]);
+    }
+    let version = u16::from_le_bytes(header[6..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("header: unsupported version {version} (this build speaks {VERSION})");
+    }
+    let flags = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if flags & !FLAG_SPARSE != 0 {
+        bail!("header: unknown flag bits {flags:#x}");
+    }
+    let n = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
+    let d = u64::from_le_bytes(header[20..28].try_into().unwrap()) as usize;
+    let num_classes = u32::from_le_bytes(header[28..32].try_into().unwrap()) as usize;
+    let cells = n
+        .checked_mul(d)
+        .with_context(|| format!("header: n×d overflows ({n}×{d})"))?;
+
+    let classes = cur.section(num_classes * 8, "class table")?;
+    let class_counts: Vec<u64> = classes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let total: u64 = class_counts.iter().sum();
+    if total != n as u64 {
+        bail!("class table: counts sum to {total}, header says n = {n}");
+    }
+
+    let x = if flags & FLAG_SPARSE != 0 {
+        let nnz = cur.peek_u64("features nnz")? as usize;
+        let payload = cur.section(8 + (n + 1) * 8 + nnz * 8, "features")?;
+        decode_sparse(payload, n, d, nnz)?
+    } else {
+        let payload = cur.section(cells * 4, "features")?;
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Matrix::from_vec(n, d, data)
+    };
+
+    let labs = cur.section(n * 4, "labels")?;
+    let mut seen = vec![0u64; num_classes];
+    let mut labels = Vec::with_capacity(n);
+    for (i, c) in labs.chunks_exact(4).enumerate() {
+        let c = u32::from_le_bytes(c.try_into().unwrap());
+        if c as usize >= num_classes {
+            bail!("labels: row {i}: class {c} outside 0..{num_classes}");
+        }
+        seen[c as usize] += 1;
+        labels.push(c);
+    }
+    if seen != class_counts {
+        bail!("class table disagrees with labels ({class_counts:?} vs {seen:?})");
+    }
+
+    let idxs = cur.section(n * 8, "indices")?;
+    let mut global_idx: Vec<usize> = Vec::with_capacity(n);
+    for (i, g) in idxs.chunks_exact(8).enumerate() {
+        let g = u64::from_le_bytes(g.try_into().unwrap()) as usize;
+        if let Some(&prev) = global_idx.last() {
+            if g <= prev {
+                bail!("indices: row {i}: must be strictly ascending ({g} after {prev})");
+            }
+        }
+        global_idx.push(g);
+    }
+
+    if cur.pos != buf.len() {
+        bail!("{} trailing bytes after the index section", buf.len() - cur.pos);
+    }
+    Ok(BinShard { x, labels, global_idx, num_classes })
+}
+
+fn decode_sparse(payload: &[u8], n: usize, d: usize, nnz: usize) -> Result<Matrix> {
+    let offs_end = 8 + (n + 1) * 8;
+    let cols_end = offs_end + nnz * 4;
+    let offsets: Vec<u64> = payload[8..offs_end]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if offsets[0] != 0 || offsets[n] != nnz as u64 {
+        bail!("features: row offsets must span 0..{nnz} (got {}..{})", offsets[0], offsets[n]);
+    }
+    let mut x = Matrix::zeros(n, d);
+    let cols = &payload[offs_end..cols_end];
+    let vals = &payload[cols_end..];
+    for i in 0..n {
+        let (a, b) = (offsets[i] as usize, offsets[i + 1] as usize);
+        if b < a || b > nnz {
+            bail!("features: row {i}: offsets not monotone ({a}..{b})");
+        }
+        let row = x.row_mut(i);
+        for e in a..b {
+            let j = u32::from_le_bytes(cols[e * 4..e * 4 + 4].try_into().unwrap()) as usize;
+            if j >= d {
+                bail!("features: row {i}: column {j} outside 0..{d}");
+            }
+            row[j] = f32::from_le_bytes(vals[e * 4..e * 4 + 4].try_into().unwrap());
+        }
+    }
+    Ok(x)
+}
+
+/// Byte cursor over the loaded file; every take is bounds-checked with
+/// a positioned error, and [`section`](Cur::section) also verifies the
+/// trailing CRC-32.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, len: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(len).with_context(|| format!("{what}: length overflow"))?;
+        if end > self.buf.len() {
+            bail!(
+                "truncated: {what} needs {len} bytes at offset {}, file has {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Take `len` payload bytes plus a 4-byte CRC and verify it.
+    fn section(&mut self, len: usize, what: &str) -> Result<&'a [u8]> {
+        let start = self.pos;
+        let payload = self.take(len, what)?;
+        let crc = self.take(4, what)?;
+        let stored = u32::from_le_bytes(crc.try_into().unwrap());
+        let got = crc32(payload);
+        if got != stored {
+            bail!(
+                "{what} section at offset {start}: checksum mismatch \
+                 (stored {stored:#010x}, computed {got:#010x})"
+            );
+        }
+        Ok(payload)
+    }
+
+    /// Read a u64 at the cursor without consuming it.
+    fn peek_u64(&self, what: &str) -> Result<u64> {
+        if self.pos + 8 > self.buf.len() {
+            bail!(
+                "truncated: {what} needs 8 bytes at offset {}, file has {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        Ok(u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap()))
+    }
+}
+
+// ------------------------------------------------------- file loading
+
+enum FileBytes {
+    Owned(Vec<u8>),
+    #[cfg(unix)]
+    Mapped(mm::Map),
+}
+
+impl FileBytes {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            FileBytes::Owned(v) => v,
+            #[cfg(unix)]
+            FileBytes::Mapped(m) => m.bytes(),
+        }
+    }
+}
+
+fn load_bytes(path: &Path, mode: LoadMode) -> Result<FileBytes> {
+    match mode {
+        LoadMode::Read => {
+            let v = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+            Ok(FileBytes::Owned(v))
+        }
+        LoadMode::Mmap => {
+            #[cfg(unix)]
+            {
+                let f = std::fs::File::open(path)
+                    .with_context(|| format!("open {}", path.display()))?;
+                let len = f.metadata()?.len() as usize;
+                if len == 0 {
+                    // Zero-length maps are invalid; an empty file should
+                    // fail as "truncated header", not "mmap failed".
+                    return Ok(FileBytes::Owned(Vec::new()));
+                }
+                let map = mm::Map::of(&f, len)
+                    .with_context(|| format!("mmap {}", path.display()))?;
+                Ok(FileBytes::Mapped(map))
+            }
+            #[cfg(not(unix))]
+            {
+                let v = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+                Ok(FileBytes::Owned(v))
+            }
+        }
+    }
+}
+
+/// Minimal read-only mmap over raw libc symbols — the crate has no
+/// `libc` dependency, but on unix targets these symbols are always
+/// linked.  Private; the only consumer is [`load_bytes`].
+#[cfg(unix)]
+mod mm {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    use anyhow::{bail, Result};
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    pub struct Map {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    impl Map {
+        pub fn of(file: &File, len: usize) -> Result<Map> {
+            assert!(len > 0, "zero-length maps are invalid");
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                bail!("mmap of {len} bytes failed");
+            }
+            Ok(Map { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tempfile(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("craig-binshard-{tag}-{}.cshard", std::process::id()));
+        p
+    }
+
+    fn sample() -> (Matrix, Vec<u32>, Vec<usize>) {
+        // Mixed rows: dense, all-zero, sparse-with-negative-zero.  The
+        // -0.0 pins the bits-not-value sparsity rule.
+        let x = Matrix::from_vec(
+            4,
+            3,
+            vec![1.5, -2.25, 0.0, 0.0, 0.0, 0.0, -0.0, 3.75, 0.0, 0.125, 0.0, -9.5],
+        );
+        (x, vec![0, 1, 1, 0], vec![2, 5, 6, 11])
+    }
+
+    #[test]
+    fn dense_and_sparse_round_trip_bitwise() {
+        let (x, labels, gidx) = sample();
+        for (tag, layout) in [("dense", Layout::Dense), ("sparse", Layout::Sparse)] {
+            let path = tempfile(tag);
+            write_with(&path, &x, &labels, &gidx, 2, layout).unwrap();
+            let back = read(&path, LoadMode::Read).unwrap();
+            assert_eq!(back.x.rows, 4);
+            assert_eq!(back.x.cols, 3);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&back.x.data), bits(&x.data), "{tag}: rows must round-trip bitwise");
+            assert_eq!(back.labels, labels);
+            assert_eq!(back.global_idx, gidx);
+            assert_eq!(back.num_classes, 2);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn auto_layout_picks_sparse_for_sparse_data() {
+        let mut x = Matrix::zeros(64, 32);
+        x.set(3, 4, 1.0);
+        x.set(60, 31, -2.0);
+        let labels = vec![0u32; 64];
+        let gidx: Vec<usize> = (0..64).collect();
+        let path = tempfile("auto");
+        write(&path, &x, &labels, &gidx, 1).unwrap();
+        let len = std::fs::metadata(&path).unwrap().len() as usize;
+        assert!(len < 64 * 32 * 4, "auto layout must not store the dense zeros ({len} bytes)");
+        let back = read(&path, LoadMode::Read).unwrap();
+        assert_eq!(back.x.get(3, 4), 1.0);
+        assert_eq!(back.x.get(60, 31), -2.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mmap_read_matches_owned_read() {
+        let (x, labels, gidx) = sample();
+        let path = tempfile("mmap");
+        write(&path, &x, &labels, &gidx, 2).unwrap();
+        let a = read(&path, LoadMode::Read).unwrap();
+        let b = read(&path, LoadMode::Mmap).unwrap();
+        assert_eq!(a.x.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                   b.x.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>());
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.global_idx, b.global_idx);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corruption_is_rejected_with_positioned_errors() {
+        let (x, labels, gidx) = sample();
+        let path = tempfile("corrupt");
+        write_with(&path, &x, &labels, &gidx, 2, Layout::Dense).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        let err = format!("{:#}", read(&path, LoadMode::Read).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+
+        // Flipped feature byte: the features checksum must name itself.
+        let mut bad = good.clone();
+        let feat_off = HEADER_LEN + 2 * 8 + 4 + 3; // header, class table + crc, +3
+        bad[feat_off] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let err = format!("{:#}", read(&path, LoadMode::Read).unwrap_err());
+        assert!(err.contains("features section") && err.contains("checksum"), "{err}");
+
+        // Truncation names the starved section.
+        let cut = good.len() - 10;
+        std::fs::write(&path, &good[..cut]).unwrap();
+        let err = format!("{:#}", read(&path, LoadMode::Read).unwrap_err());
+        assert!(err.contains("truncated") && err.contains("indices"), "{err}");
+
+        // Out-of-range label (recompute the section CRC so only the
+        // semantic check can catch it).
+        let mut bad = good.clone();
+        let labels_off = HEADER_LEN + (2 * 8 + 4) + (4 * 3 * 4 + 4);
+        bad[labels_off] = 9;
+        let crc = crc32(&bad[labels_off..labels_off + 4 * 4]).to_le_bytes();
+        bad[labels_off + 16..labels_off + 20].copy_from_slice(&crc);
+        std::fs::write(&path, &bad).unwrap();
+        let err = format!("{:#}", read(&path, LoadMode::Read).unwrap_err());
+        assert!(err.contains("class 9 outside"), "{err}");
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // IEEE CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

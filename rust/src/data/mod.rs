@@ -2,9 +2,12 @@
 //! normalization, plus [`synthetic`] generators standing in for the
 //! paper's four datasets, a [`libsvm`] parser/writer so the genuine
 //! files drop in when available (see DESIGN.md §3 for the substitution
-//! table), and the [`shard`] substrate for out-of-core selection
-//! (directory-of-shards + manifest + bounded-memory reader).
+//! table), the [`shard`] substrate for out-of-core selection
+//! (directory-of-shards + manifest + bounded-memory reader), and the
+//! [`binshard`] codec storing shards in a checksummed binary layout
+//! that decodes disk-bound instead of parse-bound.
 
+pub mod binshard;
 pub mod libsvm;
 pub mod shard;
 pub mod synthetic;

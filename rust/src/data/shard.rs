@@ -28,7 +28,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::{libsvm, Dataset};
+use super::{binshard, libsvm, Dataset};
 use crate::rng::Rng;
 
 /// Manifest file name inside a shard directory.
@@ -37,17 +37,50 @@ pub const MANIFEST_NAME: &str = "MANIFEST.txt";
 /// Manifest format version (`craig-shards v1`).
 pub const MANIFEST_VERSION: u32 = 1;
 
+/// On-disk encoding of a shard's rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardFormat {
+    /// LIBSVM text file plus a `.idx` sidecar (the original layout; a
+    /// manifest line without a format token means this).
+    #[default]
+    Text,
+    /// A single `.cshard` binary file (see [`binshard`]); global
+    /// indices are embedded, so the idx column is the placeholder `-`.
+    Binary,
+}
+
+impl ShardFormat {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardFormat::Text => "text",
+            ShardFormat::Binary => "binary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ShardFormat> {
+        match s {
+            "text" => Ok(ShardFormat::Text),
+            "binary" => Ok(ShardFormat::Binary),
+            other => bail!("unknown shard format '{other}' (want text|binary)"),
+        }
+    }
+}
+
 /// One shard's manifest entry.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardMeta {
-    /// LIBSVM shard file, relative to the set directory.
+    /// Shard file (LIBSVM text or `.cshard`), relative to the set
+    /// directory.
     pub file: String,
-    /// Global-index sidecar, relative to the set directory.
+    /// Global-index sidecar, relative to the set directory (`-` for
+    /// binary shards, whose indices live in the `.cshard` itself).
     pub idx_file: String,
     /// Rows in this shard.
     pub n: usize,
     /// Per-class row counts (len == num_classes).
     pub class_counts: Vec<usize>,
+    /// Row encoding of `file`.
+    pub format: ShardFormat,
 }
 
 /// A shard directory's manifest: global shape + per-shard entries.
@@ -83,7 +116,15 @@ impl ShardSet {
         self.shards.iter().map(|s| s.n).collect()
     }
 
-    /// Serialize the manifest.
+    /// The set's uniform shard format ([`parse_manifest`] rejects
+    /// mixed directories, so the first shard speaks for all).
+    pub fn format(&self) -> ShardFormat {
+        self.shards.first().map(|m| m.format).unwrap_or_default()
+    }
+
+    /// Serialize the manifest.  Text shards emit the original 4-token
+    /// `shard` line (so pure-text directories stay byte-identical to
+    /// pre-binary manifests); binary shards append a `binary` token.
     pub fn manifest_string(&self) -> String {
         let mut s = format!("craig-shards v{MANIFEST_VERSION}\n");
         s.push_str(&format!("n {}\n", self.n));
@@ -91,7 +132,11 @@ impl ShardSet {
         s.push_str(&format!("classes {}\n", self.num_classes));
         for m in &self.shards {
             let counts: Vec<String> = m.class_counts.iter().map(usize::to_string).collect();
-            s.push_str(&format!("shard {} {} {} {}\n", m.file, m.idx_file, m.n, counts.join(",")));
+            s.push_str(&format!("shard {} {} {} {}", m.file, m.idx_file, m.n, counts.join(",")));
+            if m.format != ShardFormat::Text {
+                s.push_str(&format!(" {}", m.format.name()));
+            }
+            s.push('\n');
         }
         s
     }
@@ -155,7 +200,19 @@ impl ShardSet {
                                 .with_context(|| format!("line {}: bad class count '{c}'", i + 1))?,
                         );
                     }
-                    shards.push(ShardMeta { file, idx_file, n: sn, class_counts });
+                    let format = match toks.next() {
+                        None => ShardFormat::Text,
+                        Some(f) => ShardFormat::parse(f)
+                            .with_context(|| format!("line {}", i + 1))?,
+                    };
+                    if format == ShardFormat::Binary && idx_file != "-" {
+                        bail!(
+                            "line {}: binary shard carries its indices inline; \
+                             idx column must be '-', not '{idx_file}'",
+                            i + 1
+                        );
+                    }
+                    shards.push(ShardMeta { file, idx_file, n: sn, class_counts, format });
                 }
                 other => bail!("line {}: unknown manifest key '{other}'", i + 1),
             }
@@ -187,6 +244,20 @@ impl ShardSet {
                 );
             }
         }
+        // Mixed directories fail loudly: a reader that silently parsed
+        // half its shards and decoded the other half would hide a
+        // botched conversion until selection produced garbage timings.
+        let first = set.shards[0].format;
+        if let Some(m) = set.shards.iter().find(|m| m.format != first) {
+            bail!(
+                "mixed shard formats: {} is {} but {} is {} — \
+                 re-run `craig shard convert` on the whole directory",
+                set.shards[0].file,
+                first.name(),
+                m.file,
+                m.format.name()
+            );
+        }
         Ok(set)
     }
 
@@ -211,14 +282,23 @@ impl<'a> ShardReader<'a> {
         ShardReader { set }
     }
 
-    /// Load shard `k`: LIBSVM rows (raw-label mode, dims forced from
-    /// the manifest) plus the global-index sidecar.
+    /// Load shard `k` in whatever format the manifest records: LIBSVM
+    /// text (raw-label mode, dims forced from the manifest, `.idx`
+    /// sidecar) or `.cshard` binary (indices inline, one `read()` or
+    /// mmap per [`binshard::default_mode`]).
     pub fn read_shard(&self, k: usize) -> Result<Shard> {
         let meta = self
             .set
             .shards
             .get(k)
             .with_context(|| format!("shard {k} of {}", self.set.num_shards()))?;
+        match meta.format {
+            ShardFormat::Text => self.read_text_shard(meta),
+            ShardFormat::Binary => self.read_binary_shard(meta),
+        }
+    }
+
+    fn read_text_shard(&self, meta: &ShardMeta) -> Result<Shard> {
         let path = self.set.dir.join(&meta.file);
         let f = std::fs::File::open(&path).with_context(|| format!("open {}", path.display()))?;
         let mut data = libsvm::parse_raw_labels(
@@ -262,6 +342,55 @@ impl<'a> ShardReader<'a> {
             bail!("{}: {} indices for {} rows", ipath.display(), global_idx.len(), data.n());
         }
         Ok(Shard { data, global_idx })
+    }
+
+    fn read_binary_shard(&self, meta: &ShardMeta) -> Result<Shard> {
+        let path = self.set.dir.join(&meta.file);
+        let bin = binshard::read(&path, binshard::default_mode())?;
+        // The same loud invariants the text path enforces, plus the
+        // manifest/header cross-checks the binary header makes possible.
+        if bin.x.rows != meta.n {
+            bail!("{}: {} rows on disk, manifest says {}", path.display(), bin.x.rows, meta.n);
+        }
+        if bin.x.cols != self.set.d {
+            let d = self.set.d;
+            bail!("{}: dimension {} on disk, manifest says {d}", path.display(), bin.x.cols);
+        }
+        if bin.num_classes != self.set.num_classes {
+            bail!(
+                "{}: {} classes on disk, manifest says {}",
+                path.display(),
+                bin.num_classes,
+                self.set.num_classes
+            );
+        }
+        if let Some(&last) = bin.global_idx.last() {
+            if last >= self.set.n {
+                bail!("{}: index {last} outside 0..{}", path.display(), self.set.n);
+            }
+        }
+        let counts: Vec<usize> = {
+            let mut c = vec![0usize; self.set.num_classes];
+            for &y in &bin.labels {
+                c[y as usize] += 1;
+            }
+            c
+        };
+        if counts != meta.class_counts {
+            bail!(
+                "{}: class counts {:?} on disk, manifest says {:?}",
+                path.display(),
+                counts,
+                meta.class_counts
+            );
+        }
+        let data = Dataset {
+            x: bin.x,
+            y: bin.labels,
+            num_classes: self.set.num_classes,
+            source: path.display().to_string(),
+        };
+        Ok(Shard { data, global_idx: bin.global_idx })
     }
 
     /// Iterate over all shards in order (each loaded on demand).
@@ -314,28 +443,32 @@ pub fn stratified_assignment(
     shards
 }
 
-/// Split `ds` into (at most) `k` stratified shards under `dir`: LIBSVM
-/// shard files, index sidecars, and the manifest.  Returns the written
-/// [`ShardSet`].  Deterministic under `seed` (see
-/// [`stratified_assignment`]).
+/// Split `ds` into (at most) `k` stratified text shards under `dir`
+/// (the historical entry point — see [`write_shards_with`]).
 pub fn write_shards(ds: &Dataset, k: usize, seed: u64, dir: &Path) -> Result<ShardSet> {
+    write_shards_with(ds, k, seed, dir, ShardFormat::Text)
+}
+
+/// Split `ds` into (at most) `k` stratified shards under `dir` in the
+/// requested format: shard files (LIBSVM text + index sidecars, or
+/// `.cshard` binary) plus the manifest.  Returns the written
+/// [`ShardSet`].  Deterministic under `seed` (see
+/// [`stratified_assignment`]) — the split is format-independent, so a
+/// text and a binary set written with the same arguments hold the same
+/// rows in the same order.
+pub fn write_shards_with(
+    ds: &Dataset,
+    k: usize,
+    seed: u64,
+    dir: &Path,
+    format: ShardFormat,
+) -> Result<ShardSet> {
     std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
     let assign = stratified_assignment(&ds.y, ds.num_classes, k, seed);
     let mut metas = Vec::with_capacity(assign.len());
     for (s, idxs) in assign.iter().enumerate() {
-        let file = format!("shard_{s:04}.libsvm");
-        let idx_file = format!("shard_{s:04}.idx");
         let sub = ds.subset(idxs);
-        libsvm::save(&dir.join(&file), &sub)?;
-        let ipath = dir.join(&idx_file);
-        let f = std::fs::File::create(&ipath)
-            .with_context(|| format!("create {}", ipath.display()))?;
-        let mut w = std::io::BufWriter::new(f);
-        for &g in idxs {
-            writeln!(w, "{g}")?;
-        }
-        w.flush()?;
-        metas.push(ShardMeta { file, idx_file, n: idxs.len(), class_counts: sub.class_counts() });
+        metas.push(write_one_shard(dir, &format!("shard_{s:04}"), &sub, idxs, format)?);
     }
     let set = ShardSet {
         dir: dir.to_path_buf(),
@@ -346,6 +479,82 @@ pub fn write_shards(ds: &Dataset, k: usize, seed: u64, dir: &Path) -> Result<Sha
     };
     set.write_manifest()?;
     Ok(set)
+}
+
+/// Write one shard's file(s) under `dir/stem.*` and return its
+/// manifest entry.  `sub` holds the shard rows, `global_idx` their
+/// dataset coordinates.
+fn write_one_shard(
+    dir: &Path,
+    stem: &str,
+    sub: &Dataset,
+    global_idx: &[usize],
+    format: ShardFormat,
+) -> Result<ShardMeta> {
+    let meta = match format {
+        ShardFormat::Text => {
+            let file = format!("{stem}.libsvm");
+            let idx_file = format!("{stem}.idx");
+            libsvm::save(&dir.join(&file), sub)?;
+            let ipath = dir.join(&idx_file);
+            let f = std::fs::File::create(&ipath)
+                .with_context(|| format!("create {}", ipath.display()))?;
+            let mut w = std::io::BufWriter::new(f);
+            for &g in global_idx {
+                writeln!(w, "{g}")?;
+            }
+            w.flush()?;
+            ShardMeta {
+                file,
+                idx_file,
+                n: global_idx.len(),
+                class_counts: sub.class_counts(),
+                format,
+            }
+        }
+        ShardFormat::Binary => {
+            let file = format!("{stem}.{}", binshard::EXT);
+            binshard::write(&dir.join(&file), &sub.x, &sub.y, global_idx, sub.num_classes)?;
+            ShardMeta {
+                file,
+                idx_file: "-".into(),
+                n: global_idx.len(),
+                class_counts: sub.class_counts(),
+                format,
+            }
+        }
+    };
+    Ok(meta)
+}
+
+/// Re-encode an existing shard directory into `format` under `dst`,
+/// preserving shard boundaries, row order and global indices exactly —
+/// a format conversion, never a re-deal.  Text floats are written in
+/// shortest-round-trip form and `.cshard` stores raw bits, so the
+/// conversion is bitwise in both directions (the `craig shard convert`
+/// subcommand).
+pub fn convert_shards(src: &Path, dst: &Path, format: ShardFormat) -> Result<ShardSet> {
+    let set = ShardSet::load(src)?;
+    if src == dst {
+        bail!("convert in place is not supported: pick a different --out-dir");
+    }
+    std::fs::create_dir_all(dst).with_context(|| format!("create {}", dst.display()))?;
+    let reader = ShardReader::new(&set);
+    let mut metas = Vec::with_capacity(set.num_shards());
+    for (k, meta) in set.shards.iter().enumerate() {
+        let shard = reader.read_shard(k)?;
+        let stem = meta.file.rsplit_once('.').map(|(s, _)| s).unwrap_or(&meta.file);
+        metas.push(write_one_shard(dst, stem, &shard.data, &shard.global_idx, format)?);
+    }
+    let out = ShardSet {
+        dir: dst.to_path_buf(),
+        n: set.n,
+        d: set.d,
+        num_classes: set.num_classes,
+        shards: metas,
+    };
+    out.write_manifest()?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -427,12 +636,14 @@ mod tests {
                     idx_file: "shard_0000.idx".into(),
                     n: 16,
                     class_counts: vec![9, 7],
+                    format: ShardFormat::Text,
                 },
                 ShardMeta {
                     file: "shard_0001.libsvm".into(),
                     idx_file: "shard_0001.idx".into(),
                     n: 14,
                     class_counts: vec![7, 7],
+                    format: ShardFormat::Text,
                 },
             ],
         };
@@ -441,7 +652,69 @@ mod tests {
         assert_eq!(back.d, 5);
         assert_eq!(back.num_classes, 2);
         assert_eq!(back.shards, set.shards);
+        assert_eq!(back.format(), ShardFormat::Text);
+        // A pure-text manifest must not mention formats at all — old
+        // readers keep working on directories this build writes.
+        assert!(!set.manifest_string().contains("text"));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn binary_manifest_round_trips_and_mixed_formats_fail() {
+        let dir = PathBuf::from("/nonexistent");
+        let bin = "craig-shards v1\nn 4\nd 2\nclasses 1\n\
+                   shard a.cshard - 4 4 binary\n";
+        let set = ShardSet::parse_manifest(&dir, bin).unwrap();
+        assert_eq!(set.format(), ShardFormat::Binary);
+        assert_eq!(set.manifest_string(), bin, "binary manifest must round-trip");
+
+        let mixed = "craig-shards v1\nn 8\nd 2\nclasses 1\n\
+                     shard a.cshard - 4 4 binary\nshard b.libsvm b.idx 4 4\n";
+        let err = format!("{:#}", ShardSet::parse_manifest(&dir, mixed).unwrap_err());
+        assert!(err.contains("mixed shard formats"), "{err}");
+
+        let bad_idx = "craig-shards v1\nn 4\nd 2\nclasses 1\n\
+                       shard a.cshard a.idx 4 4 binary\n";
+        let err = format!("{:#}", ShardSet::parse_manifest(&dir, bad_idx).unwrap_err());
+        assert!(err.contains("must be '-'"), "{err}");
+
+        let bad_fmt = "craig-shards v1\nn 4\nd 2\nclasses 1\n\
+                       shard a.x a.idx 4 4 parquet\n";
+        let err = format!("{:#}", ShardSet::parse_manifest(&dir, bad_fmt).unwrap_err());
+        assert!(err.contains("unknown shard format") && err.contains("line 5"), "{err}");
+    }
+
+    #[test]
+    fn convert_round_trip_is_bitwise_both_ways() {
+        let ds = synthetic::covtype_like(120, 3);
+        let dir = tempdir("convert-src");
+        let bdir = tempdir("convert-bin");
+        let tdir = tempdir("convert-back");
+        let text = write_shards(&ds, 3, 5, &dir).unwrap();
+        let bin = convert_shards(&dir, &bdir, ShardFormat::Binary).unwrap();
+        assert_eq!(bin.format(), ShardFormat::Binary);
+        assert_eq!(bin.shard_sizes(), text.shard_sizes());
+        let (tr, br) = (ShardReader::new(&text), ShardReader::new(&bin));
+        for k in 0..text.num_shards() {
+            let (a, b) = (tr.read_shard(k).unwrap(), br.read_shard(k).unwrap());
+            assert_eq!(a.global_idx, b.global_idx);
+            assert_eq!(a.data.y, b.data.y);
+            let bits = |m: &crate::linalg::Matrix| {
+                m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(bits(&a.data.x), bits(&b.data.x), "shard {k} must convert bitwise");
+        }
+        // Converting back restores the original manifest byte-for-byte.
+        let back = convert_shards(&bdir, &tdir, ShardFormat::Text).unwrap();
+        assert_eq!(back.manifest_string(), text.manifest_string());
+        let err = format!(
+            "{:#}",
+            convert_shards(&bdir, &bdir, ShardFormat::Text).unwrap_err()
+        );
+        assert!(err.contains("in place"), "{err}");
+        for p in [&dir, &bdir, &tdir] {
+            let _ = std::fs::remove_dir_all(p);
+        }
     }
 
     #[test]

@@ -142,6 +142,14 @@ fn print_report(rep: &craig::pipeline::RunReport) {
                 "  peak_dense_bytes={} peak_resident_bytes≤{}",
                 st.peak_dense_bytes, st.peak_resident_bytes
             );
+            println!(
+                "  io {:.2}s, select {:.2}s (workers={}, prefetch={}, stall {:.2}s)",
+                st.io_seconds,
+                st.select_seconds,
+                st.workers,
+                if st.prefetch { "on" } else { "off" },
+                st.prefetch_stall_seconds
+            );
         }
     }
     if let Some(h) = &rep.history {
@@ -262,31 +270,57 @@ fn cmd_doctor(a: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `craig shard --out-dir DIR [--shards K]`: split a dataset (synthetic
-/// by name, or an on-disk LIBSVM file via `--input`) into stratified
-/// shards + manifest.  Deterministic under `--seed`.
+/// `craig shard --out-dir DIR [--shards K] [--format text|binary]`:
+/// split a dataset (synthetic by name, or an on-disk LIBSVM file via
+/// `--input`) into stratified shards + manifest, or convert an existing
+/// shard directory between formats (`--convert SRC`).  Deterministic
+/// under `--seed`; conversion is bitwise (same rows, labels, indices).
 fn cmd_shard(a: &Args) -> Result<()> {
     let out_dir = std::path::PathBuf::from(a.req("out-dir")?);
-    let k: usize = a.parse_opt("shards", 8)?;
-    let seed: u64 = a.parse_opt("seed", 0)?;
-    let ds = match a.opt("input") {
-        Some(path) => craig::data::libsvm::load(std::path::Path::new(path), None)?,
-        // The `shard` command table seeds --n's default (50000), so the
-        // shared loader's fallback never engages here.
-        None => load_dataset(a)?,
-    };
+    let format = craig::data::shard::ShardFormat::parse(a.opt("format").unwrap_or("text"))?;
     let t0 = std::time::Instant::now();
-    let set = craig::data::shard::write_shards(&ds, k, seed, &out_dir)?;
-    println!(
-        "sharded {} (n={} d={} classes={}) into {} shards in {:.2}s → {}",
-        ds.source,
-        set.n,
-        set.d,
-        set.num_classes,
-        set.num_shards(),
-        t0.elapsed().as_secs_f64(),
-        out_dir.display()
-    );
+    let set = match a.opt("convert") {
+        Some(src) => {
+            let set = craig::data::shard::convert_shards(
+                std::path::Path::new(src),
+                &out_dir,
+                format,
+            )?;
+            println!(
+                "converted {src} → {} ({} shards, n={} d={}) in {:.2}s",
+                out_dir.display(),
+                set.num_shards(),
+                set.n,
+                set.d,
+                t0.elapsed().as_secs_f64(),
+            );
+            set
+        }
+        None => {
+            let k: usize = a.parse_opt("shards", 8)?;
+            let seed: u64 = a.parse_opt("seed", 0)?;
+            let ds = match a.opt("input") {
+                Some(path) => craig::data::libsvm::load(std::path::Path::new(path), None)?,
+                // The `shard` command table seeds --n's default (50000),
+                // so the shared loader's fallback never engages here.
+                None => load_dataset(a)?,
+            };
+            let set =
+                craig::data::shard::write_shards_with(&ds, k, seed, &out_dir, format)?;
+            println!(
+                "sharded {} (n={} d={} classes={}) into {} {} shards in {:.2}s → {}",
+                ds.source,
+                set.n,
+                set.d,
+                set.num_classes,
+                set.num_shards(),
+                format.name(),
+                t0.elapsed().as_secs_f64(),
+                out_dir.display()
+            );
+            set
+        }
+    };
     for (i, m) in set.shards.iter().enumerate() {
         println!("  shard {i:>3}: {:<22} n={:<7} classes={:?}", m.file, m.n, m.class_counts);
     }

@@ -20,7 +20,7 @@ use anyhow::Result;
 use crate::coreset::SimStorePolicy;
 use crate::data::shard::ShardSet;
 use crate::runtime;
-use crate::spec::{DataSpec, RunSpec};
+use crate::spec::{DataSpec, RunSpec, ShardFormatSpec};
 use crate::util::{git_rev, GIT_REV_UNKNOWN};
 
 use super::replay::parse_manifest;
@@ -74,6 +74,9 @@ pub fn run_checks(spec: Option<&RunSpec>, manifest: Option<&Path>) -> Vec<Check>
             checks.push(backend_check(&s.engine));
             checks.push(data_check(s));
             if let Some(c) = memory_check(s) {
+                checks.push(c);
+            }
+            if let Some(c) = prefetch_check(s) {
                 checks.push(c);
             }
         }
@@ -135,18 +138,38 @@ fn data_check(spec: &RunSpec) -> Check {
                 Check::new("data", CheckStatus::Fail, format!("libsvm:{path} not found"))
             }
         }
-        DataSpec::ShardDir { dir } => match ShardSet::load(Path::new(dir)) {
-            Ok(set) => Check::new(
-                "data",
-                CheckStatus::Ok,
-                format!(
-                    "shard-dir:{dir} — {} shards, n = {}, d = {}, {} classes",
-                    set.shards.len(),
-                    set.n,
-                    set.d,
-                    set.num_classes
-                ),
-            ),
+        DataSpec::ShardDir { dir, format } => match ShardSet::load(Path::new(dir)) {
+            Ok(set) => {
+                let want = match format {
+                    ShardFormatSpec::Auto => None,
+                    ShardFormatSpec::Text => Some(crate::data::shard::ShardFormat::Text),
+                    ShardFormatSpec::Binary => Some(crate::data::shard::ShardFormat::Binary),
+                };
+                match want {
+                    Some(w) if set.format() != w => Check::new(
+                        "data",
+                        CheckStatus::Fail,
+                        format!(
+                            "shard-dir:{dir} holds {} shards but the spec expects {} \
+                             (data.shard_format)",
+                            set.format().name(),
+                            w.name()
+                        ),
+                    ),
+                    _ => Check::new(
+                        "data",
+                        CheckStatus::Ok,
+                        format!(
+                            "shard-dir:{dir} — {} {} shards, n = {}, d = {}, {} classes",
+                            set.shards.len(),
+                            set.format().name(),
+                            set.n,
+                            set.d,
+                            set.num_classes
+                        ),
+                    ),
+                }
+            }
             Err(e) => Check::new("data", CheckStatus::Fail, format!("shard-dir:{dir}: {e:#}")),
         },
     }
@@ -164,11 +187,11 @@ fn data_check(spec: &RunSpec) -> Check {
 fn memory_check(spec: &RunSpec) -> Option<Check> {
     let n = match &spec.data {
         DataSpec::Synthetic { n, .. } => *n,
-        DataSpec::ShardDir { dir } => ShardSet::load(Path::new(dir)).ok()?.n,
+        DataSpec::ShardDir { dir, .. } => ShardSet::load(Path::new(dir)).ok()?.n,
         DataSpec::Libsvm { .. } => return None,
     };
     let shards = match &spec.data {
-        DataSpec::ShardDir { dir } => {
+        DataSpec::ShardDir { dir, .. } => {
             ShardSet::load(Path::new(dir)).ok()?.shards.len().max(1)
         }
         _ => spec.selection.stream_shards.max(1),
@@ -207,6 +230,47 @@ fn memory_check(spec: &RunSpec) -> Option<Check> {
             CheckStatus::Ok,
             format!("store = blocked (no dense buffer; {rows} rows/shard)"),
         ),
+    };
+    Some(check)
+}
+
+/// Prefetch residency estimate (shard-dir sources with
+/// `selection.prefetch = true` only): each worker lane keeps up to
+/// three decoded shards resident (the one being selected on, one
+/// parked in the channel, one being decoded) plus its dense
+/// similarity buffer at the kernel tier's element width — the same
+/// accounting [`crate::coreset::StreamStats::peak_resident_bytes`]
+/// reports after the fact.  Over an `Auto` budget this is a *warning*:
+/// the run stays correct, it just holds more decoded rows than a
+/// synchronous pass would.
+fn prefetch_check(spec: &RunSpec) -> Option<Check> {
+    if !spec.selection.prefetch {
+        return None;
+    }
+    let DataSpec::ShardDir { dir, .. } = &spec.data else { return None };
+    let set = ShardSet::load(Path::new(dir)).ok()?;
+    let rows = set.shards.iter().map(|m| m.n).max().unwrap_or(0);
+    let shard_bytes = (rows as u128) * (set.d as u128) * 4;
+    let dense_bytes = SimStorePolicy::dense_bytes_for(rows, spec.selection.kernel);
+    let workers = spec.selection.workers.max(1).min(set.shards.len().max(1)) as u128;
+    let resident = workers * (3 * shard_bytes + dense_bytes);
+    let detail = format!(
+        "prefetch keeps ≈ {resident} B resident ({workers} lane(s) × (3 × {shard_bytes} B \
+         decoded shards + {dense_bytes} B dense buffer, kernel = {}))",
+        spec.selection.kernel.name()
+    );
+    let check = match spec.selection.store {
+        SimStorePolicy::Auto { mem_budget_bytes } if resident > mem_budget_bytes as u128 => {
+            Check::new(
+                "prefetch",
+                CheckStatus::Warn,
+                format!(
+                    "{detail} exceeds the {mem_budget_bytes} B budget — lower \
+                     selection.workers or turn prefetch off to shrink residency"
+                ),
+            )
+        }
+        _ => Check::new("prefetch", CheckStatus::Ok, detail),
     };
     Some(check)
 }
@@ -344,6 +408,45 @@ mod tests {
         let c = mem(&spec);
         assert_eq!(c.status, CheckStatus::Ok);
         assert!(c.detail.contains("f16") && c.detail.contains("tiled-f32"), "{}", c.detail);
+    }
+
+    #[test]
+    fn prefetch_and_format_checks_on_a_shard_dir() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("craig-doctor-prefetch-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = crate::data::synthetic::covtype_like(180, 7);
+        crate::data::shard::write_shards(&ds, 3, 1, &dir).unwrap();
+        let spec = RunSpec::builder("p")
+            .shard_dir(dir.to_str().unwrap())
+            .count(20)
+            .workers(2)
+            .prefetch(true)
+            .build()
+            .unwrap();
+        let checks = run_checks(Some(&spec), None);
+        assert!(!any_failed(&checks), "{checks:?}");
+        let pf = checks.iter().find(|c| c.name == "prefetch").expect("prefetch check");
+        assert!(pf.detail.contains("3 ×"), "{}", pf.detail);
+        // A starved Auto budget downgrades to Warn, never Fail.
+        let mut tight = spec.clone();
+        tight.selection.store = crate::coreset::SimStorePolicy::Auto { mem_budget_bytes: 16 };
+        let checks = run_checks(Some(&tight), None);
+        assert!(!any_failed(&checks), "{checks:?}");
+        let pf = checks.iter().find(|c| c.name == "prefetch").unwrap();
+        assert_eq!(pf.status, CheckStatus::Warn);
+        // An explicit format expectation that disagrees with the
+        // directory is a hard Fail.
+        let mut wrong = spec.clone();
+        wrong.data = crate::spec::DataSpec::ShardDir {
+            dir: dir.to_str().unwrap().to_string(),
+            format: ShardFormatSpec::Binary,
+        };
+        let checks = run_checks(Some(&wrong), None);
+        assert!(any_failed(&checks), "{checks:?}");
+        let data = checks.iter().find(|c| c.name == "data").unwrap();
+        assert!(data.detail.contains("expects binary"), "{}", data.detail);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

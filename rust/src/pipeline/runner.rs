@@ -37,7 +37,7 @@ use crate::optim::schedules::Warmup;
 use crate::optim::LrSchedule;
 use crate::rng::Rng;
 use crate::runtime;
-use crate::spec::{method_name, DataSpec, RunSpec, SelectionMode, TrainSpec};
+use crate::spec::{method_name, DataSpec, RunSpec, SelectionMode, ShardFormatSpec, TrainSpec};
 use crate::trace::{self, Trace};
 use crate::trainer::convex::{train_logreg, ConvexConfig};
 use crate::trainer::neural::{train_mlp, NeuralConfig};
@@ -140,7 +140,7 @@ impl Runner {
         }
         let t_total = Instant::now();
         let mut report = match &spec.data {
-            DataSpec::ShardDir { dir } => self.run_shard_dir(spec, dir)?,
+            DataSpec::ShardDir { dir, format } => self.run_shard_dir(spec, dir, *format)?,
             _ => self.run_in_memory(spec)?,
         };
         report.timings.total_s = t_total.elapsed().as_secs_f64();
@@ -159,7 +159,7 @@ impl Runner {
         let source = match &report.spec.data {
             DataSpec::Synthetic { dataset, .. } => format!("synthetic:{dataset}"),
             DataSpec::Libsvm { path } => format!("libsvm:{path}"),
-            DataSpec::ShardDir { dir } => format!("shard-dir:{dir}"),
+            DataSpec::ShardDir { dir, .. } => format!("shard-dir:{dir}"),
         };
         t.emit(
             "load",
@@ -196,7 +196,13 @@ impl Runner {
                     "shard",
                     &format!("shard:{}", s.shard),
                     Some(s.seconds),
-                    &[("n", trace::int(s.n)), ("selected", trace::int(s.selected))],
+                    &[
+                        ("n", trace::int(s.n)),
+                        ("selected", trace::int(s.selected)),
+                        ("io_s", trace::num(s.io_s)),
+                        ("select_s", trace::num(s.select_s)),
+                        ("prefetch_stall_s", trace::num(s.prefetch_stall_s)),
+                    ],
                 )?;
             }
             t.emit(
@@ -348,16 +354,39 @@ impl Runner {
     /// an `Auto` store policy ever let a dense buffer exceed its budget
     /// (it cannot, by construction — the check turns the invariant into
     /// a CI-visible guarantee).
-    fn run_shard_dir(&mut self, spec: &RunSpec, dir: &str) -> Result<RunReport> {
+    fn run_shard_dir(
+        &mut self,
+        spec: &RunSpec,
+        dir: &str,
+        format: ShardFormatSpec,
+    ) -> Result<RunReport> {
         let t_load = Instant::now();
         let set = ShardSet::load(Path::new(dir))?;
         let load_s = t_load.elapsed().as_secs_f64();
+        // `data.shard_format = auto` takes whatever the manifest records;
+        // an explicit expectation must match the directory, loudly.
+        let expected = match format {
+            ShardFormatSpec::Auto => None,
+            ShardFormatSpec::Text => Some(crate::data::shard::ShardFormat::Text),
+            ShardFormatSpec::Binary => Some(crate::data::shard::ShardFormat::Binary),
+        };
+        if let Some(want) = expected {
+            anyhow::ensure!(
+                set.format() == want,
+                "{dir}: data.shard_format = \"{}\" but the directory holds {} shards \
+                 (re-run `craig shard --convert {dir} --format {} --out-dir NEW`)",
+                want.name(),
+                set.format().name(),
+                want.name(),
+            );
+        }
         let mut engine = runtime::backend_by_name(&spec.engine)?.pairwise()?;
         let mut report = blank_report(spec, engine.name(), set.n, set.d, set.num_classes);
         report.timings.load_s = load_s;
 
         let mut scfg = StreamConfig::new(spec.selector_config());
         scfg.workers = spec.selection.workers;
+        scfg.prefetch = spec.selection.prefetch;
         if let Some(b) = spec.selection.shard_budget {
             scfg.shard_budget = Some(Budget::Count(b));
         }
@@ -515,9 +544,20 @@ impl RunReport {
             self.dataset_n, self.dataset_d, self.dataset_classes
         ));
         if with_timings {
+            // The stream I/O split rides in `phases` (replay skips this
+            // object, so wall-clock values never fail a bitwise compare).
+            let stream_split = match &self.stream {
+                None => String::new(),
+                Some(st) => format!(
+                    ", \"stream_io_s\": {}, \"stream_select_s\": {}, \"prefetch_stall_s\": {}",
+                    json_num(st.io_seconds),
+                    json_num(st.select_seconds),
+                    json_num(st.prefetch_stall_seconds)
+                ),
+            };
             s.push_str(&format!(
                 "  \"phases\": {{\"load_s\": {}, \"select_s\": {}, \"train_s\": {}, \
-                 \"total_s\": {}}},\n",
+                 \"total_s\": {}{stream_split}}},\n",
                 json_num(self.timings.load_s),
                 json_num(self.timings.select_s),
                 json_num(self.timings.train_s),
@@ -550,13 +590,16 @@ impl RunReport {
             None => s.push_str("  \"stream\": null,\n"),
             Some(st) => s.push_str(&format!(
                 "  \"stream\": {{\"shards\": {}, \"union_size\": {}, \"merge_ratio\": {}, \
-                 \"peak_dense_bytes\": {}, \"peak_resident_bytes\": {}, \"evaluations\": {}}},\n",
+                 \"peak_dense_bytes\": {}, \"peak_resident_bytes\": {}, \"evaluations\": {}, \
+                 \"workers\": {}, \"prefetch\": {}}},\n",
                 st.shards,
                 st.union_size,
                 json_num(st.merge_ratio),
                 st.peak_dense_bytes,
                 st.peak_resident_bytes,
-                st.evaluations
+                st.evaluations,
+                st.workers,
+                st.prefetch
             )),
         }
         match &self.diagnostics {

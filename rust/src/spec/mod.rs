@@ -50,7 +50,44 @@ pub enum DataSpec {
     Libsvm { path: String },
     /// A stratified shard directory written by `craig shard` — selection
     /// runs out-of-core merge-and-reduce over it.
-    ShardDir { dir: String },
+    ShardDir {
+        dir: String,
+        /// Expected shard encoding (`data.shard_format`); the run fails
+        /// loudly if the directory's manifest disagrees.
+        format: ShardFormatSpec,
+    },
+}
+
+/// What shard encoding a shard-dir source is expected to hold.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardFormatSpec {
+    /// Take whatever the directory's manifest records (the manifest
+    /// already rejects mixed directories).
+    #[default]
+    Auto,
+    /// Assert LIBSVM text shards.
+    Text,
+    /// Assert `.cshard` binary shards.
+    Binary,
+}
+
+impl ShardFormatSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(ShardFormatSpec::Auto),
+            "text" => Ok(ShardFormatSpec::Text),
+            "binary" => Ok(ShardFormatSpec::Binary),
+            other => bail!("unknown shard format '{other}' (auto|text|binary)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardFormatSpec::Auto => "auto",
+            ShardFormatSpec::Text => "text",
+            ShardFormatSpec::Binary => "binary",
+        }
+    }
 }
 
 /// What per-sample vectors selection measures distances over.
@@ -132,6 +169,9 @@ pub struct SelectionSpec {
     pub workers: usize,
     /// Explicit per-shard element budget (shard-dir sources only).
     pub shard_budget: Option<usize>,
+    /// Overlap shard I/O with selection via per-lane prefetch threads
+    /// (shard-dir sources only; output-invariant).
+    pub prefetch: bool,
 }
 
 impl Default for SelectionSpec {
@@ -146,6 +186,7 @@ impl Default for SelectionSpec {
             parallelism: 1,
             workers: 1,
             shard_budget: None,
+            prefetch: false,
         }
     }
 }
@@ -296,6 +337,13 @@ fn g_u64(cfg: &Config, key: &str, default: u64) -> Result<u64> {
     cfg.uint(key).map_err(|e| at_line(cfg, key, e))
 }
 
+fn g_bool(cfg: &Config, key: &str, default: bool) -> Result<bool> {
+    if cfg.get(key).is_none() {
+        return Ok(default);
+    }
+    cfg.bool(key).map_err(|e| at_line(cfg, key, e))
+}
+
 /// The full key vocabulary, used to tell "unknown key" apart from
 /// "known key, wrong context" in rejection messages.
 const ALL_KEYS: &[&str] = &[
@@ -307,6 +355,7 @@ const ALL_KEYS: &[&str] = &[
     "data.n",
     "data.path",
     "data.dir",
+    "data.shard_format",
     "embedding.kind",
     "embedding.metric",
     "selection.mode",
@@ -322,6 +371,7 @@ const ALL_KEYS: &[&str] = &[
     "selection.parallelism",
     "selection.workers",
     "selection.shard_budget",
+    "selection.prefetch",
     "train.kind",
     "train.method",
     "train.epochs",
@@ -361,7 +411,13 @@ fn allowed_keys(data_kind: &str, train_kind: &str, method: &str, store: &str) ->
     ];
     match data_kind {
         "libsvm" => v.push("data.path"),
-        "shard-dir" => v.extend(["data.dir", "selection.workers", "selection.shard_budget"]),
+        "shard-dir" => v.extend([
+            "data.dir",
+            "data.shard_format",
+            "selection.workers",
+            "selection.shard_budget",
+            "selection.prefetch",
+        ]),
         // Unknown kinds already erred; everything else is synthetic.
         _ => v.extend(["data.dataset", "data.n"]),
     }
@@ -468,7 +524,11 @@ impl RunSpec {
 
         let data = match data_kind.as_str() {
             "libsvm" => DataSpec::Libsvm { path: g_req_str(cfg, "data.path")? },
-            "shard-dir" => DataSpec::ShardDir { dir: g_req_str(cfg, "data.dir")? },
+            "shard-dir" => DataSpec::ShardDir {
+                dir: g_req_str(cfg, "data.dir")?,
+                format: ShardFormatSpec::parse(&g_str(cfg, "data.shard_format", "auto")?)
+                    .map_err(|e| at_line(cfg, "data.shard_format", e))?,
+            },
             _ => DataSpec::Synthetic {
                 dataset: g_str(cfg, "data.dataset", "covtype")?,
                 n: g_usize(cfg, "data.n", 10_000)?,
@@ -525,6 +585,7 @@ impl RunSpec {
             parallelism: g_usize(cfg, "selection.parallelism", 1)?,
             workers: g_usize(cfg, "selection.workers", 1)?,
             shard_budget,
+            prefetch: g_bool(cfg, "selection.prefetch", false)?,
         };
 
         let train = match train_kind.as_str() {
@@ -578,7 +639,7 @@ impl RunSpec {
         match &self.data {
             DataSpec::Synthetic { dataset, .. } => check_plain("data.dataset", dataset)?,
             DataSpec::Libsvm { path } => check_plain("data.path", path)?,
-            DataSpec::ShardDir { dir } => check_plain("data.dir", dir)?,
+            DataSpec::ShardDir { dir, .. } => check_plain("data.dir", dir)?,
         }
         for (field, v) in [
             ("output.coreset_csv", &self.output.coreset_csv),
@@ -622,6 +683,12 @@ impl RunSpec {
             }
             if self.selection.shard_budget.is_some() {
                 bail!("selection.shard_budget applies only to a shard-dir source");
+            }
+            if self.selection.prefetch {
+                bail!(
+                    "selection.prefetch applies only to a shard-dir source \
+                     (in-memory shards have no I/O to overlap)"
+                );
             }
         }
         if let DataSpec::Synthetic { n, .. } = &self.data {
@@ -703,9 +770,10 @@ impl RunSpec {
                 let _ = writeln!(w, "kind = \"libsvm\"");
                 let _ = writeln!(w, "path = \"{path}\"");
             }
-            DataSpec::ShardDir { dir } => {
+            DataSpec::ShardDir { dir, format } => {
                 let _ = writeln!(w, "kind = \"shard-dir\"");
                 let _ = writeln!(w, "dir = \"{dir}\"");
+                let _ = writeln!(w, "shard_format = \"{}\"", format.name());
             }
         }
         let _ = writeln!(w, "\n[embedding]");
@@ -750,6 +818,7 @@ impl RunSpec {
             if let Some(b) = self.selection.shard_budget {
                 let _ = writeln!(w, "shard_budget = {b}");
             }
+            let _ = writeln!(w, "prefetch = {}", self.selection.prefetch);
         }
         let _ = writeln!(w, "\n[train]");
         let _ = writeln!(w, "kind = \"{}\"", self.train.kind_name());
@@ -828,7 +897,17 @@ impl RunSpecBuilder {
     }
 
     pub fn shard_dir(mut self, dir: &str) -> Self {
-        self.spec.data = DataSpec::ShardDir { dir: dir.to_string() };
+        self.spec.data =
+            DataSpec::ShardDir { dir: dir.to_string(), format: ShardFormatSpec::default() };
+        self
+    }
+
+    /// Expected on-disk shard format; only meaningful after
+    /// [`RunSpecBuilder::shard_dir`] (no-op otherwise).
+    pub fn shard_format(mut self, format: ShardFormatSpec) -> Self {
+        if let DataSpec::ShardDir { format: f, .. } = &mut self.spec.data {
+            *f = format;
+        }
         self
     }
 
@@ -895,6 +974,11 @@ impl RunSpecBuilder {
 
     pub fn shard_budget(mut self, per_shard: usize) -> Self {
         self.spec.selection.shard_budget = Some(per_shard);
+        self
+    }
+
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.spec.selection.prefetch = on;
         self
     }
 
@@ -1055,6 +1139,26 @@ mod tests {
     }
 
     #[test]
+    fn shard_format_and_prefetch_are_shard_dir_only() {
+        let err = RunSpec::parse("[selection]\nprefetch = true\n").unwrap_err().to_string();
+        assert!(err.contains("selection.prefetch") && err.contains("not valid"), "{err}");
+        let text = "[data]\nkind = \"shard-dir\"\ndir = \"x\"\nshard_format = \"parquet\"\n";
+        let err = RunSpec::parse(text).unwrap_err().to_string();
+        assert!(err.contains("line 4") && err.contains("parquet"), "{err}");
+        let text = "[data]\nkind = \"synthetic\"\nshard_format = \"binary\"\n";
+        let err = RunSpec::parse(text).unwrap_err().to_string();
+        assert!(err.contains("shard_format"), "{err}");
+        let text = "[data]\nkind = \"shard-dir\"\ndir = \"x\"\nshard_format = \"binary\"\n\
+                    [selection]\nprefetch = true\n";
+        let spec = RunSpec::parse(text).unwrap();
+        assert!(matches!(
+            spec.data,
+            DataSpec::ShardDir { ref dir, format: ShardFormatSpec::Binary } if dir == "x"
+        ));
+        assert!(spec.selection.prefetch);
+    }
+
+    #[test]
     fn non_serializable_strings_rejected() {
         // The TOML subset has no escapes: strings that would corrupt
         // to_toml() are rejected up front, keeping the round-trip
@@ -1106,6 +1210,14 @@ mod tests {
                 .count(50)
                 .workers(3)
                 .shard_budget(64)
+                .build()
+                .unwrap(),
+            RunSpec::builder("s4b")
+                .shard_dir("/tmp/shards")
+                .shard_format(ShardFormatSpec::Binary)
+                .count(50)
+                .workers(2)
+                .prefetch(true)
                 .build()
                 .unwrap(),
             RunSpec::builder("s5")

@@ -22,7 +22,7 @@ use crate::trainer::EmbeddingKind;
 
 use super::{
     method_from_name, DataSpec, EmbeddingSpec, OutputSpec, RunSpec, SelectionMode, SelectionSpec,
-    TrainSpec,
+    ShardFormatSpec, TrainSpec,
 };
 
 /// The `craig` command table (one source of truth for `main` and the
@@ -69,6 +69,8 @@ pub fn app() -> App {
                 .opt("input", "LIBSVM file to shard (overrides --dataset)")
                 .opt_default("shards", "8", "shard count K")
                 .opt_default("seed", "0", "rng seed (data gen + stratified deal)")
+                .opt_default("format", "text", "on-disk shard format: text|binary")
+                .opt("convert", "convert an existing shard dir to --format (src dir)")
                 .opt("out-dir", "output directory for shards + manifest (required)"),
             Command::new("select-stream", "out-of-core CRAIG over shards (shim over `run`)")
                 .opt("shards-dir", "shard directory written by `craig shard` (required)")
@@ -84,6 +86,8 @@ pub fn app() -> App {
                 .opt_default("mem-budget", "1073741824", "auto-store byte budget per class")
                 .opt_default("kernel", "reference", "kernel tier: reference|tiled|tiled-f32")
                 .opt_default("engine", "auto", "reduce-round backend: native|xla|auto")
+                .opt_default("shard-format", "auto", "expected on-disk format: auto|text|binary")
+                .flag("prefetch", "decode shard k+1 while selecting on shard k")
                 .opt("out", "CSV path for the selected coreset")
                 .flag("print-spec", "print the equivalent spec file and exit"),
             Command::new("train", "convex logreg experiment (shim over `run`)")
@@ -160,6 +164,7 @@ fn common_selection(
         parallelism: a.parse_opt("parallelism", 1)?,
         workers: 1,
         shard_budget: None,
+        prefetch: false,
     })
 }
 
@@ -222,11 +227,15 @@ pub fn spec_for_select_stream(a: &Args) -> Result<RunSpec> {
     if a.opt("shard-budget").is_some() {
         selection.shard_budget = Some(a.parse_opt("shard-budget", 0)?);
     }
+    selection.prefetch = a.flag("prefetch");
     let spec = RunSpec {
         name: "select-stream".to_string(),
         seed: a.parse_opt("seed", 0)?,
         engine: a.opt("engine").unwrap_or("auto").to_string(),
-        data: DataSpec::ShardDir { dir: a.req("shards-dir")?.to_string() },
+        data: DataSpec::ShardDir {
+            dir: a.req("shards-dir")?.to_string(),
+            format: ShardFormatSpec::parse(a.opt("shard-format").unwrap_or("auto"))?,
+        },
         embedding: embedding(a, EmbeddingKind::RawFeatures)?,
         selection,
         train: TrainSpec::None,
@@ -362,11 +371,33 @@ mod tests {
             &["--shards-dir", "/tmp/s", "--count", "64", "--workers", "2", "--shard-budget", "9"],
         );
         let spec = spec_for_select_stream(&a).unwrap();
-        assert_eq!(spec.data, DataSpec::ShardDir { dir: "/tmp/s".into() });
+        assert_eq!(
+            spec.data,
+            DataSpec::ShardDir { dir: "/tmp/s".into(), format: ShardFormatSpec::Auto }
+        );
         assert_eq!(spec.selection.budget, Budget::Count(64));
         assert_eq!(spec.selection.workers, 2);
         assert_eq!(spec.selection.shard_budget, Some(9));
+        assert!(!spec.selection.prefetch);
         assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+    }
+
+    #[test]
+    fn select_stream_prefetch_and_format_desugar() {
+        let a = args_for(
+            "select-stream",
+            &["--shards-dir", "/tmp/s", "--shard-format", "binary", "--prefetch"],
+        );
+        let spec = spec_for_select_stream(&a).unwrap();
+        assert_eq!(
+            spec.data,
+            DataSpec::ShardDir { dir: "/tmp/s".into(), format: ShardFormatSpec::Binary }
+        );
+        assert!(spec.selection.prefetch);
+        assert_eq!(RunSpec::parse(&spec.to_toml()).unwrap(), spec);
+        let a = args_for("select-stream", &["--shards-dir", "/tmp/s", "--shard-format", "zarr"]);
+        let err = spec_for_select_stream(&a).unwrap_err().to_string();
+        assert!(err.contains("zarr"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Property suite for the `.cshard` binary codec (ISSUE 8 satellite):
+//!
+//! * encode → decode is bitwise (feature bits, labels, global indices)
+//!   for both the dense and the CSR-sparse layout, over generated
+//!   datasets salted with `0.0`, `-0.0` and subnormals — the values a
+//!   value-based (rather than bit-based) sparsity rule would corrupt;
+//! * `LoadMode::Mmap` decodes to the same shard as `LoadMode::Read`;
+//! * text → binary → text shard-directory conversion reproduces every
+//!   row, label and global index bitwise;
+//! * every single-byte corruption and every strict truncation of a
+//!   `.cshard` file is rejected with a positioned error — no flipped
+//!   bit is silently absorbed (each section carries a CRC-32).
+
+use std::path::PathBuf;
+
+use craig::data::binshard::{self, Layout, LoadMode};
+use craig::data::shard::{convert_shards, write_shards, ShardFormat, ShardReader};
+use craig::data::Dataset;
+use craig::linalg::Matrix;
+use craig::prop::{forall, Gen};
+use craig::rng::Rng;
+
+fn tempdir(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("craig-binshard-prop-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// One generated shard: `(n, d, feature values, labels, num_classes)`.
+/// Values mix exact zeros, negative zero, subnormals and ordinary
+/// floats so bitwise round-trips are actually exercised.
+struct ShardGen;
+
+impl Gen for ShardGen {
+    type Item = (usize, usize, Vec<f32>, Vec<u32>, usize);
+
+    fn gen(&self, rng: &mut Rng) -> Self::Item {
+        let n = rng.range(1, 33);
+        let d = rng.range(1, 13);
+        let classes = rng.range(1, 5);
+        let vals = (0..n * d)
+            .map(|_| match rng.range(0, 10) {
+                0..=4 => 0.0f32,
+                5 => -0.0,
+                6 => f32::MIN_POSITIVE / 4.0,
+                7 => -1.5e-38,
+                _ => rng.uniform(-10.0, 10.0) as f32,
+            })
+            .collect();
+        let labels = (0..n).map(|_| rng.range(0, classes) as u32).collect();
+        (n, d, vals, labels, classes)
+    }
+}
+
+fn ascending_idx(n: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let mut g = rng.range(0, 5);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(g);
+        g += 1 + rng.range(0, 3);
+    }
+    out
+}
+
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn encode_decode_is_bitwise_for_both_layouts_and_load_modes() {
+    let dir = tempdir("codec");
+    forall(41, 60, &ShardGen, |(n, d, vals, labels, classes)| {
+        let x = Matrix::from_vec(*n, *d, vals.clone());
+        let idx = ascending_idx(*n, (*n * 31 + *d) as u64);
+        for layout in [Layout::Dense, Layout::Sparse, Layout::Auto] {
+            let path = dir.join(format!("case-{n}x{d}-{layout:?}.cshard"));
+            binshard::write_with(&path, &x, labels, &idx, *classes, layout)
+                .map_err(|e| format!("write {layout:?}: {e:#}"))?;
+            for mode in [LoadMode::Read, LoadMode::Mmap] {
+                let back = binshard::read(&path, mode)
+                    .map_err(|e| format!("read {layout:?}/{mode:?}: {e:#}"))?;
+                if bits(&back.x) != bits(&x) {
+                    return Err(format!("{layout:?}/{mode:?}: feature bits diverged"));
+                }
+                if back.labels != *labels || back.global_idx != idx {
+                    return Err(format!("{layout:?}/{mode:?}: labels/indices diverged"));
+                }
+                if back.num_classes != *classes {
+                    return Err(format!("{layout:?}/{mode:?}: num_classes diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn text_binary_text_conversion_is_bitwise() {
+    let dir = tempdir("convert");
+    forall(42, 12, &ShardGen, |(n, d, vals, labels, _classes)| {
+        // Tighten num_classes to the labels actually drawn so the
+        // dataset's class table is consistent with its rows.
+        let classes = (*labels.iter().max().unwrap_or(&0) + 1) as usize;
+        let ds = Dataset {
+            x: Matrix::from_vec(*n, *d, vals.clone()),
+            y: labels.clone(),
+            num_classes: classes,
+            source: "prop".into(),
+        };
+        let text_dir = dir.join(format!("t-{n}x{d}"));
+        let bin_dir = dir.join(format!("b-{n}x{d}"));
+        let back_dir = dir.join(format!("tt-{n}x{d}"));
+        let text = write_shards(&ds, 3, 5, &text_dir).map_err(|e| format!("write: {e:#}"))?;
+        let bin = convert_shards(&text_dir, &bin_dir, ShardFormat::Binary)
+            .map_err(|e| format!("to binary: {e:#}"))?;
+        let back = convert_shards(&bin_dir, &back_dir, ShardFormat::Text)
+            .map_err(|e| format!("back to text: {e:#}"))?;
+        if back.manifest_string() != text.manifest_string() {
+            return Err("text manifest did not survive the round trip".into());
+        }
+        let readers = [ShardReader::new(&text), ShardReader::new(&bin), ShardReader::new(&back)];
+        for k in 0..text.num_shards() {
+            let shards: Vec<_> = readers
+                .iter()
+                .map(|r| r.read_shard(k).map_err(|e| format!("shard {k}: {e:#}")))
+                .collect::<Result<_, _>>()?;
+            for (tag, s) in [("binary", &shards[1]), ("round-trip", &shards[2])] {
+                if bits(&s.data.x) != bits(&shards[0].data.x)
+                    || s.data.y != shards[0].data.y
+                    || s.global_idx != shards[0].global_idx
+                {
+                    return Err(format!("shard {k}: {tag} leg diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_single_byte_corruption_and_truncation_is_rejected() {
+    // Every byte of a `.cshard` file is covered by some CRC (or is the
+    // CRC itself), so any one-byte flip must surface as an error — and
+    // the error must say where.  Exhaustive over a small file.
+    let dir = tempdir("corrupt");
+    let x = Matrix::from_vec(3, 2, vec![1.0, -0.0, 0.0, 2.5, -3.25, 4.0]);
+    let path = dir.join("victim.cshard");
+    binshard::write(&path, &x, &[0, 1, 0], &[2, 4, 9], 2).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert!(binshard::read(&path, LoadMode::Read).is_ok());
+
+    for pos in 0..good.len() {
+        let mut bad = good.clone();
+        bad[pos] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let err = binshard::read(&path, LoadMode::Read)
+            .err()
+            .unwrap_or_else(|| panic!("flip at byte {pos} was silently accepted"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checksum mismatch")
+                || msg.contains("header")
+                || msg.contains("magic")
+                || msg.contains("version")
+                || msg.contains("flag")
+                || msg.contains("truncated"),
+            "flip at byte {pos}: unpositioned error: {msg}"
+        );
+    }
+    for cut in 0..good.len() {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        let err = binshard::read(&path, LoadMode::Read)
+            .err()
+            .unwrap_or_else(|| panic!("truncation to {cut} bytes was silently accepted"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("truncated") || msg.contains("checksum mismatch"),
+            "truncation to {cut}: {msg}"
+        );
+    }
+    // Trailing garbage is rejected too.
+    let mut long = good.clone();
+    long.extend_from_slice(&[0u8; 3]);
+    std::fs::write(&path, &long).unwrap();
+    let msg = format!("{:#}", binshard::read(&path, LoadMode::Read).unwrap_err());
+    assert!(msg.contains("trailing"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

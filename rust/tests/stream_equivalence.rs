@@ -7,7 +7,11 @@
 //!   in-memory objective on synthetic mixtures;
 //! * shard manifests round-trip and reassemble the dataset bitwise;
 //! * sharding and streaming are deterministic under the seed and
-//!   invariant to worker count.
+//!   invariant to worker count;
+//! * (ISSUE 8) converted `.cshard` binary shards with prefetch on
+//!   reproduce the text/synchronous stream bitwise at every worker
+//!   count — the format and the overlap change *when* bytes are read,
+//!   never *what* is selected.
 
 use std::path::PathBuf;
 
@@ -15,7 +19,7 @@ use craig::coreset::{
     self, Budget, DenseSim, FacilityLocation, MemShards, NativePairwise, SelectorConfig,
     SimStorePolicy, StreamConfig, StreamingSelector,
 };
-use craig::data::shard::{write_shards, ShardSet};
+use craig::data::shard::{convert_shards, write_shards, ShardFormat, ShardSet};
 use craig::data::synthetic;
 
 fn tempdir(tag: &str) -> PathBuf {
@@ -49,11 +53,22 @@ fn one_shard_stream_bitwise_reproduces_in_memory_select() {
     let dir = tempdir("one-shard");
     let set = write_shards(&ds, 1, cfg.seed, &dir).unwrap();
     let (disk_res, _) = StreamingSelector::new(2)
-        .select(&set, &StreamConfig::new(cfg), &mut eng)
+        .select(&set, &StreamConfig::new(cfg.clone()), &mut eng)
         .unwrap();
     assert_eq!(disk_res.coreset.indices, inmem.coreset.indices, "disk path diverged");
     assert_eq!(disk_res.coreset.gamma, inmem.coreset.gamma);
+
+    // Binary leg: the converted `.cshard` shard decodes to the same
+    // rows, so the stream over it must also match bitwise.
+    let bin_dir = tempdir("one-shard-bin");
+    let bin_set = convert_shards(&dir, &bin_dir, ShardFormat::Binary).unwrap();
+    let (bin_res, _) = StreamingSelector::new(2)
+        .select(&bin_set, &StreamConfig::new(cfg), &mut eng)
+        .unwrap();
+    assert_eq!(bin_res.coreset.indices, inmem.coreset.indices, "binary path diverged");
+    assert_eq!(bin_res.coreset.gamma, inmem.coreset.gamma);
     let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&bin_dir);
 }
 
 #[test]
@@ -144,6 +159,58 @@ fn streaming_deterministic_under_seed_and_worker_count() {
     }
     // And the seed genuinely matters (different shard deal + rng).
     assert_ne!(run(2, 14).0, base.0, "a different seed must change the selection");
+}
+
+#[test]
+fn binary_prefetch_stream_is_bitwise_identical_to_text_sync() {
+    // The tentpole contract: converted binary shards + double-buffered
+    // prefetch must select the same coreset as the synchronous text
+    // path, bitwise, at every worker count.
+    let ds = synthetic::covtype_like(900, 11);
+    let cfg = SelectorConfig { budget: Budget::Count(72), seed: 11, ..Default::default() };
+    let mut eng = NativePairwise;
+    let text_dir = tempdir("bp-text");
+    let bin_dir = tempdir("bp-bin");
+    let text_set = write_shards(&ds, 4, cfg.seed, &text_dir).unwrap();
+    let bin_set = convert_shards(&text_dir, &bin_dir, ShardFormat::Binary).unwrap();
+    assert_eq!(text_set.format(), ShardFormat::Text);
+    assert_eq!(bin_set.format(), ShardFormat::Binary);
+
+    let scfg_sync = StreamConfig::new(cfg.clone());
+    let (base, base_stats) =
+        StreamingSelector::new(1).select(&text_set, &scfg_sync, &mut eng).unwrap();
+    assert!(!base_stats.prefetch);
+    assert_eq!(base_stats.prefetch_stall_seconds, 0.0);
+
+    for workers in [1usize, 2, 4] {
+        for (set, prefetch) in
+            [(&text_set, false), (&text_set, true), (&bin_set, false), (&bin_set, true)]
+        {
+            let mut scfg = StreamConfig::new(cfg.clone());
+            scfg.workers = workers;
+            scfg.prefetch = prefetch;
+            let (res, stats) =
+                StreamingSelector::new(workers).select(set, &scfg, &mut eng).unwrap();
+            let tag = format!(
+                "workers={workers} prefetch={prefetch} format={:?}",
+                set.format()
+            );
+            assert_eq!(res.coreset.indices, base.coreset.indices, "{tag}: indices diverged");
+            assert_eq!(res.coreset.gamma, base.coreset.gamma, "{tag}: γ diverged");
+            assert_eq!(res.f_value, base.f_value, "{tag}: objective diverged");
+            assert_eq!(stats.prefetch, prefetch, "{tag}");
+            // io_s + select_s decompose the per-shard wall clock in
+            // both modes; stall only exists when prefetching.
+            for s in &stats.shard_stats {
+                assert!(s.io_s >= 0.0 && s.select_s > 0.0, "{tag}: shard {}", s.shard);
+                if !prefetch {
+                    assert_eq!(s.prefetch_stall_s, 0.0, "{tag}: shard {}", s.shard);
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&text_dir);
+    let _ = std::fs::remove_dir_all(&bin_dir);
 }
 
 #[test]
