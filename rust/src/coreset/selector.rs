@@ -29,6 +29,7 @@
 //! sharding cannot perturb stochastic greedy.
 
 use crate::linalg::{KernelTier, Matrix};
+use crate::metrics::Registry;
 use crate::rng::{mix_seed, Rng};
 use crate::util::ThreadPool;
 
@@ -294,11 +295,10 @@ pub struct SelectionWorkspace {
     cover_best: Vec<f32>,
     /// Column scratch for weight assignment over non-borrowable stores.
     cover_scratch: Vec<f32>,
-    /// Class subproblems served since construction.
-    pub calls: usize,
-    /// Calls whose dense buffer was served from capacity (no alloc).
-    pub warm_hits: usize,
-    /// High-water mark of the dense similarity buffer, in bytes.
+    /// High-water mark of the dense similarity buffer, in bytes.  Kept
+    /// per workspace (the call/warm-hit counters moved to the shared
+    /// [`Registry`]) because the streaming subsystem's resident-memory
+    /// accounting needs each worker's own peak, not the run-wide max.
     pub peak_dense_bytes: usize,
 }
 
@@ -316,8 +316,6 @@ impl SelectionWorkspace {
             sq16: Vec::new(),
             cover_best: Vec::new(),
             cover_scratch: Vec::new(),
-            calls: 0,
-            warm_hits: 0,
             peak_dense_bytes: 0,
         }
     }
@@ -392,6 +390,7 @@ fn run_store<S: SimilaritySource>(
 /// class shards, both trainers — goes through here.
 pub struct Selector {
     ws: SelectionWorkspace,
+    metrics: Registry,
 }
 
 impl Default for Selector {
@@ -401,12 +400,31 @@ impl Default for Selector {
 }
 
 impl Selector {
-    /// A selector with a cold workspace.
+    /// A selector with a cold workspace and its own private metrics
+    /// registry (see [`with_metrics`](Self::with_metrics) to share one).
     pub fn new() -> Self {
-        Selector { ws: SelectionWorkspace::new() }
+        Selector { ws: SelectionWorkspace::new(), metrics: Registry::new() }
     }
 
-    /// Workspace telemetry (warm-hit counters, peak bytes).
+    /// A selector reporting into a shared [`Registry`] — how the runner
+    /// aggregates live counters across the in-memory selector, every
+    /// streaming worker and the trainers.  Observation-only: the
+    /// registry never influences what gets selected.
+    pub fn with_metrics(metrics: Registry) -> Self {
+        Selector { ws: SelectionWorkspace::new(), metrics }
+    }
+
+    /// Swap the metrics registry (the workspace stays warm).
+    pub fn set_metrics(&mut self, metrics: Registry) {
+        self.metrics = metrics;
+    }
+
+    /// The registry this selector reports into.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Workspace telemetry (peak dense bytes).
     pub fn workspace(&self) -> &SelectionWorkspace {
         &self.ws
     }
@@ -483,7 +501,8 @@ impl Selector {
         let pool = ThreadPool::scoped(cfg.parallelism);
         let mut rng = Rng::new(mix_seed(cfg.seed, idx[0]));
         let store = cfg.sim_store.resolve_for(n, cfg.kernel);
-        self.ws.calls += 1;
+        self.metrics.select_classes.inc();
+        self.metrics.class_n.observe(n as u64);
 
         let mut class_x = std::mem::replace(&mut self.ws.class_x, Matrix::zeros(0, 0));
         gather_rows_into(features, idx, &mut class_x);
@@ -502,10 +521,11 @@ impl Selector {
             SimStore::Dense if cfg.kernel == KernelTier::TiledF32 => {
                 let scratch = std::mem::take(&mut self.ws.sq16);
                 if scratch.capacity() >= n * n {
-                    self.ws.warm_hits += 1;
+                    self.metrics.select_warm_hits.inc();
                 }
                 self.ws.peak_dense_bytes =
                     self.ws.peak_dense_bytes.max(n * n * cfg.kernel.sim_elem_bytes());
+                self.metrics.select_peak_dense_bytes.fetch_max(self.ws.peak_dense_bytes as u64);
                 let sim = HalfDenseSim::from_features_par(&class_x, &pool, scratch);
                 let (sel, wc) =
                     run_store(&sim, weights, cfg.method, rule, &mut rng, &pool, &mut self.ws);
@@ -515,12 +535,13 @@ impl Selector {
             SimStore::Dense => {
                 let mut data = std::mem::take(&mut self.ws.sq);
                 if data.capacity() >= n * n {
-                    self.ws.warm_hits += 1;
+                    self.metrics.select_warm_hits.inc();
                 }
                 data.resize(n * n, 0.0);
                 let mut sq = Matrix::from_vec(n, n, data);
                 self.ws.peak_dense_bytes =
                     self.ws.peak_dense_bytes.max(n * n * std::mem::size_of::<f32>());
+                self.metrics.select_peak_dense_bytes.fetch_max(self.ws.peak_dense_bytes as u64);
                 engine.sqdist_self_tiered_into(&class_x, &mut sq, &pool, cfg.kernel);
                 let sim = DenseSim::from_sqdist_par(sq, &pool);
                 let (sel, wc) =
@@ -534,6 +555,8 @@ impl Selector {
             }
         };
         self.ws.class_x = class_x;
+        self.metrics.select_evals.add(sel.evaluations as u64);
+        self.metrics.select_selected.add(sel.order.len() as u64);
         ClassSelection {
             coreset: wc.lift(idx),
             selected: sel.order.len(),
@@ -794,13 +817,23 @@ mod tests {
         let mut eng = NativePairwise;
         let mut selector = Selector::new();
         let a = selector.select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
-        let calls_after_first = selector.workspace().calls;
+        let calls_after_first = selector.metrics().select_classes.get();
         assert_eq!(calls_after_first, 2, "two classes, two subproblems");
         let b = selector.select(&ds.x, &ds.y, ds.num_classes, &cfg, &mut eng);
         // Warm pass: both classes fit the grown buffer, and the output is
         // identical to the cold pass (workspace temperature is invisible).
-        assert!(selector.workspace().warm_hits >= 2, "second pass must run warm");
+        assert!(selector.metrics().select_warm_hits.get() >= 2, "second pass must run warm");
         assert!(selector.workspace().peak_dense_bytes > 0);
+        assert_eq!(
+            selector.metrics().select_peak_dense_bytes.get(),
+            selector.workspace().peak_dense_bytes as u64,
+            "registry gauge mirrors the workspace high-water mark"
+        );
+        assert!(selector.metrics().select_evals.get() > 0);
+        assert_eq!(
+            selector.metrics().select_selected.get(),
+            (a.coreset.indices.len() + b.coreset.indices.len()) as u64
+        );
         assert_eq!(a.coreset.indices, b.coreset.indices);
         assert_eq!(a.coreset.gamma, b.coreset.gamma);
     }

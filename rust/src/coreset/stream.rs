@@ -53,6 +53,7 @@ use anyhow::{Context, Result};
 use crate::data::shard::{stratified_assignment, Shard, ShardReader, ShardSet};
 use crate::data::Dataset;
 use crate::linalg::Matrix;
+use crate::metrics::Registry;
 use crate::rng::mix_seed;
 use crate::util::{self, ThreadPool};
 
@@ -359,6 +360,14 @@ fn select_loaded_shard(
         *i = shard.global_idx[*i];
     }
     let select_s = t0.elapsed().as_secs_f64();
+    // Live stream counters: visible to a heartbeat thread mid-run
+    // (StreamStats still derives from the outcomes after the fan-out).
+    let m = selector.metrics();
+    m.stream_shards_decoded.inc();
+    m.stream_rows_streamed.add(shard.data.n() as u64);
+    m.stream_io_us.add((io_s * 1e6) as u64);
+    m.stream_select_us.add((select_s * 1e6) as u64);
+    m.stream_stall_us.add((stall_s * 1e6) as u64);
     Ok(ShardOutcome {
         k,
         res,
@@ -438,17 +447,36 @@ pub struct StreamingSelector {
     workers: usize,
     shard_selectors: Vec<Selector>,
     reduce: Selector,
+    metrics: Registry,
 }
 
 impl StreamingSelector {
     /// A streaming selector with `workers` shard-phase threads (1 =
     /// fully sequential; the output is identical at any width).
     pub fn new(workers: usize) -> Self {
+        let metrics = Registry::new();
         StreamingSelector {
             workers: workers.max(1),
             shard_selectors: Vec::new(),
-            reduce: Selector::new(),
+            reduce: Selector::with_metrics(metrics.clone()),
+            metrics,
         }
+    }
+
+    /// Report into a shared [`Registry`]: every warm worker selector,
+    /// the reduce selector, and any worker grown later all feed the
+    /// same live counters.  Observation-only — output is unchanged.
+    pub fn set_metrics(&mut self, metrics: Registry) {
+        for s in self.shard_selectors.iter_mut() {
+            s.set_metrics(metrics.clone());
+        }
+        self.reduce.set_metrics(metrics.clone());
+        self.metrics = metrics;
+    }
+
+    /// The registry this streamer reports into.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 
     /// Re-pin the shard-phase width.  Warm per-worker selectors are
@@ -482,8 +510,9 @@ impl StreamingSelector {
         let t_phase = Instant::now();
         let w_count = self.workers.min(k);
         while self.shard_selectors.len() < w_count {
-            self.shard_selectors.push(Selector::new());
+            self.shard_selectors.push(Selector::with_metrics(self.metrics.clone()));
         }
+        self.metrics.stream_prefetch_depth.set(if cfg.prefetch { 1 } else { 0 });
         // Peak-bytes telemetry is per *run*: clear the warm selectors'
         // lifetime high-water marks so `StreamStats.peak_dense_bytes`
         // reports this run, not the largest run this selector ever saw.
@@ -719,6 +748,13 @@ impl EpochSelector {
         }
     }
 
+    /// Report into a shared [`Registry`], whichever path a call takes
+    /// (see [`StreamingSelector::set_metrics`]).
+    pub fn set_metrics(&mut self, metrics: Registry) {
+        self.inmem.set_metrics(metrics.clone());
+        self.streamer.set_metrics(metrics);
+    }
+
     /// [`Selector::select`] when `cfg.stream_shards ≤ 1`, otherwise
     /// merge-and-reduce over that many stratified in-memory shards
     /// (shard workers = `cfg.parallelism`).  Streaming over resident
@@ -814,6 +850,12 @@ mod tests {
         seen.dedup();
         assert_eq!(seen.len(), 60);
         assert!(seen.iter().all(|&i| i < 900));
+        // Every worker reports into the streamer's shared registry.
+        let m = streamer.metrics();
+        assert_eq!(m.stream_shards_decoded.get(), 4);
+        assert_eq!(m.stream_rows_streamed.get(), 900);
+        assert_eq!(m.select_selected.get() as usize, stats.union_size + 60);
+        assert_eq!(m.select_evals.get() as usize, stats.evaluations);
     }
 
     #[test]

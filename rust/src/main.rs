@@ -12,6 +12,7 @@
 //! * `replay`       — re-execute a run manifest and verify bitwise
 //!   reproduction (exits nonzero with a field diff on divergence).
 //! * `doctor`       — preflight the environment / a spec / a manifest.
+//! * `trace`        — summarize a (possibly partial) live run trace.
 //! * `select`       — CRAIG selection (shim).
 //! * `select-stream`— out-of-core merge-and-reduce selection (shim).
 //! * `train`        — convex logreg experiment (shim).
@@ -74,8 +75,15 @@ fn cmd_info(a: &Args) -> Result<()> {
 
 /// Execute (or just print) a desugared spec — the one body behind every
 /// shim subcommand and `craig run`.  `trace` (the `--trace` opt) routes
-/// the per-phase JSONL event stream to a file.
-fn run_spec(spec: RunSpec, print_only: bool, trace: Option<&str>) -> Result<()> {
+/// the live per-phase JSONL event stream to a file; `heartbeat` (the
+/// `--heartbeat` opt, seconds) interleaves periodic metric snapshots
+/// into it, overriding the spec's `output.heartbeat_secs`.
+fn run_spec(
+    spec: RunSpec,
+    print_only: bool,
+    trace: Option<&str>,
+    heartbeat: Option<u64>,
+) -> Result<()> {
     if print_only {
         print!("{}", spec.to_toml());
         return Ok(());
@@ -84,6 +92,7 @@ fn run_spec(spec: RunSpec, print_only: bool, trace: Option<&str>) -> Result<()> 
     if let Some(p) = trace {
         runner.trace = Some(craig::trace::Trace::with_file(&spec.name, std::path::Path::new(p))?);
     }
+    runner.heartbeat_secs = heartbeat;
     let report = runner.run(&spec)?;
     print_report(&report);
     if let (Some(p), Some(t)) = (trace, runner.trace.as_ref()) {
@@ -191,7 +200,11 @@ fn cmd_run(a: &Args) -> Result<()> {
         cfg.set(k, v)?;
     }
     let spec = RunSpec::from_config(&cfg)?;
-    run_spec(spec, a.flag("print-spec"), a.opt("trace"))
+    let heartbeat = match a.opt("heartbeat") {
+        Some(_) => Some(a.parse_opt("heartbeat", 0u64)?),
+        None => None,
+    };
+    run_spec(spec, a.flag("print-spec"), a.opt("trace"), heartbeat)
 }
 
 /// `craig replay <manifest.json> [--set k=v] [--trace PATH]`: re-run
@@ -245,10 +258,10 @@ fn cmd_replay(a: &Args) -> Result<()> {
     }
 }
 
-/// `craig doctor [<spec.toml>] [--manifest m.json]`: run the preflight
-/// check list and print one line per check.  Exits nonzero only on
-/// `FAIL` — warnings (no git, Auto-store fallback) are supported
-/// environments.
+/// `craig doctor [<spec.toml>] [--manifest m.json] [--trace t.jsonl]`:
+/// run the preflight check list and print one line per check.  Exits
+/// nonzero only on `FAIL` — warnings (no git, Auto-store fallback,
+/// heartbeat without a trace sink) are supported environments.
 fn cmd_doctor(a: &Args) -> Result<()> {
     let spec_path = a.opt("spec").map(str::to_string).or_else(|| a.positional.first().cloned());
     let spec = match &spec_path {
@@ -259,13 +272,33 @@ fn cmd_doctor(a: &Args) -> Result<()> {
         None => None,
     };
     let manifest = a.opt("manifest").map(std::path::PathBuf::from);
-    let checks = craig::pipeline::run_checks(spec.as_ref(), manifest.as_deref());
+    let trace = a.opt("trace").map(std::path::PathBuf::from);
+    let checks = craig::pipeline::run_checks(spec.as_ref(), manifest.as_deref(), trace.as_deref());
     for c in &checks {
         println!("{:>5}  {:<12} {}", c.status.name(), c.name, c.detail);
     }
     anyhow::ensure!(
         !craig::pipeline::any_failed(&checks),
         "doctor found failing checks"
+    );
+    Ok(())
+}
+
+/// `craig trace summarize <trace.jsonl>`: render a per-phase digest of
+/// a (possibly partial) live trace.  Exits nonzero when the trace does
+/// not end in `run_end` — the signal that the run crashed, was killed,
+/// or is still going.
+fn cmd_trace(a: &Args) -> Result<()> {
+    let usage = || anyhow::anyhow!("usage: craig trace summarize <trace.jsonl>");
+    let verb = a.positional.first().ok_or_else(usage)?;
+    anyhow::ensure!(verb == "summarize", "unknown trace subcommand '{verb}' (try summarize)");
+    let path = a.positional.get(1).ok_or_else(usage)?;
+    let summary = craig::trace::summarize::summarize_file(std::path::Path::new(path))?;
+    print!("{}", summary.render());
+    anyhow::ensure!(
+        summary.complete,
+        "{path} is incomplete (last event: {})",
+        if summary.last_event.is_empty() { "<none>" } else { summary.last_event.as_str() }
     );
     Ok(())
 }
@@ -436,15 +469,16 @@ fn main() {
             "run" => cmd_run(&args),
             "replay" => cmd_replay(&args),
             "doctor" => cmd_doctor(&args),
+            "trace" => cmd_trace(&args),
             "select" => shim::spec_for_select(&args)
-                .and_then(|s| run_spec(s, args.flag("print-spec"), None)),
+                .and_then(|s| run_spec(s, args.flag("print-spec"), None, None)),
             "shard" => cmd_shard(&args),
             "select-stream" => shim::spec_for_select_stream(&args)
-                .and_then(|s| run_spec(s, args.flag("print-spec"), None)),
+                .and_then(|s| run_spec(s, args.flag("print-spec"), None, None)),
             "train" => shim::spec_for_train(&args)
-                .and_then(|s| run_spec(s, args.flag("print-spec"), None)),
+                .and_then(|s| run_spec(s, args.flag("print-spec"), None, None)),
             "train-mlp" => shim::spec_for_train_mlp(&args)
-                .and_then(|s| run_spec(s, args.flag("print-spec"), None)),
+                .and_then(|s| run_spec(s, args.flag("print-spec"), None, None)),
             "grad-error" => cmd_grad_error(&args),
             "bench" => cmd_bench(&args),
             _ => unreachable!(),

@@ -1,5 +1,10 @@
 //! Metrics substrate: timers, summary statistics, histograms and
-//! CSV/JSONL emitters used by the trainer, pipeline and every bench.
+//! CSV/JSONL emitters used by the trainer, pipeline and every bench,
+//! plus the live atomic run-metrics [`Registry`].
+
+pub mod registry;
+
+pub use registry::{Counter, Gauge, Histogram, Registry, Sample};
 
 use std::fmt::Write as _;
 use std::io::Write as _;

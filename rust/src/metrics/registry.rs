@@ -1,0 +1,298 @@
+//! Lock-free run-metrics registry: named atomic counters, gauges and
+//! fixed-bucket histograms updated through pre-looked-up handles.
+//!
+//! Telemetry used to live in ad-hoc per-struct fields (workspace call
+//! counts here, stream timing sums there) that only became visible when
+//! a run finished and its report was assembled.  The registry turns
+//! those into live cells: the selection and training hot paths hold a
+//! cloned [`Counter`]/[`Gauge`] handle — never a map lookup — and a
+//! heartbeat thread can snapshot the whole set mid-run.
+//!
+//! The registry is **observation-only**: nothing in selection or
+//! training reads a metric back to make a decision, so attaching or
+//! sharing a registry can never change a coreset — the determinism
+//! contract (`DESIGN.md` §13) is untouched, and manifests stay
+//! byte-identical with telemetry observed or ignored.
+//!
+//! Determinism posture: every metric is flagged.  `deterministic`
+//! metrics (gain evaluations, rows selected, shards decoded, …) are
+//! pure functions of `(dataset, config)` — two identical seeded runs
+//! must produce identical values, pinned by a pipeline test.
+//! Wall-clock metrics (io/select/stall microseconds) and
+//! temperature-dependent ones (warm workspace hits) are excluded from
+//! that contract, from replay comparison, and from the deterministic
+//! manifest.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Monotone counter handle.  Cheap to clone; clones share the cell, so
+/// a hot path clones once at construction and increments lock-free.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value / high-water gauge handle (same shared-cell semantics as
+/// [`Counter`]).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if it is currently below it (high-water
+    /// semantics; safe under concurrent writers).
+    pub fn fetch_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram: `bounds[i]` is the inclusive upper edge of
+/// bucket `i`, with one overflow bucket after the last bound.  Bounds
+/// are `'static` so observing is a scan over a handful of integers plus
+/// one relaxed atomic add — no allocation, no lock.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: &'static [u64],
+    buckets: Arc<[AtomicU64]>,
+}
+
+impl Histogram {
+    fn new(bounds: &'static [u64]) -> Self {
+        let cells: Vec<AtomicU64> = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, buckets: cells.into() }
+    }
+
+    pub fn observe(&self, v: u64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The inclusive bucket upper edges (the overflow bucket has none).
+    pub fn bounds(&self) -> &'static [u64] {
+        self.bounds
+    }
+
+    /// Bucket counts: one per bound plus the trailing overflow bucket.
+    pub fn counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+}
+
+/// One metric's value in a registry snapshot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Sample {
+    pub name: &'static str,
+    pub value: u64,
+    /// Whether the metric is a pure function of `(dataset, config)` —
+    /// see the module docs for the contract this flag pins.
+    pub deterministic: bool,
+}
+
+/// Bucket upper edges for the per-class population histogram.
+const CLASS_N_BOUNDS: &[u64] = &[64, 256, 1024, 4096, 16384, 65536];
+
+/// The pre-registered metric set for one run.  All handles are
+/// `Arc`-backed: cloning the registry shares every cell, which is how
+/// the runner, the selectors, the trainers and the heartbeat thread all
+/// observe the same run.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    /// Class-level selection solves (one per `select_class` call).
+    pub select_classes: Counter,
+    /// Facility-location gain evaluations across all solves.
+    pub select_evals: Counter,
+    /// Rows selected into coresets (shard phase + reduce + in-memory).
+    pub select_selected: Counter,
+    /// Dense-buffer reuses that skipped an allocation
+    /// (workspace-temperature-dependent, so non-deterministic).
+    pub select_warm_hits: Counter,
+    /// High-water mark of any dense similarity buffer, in bytes.
+    pub select_peak_dense_bytes: Gauge,
+    /// Shards loaded and decoded by the streaming selector.
+    pub stream_shards_decoded: Counter,
+    /// Rows streamed through shard-phase selection.
+    pub stream_rows_streamed: Counter,
+    /// Microseconds spent loading/decoding shards (wall clock).
+    pub stream_io_us: Counter,
+    /// Microseconds of pure shard selection (wall clock).
+    pub stream_select_us: Counter,
+    /// Microseconds stalled on the prefetch channel (wall clock).
+    pub stream_stall_us: Counter,
+    /// Configured prefetch channel depth (0 = synchronous loads).
+    pub stream_prefetch_depth: Gauge,
+    /// Training epochs completed.
+    pub train_epochs: Counter,
+    /// Epoch the trainer is currently on (live progress for heartbeats).
+    pub train_epoch: Gauge,
+    /// Most recent training loss in millionths (`loss × 1e6`, clamped
+    /// at zero) — a gauge because `AtomicU64` cells hold integers.
+    pub train_loss_micros: Gauge,
+    /// Coreset reselections triggered during training.
+    pub train_reselections: Counter,
+    /// Per-class population histogram (edges [`CLASS_N_BOUNDS`]).
+    pub class_n: Histogram,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry {
+            select_classes: Counter::default(),
+            select_evals: Counter::default(),
+            select_selected: Counter::default(),
+            select_warm_hits: Counter::default(),
+            select_peak_dense_bytes: Gauge::default(),
+            stream_shards_decoded: Counter::default(),
+            stream_rows_streamed: Counter::default(),
+            stream_io_us: Counter::default(),
+            stream_select_us: Counter::default(),
+            stream_stall_us: Counter::default(),
+            stream_prefetch_depth: Gauge::default(),
+            train_epochs: Counter::default(),
+            train_epoch: Gauge::default(),
+            train_loss_micros: Gauge::default(),
+            train_reselections: Counter::default(),
+            class_n: Histogram::new(CLASS_N_BOUNDS),
+        }
+    }
+
+    /// Every scalar metric, in registration order (the histogram is
+    /// read separately through [`Registry::class_n`]).
+    pub fn snapshot(&self) -> Vec<Sample> {
+        let s = |name, value, deterministic| Sample { name, value, deterministic };
+        vec![
+            s("select.classes", self.select_classes.get(), true),
+            s("select.evals", self.select_evals.get(), true),
+            s("select.selected", self.select_selected.get(), true),
+            s("select.warm_hits", self.select_warm_hits.get(), false),
+            s("select.peak_dense_bytes", self.select_peak_dense_bytes.get(), true),
+            s("stream.shards_decoded", self.stream_shards_decoded.get(), true),
+            s("stream.rows_streamed", self.stream_rows_streamed.get(), true),
+            s("stream.io_us", self.stream_io_us.get(), false),
+            s("stream.select_us", self.stream_select_us.get(), false),
+            s("stream.stall_us", self.stream_stall_us.get(), false),
+            s("stream.prefetch_depth", self.stream_prefetch_depth.get(), true),
+            s("train.epochs", self.train_epochs.get(), true),
+            s("train.epoch", self.train_epoch.get(), true),
+            s("train.loss_micros", self.train_loss_micros.get(), false),
+            s("train.reselections", self.train_reselections.get(), true),
+        ]
+    }
+
+    /// Only the metrics the determinism contract pins: two identical
+    /// seeded runs must produce identical vectors.
+    pub fn deterministic_snapshot(&self) -> Vec<(&'static str, u64)> {
+        self.snapshot()
+            .into_iter()
+            .filter(|s| s.deterministic)
+            .map(|s| (s.name, s.value))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_handles_share_their_cell() {
+        let r = Registry::new();
+        let h = r.select_evals.clone();
+        h.add(3);
+        r.select_evals.inc();
+        assert_eq!(r.select_evals.get(), 4);
+        let g = r.select_peak_dense_bytes.clone();
+        g.fetch_max(100);
+        r.select_peak_dense_bytes.fetch_max(40); // below the high water: no-op
+        assert_eq!(g.get(), 100);
+        r.select_peak_dense_bytes.set(7);
+        assert_eq!(g.get(), 7, "set overwrites regardless of high water");
+    }
+
+    #[test]
+    fn registry_clone_shares_every_cell() {
+        let a = Registry::new();
+        let b = a.clone();
+        b.stream_rows_streamed.add(500);
+        b.class_n.observe(10);
+        assert_eq!(a.stream_rows_streamed.get(), 500);
+        assert_eq!(a.class_n.total(), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_split_at_inclusive_edges() {
+        let h = Histogram::new(&[10, 100]);
+        for v in [0, 10, 11, 100, 101, 5000] {
+            h.observe(v);
+        }
+        assert_eq!(h.counts(), vec![2, 2, 2], "≤10, ≤100, overflow");
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.bounds(), &[10, 100]);
+    }
+
+    #[test]
+    fn snapshot_names_are_unique_and_flags_partition() {
+        let r = Registry::new();
+        r.select_evals.add(9);
+        r.stream_io_us.add(1234);
+        let snap = r.snapshot();
+        let mut names: Vec<&str> = snap.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), snap.len(), "metric names must be unique");
+        let det = r.deterministic_snapshot();
+        assert!(det.iter().any(|&(n, v)| n == "select.evals" && v == 9));
+        assert!(
+            det.iter().all(|&(n, _)| !n.ends_with("_us")),
+            "wall-clock metrics must stay out of the deterministic set"
+        );
+    }
+
+    #[test]
+    fn concurrent_increments_all_land() {
+        let r = Registry::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = r.select_evals.clone();
+                let g = r.select_peak_dense_bytes.clone();
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        c.inc();
+                        g.fetch_max(i);
+                    }
+                });
+            }
+        });
+        assert_eq!(r.select_evals.get(), 4000);
+        assert_eq!(r.select_peak_dense_bytes.get(), 999);
+    }
+}

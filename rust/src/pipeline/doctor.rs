@@ -64,8 +64,15 @@ pub fn any_failed(checks: &[Check]) -> bool {
 
 /// Run the full check list.  `spec` adds the spec-scoped checks
 /// (backend, data source, memory budget); `manifest` adds manifest
-/// parse + rev-provenance checks.
-pub fn run_checks(spec: Option<&RunSpec>, manifest: Option<&Path>) -> Vec<Check> {
+/// parse + rev-provenance checks; `trace` adds a sink-writability
+/// check for the intended live-trace path.  A spec that sets
+/// `output.heartbeat_secs` without a trace sink draws a warning —
+/// heartbeats only exist inside a trace stream.
+pub fn run_checks(
+    spec: Option<&RunSpec>,
+    manifest: Option<&Path>,
+    trace: Option<&Path>,
+) -> Vec<Check> {
     let mut checks = Vec::new();
     checks.push(threads_check());
     checks.push(git_check());
@@ -81,6 +88,12 @@ pub fn run_checks(spec: Option<&RunSpec>, manifest: Option<&Path>) -> Vec<Check>
             }
         }
         None => checks.push(backend_check("native")),
+    }
+    if let Some(p) = trace {
+        checks.push(trace_sink_check(p));
+    }
+    if let Some(c) = heartbeat_check(spec, trace) {
+        checks.push(c);
     }
     if let Some(p) = manifest {
         checks.extend(manifest_checks(p));
@@ -275,6 +288,59 @@ fn prefetch_check(spec: &RunSpec) -> Option<Check> {
     Some(check)
 }
 
+/// Trace-sink writability: a live trace is opened with per-event
+/// flushes at run start, so a sink whose parent directory does not
+/// exist fails the *first* event — better to learn that before the
+/// run.  The runner never creates directories for sinks.
+fn trace_sink_check(path: &Path) -> Check {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    if !parent.exists() {
+        return Check::new(
+            "trace-sink",
+            CheckStatus::Fail,
+            format!(
+                "{}: parent directory {} does not exist — the runner will not create it",
+                path.display(),
+                parent.display()
+            ),
+        );
+    }
+    if !parent.is_dir() {
+        return Check::new(
+            "trace-sink",
+            CheckStatus::Fail,
+            format!("{}: parent {} is not a directory", path.display(), parent.display()),
+        );
+    }
+    let verb = if path.exists() { "exists and will be overwritten" } else { "will be created" };
+    Check::new(
+        "trace-sink",
+        CheckStatus::Ok,
+        format!("{} {verb} (parent {} writable)", path.display(), parent.display()),
+    )
+}
+
+/// Heartbeats ride inside the trace stream; a spec that asks for them
+/// without a sink attached silently gets none.  Warn, don't fail — the
+/// run itself is unaffected.
+fn heartbeat_check(spec: Option<&RunSpec>, trace: Option<&Path>) -> Option<Check> {
+    let secs = spec?.output.heartbeat_secs?;
+    if trace.is_some() {
+        return None;
+    }
+    Some(Check::new(
+        "heartbeat",
+        CheckStatus::Warn,
+        format!(
+            "output.heartbeat_secs = {secs} but no trace sink — heartbeats are trace \
+             events and will not be emitted (pass --trace)"
+        ),
+    ))
+}
+
 /// Manifest checks: the file parses as a schema-compatible run
 /// manifest (Fail otherwise), and its recorded rev matches this
 /// checkout (Warn otherwise — provenance, not arithmetic).
@@ -339,7 +405,7 @@ mod tests {
     fn baseline_environment_has_no_failures() {
         // threads/git/backend on the build machine: warnings are
         // acceptable (no git in some containers), failures are not.
-        let checks = run_checks(None, None);
+        let checks = run_checks(None, None, None);
         assert!(!any_failed(&checks), "{checks:?}");
         assert!(checks.iter().any(|c| c.name == "threads"));
         assert!(checks.iter().any(|c| c.name == "git"));
@@ -349,7 +415,7 @@ mod tests {
     #[test]
     fn spec_checks_cover_data_and_memory() {
         let spec = RunSpec::builder("d").synthetic("covtype", 500).count(10).build().unwrap();
-        let checks = run_checks(Some(&spec), None);
+        let checks = run_checks(Some(&spec), None, None);
         assert!(!any_failed(&checks), "{checks:?}");
         let mem = checks.iter().find(|c| c.name == "memory").expect("memory check");
         assert!(mem.detail.contains("dense buffer"), "{}", mem.detail);
@@ -363,7 +429,7 @@ mod tests {
             .count(10)
             .build()
             .unwrap();
-        let checks = run_checks(Some(&spec), None);
+        let checks = run_checks(Some(&spec), None, None);
         assert!(any_failed(&checks));
         let data = checks.iter().find(|c| c.name == "data").unwrap();
         assert_eq!(data.status, CheckStatus::Fail);
@@ -373,7 +439,7 @@ mod tests {
     fn unknown_backend_fails() {
         let mut spec = RunSpec::builder("d").synthetic("covtype", 100).count(5).build().unwrap();
         spec.engine = "not-a-backend".to_string();
-        let checks = run_checks(Some(&spec), None);
+        let checks = run_checks(Some(&spec), None, None);
         assert!(any_failed(&checks));
     }
 
@@ -381,7 +447,7 @@ mod tests {
     fn tiny_auto_budget_warns_not_fails() {
         let mut spec = RunSpec::builder("d").synthetic("covtype", 800).count(5).build().unwrap();
         spec.selection.store = crate::coreset::SimStorePolicy::Auto { mem_budget_bytes: 1024 };
-        let checks = run_checks(Some(&spec), None);
+        let checks = run_checks(Some(&spec), None, None);
         assert!(!any_failed(&checks), "{checks:?}");
         let mem = checks.iter().find(|c| c.name == "memory").unwrap();
         assert_eq!(mem.status, CheckStatus::Warn);
@@ -399,7 +465,7 @@ mod tests {
         spec.selection.store =
             crate::coreset::SimStorePolicy::Auto { mem_budget_bytes: 2_000_000 };
         let mem = |s: &RunSpec| {
-            run_checks(Some(s), None).into_iter().find(|c| c.name == "memory").unwrap()
+            run_checks(Some(s), None, None).into_iter().find(|c| c.name == "memory").unwrap()
         };
         let c = mem(&spec);
         assert_eq!(c.status, CheckStatus::Warn);
@@ -424,14 +490,14 @@ mod tests {
             .prefetch(true)
             .build()
             .unwrap();
-        let checks = run_checks(Some(&spec), None);
+        let checks = run_checks(Some(&spec), None, None);
         assert!(!any_failed(&checks), "{checks:?}");
         let pf = checks.iter().find(|c| c.name == "prefetch").expect("prefetch check");
         assert!(pf.detail.contains("3 ×"), "{}", pf.detail);
         // A starved Auto budget downgrades to Warn, never Fail.
         let mut tight = spec.clone();
         tight.selection.store = crate::coreset::SimStorePolicy::Auto { mem_budget_bytes: 16 };
-        let checks = run_checks(Some(&tight), None);
+        let checks = run_checks(Some(&tight), None, None);
         assert!(!any_failed(&checks), "{checks:?}");
         let pf = checks.iter().find(|c| c.name == "prefetch").unwrap();
         assert_eq!(pf.status, CheckStatus::Warn);
@@ -442,11 +508,51 @@ mod tests {
             dir: dir.to_str().unwrap().to_string(),
             format: ShardFormatSpec::Binary,
         };
-        let checks = run_checks(Some(&wrong), None);
+        let checks = run_checks(Some(&wrong), None, None);
         assert!(any_failed(&checks), "{checks:?}");
         let data = checks.iter().find(|c| c.name == "data").unwrap();
         assert!(data.detail.contains("expects binary"), "{}", data.detail);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_sink_parent_must_exist() {
+        let missing = Path::new("/no/such/dir/trace.jsonl");
+        let checks = run_checks(None, None, Some(missing));
+        assert!(any_failed(&checks), "{checks:?}");
+        let sink = checks.iter().find(|c| c.name == "trace-sink").unwrap();
+        assert_eq!(sink.status, CheckStatus::Fail);
+        assert!(sink.detail.contains("does not exist"), "{}", sink.detail);
+        // A writable parent (temp dir) passes, whether or not the
+        // trace file itself exists yet.
+        let ok = std::env::temp_dir().join("craig-doctor-trace.jsonl");
+        let checks = run_checks(None, None, Some(&ok));
+        assert!(!any_failed(&checks), "{checks:?}");
+        let sink = checks.iter().find(|c| c.name == "trace-sink").unwrap();
+        assert_eq!(sink.status, CheckStatus::Ok);
+        // Bare filename: parent is the current directory, which exists.
+        let checks = run_checks(None, None, Some(Path::new("t.jsonl")));
+        assert!(!any_failed(&checks), "{checks:?}");
+    }
+
+    #[test]
+    fn heartbeat_without_trace_sink_warns() {
+        let mut spec =
+            RunSpec::builder("h").synthetic("covtype", 200).count(10).build().unwrap();
+        spec.output.heartbeat_secs = Some(2);
+        let checks = run_checks(Some(&spec), None, None);
+        assert!(!any_failed(&checks), "warning, not failure: {checks:?}");
+        let hb = checks.iter().find(|c| c.name == "heartbeat").expect("heartbeat check");
+        assert_eq!(hb.status, CheckStatus::Warn);
+        assert!(hb.detail.contains("--trace"), "{}", hb.detail);
+        // With a sink attached the combination is fine — no row at all.
+        let sink = std::env::temp_dir().join("craig-doctor-hb.jsonl");
+        let checks = run_checks(Some(&spec), None, Some(&sink));
+        assert!(checks.iter().all(|c| c.name != "heartbeat"), "{checks:?}");
+        // And without the spec key there is nothing to warn about.
+        spec.output.heartbeat_secs = None;
+        let checks = run_checks(Some(&spec), None, None);
+        assert!(checks.iter().all(|c| c.name != "heartbeat"), "{checks:?}");
     }
 
     #[test]
@@ -462,13 +568,13 @@ mod tests {
             .build()
             .unwrap();
         Runner::new().run(&spec).unwrap();
-        let checks = run_checks(None, Some(&m));
+        let checks = run_checks(None, Some(&m), None);
         assert!(!any_failed(&checks), "{checks:?}");
         assert!(checks.iter().any(|c| c.name == "manifest" && c.status == CheckStatus::Ok));
         assert!(checks.iter().any(|c| c.name == "manifest-rev"));
         // Garbage manifest: Fail, not error.
         std::fs::write(&m, "not json").unwrap();
-        let checks = run_checks(None, Some(&m));
+        let checks = run_checks(None, Some(&m), None);
         assert!(any_failed(&checks));
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -44,7 +44,9 @@ pub mod replay;
 pub mod runner;
 
 pub use doctor::{any_failed, run_checks, Check, CheckStatus};
-pub use replay::{comparable_image, replay_manifest, FieldDiff, ReplayOutcome};
+pub use replay::{
+    comparable_image, comparable_trace_events, replay_manifest, FieldDiff, ReplayOutcome,
+};
 pub use runner::{PhaseTimings, RunReport, Runner, MANIFEST_SCHEMA_VERSION};
 
 use std::sync::mpsc;

@@ -33,6 +33,12 @@
 //! byte-wise against the file on disk — this is what extends the
 //! guarantee from the manifest's summary scalars to every selected
 //! index and weight.
+//!
+//! Traces are looser than manifests: live (schema v2) traces interleave
+//! wall-clock `heartbeat` events between phases, so trace comparison
+//! goes through [`comparable_trace_events`], which accepts v1 and v2
+//! lines, skips heartbeats, and strips the `live`/`seq` envelope keys
+//! that differ between a live and a post-hoc rendering of the same run.
 
 use std::path::Path;
 
@@ -95,6 +101,39 @@ pub fn comparable_image(manifest: &str) -> String {
         out.push('\n');
     }
     out
+}
+
+/// Parse a trace's JSONL text into its comparable phase events: v1
+/// (post-hoc) and v2 (live) traces are both accepted, `heartbeat`
+/// events are skipped — they are wall-clock artifacts whose count
+/// depends on machine speed, never part of the reproducibility
+/// contract — and the v2 `live` marker plus the `seq` index are
+/// dropped (interleaved heartbeats shift every later seq).  What
+/// remains — event names, labels, durations, data — is the phase
+/// record both trace generations share.
+pub fn comparable_trace_events(text: &str) -> Result<Vec<JsonValue>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = JsonValue::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        if v.get("kind").and_then(|k| k.as_str()) != Some("trace_event") {
+            bail!("trace line {}: not a trace_event", i + 1);
+        }
+        match v.get("schema_version").and_then(|s| s.as_u64()) {
+            Some(1) | Some(2) => {}
+            other => bail!("trace line {}: unsupported trace schema_version {other:?}", i + 1),
+        }
+        if v.get("event").and_then(|e| e.as_str()) == Some("heartbeat") {
+            continue;
+        }
+        let JsonValue::Obj(fields) = v else { unreachable!("get() proved an object") };
+        out.push(JsonValue::Obj(
+            fields.into_iter().filter(|(k, _)| k != "live" && k != "seq").collect(),
+        ));
+    }
+    Ok(out)
 }
 
 /// Parse + structurally validate a manifest document: JSON, `kind ==
@@ -163,7 +202,7 @@ pub fn replay_manifest(
         ));
     }
 
-    let mut runner = Runner { trace };
+    let mut runner = Runner { trace, ..Default::default() };
     let report = runner.execute(&spec)?;
 
     let recorded_image = comparable_image(&text);
@@ -417,6 +456,35 @@ mod tests {
         // Identical to the deterministic form minus git_rev.
         assert_eq!(img, comparable_image(&rep.manifest_json_deterministic()));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn comparable_trace_events_skip_heartbeats_and_live_marker() {
+        let mut t = crate::trace::Trace::new("x");
+        t.emit("run_start", "x", None, &[]).unwrap();
+        t.emit("heartbeat", "beat", None, &[("uptime_s", crate::trace::num(0.1))]).unwrap();
+        t.emit("run_end", "x", Some(0.2), &[]).unwrap();
+        let evs = comparable_trace_events(&t.to_jsonl()).unwrap();
+        assert_eq!(evs.len(), 2, "heartbeats are wall-clock artifacts, not phases");
+        for ev in &evs {
+            assert!(ev.get("live").is_none(), "live marker must be stripped");
+            assert!(ev.get("seq").is_none(), "heartbeats shift seq; it must be stripped");
+            assert!(ev.get("event").is_some());
+        }
+        assert_eq!(evs[1].get("event").unwrap().as_str(), Some("run_end"));
+    }
+
+    #[test]
+    fn v1_posthoc_traces_still_parse_as_comparable_events() {
+        let v1 = "{\"schema_version\": 1, \"kind\": \"trace_event\", \"seq\": 0, \
+                  \"run\": \"old\", \"event\": \"run_start\", \"label\": \"old\", \
+                  \"dur_s\": null, \"data\": {}}\n";
+        let evs = comparable_trace_events(v1).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("event").unwrap().as_str(), Some("run_start"));
+        assert_eq!(evs[0].get("run").unwrap().as_str(), Some("old"));
+        let bad = "{\"schema_version\": 9, \"kind\": \"trace_event\", \"event\": \"x\"}\n";
+        assert!(comparable_trace_events(bad).is_err(), "future schemas must be rejected loudly");
     }
 
     #[test]

@@ -21,7 +21,9 @@
 //! bitwise-identical selections because both are *this* code path.
 
 use std::path::Path;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -32,7 +34,7 @@ use crate::coreset::{
 use crate::csv_row;
 use crate::data::shard::ShardSet;
 use crate::data::{libsvm, synthetic};
-use crate::metrics::CsvWriter;
+use crate::metrics::{CsvWriter, Registry};
 use crate::optim::schedules::Warmup;
 use crate::optim::LrSchedule;
 use crate::rng::Rng;
@@ -97,18 +99,28 @@ pub struct RunReport {
 }
 
 /// Executes [`RunSpec`]s.  Attach a [`Trace`] before running to get the
-/// per-phase JSONL event stream (`--trace` on `run` / `replay`).
+/// per-phase JSONL event stream (`--trace` on `run` / `replay`),
+/// written **live** as the run executes.
 #[derive(Default)]
 pub struct Runner {
     /// Optional per-phase event collector; when set, [`Runner::execute`]
     /// emits `run_start` … `run_end` events into it (and through its
-    /// file sink, if any).
+    /// file sink, if any) the moment each phase completes — a crashed
+    /// or killed run leaves every finished phase on disk.
     pub trace: Option<Trace>,
+    /// Heartbeat period in seconds (CLI `--heartbeat`; falls back to
+    /// the spec's `output.heartbeat_secs`).  With a trace attached, a
+    /// background thread interleaves `heartbeat` events carrying the
+    /// live [`Registry`] snapshot — the first beat fires immediately.
+    pub heartbeat_secs: Option<u64>,
+    /// The run's metrics registry, installed by [`Runner::execute`] and
+    /// left in place so callers can read the final counters.
+    pub metrics: Option<Registry>,
 }
 
 impl Runner {
     pub fn new() -> Self {
-        Runner { trace: None }
+        Runner::default()
     }
 
     /// Execute `spec` end to end: load → embed → select → train →
@@ -123,141 +135,88 @@ impl Runner {
     /// `craig replay` re-executes a manifest's spec through this and
     /// compares in memory, so a replay never clobbers the original
     /// run's CSVs or manifest.
+    ///
+    /// Tracing is live: `run_start` goes out before any work, each
+    /// phase event the moment its phase completes, and (with a
+    /// heartbeat period configured) a background thread interleaves
+    /// `heartbeat` events carrying the [`Registry`] snapshot.
     pub fn execute(&mut self, spec: &RunSpec) -> Result<RunReport> {
         spec.validate()?;
-        if let Some(t) = self.trace.as_mut() {
-            t.set_run(&spec.name);
-            t.emit(
-                "run_start",
-                &spec.name,
-                None,
-                &[
-                    ("seed", spec.seed.to_string()),
-                    ("engine", trace::str_lit(&spec.engine)),
-                    ("mode", trace::str_lit(spec.selection.mode.name())),
-                ],
-            )?;
+        let registry = Registry::new();
+        self.metrics = Some(registry.clone());
+        // The trace moves into a shared slot for the duration of the
+        // run so phase emissions and the heartbeat thread interleave
+        // under one lock (seq stays a gapless total order).
+        let shared: SharedTrace = Arc::new(Mutex::new(self.trace.take()));
+        {
+            let mut guard = lock_trace(&shared);
+            if let Some(t) = guard.as_mut() {
+                t.set_run(&spec.name);
+                t.emit(
+                    "run_start",
+                    &spec.name,
+                    None,
+                    &[
+                        ("seed", spec.seed.to_string()),
+                        ("engine", trace::str_lit(&spec.engine)),
+                        ("mode", trace::str_lit(spec.selection.mode.name())),
+                    ],
+                )?;
+            }
         }
         let t_total = Instant::now();
-        let mut report = match &spec.data {
-            DataSpec::ShardDir { dir, format } => self.run_shard_dir(spec, dir, *format)?,
-            _ => self.run_in_memory(spec)?,
+        let period = self.heartbeat_secs.or(spec.output.heartbeat_secs);
+        let stop = Arc::new(AtomicBool::new(false));
+        let has_trace = lock_trace(&shared).is_some();
+        let beat = match period {
+            Some(secs) if secs > 0 && has_trace => Some(spawn_heartbeat(
+                Arc::clone(&shared),
+                Arc::clone(&stop),
+                registry.clone(),
+                secs,
+            )),
+            _ => None,
         };
+        let result = match &spec.data {
+            DataSpec::ShardDir { dir, format } => {
+                self.run_shard_dir(spec, dir, *format, &shared, &registry)
+            }
+            _ => self.run_in_memory(spec, &shared, &registry),
+        };
+        // Heartbeats stop before `run_end` so the bookend is always the
+        // final event; then the trace moves back onto the runner (on
+        // the error path too — a failed run keeps its partial trace).
+        stop.store(true, Ordering::Relaxed);
+        if let Some(h) = beat {
+            let _ = h.join();
+        }
+        self.trace = lock_trace(&shared).take();
+        let mut report = result?;
         report.timings.total_s = t_total.elapsed().as_secs_f64();
-        self.trace_phases(&report)?;
+        if let Some(t) = self.trace.as_mut() {
+            t.emit(
+                "run_end",
+                &report.spec.name,
+                Some(report.timings.total_s),
+                &[
+                    ("selected", trace::int(report.selected())),
+                    ("train_s", trace::num(report.timings.train_s)),
+                ],
+            )?;
+        }
         Ok(report)
-    }
-
-    /// Emit the phase events a finished report implies: load / embed /
-    /// select, per-shard + merge + reduce for streamed runs, one
-    /// `train_epoch` per history record, and the `run_end` bookend.
-    /// Durations and peak-memory come from the report's own telemetry
-    /// ([`PhaseTimings`], [`StreamStats`], [`History`]), so the trace
-    /// is a faithful record of the run that actually happened.
-    fn trace_phases(&mut self, report: &RunReport) -> Result<()> {
-        let Some(t) = self.trace.as_mut() else { return Ok(()) };
-        let source = match &report.spec.data {
-            DataSpec::Synthetic { dataset, .. } => format!("synthetic:{dataset}"),
-            DataSpec::Libsvm { path } => format!("libsvm:{path}"),
-            DataSpec::ShardDir { dir, .. } => format!("shard-dir:{dir}"),
-        };
-        t.emit(
-            "load",
-            &source,
-            Some(report.timings.load_s),
-            &[
-                ("n", trace::int(report.dataset_n)),
-                ("d", trace::int(report.dataset_d)),
-                ("classes", trace::int(report.dataset_classes)),
-            ],
-        )?;
-        t.emit(
-            "embed",
-            report.spec.embedding.kind.name(),
-            None,
-            &[("metric", trace::str_lit(report.spec.embedding.metric.name()))],
-        )?;
-        t.emit(
-            "select",
-            report.spec.selection.mode.name(),
-            Some(report.timings.select_s),
-            &[
-                ("kernel", trace::str_lit(report.spec.selection.kernel.name())),
-                ("selected", trace::int(report.selected())),
-                ("evaluations", trace::int(report.evaluations)),
-                ("epsilon", trace::num(report.epsilon)),
-                ("f_value", trace::num(report.f_value)),
-                ("gamma_sum", trace::num(report.gamma_sum())),
-            ],
-        )?;
-        if let Some(st) = &report.stream {
-            for s in &st.shard_stats {
-                t.emit(
-                    "shard",
-                    &format!("shard:{}", s.shard),
-                    Some(s.seconds),
-                    &[
-                        ("n", trace::int(s.n)),
-                        ("selected", trace::int(s.selected)),
-                        ("io_s", trace::num(s.io_s)),
-                        ("select_s", trace::num(s.select_s)),
-                        ("prefetch_stall_s", trace::num(s.prefetch_stall_s)),
-                    ],
-                )?;
-            }
-            t.emit(
-                "merge",
-                "union",
-                Some(st.shard_phase_seconds),
-                &[
-                    ("shards", trace::int(st.shards)),
-                    ("union_size", trace::int(st.union_size)),
-                ],
-            )?;
-            t.emit(
-                "reduce",
-                "reduce",
-                Some(st.reduce_seconds),
-                &[
-                    ("selected", trace::int(st.selected)),
-                    ("merge_ratio", trace::num(st.merge_ratio)),
-                    ("peak_dense_bytes", trace::int(st.peak_dense_bytes)),
-                    ("peak_resident_bytes", trace::int(st.peak_resident_bytes)),
-                ],
-            )?;
-        }
-        if let Some(h) = &report.history {
-            for r in &h.records {
-                t.emit(
-                    "train_epoch",
-                    &format!("epoch:{}", r.epoch),
-                    Some(r.train_s),
-                    &[
-                        ("train_loss", trace::num(r.train_loss)),
-                        ("test_metric", trace::num(r.test_metric)),
-                        ("lr", trace::num(r.lr as f64)),
-                        ("select_s", trace::num(r.select_s)),
-                        ("grad_evals", trace::int(r.grad_evals)),
-                    ],
-                )?;
-            }
-        }
-        t.emit(
-            "run_end",
-            &report.spec.name,
-            Some(report.timings.total_s),
-            &[
-                ("selected", trace::int(report.selected())),
-                ("train_s", trace::num(report.timings.train_s)),
-            ],
-        )?;
-        Ok(())
     }
 
     /// Synthetic / LIBSVM sources: rows resident, selection in-memory
     /// (optionally streamed over `stream_shards` in-memory shards),
-    /// then the optional trainer.
-    fn run_in_memory(&mut self, spec: &RunSpec) -> Result<RunReport> {
+    /// then the optional trainer.  Phase events go out through `shared`
+    /// as each phase completes; `registry` is the run's live metrics.
+    fn run_in_memory(
+        &mut self,
+        spec: &RunSpec,
+        shared: &SharedTrace,
+        registry: &Registry,
+    ) -> Result<RunReport> {
         let t_load = Instant::now();
         let ds = match &spec.data {
             DataSpec::Synthetic { dataset, n } => synthetic::by_name(dataset, *n, spec.seed)?,
@@ -268,6 +227,7 @@ impl Runner {
         let mut engine = runtime::backend_by_name(&spec.engine)?.pairwise()?;
         let mut report = blank_report(spec, engine.name(), ds.n(), ds.d(), ds.num_classes);
         report.timings.load_s = load_s;
+        emit_load_embed(shared, spec, load_s, ds.n(), ds.d(), ds.num_classes)?;
 
         match &spec.train {
             TrainSpec::None => {
@@ -276,6 +236,7 @@ impl Runner {
                     SelectionMode::Craig => {
                         let scfg = spec.selector_config();
                         let mut selector = EpochSelector::new();
+                        selector.set_metrics(registry.clone());
                         let res =
                             selector.select(&ds.x, &ds.y, ds.num_classes, &scfg, engine.as_mut());
                         report.timings.select_s = t_sel.elapsed().as_secs_f64();
@@ -311,6 +272,7 @@ impl Runner {
                     }
                     SelectionMode::Full => unreachable!("validate rejects full without trainer"),
                 }
+                emit_select_events(shared, &report)?;
             }
             TrainSpec::Logreg { method, epochs, batch, lam, schedule, train_frac } => {
                 let mut rng = Rng::new(spec.seed);
@@ -323,9 +285,12 @@ impl Runner {
                     lam: *lam,
                     seed: spec.seed,
                     subset: subset_mode(spec, 0),
+                    metrics: registry.clone(),
                 };
                 let h = train_logreg(&train, &test, &cfg, engine.as_mut())?;
                 finish_train(&mut report, h);
+                emit_select_events(shared, &report)?;
+                emit_train_events(shared, &report)?;
             }
             TrainSpec::Mlp { hidden, epochs, lr, reselect, train_frac } => {
                 let mut rng = Rng::new(spec.seed);
@@ -340,10 +305,13 @@ impl Runner {
                     seed: spec.seed,
                     subset: subset_mode(spec, *reselect),
                     embedding: spec.embedding.kind,
+                    metrics: registry.clone(),
                     ..Default::default()
                 };
                 let h = train_mlp(&train, &test, &cfg, engine.as_mut())?;
                 finish_train(&mut report, h);
+                emit_select_events(shared, &report)?;
+                emit_train_events(shared, &report)?;
             }
         }
         Ok(report)
@@ -359,6 +327,8 @@ impl Runner {
         spec: &RunSpec,
         dir: &str,
         format: ShardFormatSpec,
+        shared: &SharedTrace,
+        registry: &Registry,
     ) -> Result<RunReport> {
         let t_load = Instant::now();
         let set = ShardSet::load(Path::new(dir))?;
@@ -383,6 +353,7 @@ impl Runner {
         let mut engine = runtime::backend_by_name(&spec.engine)?.pairwise()?;
         let mut report = blank_report(spec, engine.name(), set.n, set.d, set.num_classes);
         report.timings.load_s = load_s;
+        emit_load_embed(shared, spec, load_s, set.n, set.d, set.num_classes)?;
 
         let mut scfg = StreamConfig::new(spec.selector_config());
         scfg.workers = spec.selection.workers;
@@ -391,6 +362,7 @@ impl Runner {
             scfg.shard_budget = Some(Budget::Count(b));
         }
         let mut streamer = StreamingSelector::new(scfg.workers);
+        streamer.set_metrics(registry.clone());
         let t_sel = Instant::now();
         let (res, stats) = streamer.select(&set, &scfg, engine.as_mut())?;
         report.timings.select_s = t_sel.elapsed().as_secs_f64();
@@ -403,6 +375,7 @@ impl Runner {
         report.f_value = res.f_value;
         report.evaluations = res.evaluations;
         report.coreset = Some(res.coreset);
+        emit_select_events(shared, &report)?;
         Ok(report)
     }
 }
@@ -458,6 +431,183 @@ fn finish_train(report: &mut RunReport, h: History) {
     report.timings.select_s = h.last().select_s;
     report.timings.train_s = h.last().train_s;
     report.history = Some(h);
+}
+
+/// The live-trace slot the run and the heartbeat thread share.
+type SharedTrace = Arc<Mutex<Option<Trace>>>;
+
+/// Lock the shared trace slot, shrugging off poisoning (a panicking
+/// heartbeat must not also take the run's trace down).
+fn lock_trace(shared: &SharedTrace) -> std::sync::MutexGuard<'_, Option<Trace>> {
+    shared.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Emit one event through the shared slot (no-op without a trace).
+fn emit_live(
+    shared: &SharedTrace,
+    event: &str,
+    label: &str,
+    dur_s: Option<f64>,
+    data: &[(&str, String)],
+) -> Result<()> {
+    let mut guard = lock_trace(shared);
+    if let Some(t) = guard.as_mut() {
+        t.emit(event, label, dur_s, data)?;
+    }
+    Ok(())
+}
+
+/// Spawn the heartbeat thread: one `heartbeat` event immediately (so
+/// even sub-second runs record one), then one per `secs`, each carrying
+/// the run uptime and the full registry snapshot.  The stop flag is
+/// polled at 20ms so joining never waits out a full period.
+fn spawn_heartbeat(
+    shared: SharedTrace,
+    stop: Arc<AtomicBool>,
+    registry: Registry,
+    secs: u64,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let t0 = Instant::now();
+        loop {
+            {
+                let mut guard = lock_trace(&shared);
+                if let Some(t) = guard.as_mut() {
+                    let mut data: Vec<(&str, String)> =
+                        vec![("uptime_s", trace::num(t0.elapsed().as_secs_f64()))];
+                    for s in registry.snapshot() {
+                        data.push((s.name, s.value.to_string()));
+                    }
+                    let _ = t.emit("heartbeat", "beat", None, &data);
+                }
+            }
+            let deadline = Instant::now() + Duration::from_secs(secs);
+            while Instant::now() < deadline {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    })
+}
+
+/// Emit the `load` + `embed` events for a freshly resolved dataset.
+fn emit_load_embed(
+    shared: &SharedTrace,
+    spec: &RunSpec,
+    load_s: f64,
+    n: usize,
+    d: usize,
+    classes: usize,
+) -> Result<()> {
+    let source = match &spec.data {
+        DataSpec::Synthetic { dataset, .. } => format!("synthetic:{dataset}"),
+        DataSpec::Libsvm { path } => format!("libsvm:{path}"),
+        DataSpec::ShardDir { dir, .. } => format!("shard-dir:{dir}"),
+    };
+    emit_live(
+        shared,
+        "load",
+        &source,
+        Some(load_s),
+        &[
+            ("n", trace::int(n)),
+            ("d", trace::int(d)),
+            ("classes", trace::int(classes)),
+        ],
+    )?;
+    emit_live(
+        shared,
+        "embed",
+        spec.embedding.kind.name(),
+        None,
+        &[("metric", trace::str_lit(spec.embedding.metric.name()))],
+    )
+}
+
+/// Emit the selection-phase events — `select`, plus per-shard + `merge`
+/// + `reduce` for streamed runs — from the report's freshly filled
+/// telemetry, the moment the selection phase finishes.
+fn emit_select_events(shared: &SharedTrace, report: &RunReport) -> Result<()> {
+    emit_live(
+        shared,
+        "select",
+        report.spec.selection.mode.name(),
+        Some(report.timings.select_s),
+        &[
+            ("kernel", trace::str_lit(report.spec.selection.kernel.name())),
+            ("selected", trace::int(report.selected())),
+            ("evaluations", trace::int(report.evaluations)),
+            ("epsilon", trace::num(report.epsilon)),
+            ("f_value", trace::num(report.f_value)),
+            ("gamma_sum", trace::num(report.gamma_sum())),
+        ],
+    )?;
+    if let Some(st) = &report.stream {
+        for s in &st.shard_stats {
+            emit_live(
+                shared,
+                "shard",
+                &format!("shard:{}", s.shard),
+                Some(s.seconds),
+                &[
+                    ("n", trace::int(s.n)),
+                    ("selected", trace::int(s.selected)),
+                    ("io_s", trace::num(s.io_s)),
+                    ("select_s", trace::num(s.select_s)),
+                    ("prefetch_stall_s", trace::num(s.prefetch_stall_s)),
+                ],
+            )?;
+        }
+        emit_live(
+            shared,
+            "merge",
+            "union",
+            Some(st.shard_phase_seconds),
+            &[
+                ("shards", trace::int(st.shards)),
+                ("union_size", trace::int(st.union_size)),
+            ],
+        )?;
+        emit_live(
+            shared,
+            "reduce",
+            "reduce",
+            Some(st.reduce_seconds),
+            &[
+                ("selected", trace::int(st.selected)),
+                ("merge_ratio", trace::num(st.merge_ratio)),
+                ("peak_dense_bytes", trace::int(st.peak_dense_bytes)),
+                ("peak_resident_bytes", trace::int(st.peak_resident_bytes)),
+            ],
+        )?;
+    }
+    Ok(())
+}
+
+/// Emit one `train_epoch` event per history record (the trainer owns
+/// its epoch loop; heartbeats carry live epoch progress through the
+/// registry's `train.epoch` gauge while it runs).
+fn emit_train_events(shared: &SharedTrace, report: &RunReport) -> Result<()> {
+    if let Some(h) = &report.history {
+        for r in &h.records {
+            emit_live(
+                shared,
+                "train_epoch",
+                &format!("epoch:{}", r.epoch),
+                Some(r.train_s),
+                &[
+                    ("train_loss", trace::num(r.train_loss)),
+                    ("test_metric", trace::num(r.test_metric)),
+                    ("lr", trace::num(r.lr as f64)),
+                    ("select_s", trace::num(r.select_s)),
+                    ("grad_evals", trace::int(r.grad_evals)),
+                ],
+            )?;
+        }
+    }
+    Ok(())
 }
 
 /// The memory-bound guarantee: a streamed run under an `Auto` store
@@ -803,6 +953,78 @@ mod tests {
             assert_eq!(v.get("run").unwrap().as_str(), Some("tr"));
         }
         assert_eq!(rep.selected(), 30);
+    }
+
+    #[test]
+    fn heartbeats_interleave_and_run_end_stays_last() {
+        let spec = builder("hb")
+            .synthetic("covtype", 500)
+            .count(30)
+            .stream_shards(3)
+            .build()
+            .unwrap();
+        let mut runner = Runner::new();
+        runner.trace = Some(Trace::new("pending"));
+        runner.heartbeat_secs = Some(1);
+        runner.execute(&spec).unwrap();
+        let t = runner.trace.as_ref().unwrap();
+        let names: Vec<&str> = t.events().iter().map(|e| e.event.as_str()).collect();
+        assert!(
+            names.iter().filter(|&&n| n == "heartbeat").count() >= 1,
+            "the first beat fires immediately: {names:?}"
+        );
+        assert_eq!(names.first(), Some(&"run_start"));
+        assert_eq!(names.last(), Some(&"run_end"), "heartbeats join before the bookend");
+        for (i, ev) in t.events().iter().enumerate() {
+            assert_eq!(ev.seq, i, "seq stays gapless with a second writer");
+        }
+        let hb = t.events().iter().find(|e| e.event == "heartbeat").unwrap();
+        let keys: Vec<&str> = hb.data.iter().map(|(k, _)| k.as_str()).collect();
+        assert!(keys.contains(&"uptime_s"), "{keys:?}");
+        assert!(keys.contains(&"stream.rows_streamed"), "{keys:?}");
+        assert!(keys.contains(&"train.epochs"), "{keys:?}");
+    }
+
+    #[test]
+    fn registry_deterministic_snapshot_is_reproducible() {
+        let spec = builder("det")
+            .synthetic("covtype", 500)
+            .count(30)
+            .stream_shards(3)
+            .build()
+            .unwrap();
+        let mut a = Runner::new();
+        a.execute(&spec).unwrap();
+        let mut b = Runner::new();
+        b.trace = Some(Trace::new("pending"));
+        b.heartbeat_secs = Some(1); // observation must not perturb the run
+        b.execute(&spec).unwrap();
+        let da = a.metrics.as_ref().unwrap().deterministic_snapshot();
+        let db = b.metrics.as_ref().unwrap().deterministic_snapshot();
+        assert_eq!(da, db, "deterministic counters are a function of (dataset, config)");
+        assert!(
+            da.iter().any(|&(n, v)| n == "stream.rows_streamed" && v == 500),
+            "every row streams through the shard phase exactly once: {da:?}"
+        );
+    }
+
+    #[test]
+    fn telemetry_never_changes_the_manifest() {
+        let spec = builder("mt").synthetic("ijcnn1", 300).count(20).build().unwrap();
+        let plain = Runner::new().execute(&spec).unwrap();
+        let mut traced = Runner::new();
+        traced.trace = Some(Trace::new("pending"));
+        traced.heartbeat_secs = Some(1);
+        let rep = traced.execute(&spec).unwrap();
+        assert_eq!(
+            plain.manifest_json_deterministic(),
+            rep.manifest_json_deterministic(),
+            "heartbeats and live tracing must not perturb the selection"
+        );
+        assert_eq!(
+            plain.coreset.as_ref().unwrap().indices,
+            rep.coreset.as_ref().unwrap().indices
+        );
     }
 
     #[test]

@@ -237,6 +237,11 @@ pub struct OutputSpec {
     pub history_csv: Option<String>,
     /// JSON run-manifest path (see `Runner`'s manifest schema).
     pub manifest: Option<String>,
+    /// Heartbeat period in seconds for live traces: with a trace sink
+    /// attached, the runner emits a `heartbeat` event carrying the live
+    /// metrics snapshot every period.  No effect without `--trace`
+    /// (`craig doctor` warns about that combination).
+    pub heartbeat_secs: Option<u64>,
 }
 
 /// The typed front door: everything one run needs, in one value.
@@ -385,6 +390,7 @@ const ALL_KEYS: &[&str] = &[
     "output.coreset_csv",
     "output.history_csv",
     "output.manifest",
+    "output.heartbeat_secs",
 ];
 
 /// Keys legal for this spec instance (conditioned on the kinds).
@@ -408,6 +414,7 @@ fn allowed_keys(data_kind: &str, train_kind: &str, method: &str, store: &str) ->
         "output.coreset_csv",
         "output.history_csv",
         "output.manifest",
+        "output.heartbeat_secs",
     ];
     match data_kind {
         "libsvm" => v.push("data.path"),
@@ -621,6 +628,10 @@ impl RunSpec {
                 coreset_csv: g_opt_str(cfg, "output.coreset_csv")?,
                 history_csv: g_opt_str(cfg, "output.history_csv")?,
                 manifest: g_opt_str(cfg, "output.manifest")?,
+                heartbeat_secs: match cfg.get("output.heartbeat_secs") {
+                    None => None,
+                    Some(_) => Some(g_u64(cfg, "output.heartbeat_secs", 0)?),
+                },
             },
         };
         spec.validate()?;
@@ -845,12 +856,15 @@ impl RunSpec {
             ("history_csv", &self.output.history_csv),
             ("manifest", &self.output.manifest),
         ];
-        if out.iter().any(|(_, v)| v.is_some()) {
+        if out.iter().any(|(_, v)| v.is_some()) || self.output.heartbeat_secs.is_some() {
             let _ = writeln!(w, "\n[output]");
             for (k, v) in out {
                 if let Some(v) = v {
                     let _ = writeln!(w, "{k} = \"{v}\"");
                 }
+            }
+            if let Some(secs) = self.output.heartbeat_secs {
+                let _ = writeln!(w, "heartbeat_secs = {secs}");
             }
         }
         s
@@ -1024,6 +1038,11 @@ impl RunSpecBuilder {
 
     pub fn manifest(mut self, path: &str) -> Self {
         self.spec.output.manifest = Some(path.to_string());
+        self
+    }
+
+    pub fn heartbeat_secs(mut self, secs: u64) -> Self {
+        self.spec.output.heartbeat_secs = Some(secs);
         self
     }
 
@@ -1229,6 +1248,13 @@ mod tests {
             // Full-width seeds must survive the spec file bitwise
             // (integer literals above i64::MAX parse as Value::UInt).
             RunSpec::builder("s6").seed(u64::MAX).count(5).build().unwrap(),
+            // Heartbeat period alone must force the [output] section.
+            RunSpec::builder("s7")
+                .synthetic("covtype", 300)
+                .count(10)
+                .heartbeat_secs(2)
+                .build()
+                .unwrap(),
         ];
         for spec in specs {
             let toml = spec.to_toml();

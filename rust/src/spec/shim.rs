@@ -38,7 +38,8 @@ pub fn app() -> App {
             Command::new("run", "execute a RunSpec file (the primary entry point)")
                 .opt("spec", "spec path (or pass it as the positional argument)")
                 .repeated("set", "override: --set key=value (repeatable)")
-                .opt("trace", "write a per-phase JSONL event trace to this path")
+                .opt("trace", "write a live per-phase JSONL event trace to this path")
+                .opt("heartbeat", "heartbeat period in seconds for --trace runs")
                 .flag("print-spec", "print the effective spec and exit"),
             Command::new("replay", "re-execute a run manifest and verify bitwise reproduction")
                 .opt("manifest", "manifest path (or pass it as the positional argument)")
@@ -47,7 +48,9 @@ pub fn app() -> App {
                 .flag("print-spec", "print the embedded spec and exit"),
             Command::new("doctor", "preflight the environment (and optionally a spec/manifest)")
                 .opt("spec", "spec file to check (or pass it as the positional argument)")
-                .opt("manifest", "run manifest to check (parse + git-rev provenance)"),
+                .opt("manifest", "run manifest to check (parse + git-rev provenance)")
+                .opt("trace", "intended trace sink: check its parent directory is writable"),
+            Command::new("trace", "inspect run traces: `trace summarize <trace.jsonl>`"),
             Command::new("select", "run CRAIG coreset selection (shim over `run`)")
                 .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
                 .opt_default("n", "10000", "synthetic dataset size")
@@ -406,9 +409,19 @@ mod tests {
         assert_eq!(a.positional, vec!["MANIFEST.json".to_string()]);
         assert_eq!(a.opt_all("set"), ["seed=9".to_string()]);
         assert_eq!(a.opt("trace"), Some("t.jsonl"));
-        let a = args_for("doctor", &["--manifest", "m.json", "--spec", "s.toml"]);
+        let a = args_for("doctor", &["--manifest", "m.json", "--spec", "s.toml", "--trace", "t"]);
         assert_eq!(a.opt("manifest"), Some("m.json"));
         assert_eq!(a.opt("spec"), Some("s.toml"));
+        assert_eq!(a.opt("trace"), Some("t"));
+    }
+
+    #[test]
+    fn run_heartbeat_and_trace_subcommand_parse() {
+        let a = args_for("run", &["s.toml", "--trace", "t.jsonl", "--heartbeat", "5"]);
+        assert_eq!(a.opt("trace"), Some("t.jsonl"));
+        assert_eq!(a.opt("heartbeat"), Some("5"));
+        let a = args_for("trace", &["summarize", "t.jsonl"]);
+        assert_eq!(a.positional, vec!["summarize".to_string(), "t.jsonl".to_string()]);
     }
 
     #[test]

@@ -1,23 +1,30 @@
 //! Structured per-phase run tracing (`--trace <path>` on `craig run` /
-//! `craig replay`).
+//! `craig replay`), emitted **live** while the run executes.
 //!
 //! A [`Trace`] collects [`TraceEvent`]s — one per pipeline phase
 //! (load / embed / select, per-shard + merge + reduce for streamed
 //! runs, per-epoch train records) plus `run_start` / `run_end`
 //! bookends — and serializes each as one JSONL line on the same
 //! hand-rolled JSON conventions as the run manifest and the bench
-//! snapshot.  Events carry wall-clock durations and, for streamed
-//! runs, the peak-memory telemetry from
-//! [`crate::coreset::StreamStats`], so a long merge-and-reduce run
-//! leaves a phase-by-phase record of where the time and bytes went.
+//! snapshot.  Since schema v2 the runner writes each phase event the
+//! moment the phase completes (v1 synthesized the whole trace post-hoc
+//! from the finished report), every line carries a `"live": true`
+//! marker, and an optional heartbeat thread interleaves periodic
+//! `heartbeat` events carrying a [`crate::metrics::Registry`] snapshot.
+//! Heartbeats are wall-clock artifacts: replay comparison and the
+//! deterministic manifest ignore them.
 //!
 //! The sink (when a path is given) is opened eagerly and flushed after
-//! every event, so a partial trace survives a crash.  Events are also
-//! kept in memory ([`Trace::events`]) for in-process consumers — the
-//! golden tests and the `craig serve` daemon's future job-status
-//! endpoint.  Event `data` values are pre-rendered JSON literals
-//! (produced via [`num`] / [`int`] / [`str_lit`]); the writer never
-//! re-interprets them.  Schema: DESIGN.md §10.
+//! every event, so a partial trace survives a crash — and
+//! [`summarize`] turns that partial trace into a diagnosis (`craig
+//! trace summarize`).  Events are also kept in memory
+//! ([`Trace::events`]) for in-process consumers — the golden tests and
+//! the `craig serve` daemon's future job-status endpoint.  Event
+//! `data` values are pre-rendered JSON literals (produced via [`num`] /
+//! [`int`] / [`str_lit`]); the writer never re-interprets them.
+//! Schema: DESIGN.md §10.2; machinery: §13.
+
+pub mod summarize;
 
 use std::io::Write;
 use std::path::Path;
@@ -26,16 +33,19 @@ use anyhow::{Context, Result};
 
 use crate::util::{json_escape, json_num};
 
-/// JSONL schema version of trace events.
-pub const TRACE_SCHEMA_VERSION: u32 = 1;
+/// JSONL schema version of trace events.  v2 = live emission: a
+/// `"live": true` marker on every event and interleaved `heartbeat`
+/// events (v1 traces had neither; readers accept both).
+pub const TRACE_SCHEMA_VERSION: u32 = 2;
 
 /// One traced phase.
 #[derive(Clone, Debug)]
 pub struct TraceEvent {
-    /// 0-based emission index (total order within the run).
+    /// 0-based emission index (total order within the run, heartbeats
+    /// included).
     pub seq: usize,
     /// Phase name: `run_start` | `load` | `embed` | `select` | `shard`
-    /// | `merge` | `reduce` | `train_epoch` | `run_end`.
+    /// | `merge` | `reduce` | `train_epoch` | `heartbeat` | `run_end`.
     pub event: String,
     /// Human-scoped qualifier (dataset name, `shard:3`, `epoch:7`).
     pub label: String,
@@ -51,7 +61,8 @@ impl TraceEvent {
     pub fn to_jsonl(&self, run: &str) -> String {
         let mut s = format!(
             "{{\"schema_version\": {TRACE_SCHEMA_VERSION}, \"kind\": \"trace_event\", \
-             \"seq\": {}, \"run\": \"{}\", \"event\": \"{}\", \"label\": \"{}\", ",
+             \"live\": true, \"seq\": {}, \"run\": \"{}\", \"event\": \"{}\", \
+             \"label\": \"{}\", ",
             self.seq,
             json_escape(run),
             json_escape(&self.event),
@@ -182,8 +193,9 @@ mod tests {
         assert_eq!(t.events()[1].seq, 1);
         for (i, line) in t.to_jsonl().lines().enumerate() {
             let v = JsonValue::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}\n{line}"));
-            assert_eq!(v.get("schema_version").unwrap().as_u64(), Some(1));
+            assert_eq!(v.get("schema_version").unwrap().as_u64(), Some(2));
             assert_eq!(v.get("kind").unwrap().as_str(), Some("trace_event"));
+            assert_eq!(v.get("live"), Some(&JsonValue::Bool(true)));
             assert_eq!(v.get("seq").unwrap().as_u64(), Some(i as u64));
             assert_eq!(v.get("run").unwrap().as_str(), Some("smoke"));
         }

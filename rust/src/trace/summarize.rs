@@ -1,0 +1,323 @@
+//! `craig trace summarize <trace.jsonl>`: render a per-phase digest of
+//! a (possibly partial) run trace.
+//!
+//! A live trace (schema v2) is flushed per event, so a crashed or
+//! killed run leaves a prefix of well-formed JSONL lines plus at most
+//! one torn tail line.  The summarizer is built around that failure
+//! mode: every line parses independently, unparseable lines are
+//! counted and skipped rather than fatal, and the digest reports the
+//! last event seen — so `summarize` on a partial trace answers "where
+//! did it die?".  A trace whose final event is not `run_end` is
+//! reported as incomplete and the CLI exits nonzero on it.
+//!
+//! v1 (post-hoc) traces summarize identically — the reader keys on
+//! event names only and ignores the v2 `live` marker; `heartbeat`
+//! events feed the throughput line and the heartbeat count but stay
+//! out of the phase table, mirroring how replay skips them.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::JsonValue;
+
+/// Aggregated view of one phase name across the trace.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseRow {
+    /// Phase/event name (`load`, `shard`, `train_epoch`, …).
+    pub event: String,
+    /// How many events carried this name.
+    pub count: usize,
+    /// Σ `dur_s` over those events (0.0 when none carried a duration).
+    pub dur_s: f64,
+    /// Whether any event of this phase carried a duration at all.
+    pub timed: bool,
+    /// Label of the most recent event of this phase.
+    pub last_label: String,
+}
+
+/// The digest `craig trace summarize` renders.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    /// Run name from the first parsed event (empty for an empty trace).
+    pub run: String,
+    /// `schema_version` of the first parsed event (0 if none parsed).
+    pub schema_version: u64,
+    /// Whether the events carry the v2 `"live": true` marker.
+    pub live: bool,
+    /// Events parsed successfully (heartbeats included).
+    pub events: usize,
+    /// `heartbeat` events among them.
+    pub heartbeats: usize,
+    /// Lines that failed to parse or were not trace events (a torn
+    /// tail line from a killed run lands here).
+    pub skipped_lines: usize,
+    /// Per-phase aggregation in first-seen order, heartbeats excluded.
+    pub phases: Vec<PhaseRow>,
+    /// Name of the last successfully parsed event.
+    pub last_event: String,
+    /// Its label.
+    pub last_label: String,
+    /// Whether the trace ends in `run_end` — false means the run
+    /// crashed, was killed, or is still going.
+    pub complete: bool,
+    /// Σ shard-event `io_s` / `select_s` / `prefetch_stall_s`.
+    pub io_s: f64,
+    pub select_s: f64,
+    pub stall_s: f64,
+    /// `run_end`'s duration, when the trace has one.
+    pub total_s: Option<f64>,
+    /// Rows streamed per second, derived from the last heartbeat's
+    /// registry snapshot (`stream.rows_streamed / uptime_s`).
+    pub rows_per_s: Option<f64>,
+}
+
+/// Summarize a trace file (see [`summarize_text`]).
+pub fn summarize_file(path: &Path) -> Result<TraceSummary> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace {}", path.display()))?;
+    Ok(summarize_text(&text))
+}
+
+/// Summarize JSONL trace text.  Infallible by design: malformed lines
+/// (including the torn tail of a killed run) are counted in
+/// [`TraceSummary::skipped_lines`] and skipped.
+pub fn summarize_text(text: &str) -> TraceSummary {
+    let mut s = TraceSummary::default();
+    let mut hb_rows: Option<f64> = None;
+    let mut hb_uptime: Option<f64> = None;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = match JsonValue::parse(line) {
+            Ok(v) => v,
+            Err(_) => {
+                s.skipped_lines += 1;
+                continue;
+            }
+        };
+        if v.get("kind").and_then(JsonValue::as_str) != Some("trace_event") {
+            s.skipped_lines += 1;
+            continue;
+        }
+        let event = v.get("event").and_then(JsonValue::as_str).unwrap_or("?").to_string();
+        let label = v.get("label").and_then(JsonValue::as_str).unwrap_or("").to_string();
+        let dur = v.get("dur_s").and_then(JsonValue::as_f64);
+        if s.events == 0 {
+            s.run = v.get("run").and_then(JsonValue::as_str).unwrap_or("").to_string();
+            s.schema_version = v.get("schema_version").and_then(JsonValue::as_u64).unwrap_or(0);
+            s.live = v.get("live") == Some(&JsonValue::Bool(true));
+        }
+        s.events += 1;
+        s.last_event = event.clone();
+        s.last_label = label.clone();
+        let data = v.get("data");
+        if event == "heartbeat" {
+            s.heartbeats += 1;
+            hb_rows = data
+                .and_then(|d| d.get("stream.rows_streamed"))
+                .and_then(JsonValue::as_f64)
+                .or(hb_rows);
+            hb_uptime =
+                data.and_then(|d| d.get("uptime_s")).and_then(JsonValue::as_f64).or(hb_uptime);
+            continue;
+        }
+        if event == "shard" {
+            for (key, acc) in [
+                ("io_s", &mut s.io_s),
+                ("select_s", &mut s.select_s),
+                ("prefetch_stall_s", &mut s.stall_s),
+            ] {
+                *acc += data.and_then(|d| d.get(key)).and_then(JsonValue::as_f64).unwrap_or(0.0);
+            }
+        }
+        if event == "run_end" {
+            s.total_s = dur;
+        }
+        match s.phases.iter_mut().find(|p| p.event == event) {
+            Some(row) => {
+                row.count += 1;
+                row.dur_s += dur.unwrap_or(0.0);
+                row.timed |= dur.is_some();
+                row.last_label = label;
+            }
+            None => s.phases.push(PhaseRow {
+                event,
+                count: 1,
+                dur_s: dur.unwrap_or(0.0),
+                timed: dur.is_some(),
+                last_label: label,
+            }),
+        }
+    }
+    s.complete = s.last_event == "run_end";
+    if let (Some(rows), Some(up)) = (hb_rows, hb_uptime) {
+        if up > 0.0 && rows > 0.0 {
+            s.rows_per_s = Some(rows / up);
+        }
+    }
+    s
+}
+
+impl TraceSummary {
+    /// Render the digest as the text `craig trace summarize` prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.events == 0 {
+            let _ = writeln!(
+                out,
+                "empty trace ({} unparseable line{})",
+                self.skipped_lines,
+                if self.skipped_lines == 1 { "" } else { "s" }
+            );
+            return out;
+        }
+        let _ = writeln!(
+            out,
+            "trace '{}' (schema v{}{}): {} events, {} heartbeats, {} unparseable",
+            self.run,
+            self.schema_version,
+            if self.live { ", live" } else { "" },
+            self.events,
+            self.heartbeats,
+            self.skipped_lines,
+        );
+        let _ = writeln!(out, "  {:<12} {:>5}  {:>10}  last label", "phase", "count", "total_s");
+        for p in &self.phases {
+            let dur = if p.timed { format!("{:.4}", p.dur_s) } else { "-".to_string() };
+            let _ =
+                writeln!(out, "  {:<12} {:>5}  {:>10}  {}", p.event, p.count, dur, p.last_label);
+        }
+        if self.io_s > 0.0 || self.select_s > 0.0 || self.stall_s > 0.0 {
+            let _ = writeln!(
+                out,
+                "  shard io {:.3}s / select {:.3}s / stall {:.3}s",
+                self.io_s, self.select_s, self.stall_s
+            );
+        }
+        if let Some(r) = self.rows_per_s {
+            let _ = writeln!(out, "  throughput ~{r:.0} rows/s (last heartbeat)");
+        }
+        if self.complete {
+            let total = self.total_s.map(|t| format!(" in {t:.4}s")).unwrap_or_default();
+            let _ = writeln!(out, "  last event: run_end ({}) — complete{}", self.last_label, total);
+        } else {
+            let _ = writeln!(
+                out,
+                "  last event: {} ({}) — INCOMPLETE: no run_end; the run crashed, \
+                 was killed, or is still going",
+                self.last_event, self.last_label
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{int, num, str_lit, Trace};
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new("smoke");
+        t.emit("run_start", "smoke", None, &[("seed", int(7))]).unwrap();
+        t.emit("load", "synthetic:covtype", Some(0.1), &[("n", int(2000))]).unwrap();
+        t.emit("embed", "raw", None, &[("metric", str_lit("euclidean"))]).unwrap();
+        t.emit(
+            "heartbeat",
+            "smoke",
+            None,
+            &[("uptime_s", num(0.5)), ("stream.rows_streamed", int(1000))],
+        )
+        .unwrap();
+        for k in 0..2 {
+            t.emit(
+                "shard",
+                &format!("shard:{k}"),
+                Some(0.2),
+                &[
+                    ("io_s", num(0.05)),
+                    ("select_s", num(0.15)),
+                    ("prefetch_stall_s", num(0.0)),
+                ],
+            )
+            .unwrap();
+        }
+        t.emit("run_end", "smoke", Some(0.9), &[("selected", int(100))]).unwrap();
+        t
+    }
+
+    #[test]
+    fn complete_trace_summarizes_every_phase() {
+        let s = summarize_text(&sample_trace().to_jsonl());
+        assert_eq!(s.run, "smoke");
+        assert_eq!(s.schema_version, 2);
+        assert!(s.live);
+        assert_eq!(s.events, 7);
+        assert_eq!(s.heartbeats, 1);
+        assert_eq!(s.skipped_lines, 0);
+        assert!(s.complete);
+        assert_eq!(s.total_s, Some(0.9));
+        let shard = s.phases.iter().find(|p| p.event == "shard").unwrap();
+        assert_eq!(shard.count, 2);
+        assert!((shard.dur_s - 0.4).abs() < 1e-12);
+        assert_eq!(shard.last_label, "shard:1");
+        assert!(s.phases.iter().all(|p| p.event != "heartbeat"), "heartbeats stay out");
+        assert!((s.io_s - 0.1).abs() < 1e-12);
+        assert!((s.select_s - 0.3).abs() < 1e-12);
+        assert_eq!(s.rows_per_s, Some(2000.0));
+        let text = s.render();
+        assert!(text.contains("complete"), "{text}");
+        assert!(text.contains("throughput ~2000 rows/s"), "{text}");
+    }
+
+    #[test]
+    fn torn_tail_is_skipped_and_reported_incomplete() {
+        let full = sample_trace().to_jsonl();
+        // Kill the run mid-write: drop run_end entirely and tear the
+        // last shard line in half.
+        let lines: Vec<&str> = full.lines().collect();
+        let torn = lines[lines.len() - 2];
+        let mut partial = lines[..lines.len() - 2].join("\n");
+        partial.push('\n');
+        partial.push_str(&torn[..torn.len() / 2]);
+        let s = summarize_text(&partial);
+        assert_eq!(s.skipped_lines, 1, "the torn line is counted, not fatal");
+        assert!(!s.complete);
+        assert_eq!(s.last_event, "shard");
+        assert_eq!(s.last_label, "shard:0");
+        let text = s.render();
+        assert!(text.contains("INCOMPLETE"), "{text}");
+        assert!(text.contains("last event: shard (shard:0)"), "{text}");
+    }
+
+    #[test]
+    fn v1_posthoc_traces_still_summarize() {
+        // A v1 line: no live marker, same envelope otherwise.
+        let v1 = "{\"schema_version\": 1, \"kind\": \"trace_event\", \"seq\": 0, \
+                  \"run\": \"old\", \"event\": \"run_start\", \"label\": \"old\", \
+                  \"dur_s\": null, \"data\": {}}\n\
+                  {\"schema_version\": 1, \"kind\": \"trace_event\", \"seq\": 1, \
+                  \"run\": \"old\", \"event\": \"run_end\", \"label\": \"old\", \
+                  \"dur_s\": 0.5, \"data\": {\"selected\": 10}}\n";
+        let s = summarize_text(v1);
+        assert_eq!(s.schema_version, 1);
+        assert!(!s.live);
+        assert_eq!(s.events, 2);
+        assert!(s.complete);
+        assert_eq!(s.total_s, Some(0.5));
+    }
+
+    #[test]
+    fn empty_and_garbage_inputs_do_not_panic() {
+        let s = summarize_text("");
+        assert_eq!(s.events, 0);
+        assert!(!s.complete);
+        assert!(s.render().contains("empty trace"));
+        let s = summarize_text("not json\n{\"kind\": \"other\"}\n");
+        assert_eq!(s.events, 0);
+        assert_eq!(s.skipped_lines, 2);
+    }
+}

@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::coreset::{self, EpochSelector, PairwiseEngine, WeightedCoreset};
 use crate::data::Dataset;
 use crate::linalg;
-use crate::metrics::Stopwatch;
+use crate::metrics::{Registry, Stopwatch};
 use crate::model::{GradOracle, LogReg};
 use crate::optim::{LrSchedule, Saga, Svrg};
 use crate::rng::Rng;
@@ -62,6 +62,10 @@ pub struct ConvexConfig {
     pub lam: f32,
     pub seed: u64,
     pub subset: SubsetMode,
+    /// Live run-metrics registry the loop reports into (epochs, loss,
+    /// reselections, plus the selection counters via the shared epoch
+    /// selector).  Observation-only; defaults to a private registry.
+    pub metrics: Registry,
 }
 
 impl Default for ConvexConfig {
@@ -74,6 +78,7 @@ impl Default for ConvexConfig {
             lam: 1e-5,
             seed: 0,
             subset: SubsetMode::Full,
+            metrics: Registry::new(),
         }
     }
 }
@@ -146,6 +151,7 @@ pub fn train_logreg(
     // routes each (re)selection through the out-of-core
     // merge-and-reduce path with the same warm-buffer economics.
     let mut selector = EpochSelector::new();
+    selector.set_metrics(cfg.metrics.clone());
 
     // Initial selection (preprocessing; charged to select time).
     let (mut subset, mut epsilon) =
@@ -171,6 +177,7 @@ pub fn train_logreg(
         // Reselect when requested (deep-style protocol on convex data is
         // supported but off by default).
         if period > 0 && epoch > 0 && epoch % period == 0 {
+            cfg.metrics.train_reselections.inc();
             let (s, e) =
                 select_sw.time(|| select_subset(&cfg.subset, train, &mut selector, engine, epoch));
             subset = s;
@@ -231,6 +238,9 @@ pub fn train_logreg(
         // Metrics (not charged to training time: identical across modes).
         let train_loss = LogReg::mean_loss(&train.x, &prob.y, &w, cfg.lam) as f64;
         let test_err = LogReg::error_rate(&test.x, &y_test, &w) as f64;
+        cfg.metrics.train_epochs.inc();
+        cfg.metrics.train_epoch.set(epoch as u64);
+        cfg.metrics.train_loss_micros.set((train_loss.max(0.0) * 1e6) as u64);
         history.records.push(EpochRecord {
             epoch,
             train_loss,

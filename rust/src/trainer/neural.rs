@@ -14,7 +14,7 @@ use crate::coreset::{
 };
 use crate::data::Dataset;
 use crate::linalg;
-use crate::metrics::Stopwatch;
+use crate::metrics::{Registry, Stopwatch};
 use crate::model::{GradOracle, Mlp, MlpParams, MlpShape};
 use crate::optim::schedules::Warmup;
 use crate::optim::{Momentum, Optimizer, Sgd};
@@ -42,6 +42,10 @@ pub struct NeuralConfig {
     /// moves).  Historically hard-wired to proxies inside this module;
     /// lifted into config so the spec layer can vary the axis.
     pub embedding: EmbeddingKind,
+    /// Live run-metrics registry the loop reports into (epoch counter,
+    /// last loss, reselection count — plus everything the selector
+    /// records).  Observation-only; defaults to a private registry.
+    pub metrics: Registry,
 }
 
 impl Default for NeuralConfig {
@@ -59,6 +63,7 @@ impl Default for NeuralConfig {
             seed: 0,
             subset: SubsetMode::Full,
             embedding: EmbeddingKind::GradProxy,
+            metrics: Registry::new(),
         }
     }
 }
@@ -142,6 +147,7 @@ pub fn train_mlp(
     // first reuse its workspace buffers instead of re-allocating them
     // (streamed or in-memory, per `SelectorConfig::stream_shards`).
     let mut selector = EpochSelector::new();
+    selector.set_metrics(cfg.metrics.clone());
 
     let (mut subset, mut epsilon) = select_sw
         .time(|| select_neural(cfg, &mut mlp, &params, train, &mut selector, engine, 0));
@@ -158,6 +164,7 @@ pub fn train_mlp(
 
     for epoch in 0..cfg.epochs {
         if period > 0 && epoch > 0 && epoch % period == 0 {
+            cfg.metrics.train_reselections.inc();
             let (s, e) = select_sw.time(|| {
                 select_neural(cfg, &mut mlp, &params, train, &mut selector, engine, epoch)
             });
@@ -187,6 +194,9 @@ pub fn train_mlp(
 
         let test_acc = mlp.accuracy(&params, &test.x, &test.y) as f64;
         let train_loss = mlp.mean_loss(&params, &train.x, &mlp.y1h.clone()) as f64;
+        cfg.metrics.train_epochs.inc();
+        cfg.metrics.train_epoch.set(epoch as u64);
+        cfg.metrics.train_loss_micros.set((train_loss.max(0.0) * 1e6) as u64);
         history.records.push(EpochRecord {
             epoch,
             train_loss,

@@ -17,8 +17,9 @@
 use std::path::{Path, PathBuf};
 
 use craig::config::Config;
-use craig::pipeline::{comparable_image, replay_manifest, Runner};
+use craig::pipeline::{comparable_image, comparable_trace_events, replay_manifest, Runner};
 use craig::spec::RunSpec;
+use craig::trace::summarize::summarize_text;
 use craig::trace::Trace;
 use craig::util::JsonValue;
 
@@ -151,7 +152,8 @@ fn replay_emits_a_schema_valid_trace() {
     for (i, line) in lines.iter().enumerate() {
         let v = JsonValue::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}"));
         assert_eq!(v.get("kind").and_then(|x| x.as_str()), Some("trace_event"));
-        assert_eq!(v.get("schema_version").and_then(|x| x.as_u64()), Some(1));
+        assert_eq!(v.get("schema_version").and_then(|x| x.as_u64()), Some(2));
+        assert_eq!(v.get("live"), Some(&JsonValue::Bool(true)));
         assert_eq!(v.get("seq").and_then(|x| x.as_u64()), Some(i as u64));
         assert!(v.get("event").and_then(|x| x.as_str()).is_some());
         assert!(v.get("data").is_some());
@@ -160,6 +162,83 @@ fn replay_emits_a_schema_valid_trace() {
     assert_eq!(first.get("event").and_then(|x| x.as_str()), Some("run_start"));
     // The runner stamps the spec's name once it parses the spec.
     assert_eq!(first.get("run").and_then(|x| x.as_str()), Some("smoke"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn heartbeat_runs_share_the_quiet_runs_phase_stream() {
+    // Live telemetry must be observation-only at the trace level too:
+    // interleaving heartbeats may not add, drop, rename, or reorder
+    // phase events.  `comparable_trace_events` is exactly the lens that
+    // makes a heartbeat-laden stream comparable to a quiet one (skip
+    // heartbeats, strip the live/seq envelope keys).
+    let mut dir = std::env::temp_dir();
+    dir.push(format!("craig-golden-live-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |heartbeat: Option<u64>, tag: &str| -> String {
+        let manifest = dir.join(format!("{tag}.manifest.json"));
+        let csv = dir.join(format!("{tag}.coreset.csv"));
+        let spec = golden_spec(manifest.to_str().unwrap(), csv.to_str().unwrap());
+        let mut runner = Runner::new();
+        runner.trace = Some(Trace::new("golden"));
+        runner.heartbeat_secs = heartbeat;
+        runner.run(&spec).expect("golden spec runs");
+        runner.trace.take().expect("trace restored after the run").to_jsonl()
+    };
+    let quiet = run(None, "quiet");
+    let live = run(Some(1), "live");
+    let beats = live
+        .lines()
+        .filter(|l| {
+            JsonValue::parse(l).unwrap().get("event").and_then(|e| e.as_str())
+                == Some("heartbeat")
+        })
+        .count();
+    assert!(beats >= 1, "a 1 s heartbeat fires immediately — at least one beat: {live}");
+    let q = comparable_trace_events(&quiet).unwrap();
+    let l = comparable_trace_events(&live).unwrap();
+    let names = |evs: &[JsonValue]| -> Vec<String> {
+        evs.iter().map(|e| e.get("event").unwrap().as_str().unwrap().to_string()).collect()
+    };
+    assert_eq!(
+        names(&q),
+        vec!["run_start", "load", "embed", "select", "run_end"],
+        "the smoke spec's phase vocabulary is pinned"
+    );
+    assert_eq!(names(&q), names(&l), "heartbeats must not perturb the phase stream");
+    for (a, b) in q.iter().zip(&l) {
+        assert_eq!(a.get("label").unwrap().as_str(), b.get("label").unwrap().as_str());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_killed_runs_truncated_trace_still_summarizes() {
+    // Crash survivability: live traces flush per event, so a run killed
+    // mid-flight leaves a prefix of whole lines plus at most one torn
+    // line.  Summarize must parse what is there, name the last phase
+    // that completed, and flag the trace incomplete.
+    let (dir, _manifest) = generate_fresh("kill");
+    let trace_path = dir.join("kill.trace.jsonl");
+    {
+        let manifest = dir.join("kill.manifest.json");
+        let csv = dir.join("kill.coreset.csv");
+        let spec = golden_spec(manifest.to_str().unwrap(), csv.to_str().unwrap());
+        let mut runner = Runner::new();
+        runner.trace = Some(Trace::with_file("kill", &trace_path).unwrap());
+        runner.run(&spec).unwrap();
+    }
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 4, "{text}");
+    // Simulate a kill after `embed`: three whole lines, then a torn one.
+    let torn = format!("{}\n{}\n{}\n{}", lines[0], lines[1], lines[2], &lines[3][..lines[3].len() / 2]);
+    let summary = summarize_text(&torn);
+    assert!(!summary.complete, "a trace without run_end is incomplete");
+    assert_eq!(summary.last_event, "embed", "the last whole line names the last phase");
+    assert!(summary.skipped_lines >= 1, "the torn line is skipped, not fatal");
+    let rendered = summary.render();
+    assert!(rendered.contains("INCOMPLETE"), "{rendered}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
