@@ -26,7 +26,11 @@
 //! [`spec::RunSpec`] (data → embedding → selection → training →
 //! outputs) parseable from a TOML-subset spec file or built fluently,
 //! executed by [`pipeline::Runner`] with a JSON run manifest; the CLI
-//! subcommands are thin shims over it ([`spec::shim`]).
+//! subcommands are thin shims over it ([`spec::shim`]).  On Unix, the
+//! `serve` module turns that same engine into a resident daemon
+//! (`craig serve`): RunSpecs arrive as jobs over a Unix-socket JSONL
+//! protocol, execute on a worker pool with warm-workspace reuse, and
+//! leave replay-verifiable manifests.
 //!
 //! Substrates ([`rng`], [`linalg`], [`data`], [`config`], [`cli`],
 //! [`metrics`], [`bench`], [`prop`], [`util`]) are implemented from
@@ -49,6 +53,8 @@ pub mod pipeline;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+#[cfg(unix)]
+pub mod serve;
 pub mod spec;
 pub mod trace;
 pub mod trainer;

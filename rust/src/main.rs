@@ -11,8 +11,12 @@
 //!   `--trace` for the per-phase JSONL event stream).
 //! * `replay`       — re-execute a run manifest and verify bitwise
 //!   reproduction (exits nonzero with a field diff on divergence).
-//! * `doctor`       — preflight the environment / a spec / a manifest.
+//! * `doctor`       — preflight the environment / a spec / a manifest
+//!   (`--socket` adds the serve-daemon checks).
 //! * `trace`        — summarize a (possibly partial) live run trace.
+//! * `serve`        — resident selection-service daemon on a Unix
+//!   socket (submit/status/result/cancel/metrics/shutdown over JSONL).
+//! * `submit`       — client for a running `craig serve` daemon.
 //! * `select`       — CRAIG selection (shim).
 //! * `select-stream`— out-of-core merge-and-reduce selection (shim).
 //! * `train`        — convex logreg experiment (shim).
@@ -273,7 +277,19 @@ fn cmd_doctor(a: &Args) -> Result<()> {
     };
     let manifest = a.opt("manifest").map(std::path::PathBuf::from);
     let trace = a.opt("trace").map(std::path::PathBuf::from);
-    let checks = craig::pipeline::run_checks(spec.as_ref(), manifest.as_deref(), trace.as_deref());
+    let mut checks =
+        craig::pipeline::run_checks(spec.as_ref(), manifest.as_deref(), trace.as_deref());
+    if let Some(sock) = a.opt("socket") {
+        let budget = match a.opt("mem-budget") {
+            Some(_) => Some(a.parse_opt("mem-budget", 0u64)?),
+            None => None,
+        };
+        checks.extend(craig::pipeline::serve_checks(
+            std::path::Path::new(sock),
+            budget,
+            spec.as_ref(),
+        ));
+    }
     for c in &checks {
         println!("{:>5}  {:<12} {}", c.status.name(), c.name, c.detail);
     }
@@ -301,6 +317,109 @@ fn cmd_trace(a: &Args) -> Result<()> {
         if summary.last_event.is_empty() { "<none>" } else { summary.last_event.as_str() }
     );
     Ok(())
+}
+
+/// `craig serve --socket PATH [--workers N] [--queue-cap C]
+/// [--mem-budget B] [--artifacts-dir D] [--no-job-traces]`: run the
+/// resident selection-service daemon.  Blocks until a `shutdown`
+/// request or SIGTERM, then drains gracefully (see `craig::serve`).
+#[cfg(unix)]
+fn cmd_serve(a: &Args) -> Result<()> {
+    let cfg = craig::serve::ServeConfig {
+        socket: std::path::PathBuf::from(a.req("socket")?),
+        workers: a.parse_opt("workers", 2)?,
+        queue_cap: a.parse_opt("queue-cap", 64)?,
+        mem_budget: match a.opt("mem-budget") {
+            Some(_) => Some(a.parse_opt("mem-budget", 0u64)?),
+            None => None,
+        },
+        artifacts_dir: a.opt("artifacts-dir").map(std::path::PathBuf::from),
+        job_traces: !a.flag("no-job-traces"),
+    };
+    craig::serve::serve(cfg)
+}
+
+#[cfg(not(unix))]
+fn cmd_serve(_a: &Args) -> Result<()> {
+    anyhow::bail!("`craig serve` needs Unix domain sockets, unavailable on this platform")
+}
+
+/// `craig submit --socket PATH <spec.toml> | --status job-N | --result
+/// job-N | --cancel job-N | --list | --metrics | --shutdown`: one
+/// request to a running daemon, response line printed verbatim (it is
+/// already schema'd JSON).  `--wait` polls a submission to completion
+/// and then prints its `result` line too, exiting nonzero unless the
+/// job completed.
+#[cfg(unix)]
+fn cmd_submit(a: &Args) -> Result<()> {
+    use craig::serve::protocol;
+    use craig::util::JsonValue;
+    let socket = std::path::PathBuf::from(a.req("socket")?);
+    let line = if a.flag("list") {
+        protocol::req_simple("list")
+    } else if a.flag("metrics") {
+        protocol::req_simple("metrics")
+    } else if a.flag("shutdown") {
+        protocol::req_simple("shutdown")
+    } else if let Some(job) = a.opt("status") {
+        protocol::req_job("status", job)
+    } else if let Some(job) = a.opt("result") {
+        protocol::req_job("result", job)
+    } else if let Some(job) = a.opt("cancel") {
+        protocol::req_job("cancel", job)
+    } else {
+        let path = a
+            .opt("spec")
+            .map(str::to_string)
+            .or_else(|| a.positional.first().cloned())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: craig submit --socket S <spec.toml> | --status job-N | --result \
+                     job-N | --cancel job-N | --list | --metrics | --shutdown"
+                )
+            })?;
+        if a.flag("by-path") {
+            protocol::req_submit_path(&path)
+        } else {
+            protocol::req_submit_toml(&std::fs::read_to_string(&path)?)
+        }
+    };
+    let resp = protocol::request(&socket, &line)?;
+    println!("{resp}");
+    let v = JsonValue::parse(&resp).map_err(|e| anyhow::anyhow!("bad response line: {e}"))?;
+    if v.get("ok") != Some(&JsonValue::Bool(true)) {
+        anyhow::bail!(
+            "daemon error [{}]: {}",
+            v.get("code").and_then(JsonValue::as_str).unwrap_or("?"),
+            v.get("error").and_then(JsonValue::as_str).unwrap_or("?")
+        );
+    }
+    if a.flag("wait") && v.get("kind").and_then(JsonValue::as_str) == Some("submit") {
+        let job = v
+            .get("job")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| anyhow::anyhow!("submit response carries no job id"))?
+            .to_string();
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            let s = protocol::request(&socket, &protocol::req_job("status", &job))?;
+            let sv =
+                JsonValue::parse(&s).map_err(|e| anyhow::anyhow!("bad status line: {e}"))?;
+            let state = sv.get("state").and_then(JsonValue::as_str).unwrap_or("").to_string();
+            if matches!(state.as_str(), "completed" | "failed" | "cancelled") {
+                let r = protocol::request(&socket, &protocol::req_job("result", &job))?;
+                println!("{r}");
+                anyhow::ensure!(state == "completed", "{job} finished as {state}");
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_submit(_a: &Args) -> Result<()> {
+    anyhow::bail!("`craig submit` needs Unix domain sockets, unavailable on this platform")
 }
 
 /// `craig shard --out-dir DIR [--shards K] [--format text|binary]`:
@@ -470,6 +589,8 @@ fn main() {
             "replay" => cmd_replay(&args),
             "doctor" => cmd_doctor(&args),
             "trace" => cmd_trace(&args),
+            "serve" => cmd_serve(&args),
+            "submit" => cmd_submit(&args),
             "select" => shim::spec_for_select(&args)
                 .and_then(|s| run_spec(s, args.flag("print-spec"), None, None)),
             "shard" => cmd_shard(&args),

@@ -100,6 +100,15 @@ impl Histogram {
     pub fn total(&self) -> u64 {
         self.counts().iter().sum()
     }
+
+    /// Add another histogram's bucket counts into this one cell-wise
+    /// (both sides share the same `'static` bounds table).
+    fn absorb(&self, other: &Histogram) {
+        debug_assert_eq!(self.bounds, other.bounds, "histogram bounds must match");
+        for (mine, theirs) in self.buckets.iter().zip(other.counts()) {
+            mine.fetch_add(theirs, Ordering::Relaxed);
+        }
+    }
 }
 
 /// One metric's value in a registry snapshot.
@@ -153,6 +162,22 @@ pub struct Registry {
     pub train_loss_micros: Gauge,
     /// Coreset reselections triggered during training.
     pub train_reselections: Counter,
+    /// Jobs accepted by the `craig serve` daemon's queue.
+    pub serve_jobs_submitted: Counter,
+    /// Serve jobs that ran to completion.
+    pub serve_jobs_completed: Counter,
+    /// Serve jobs whose execution errored.
+    pub serve_jobs_failed: Counter,
+    /// Serve jobs cancelled before a worker picked them up.
+    pub serve_jobs_cancelled: Counter,
+    /// Jobs currently waiting in the serve FIFO queue.
+    pub serve_queue_depth: Gauge,
+    /// Serve jobs that checked out a warm workspace or cached shard
+    /// manifest (service-temperature-dependent, like
+    /// [`Registry::select_warm_hits`]).
+    pub serve_cache_warm_hits: Counter,
+    /// Serve jobs that had to build their workspace cold.
+    pub serve_cache_cold_misses: Counter,
     /// Per-class population histogram (edges [`CLASS_N_BOUNDS`]).
     pub class_n: Histogram,
 }
@@ -181,6 +206,13 @@ impl Registry {
             train_epoch: Gauge::default(),
             train_loss_micros: Gauge::default(),
             train_reselections: Counter::default(),
+            serve_jobs_submitted: Counter::default(),
+            serve_jobs_completed: Counter::default(),
+            serve_jobs_failed: Counter::default(),
+            serve_jobs_cancelled: Counter::default(),
+            serve_queue_depth: Gauge::default(),
+            serve_cache_warm_hits: Counter::default(),
+            serve_cache_cold_misses: Counter::default(),
             class_n: Histogram::new(CLASS_N_BOUNDS),
         }
     }
@@ -205,7 +237,45 @@ impl Registry {
             s("train.epoch", self.train_epoch.get(), true),
             s("train.loss_micros", self.train_loss_micros.get(), false),
             s("train.reselections", self.train_reselections.get(), true),
+            s("serve.jobs_submitted", self.serve_jobs_submitted.get(), false),
+            s("serve.jobs_completed", self.serve_jobs_completed.get(), false),
+            s("serve.jobs_failed", self.serve_jobs_failed.get(), false),
+            s("serve.jobs_cancelled", self.serve_jobs_cancelled.get(), false),
+            s("serve.queue_depth", self.serve_queue_depth.get(), false),
+            s("serve.cache_warm_hits", self.serve_cache_warm_hits.get(), false),
+            s("serve.cache_cold_misses", self.serve_cache_cold_misses.get(), false),
         ]
+    }
+
+    /// Fold another registry's totals into this one: counters add,
+    /// gauges keep the high-water value, histogram buckets add
+    /// cell-wise.  The `craig serve` daemon absorbs each finished job's
+    /// per-run registry into its daemon-lifetime registry, which is
+    /// what the `metrics` request reports.
+    pub fn absorb(&self, other: &Registry) {
+        self.select_classes.add(other.select_classes.get());
+        self.select_evals.add(other.select_evals.get());
+        self.select_selected.add(other.select_selected.get());
+        self.select_warm_hits.add(other.select_warm_hits.get());
+        self.select_peak_dense_bytes.fetch_max(other.select_peak_dense_bytes.get());
+        self.stream_shards_decoded.add(other.stream_shards_decoded.get());
+        self.stream_rows_streamed.add(other.stream_rows_streamed.get());
+        self.stream_io_us.add(other.stream_io_us.get());
+        self.stream_select_us.add(other.stream_select_us.get());
+        self.stream_stall_us.add(other.stream_stall_us.get());
+        self.stream_prefetch_depth.fetch_max(other.stream_prefetch_depth.get());
+        self.train_epochs.add(other.train_epochs.get());
+        self.train_epoch.fetch_max(other.train_epoch.get());
+        self.train_loss_micros.fetch_max(other.train_loss_micros.get());
+        self.train_reselections.add(other.train_reselections.get());
+        self.serve_jobs_submitted.add(other.serve_jobs_submitted.get());
+        self.serve_jobs_completed.add(other.serve_jobs_completed.get());
+        self.serve_jobs_failed.add(other.serve_jobs_failed.get());
+        self.serve_jobs_cancelled.add(other.serve_jobs_cancelled.get());
+        self.serve_queue_depth.fetch_max(other.serve_queue_depth.get());
+        self.serve_cache_warm_hits.add(other.serve_cache_warm_hits.get());
+        self.serve_cache_cold_misses.add(other.serve_cache_cold_misses.get());
+        self.class_n.absorb(&other.class_n);
     }
 
     /// Only the metrics the determinism contract pins: two identical
@@ -275,6 +345,46 @@ mod tests {
             det.iter().all(|&(n, _)| !n.ends_with("_us")),
             "wall-clock metrics must stay out of the deterministic set"
         );
+        for name in [
+            "serve.jobs_submitted",
+            "serve.jobs_completed",
+            "serve.jobs_failed",
+            "serve.jobs_cancelled",
+            "serve.queue_depth",
+            "serve.cache_warm_hits",
+            "serve.cache_cold_misses",
+        ] {
+            assert!(
+                snap.iter().any(|s| s.name == name && !s.deterministic),
+                "{name} must be registered on the wall-clock side of the split"
+            );
+            assert!(
+                det.iter().all(|&(n, _)| n != name),
+                "{name} must stay out of the deterministic snapshot"
+            );
+        }
+    }
+
+    #[test]
+    fn absorb_adds_counters_and_keeps_gauge_high_water() {
+        let daemon = Registry::new();
+        daemon.select_evals.add(10);
+        daemon.select_peak_dense_bytes.set(500);
+        daemon.class_n.observe(5);
+        let job = Registry::new();
+        job.select_evals.add(7);
+        job.select_warm_hits.inc();
+        job.select_peak_dense_bytes.set(300); // below the daemon high water
+        job.train_epoch.set(4);
+        job.class_n.observe(5);
+        job.class_n.observe(100_000);
+        daemon.absorb(&job);
+        assert_eq!(daemon.select_evals.get(), 17);
+        assert_eq!(daemon.select_warm_hits.get(), 1);
+        assert_eq!(daemon.select_peak_dense_bytes.get(), 500);
+        assert_eq!(daemon.train_epoch.get(), 4);
+        assert_eq!(daemon.class_n.total(), 3);
+        assert_eq!(job.select_evals.get(), 7, "absorb must not mutate the source");
     }
 
     #[test]

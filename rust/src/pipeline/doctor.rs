@@ -15,8 +15,6 @@
 
 use std::path::Path;
 
-use anyhow::Result;
-
 use crate::coreset::SimStorePolicy;
 use crate::data::shard::ShardSet;
 use crate::runtime;
@@ -188,30 +186,50 @@ fn data_check(spec: &RunSpec) -> Check {
     }
 }
 
-/// Dense-similarity memory estimate: the worst-case n² buffer per
-/// selection subproblem (whole dataset, or ≈n/K rows per stream
-/// shard) against the spec's store policy, at the kernel tier's
-/// element width (f16 under `tiled-f32` halves the estimate; the
-/// selector allocates exactly that).  Under `Auto` an estimate over
-/// budget is a *warning* — the selector falls back to the blocked
-/// store by design; under `Dense` it is what the run will genuinely
-/// allocate, still the user's explicit choice.  Returns `None` when
-/// the row count is unknowable without loading (LIBSVM).
-fn memory_check(spec: &RunSpec) -> Option<Check> {
-    let n = match &spec.data {
-        DataSpec::Synthetic { n, .. } => *n,
-        DataSpec::ShardDir { dir, .. } => ShardSet::load(Path::new(dir)).ok()?.n,
+/// The worst-case dense-similarity footprint of one selection job:
+/// `rows`² elements per subproblem at the kernel tier's width, where
+/// `rows` is the whole dataset or ≈n/K per stream shard.  Shared by
+/// the doctor's memory check and the serve daemon's admission control
+/// (`craig serve --mem-budget` charges each queued/running job this
+/// estimate).
+#[derive(Clone, Copy, Debug)]
+pub struct DenseEstimate {
+    /// Rows per selection subproblem (`n.div_ceil(shards)`).
+    pub rows: usize,
+    /// Subproblem count (shard files, or `selection.stream_shards`).
+    pub shards: usize,
+    /// Worst-case dense buffer in bytes at the kernel tier's width.
+    pub dense_bytes: u128,
+}
+
+/// Estimate a spec's dense footprint.  Returns `None` when the row
+/// count is unknowable without loading the data (LIBSVM sources, or an
+/// unreadable shard dir — reachability is [`run_checks`]' job).
+pub fn dense_estimate(spec: &RunSpec) -> Option<DenseEstimate> {
+    let (n, shards) = match &spec.data {
+        DataSpec::Synthetic { n, .. } => (*n, spec.selection.stream_shards.max(1)),
+        DataSpec::ShardDir { dir, .. } => {
+            let set = ShardSet::load(Path::new(dir)).ok()?;
+            (set.n, set.shards.len().max(1))
+        }
         DataSpec::Libsvm { .. } => return None,
     };
-    let shards = match &spec.data {
-        DataSpec::ShardDir { dir, .. } => {
-            ShardSet::load(Path::new(dir)).ok()?.shards.len().max(1)
-        }
-        _ => spec.selection.stream_shards.max(1),
-    };
     let rows = n.div_ceil(shards);
+    let dense_bytes = SimStorePolicy::dense_bytes_for(rows, spec.selection.kernel);
+    Some(DenseEstimate { rows, shards, dense_bytes })
+}
+
+/// Dense-similarity memory estimate: [`dense_estimate`] against the
+/// spec's store policy, at the kernel tier's element width (f16 under
+/// `tiled-f32` halves the estimate; the selector allocates exactly
+/// that).  Under `Auto` an estimate over budget is a *warning* — the
+/// selector falls back to the blocked store by design; under `Dense`
+/// it is what the run will genuinely allocate, still the user's
+/// explicit choice.  Returns `None` when the row count is unknowable
+/// without loading (LIBSVM).
+fn memory_check(spec: &RunSpec) -> Option<Check> {
+    let DenseEstimate { rows, shards, dense_bytes } = dense_estimate(spec)?;
     let tier = spec.selection.kernel;
-    let dense_bytes = SimStorePolicy::dense_bytes_for(rows, tier);
     let elem = if tier.sim_elem_bytes() == 2 { "f16" } else { "f32" };
     let detail = format!(
         "worst-case dense buffer ≈ {dense_bytes} B ({rows}² {elem}, kernel = {}, {shards} \
@@ -339,6 +357,150 @@ fn heartbeat_check(spec: Option<&RunSpec>, trace: Option<&Path>) -> Option<Check
              events and will not be emitted (pass --trace)"
         ),
     ))
+}
+
+/// Serve preflight (`craig doctor --socket`): socket-path viability
+/// with a stale-socket connect probe, and the daemon-wide admission
+/// budget against the spec's per-job estimate.  Appended to
+/// [`run_checks`]' output by the CLI when `--socket` is given.
+pub fn serve_checks(
+    socket: &Path,
+    mem_budget: Option<u64>,
+    spec: Option<&RunSpec>,
+) -> Vec<Check> {
+    vec![serve_socket_check(socket), serve_admission_check(mem_budget, spec)]
+}
+
+/// Socket-path viability.  A missing parent is fine (`craig serve`
+/// creates it); a parent that exists but is not a directory is a hard
+/// Fail.  An existing socket file gets the same connect probe the
+/// daemon's stale-socket policy runs: a live daemon answers (Ok —
+/// `craig serve` would refuse to bind, but submit/status work), a dead
+/// one leaves a stale file (Warn — reclaimed on the next `craig
+/// serve`), with the `<socket>.pid` file's liveness in the detail.
+fn serve_socket_check(socket: &Path) -> Check {
+    let parent = match socket.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    if parent.exists() && !parent.is_dir() {
+        return Check::new(
+            "serve-socket",
+            CheckStatus::Fail,
+            format!("{}: parent {} is not a directory", socket.display(), parent.display()),
+        );
+    }
+    if !socket.exists() {
+        let verb =
+            if parent.exists() { "parent exists" } else { "the daemon will create the parent" };
+        return Check::new(
+            "serve-socket",
+            CheckStatus::Ok,
+            format!("{} will be created ({verb})", socket.display()),
+        );
+    }
+    match probe_socket(socket) {
+        Ok(()) => Check::new(
+            "serve-socket",
+            CheckStatus::Ok,
+            format!(
+                "a daemon is listening on {} — `craig serve` would refuse to bind, \
+                 `craig submit` will connect",
+                socket.display()
+            ),
+        ),
+        Err(e) => Check::new(
+            "serve-socket",
+            CheckStatus::Warn,
+            format!(
+                "{} exists but nothing answers ({e}) — stale socket, {}; `craig serve` \
+                 will reclaim it",
+                socket.display(),
+                pid_liveness(socket)
+            ),
+        ),
+    }
+}
+
+#[cfg(unix)]
+fn probe_socket(socket: &Path) -> std::io::Result<()> {
+    std::os::unix::net::UnixStream::connect(socket).map(|_| ())
+}
+
+#[cfg(not(unix))]
+fn probe_socket(_socket: &Path) -> std::io::Result<()> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "unix sockets unsupported on this platform",
+    ))
+}
+
+/// One clause describing the `<socket>.pid` file: absent, naming a
+/// live process, or naming a dead one.
+fn pid_liveness(socket: &Path) -> String {
+    let mut pid_path = socket.as_os_str().to_os_string();
+    pid_path.push(".pid");
+    let pid_path = std::path::PathBuf::from(pid_path);
+    let Ok(text) = std::fs::read_to_string(&pid_path) else {
+        return format!("no PID file at {}", pid_path.display());
+    };
+    let Ok(pid) = text.trim().parse::<u32>() else {
+        return format!("unparseable PID file at {}", pid_path.display());
+    };
+    if Path::new(&format!("/proc/{pid}")).exists() {
+        format!("PID file names process {pid}, which is still alive but not listening")
+    } else {
+        format!("PID file names process {pid}, which is gone")
+    }
+}
+
+/// Admission sanity: with `--mem-budget` set, a spec whose per-job
+/// dense estimate alone exceeds the daemon budget can *never* be
+/// admitted — that is a Fail before the daemon even starts.  Below
+/// budget, the detail reports how many such jobs fit concurrently.
+fn serve_admission_check(mem_budget: Option<u64>, spec: Option<&RunSpec>) -> Check {
+    let Some(budget) = mem_budget else {
+        return Check::new(
+            "serve-admission",
+            CheckStatus::Ok,
+            "admission control disabled (--mem-budget not set); jobs queue on FIFO \
+             capacity alone"
+                .to_string(),
+        );
+    };
+    let est = spec.and_then(dense_estimate);
+    match est {
+        None => Check::new(
+            "serve-admission",
+            CheckStatus::Ok,
+            format!(
+                "budget {budget} B; no estimable spec to charge against it (such jobs \
+                 are admitted at cost 0)"
+            ),
+        ),
+        Some(e) if e.dense_bytes > budget as u128 => Check::new(
+            "serve-admission",
+            CheckStatus::Fail,
+            format!(
+                "per-job dense estimate {} B exceeds the {budget} B daemon budget — this \
+                 spec can never be admitted (raise --mem-budget or shrink the job)",
+                e.dense_bytes
+            ),
+        ),
+        Some(e) => {
+            let fit = (budget as u128) / e.dense_bytes.max(1);
+            Check::new(
+                "serve-admission",
+                CheckStatus::Ok,
+                format!(
+                    "per-job dense estimate {} B fits the {budget} B budget ({fit} such \
+                     job{} concurrently)",
+                    e.dense_bytes,
+                    if fit == 1 { "" } else { "s" }
+                ),
+            )
+        }
+    }
 }
 
 /// Manifest checks: the file parses as a schema-compatible run
@@ -553,6 +715,91 @@ mod tests {
         spec.output.heartbeat_secs = None;
         let checks = run_checks(Some(&spec), None, None);
         assert!(checks.iter().all(|c| c.name != "heartbeat"), "{checks:?}");
+    }
+
+    #[test]
+    fn dense_estimate_matches_the_memory_check_arithmetic() {
+        let spec = RunSpec::builder("e").synthetic("covtype", 900).count(10).build().unwrap();
+        let e = dense_estimate(&spec).expect("synthetic specs are estimable");
+        assert_eq!(e.shards, 1);
+        assert_eq!(e.rows, 900);
+        assert_eq!(
+            e.dense_bytes,
+            crate::coreset::SimStorePolicy::dense_bytes_for(900, spec.selection.kernel)
+        );
+        // Stream shards split the subproblem: rows = ceil(n / K).
+        let mut streamed = spec.clone();
+        streamed.selection.stream_shards = 4;
+        let e = dense_estimate(&streamed).unwrap();
+        assert_eq!((e.rows, e.shards), (225, 4));
+        // LIBSVM rows are unknowable without loading.
+        let l = RunSpec::builder("l").libsvm("/no/file").count(5).build().unwrap();
+        assert!(dense_estimate(&l).is_none());
+    }
+
+    #[test]
+    fn serve_socket_check_covers_missing_stale_and_bad_parent() {
+        // Absent socket under an existing parent: Ok, will be created.
+        let sock = std::env::temp_dir().join("craig-doctor-no-such.sock");
+        let _ = std::fs::remove_file(&sock);
+        let c = &serve_checks(&sock, None, None)[0];
+        assert_eq!(c.name, "serve-socket");
+        assert_eq!(c.status, CheckStatus::Ok);
+        assert!(c.detail.contains("will be created"), "{}", c.detail);
+        // A parent that is a *file* is a hard Fail.
+        let file_parent = std::env::temp_dir()
+            .join(format!("craig-doctor-parentfile-{}", std::process::id()));
+        std::fs::write(&file_parent, "x").unwrap();
+        let inside = file_parent.join("d.sock");
+        let c = &serve_checks(&inside, None, None)[0];
+        assert_eq!(c.status, CheckStatus::Fail);
+        assert!(c.detail.contains("not a directory"), "{}", c.detail);
+        let _ = std::fs::remove_file(&file_parent);
+        // A plain file where the socket should be: nothing answers the
+        // connect probe → stale-socket Warn naming the PID file state.
+        let stale = std::env::temp_dir()
+            .join(format!("craig-doctor-stale-{}.sock", std::process::id()));
+        std::fs::write(&stale, "").unwrap();
+        let c = &serve_checks(&stale, None, None)[0];
+        assert_eq!(c.status, CheckStatus::Warn);
+        assert!(c.detail.contains("stale socket"), "{}", c.detail);
+        assert!(c.detail.contains("no PID file"), "{}", c.detail);
+        // With a PID file naming a dead process, the detail says so.
+        let pid_path = {
+            let mut os = stale.as_os_str().to_os_string();
+            os.push(".pid");
+            std::path::PathBuf::from(os)
+        };
+        std::fs::write(&pid_path, "999999999\n").unwrap();
+        let c = &serve_checks(&stale, None, None)[0];
+        assert_eq!(c.status, CheckStatus::Warn);
+        assert!(c.detail.contains("gone"), "{}", c.detail);
+        let _ = std::fs::remove_file(&pid_path);
+        let _ = std::fs::remove_file(&stale);
+    }
+
+    #[test]
+    fn serve_admission_check_fails_only_on_inadmissible_specs() {
+        let sock = std::env::temp_dir().join("craig-doctor-adm.sock");
+        let spec = RunSpec::builder("a").synthetic("covtype", 800).count(5).build().unwrap();
+        let est = dense_estimate(&spec).unwrap().dense_bytes;
+        // No budget: admission disabled, informational only.
+        let c = &serve_checks(&sock, None, Some(&spec))[1];
+        assert_eq!(c.name, "serve-admission");
+        assert_eq!(c.status, CheckStatus::Ok);
+        assert!(c.detail.contains("disabled"), "{}", c.detail);
+        // Budget below one job's estimate: the spec can never run.
+        let c = &serve_checks(&sock, Some(est as u64 - 1), Some(&spec))[1];
+        assert_eq!(c.status, CheckStatus::Fail);
+        assert!(c.detail.contains("never be admitted"), "{}", c.detail);
+        // Ample budget: Ok, and the detail counts concurrent fits.
+        let c = &serve_checks(&sock, Some(est as u64 * 3), Some(&spec))[1];
+        assert_eq!(c.status, CheckStatus::Ok);
+        assert!(c.detail.contains("3 such jobs"), "{}", c.detail);
+        // Budget but no spec: admitted at cost 0, never a failure.
+        let c = &serve_checks(&sock, Some(1024), None)[1];
+        assert_eq!(c.status, CheckStatus::Ok);
+        assert!(c.detail.contains("cost 0"), "{}", c.detail);
     }
 
     #[test]

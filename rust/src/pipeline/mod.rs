@@ -43,7 +43,9 @@ pub mod doctor;
 pub mod replay;
 pub mod runner;
 
-pub use doctor::{any_failed, run_checks, Check, CheckStatus};
+pub use doctor::{
+    any_failed, dense_estimate, run_checks, serve_checks, Check, CheckStatus, DenseEstimate,
+};
 pub use replay::{
     comparable_image, comparable_trace_events, replay_manifest, FieldDiff, ReplayOutcome,
 };

@@ -116,6 +116,18 @@ pub struct Runner {
     /// The run's metrics registry, installed by [`Runner::execute`] and
     /// left in place so callers can read the final counters.
     pub metrics: Option<Registry>,
+    /// Warm-workspace seam: when set, the in-memory CRAIG path reuses
+    /// this selector (and its grown dense scratch buffers) instead of
+    /// building one cold, and parks it back here after the run.  The
+    /// `craig serve` daemon checks selectors in and out of its job
+    /// cache through this field; determinism is unaffected — a coreset
+    /// is a pure function of `(dataset, config)`, warm or cold
+    /// (DESIGN.md §13).
+    pub warm_selector: Option<EpochSelector>,
+    /// Cached shard-dir manifest: reused when the spec's `data.dir`
+    /// matches the cached set's directory, reloaded (and replaced)
+    /// otherwise.  Also parked back after the run for the next one.
+    pub shard_cache: Option<Arc<ShardSet>>,
 }
 
 impl Runner {
@@ -235,12 +247,13 @@ impl Runner {
                 match spec.selection.mode {
                     SelectionMode::Craig => {
                         let scfg = spec.selector_config();
-                        let mut selector = EpochSelector::new();
+                        let mut selector = self.warm_selector.take().unwrap_or_default();
                         selector.set_metrics(registry.clone());
                         let res =
                             selector.select(&ds.x, &ds.y, ds.num_classes, &scfg, engine.as_mut());
                         report.timings.select_s = t_sel.elapsed().as_secs_f64();
                         report.stream = selector.last_stream.take();
+                        self.warm_selector = Some(selector);
                         verify_stream_budget(&report.stream, scfg.sim_store)?;
                         // The rows are resident even when selection was
                         // streamed over in-memory shards — diagnostics
@@ -331,7 +344,15 @@ impl Runner {
         registry: &Registry,
     ) -> Result<RunReport> {
         let t_load = Instant::now();
-        let set = ShardSet::load(Path::new(dir))?;
+        // Reuse a cached manifest when it describes this directory (the
+        // serve daemon parks one per dataset); anything else reloads.
+        let cached =
+            self.shard_cache.as_ref().filter(|s| s.dir.as_path() == Path::new(dir)).cloned();
+        let set: Arc<ShardSet> = match cached {
+            Some(set) => set,
+            None => Arc::new(ShardSet::load(Path::new(dir))?),
+        };
+        self.shard_cache = Some(Arc::clone(&set));
         let load_s = t_load.elapsed().as_secs_f64();
         // `data.shard_format = auto` takes whatever the manifest records;
         // an explicit expectation must match the directory, loudly.
@@ -364,7 +385,7 @@ impl Runner {
         let mut streamer = StreamingSelector::new(scfg.workers);
         streamer.set_metrics(registry.clone());
         let t_sel = Instant::now();
-        let (res, stats) = streamer.select(&set, &scfg, engine.as_mut())?;
+        let (res, stats) = streamer.select(&*set, &scfg, engine.as_mut())?;
         report.timings.select_s = t_sel.elapsed().as_secs_f64();
         let stream = Some(stats);
         verify_stream_budget(&stream, spec.selection.store)?;
@@ -1025,6 +1046,48 @@ mod tests {
             plain.coreset.as_ref().unwrap().indices,
             rep.coreset.as_ref().unwrap().indices
         );
+    }
+
+    #[test]
+    fn warm_selector_seam_is_bitwise_invisible() {
+        let spec = builder("warm").synthetic("covtype", 400).count(25).build().unwrap();
+        let mut runner = Runner::new();
+        let cold = runner.execute(&spec).unwrap();
+        let w_cold = runner.metrics.as_ref().unwrap().select_warm_hits.get();
+        assert!(runner.warm_selector.is_some(), "execute parks the selector for reuse");
+        let warm = runner.execute(&spec).unwrap();
+        let w_warm = runner.metrics.as_ref().unwrap().select_warm_hits.get();
+        assert_eq!(
+            cold.manifest_json_deterministic(),
+            warm.manifest_json_deterministic(),
+            "workspace temperature must not change the arithmetic"
+        );
+        assert_eq!(cold.coreset.as_ref().unwrap().indices, warm.coreset.as_ref().unwrap().indices);
+        assert_eq!(cold.coreset.as_ref().unwrap().gamma, warm.coreset.as_ref().unwrap().gamma);
+        // Even a cold multi-class pass registers intra-run buffer
+        // reuses; the warm pass adds at least the first class's.
+        assert!(w_warm > w_cold, "warm pass must reuse the grown buffer ({w_cold} → {w_warm})");
+    }
+
+    #[test]
+    fn shard_cache_seam_reuses_the_manifest_bitwise() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("craig-shard-cache-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = synthetic::by_name("covtype", 300, 5).unwrap();
+        crate::data::shard::write_shards(&ds, 3, 5, &dir).unwrap();
+        let spec = builder("sc").shard_dir(dir.to_str().unwrap()).count(20).build().unwrap();
+        let mut runner = Runner::new();
+        let first = runner.execute(&spec).unwrap();
+        let cached = runner.shard_cache.clone().expect("execute parks the shard manifest");
+        let second = runner.execute(&spec).unwrap();
+        assert!(
+            Arc::ptr_eq(&cached, runner.shard_cache.as_ref().unwrap()),
+            "the second run must reuse the cached manifest, not reload it"
+        );
+        assert_eq!(first.manifest_json_deterministic(), second.manifest_json_deterministic());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Keyed cache of warm [`EpochSelector`] workspaces and loaded
+//! [`ShardSet`] manifests, shared across serve jobs on the same
+//! dataset.
+//!
+//! Workers check a selector out before a job and back in after it, so
+//! a repeat submission inherits the grown dense scratch buffers (and,
+//! for shard-dir sources, the parsed manifest) instead of rebuilding
+//! them cold.  The key is purely an efficiency hint: CRAIG's
+//! determinism contract makes a coreset a pure function of
+//! `(dataset, config)` regardless of workspace temperature, so a stale
+//! or colliding key can only cost an allocation — never change an
+//! output.  Hit/miss counters land in the daemon registry
+//! (`serve.cache_warm_hits` / `serve.cache_cold_misses`), reported by
+//! the `metrics` request.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coreset::EpochSelector;
+use crate::data::shard::ShardSet;
+use crate::metrics::Registry;
+use crate::spec::{DataSpec, RunSpec};
+
+/// One dataset's slot.
+#[derive(Default)]
+struct Entry {
+    /// Parked warm selectors — more than one accumulates when several
+    /// workers have each run this dataset.
+    selectors: Vec<EpochSelector>,
+    shards: Option<Arc<ShardSet>>,
+}
+
+/// The daemon-wide cache (one per daemon, shared by all workers).
+pub struct WorkspaceCache {
+    inner: Mutex<HashMap<String, Entry>>,
+    metrics: Registry,
+}
+
+/// The cache key for a spec's dataset.  Synthetic sources include the
+/// seed (generation depends on it); file-backed sources key on their
+/// path alone.
+pub fn dataset_key(spec: &RunSpec) -> String {
+    match &spec.data {
+        DataSpec::Synthetic { dataset, n } => format!("synthetic:{dataset}:{n}:{}", spec.seed),
+        DataSpec::Libsvm { path } => format!("libsvm:{path}"),
+        DataSpec::ShardDir { dir, .. } => format!("shard-dir:{dir}"),
+    }
+}
+
+impl WorkspaceCache {
+    pub fn new(metrics: Registry) -> WorkspaceCache {
+        WorkspaceCache { inner: Mutex::new(HashMap::new()), metrics }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, Entry>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Check a workspace out for a job on `key`.  Returns the selector
+    /// (warm if one was parked, fresh otherwise), the cached shard
+    /// manifest, and whether this counts as a warm hit.  Shard-dir
+    /// jobs (`wants_shards`) count a cached manifest as warmth even
+    /// when no selector is parked — the manifest read is what they
+    /// skip.
+    pub fn checkout(
+        &self,
+        key: &str,
+        wants_shards: bool,
+    ) -> (EpochSelector, Option<Arc<ShardSet>>, bool) {
+        let mut map = self.lock();
+        let entry = map.entry(key.to_string()).or_default();
+        let selector = entry.selectors.pop();
+        let shards = entry.shards.clone();
+        let warm = selector.is_some() || (wants_shards && shards.is_some());
+        if warm {
+            self.metrics.serve_cache_warm_hits.inc();
+        } else {
+            self.metrics.serve_cache_cold_misses.inc();
+        }
+        (selector.unwrap_or_default(), shards, warm)
+    }
+
+    /// Park a job's selector (and any loaded shard manifest) back
+    /// under `key` for the next job on the same dataset.
+    pub fn checkin(
+        &self,
+        key: &str,
+        selector: Option<EpochSelector>,
+        shards: Option<Arc<ShardSet>>,
+    ) {
+        let mut map = self.lock();
+        let entry = map.entry(key.to_string()).or_default();
+        if let Some(s) = selector {
+            entry.selectors.push(s);
+        }
+        if shards.is_some() {
+            entry.shards = shards;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, n: usize, seed: u64) -> RunSpec {
+        RunSpec::builder(name).synthetic("covtype", n).seed(seed).count(10).build().unwrap()
+    }
+
+    #[test]
+    fn keys_separate_datasets_and_seeds() {
+        let a = dataset_key(&spec("a", 200, 1));
+        let b = dataset_key(&spec("b", 200, 1));
+        assert_eq!(a, b, "the spec name is not part of the dataset identity");
+        assert_ne!(a, dataset_key(&spec("c", 300, 1)), "size changes the dataset");
+        assert_ne!(a, dataset_key(&spec("d", 200, 2)), "seed changes synthetic data");
+        let sd = RunSpec::builder("s").shard_dir("/tmp/x").count(5).build().unwrap();
+        assert_eq!(dataset_key(&sd), "shard-dir:/tmp/x");
+    }
+
+    #[test]
+    fn checkout_is_cold_then_warm_and_counts_both() {
+        let r = Registry::new();
+        let cache = WorkspaceCache::new(r.clone());
+        let (sel, shards, warm) = cache.checkout("k", false);
+        assert!(!warm && shards.is_none(), "first touch is a cold miss");
+        assert_eq!(r.serve_cache_cold_misses.get(), 1);
+        cache.checkin("k", Some(sel), None);
+        let (_sel, _, warm) = cache.checkout("k", false);
+        assert!(warm, "a parked selector makes the next checkout warm");
+        assert_eq!(r.serve_cache_warm_hits.get(), 1);
+        // The selector is checked out, not copied: a third checkout
+        // before checkin is cold again.
+        let (_, _, warm) = cache.checkout("k", false);
+        assert!(!warm);
+        assert_eq!(r.serve_cache_cold_misses.get(), 2);
+    }
+
+    #[test]
+    fn shard_manifests_warm_shard_jobs_only() {
+        let r = Registry::new();
+        let cache = WorkspaceCache::new(r.clone());
+        let set = Arc::new(ShardSet {
+            dir: "/tmp/x".into(),
+            n: 10,
+            d: 2,
+            num_classes: 2,
+            shards: Vec::new(),
+        });
+        cache.checkin("k", None, Some(Arc::clone(&set)));
+        let (_, cached, warm) = cache.checkout("k", true);
+        assert!(warm, "a cached manifest warms a shard-dir job");
+        assert!(Arc::ptr_eq(&cached.unwrap(), &set));
+        let (_, _, warm) = cache.checkout("k", false);
+        assert!(!warm, "an in-memory job gains nothing from the manifest alone");
+    }
+
+    #[test]
+    fn distinct_keys_do_not_share_warmth() {
+        let cache = WorkspaceCache::new(Registry::new());
+        let (sel, _, _) = cache.checkout("a", false);
+        cache.checkin("a", Some(sel), None);
+        let (_, _, warm) = cache.checkout("b", false);
+        assert!(!warm);
+    }
+}

@@ -1,0 +1,377 @@
+//! Selection-as-a-service: the `craig serve` job daemon.
+//!
+//! `craig serve --socket PATH` runs a resident daemon on a Unix domain
+//! socket speaking the line-delimited JSONL protocol of [`protocol`]
+//! (`submit` / `status` / `list` / `result` / `cancel` / `metrics` /
+//! `shutdown`).  Submitted [`crate::spec::RunSpec`]s flow through a
+//! bounded FIFO [`queue`] into a configurable worker pool ([`worker`]);
+//! each worker executes through the standard
+//! [`crate::pipeline::Runner::execute`] seam and writes the schema-v1
+//! run manifest as the job artifact, so a serve job is
+//! replay-verifiable with `craig replay` exactly like a CLI run and its
+//! coreset CSV is byte-identical to `craig run` on the same spec
+//! (`rust/tests/serve_equivalence.rs`).
+//!
+//! Amortization is the point (select once, train cheap — Mirzasoleiman
+//! et al., ICML 2020; recurring reselection in CREST-style successors):
+//! the [`cache`] reuses warm selection workspaces and loaded shard
+//! manifests across jobs on the same dataset, and an admission check
+//! sums per-job tier-aware dense estimates
+//! ([`crate::pipeline::doctor::dense_estimate`]) against the
+//! daemon-wide `--mem-budget` so concurrent selections cannot blow the
+//! aggregate budget.  Serving never changes arithmetic: coresets are
+//! pure functions of `(dataset, config)`, warm or cold (DESIGN.md §13;
+//! protocol and dataflow: §14).
+//!
+//! Shutdown is graceful on both the `shutdown` request and SIGTERM:
+//! in-flight jobs finish, new submissions get a typed `draining`
+//! error, and the socket + PID file are removed on the way out.
+
+pub mod cache;
+pub mod protocol;
+pub mod queue;
+mod worker;
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Registry;
+use crate::pipeline::doctor;
+use crate::spec::RunSpec;
+use crate::util::json_escape;
+
+use cache::WorkspaceCache;
+use protocol::{error_line, job_name, parse_request, Request, ResponseLine};
+use queue::{Job, JobQueue};
+
+/// Daemon configuration (the `craig serve` flags, parsed in `main`).
+pub struct ServeConfig {
+    pub socket: PathBuf,
+    /// Worker threads.  0 = queue-only: jobs queue but never execute —
+    /// the deterministic substrate for cancel-before-start tests.
+    pub workers: usize,
+    /// Bounded FIFO capacity (waiting jobs; clamped to ≥ 1).
+    pub queue_cap: usize,
+    /// Aggregate admission budget in bytes over the dense estimates of
+    /// all queued + running jobs (None disables admission control).
+    pub mem_budget: Option<u64>,
+    /// Directory for defaulted per-job artifacts (manifests, traces).
+    /// Defaults to the socket's parent directory.
+    pub artifacts_dir: Option<PathBuf>,
+    /// Write a live per-job JSONL trace next to each job's manifest.
+    pub job_traces: bool,
+}
+
+/// Everything the accept loop and the workers share.
+pub(crate) struct Daemon {
+    pub(crate) cfg: ServeConfig,
+    pub(crate) artifacts: PathBuf,
+    pub(crate) queue: JobQueue,
+    pub(crate) cache: WorkspaceCache,
+    pub(crate) registry: Registry,
+}
+
+/// SIGTERM latch polled by the accept loop (the handler may only flip
+/// an atomic).
+static TERM: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_term(_sig: i32) {
+    TERM.store(true, Ordering::Relaxed);
+}
+
+const SIGTERM: i32 = 15;
+
+/// Install the SIGTERM → drain latch.  Same minimal-FFI pattern as the
+/// mmap calls in `data/binshard.rs`: `signal(2)` is all a bool flip
+/// needs, and it keeps the zero-dependency policy intact.
+fn install_sigterm() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(SIGTERM, on_term);
+    }
+}
+
+/// The daemon's PID file path (`<socket>.pid`), written next to the
+/// socket so `craig doctor --socket` can report liveness for stale
+/// sockets.
+pub fn pid_file(socket: &Path) -> PathBuf {
+    let mut os = socket.as_os_str().to_os_string();
+    os.push(".pid");
+    PathBuf::from(os)
+}
+
+/// Run the daemon.  Blocks until a `shutdown` request or SIGTERM, then
+/// drains gracefully and cleans up the socket + PID file.
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    let socket = cfg.socket.clone();
+    if socket.exists() {
+        // Stale-socket policy: a live daemon wins, a dead one's socket
+        // is reclaimed (the same connect-probe `craig doctor` runs).
+        match UnixStream::connect(&socket) {
+            Ok(_) => anyhow::bail!(
+                "a daemon is already listening on {} (probe it with `craig doctor --socket {}`)",
+                socket.display(),
+                socket.display()
+            ),
+            Err(_) => {
+                std::fs::remove_file(&socket)
+                    .with_context(|| format!("remove stale socket {}", socket.display()))?;
+            }
+        }
+    }
+    if let Some(parent) = socket.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("create socket dir {}", parent.display()))?;
+    }
+    let artifacts = match &cfg.artifacts_dir {
+        Some(d) => d.clone(),
+        None => socket
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from(".")),
+    };
+    std::fs::create_dir_all(&artifacts)
+        .with_context(|| format!("create artifacts dir {}", artifacts.display()))?;
+    let listener = UnixListener::bind(&socket)
+        .with_context(|| format!("bind daemon socket {}", socket.display()))?;
+    // Non-blocking accepts: the loop polls the SIGTERM latch between
+    // connection attempts (25ms granularity).
+    listener.set_nonblocking(true).context("set socket non-blocking")?;
+    let pid_path = pid_file(&socket);
+    std::fs::write(&pid_path, format!("{}\n", std::process::id()))
+        .with_context(|| format!("write PID file {}", pid_path.display()))?;
+    install_sigterm();
+
+    let registry = Registry::new();
+    let daemon = Arc::new(Daemon {
+        queue: JobQueue::new(cfg.queue_cap, cfg.mem_budget, registry.clone()),
+        cache: WorkspaceCache::new(registry.clone()),
+        registry,
+        artifacts,
+        cfg,
+    });
+    let mut handles = Vec::new();
+    for k in 0..daemon.cfg.workers {
+        let d = Arc::clone(&daemon);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("craig-serve-worker-{k}"))
+                .spawn(move || worker::worker_loop(&d))
+                .context("spawn serve worker")?,
+        );
+    }
+    println!(
+        "craig serve: listening on {} ({} worker{}, queue cap {})",
+        socket.display(),
+        daemon.cfg.workers,
+        if daemon.cfg.workers == 1 { "" } else { "s" },
+        daemon.cfg.queue_cap.max(1)
+    );
+
+    let mut drain = false;
+    while !drain {
+        if TERM.load(Ordering::Relaxed) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _addr)) => drain = handle_connection(&daemon, stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => return Err(e).context("accept on daemon socket"),
+        }
+    }
+
+    // Graceful drain: in-flight jobs finish, queued jobs run (workers
+    // present) or are cancelled (queue-only), workers retire on the
+    // empty queue, then the socket artifacts go away.
+    daemon.queue.begin_drain();
+    if daemon.cfg.workers == 0 {
+        daemon.queue.cancel_queued();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let _ = std::fs::remove_file(&socket);
+    let _ = std::fs::remove_file(&pid_path);
+    println!("craig serve: drained and stopped");
+    Ok(())
+}
+
+/// Serve one connection: respond line-by-line until EOF.  Returns true
+/// when the client asked for shutdown (the response goes out first).
+fn handle_connection(d: &Daemon, stream: UnixStream) -> bool {
+    // The listener is non-blocking for the SIGTERM poll; accepted
+    // streams must block again for line reads.
+    if stream.set_nonblocking(false).is_err() {
+        return false;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return false,
+    };
+    let reader = BufReader::new(stream);
+    let mut shutdown = false;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match parse_request(&line) {
+            Err(detail) => error_line("bad-request", &detail),
+            Ok(req) => {
+                shutdown = matches!(req, Request::Shutdown);
+                respond(d, req)
+            }
+        };
+        if writeln!(writer, "{resp}").is_err() || writer.flush().is_err() || shutdown {
+            break;
+        }
+    }
+    shutdown
+}
+
+/// Dispatch one parsed request to its response line.
+fn respond(d: &Daemon, req: Request) -> String {
+    match req {
+        Request::Submit { spec_toml, spec_path } => submit(d, spec_toml, spec_path),
+        Request::Status { job } => match d.queue.job(job) {
+            None => unknown_job(job),
+            Some(j) => status_line("status", &j),
+        },
+        Request::List => {
+            let jobs = d.queue.jobs();
+            let items: Vec<String> = jobs
+                .iter()
+                .map(|j| {
+                    format!(
+                        "{{\"job\": \"{}\", \"name\": \"{}\", \"state\": \"{}\"}}",
+                        job_name(j.id),
+                        json_escape(&j.name),
+                        j.state.name()
+                    )
+                })
+                .collect();
+            ResponseLine::ok("list")
+                .int("count", jobs.len() as u64)
+                .raw("jobs", &format!("[{}]", items.join(", ")))
+                .finish()
+        }
+        Request::ResultOf { job } => match d.queue.job(job) {
+            None => unknown_job(job),
+            Some(j) if !j.state.terminal() => error_line(
+                "not-finished",
+                &format!(
+                    "{} is {}; its result is available once it finishes",
+                    job_name(job),
+                    j.state.name()
+                ),
+            ),
+            Some(j) => result_line(&j),
+        },
+        Request::Cancel { job } => match d.queue.cancel(job) {
+            Ok(j) => status_line("cancel", &j),
+            Err(None) => unknown_job(job),
+            Err(Some(state)) => error_line(
+                "not-cancellable",
+                &format!(
+                    "{} is {}; only queued jobs can be cancelled",
+                    job_name(job),
+                    state.name()
+                ),
+            ),
+        },
+        Request::Metrics => {
+            let fields: Vec<String> = d
+                .registry
+                .snapshot()
+                .iter()
+                .map(|s| format!("\"{}\": {}", s.name, s.value))
+                .collect();
+            ResponseLine::ok("metrics")
+                .raw("metrics", &format!("{{{}}}", fields.join(", ")))
+                .finish()
+        }
+        Request::Shutdown => {
+            let open = d.queue.jobs().iter().filter(|j| !j.state.terminal()).count();
+            ResponseLine::ok("shutdown").int("open_jobs", open as u64).finish()
+        }
+    }
+}
+
+/// Parse, validate, estimate and enqueue one submission.
+fn submit(d: &Daemon, spec_toml: Option<String>, spec_path: Option<String>) -> String {
+    let parsed = match (spec_toml, spec_path) {
+        (Some(toml), _) => RunSpec::parse(&toml).map_err(|e| ("spec-invalid", format!("{e:#}"))),
+        (None, Some(path)) => {
+            RunSpec::load(Path::new(&path)).map_err(|e| ("spec-unreadable", format!("{e:#}")))
+        }
+        (None, None) => unreachable!("parse_request enforces one of spec_toml/spec_path"),
+    };
+    let spec = match parsed {
+        Ok(s) => s,
+        Err((code, detail)) => return error_line(code, &detail),
+    };
+    if let Err(e) = spec.validate() {
+        return error_line("spec-invalid", &format!("{e:#}"));
+    }
+    // Admission charges the same tier-aware dense estimate the doctor's
+    // memory check reports (0 when the shape is not estimable).
+    let est = doctor::dense_estimate(&spec).map(|e| e.dense_bytes).unwrap_or(0);
+    match d.queue.submit(spec, est) {
+        Ok(id) => ResponseLine::ok("submit")
+            .str_field("job", &job_name(id))
+            .str_field("state", "queued")
+            .int("est_bytes", est.min(u64::MAX as u128) as u64)
+            .finish(),
+        Err(e) => e.response(),
+    }
+}
+
+fn unknown_job(job: usize) -> String {
+    error_line("unknown-job", &format!("no such job {}", job_name(job)))
+}
+
+/// The shared `status` / `cancel` response shape.
+fn status_line(kind: &str, j: &Job) -> String {
+    let mut line = ResponseLine::ok(kind)
+        .str_field("job", &job_name(j.id))
+        .str_field("name", &j.name)
+        .str_field("state", j.state.name())
+        .bool_field("warm", j.warm_hit);
+    if !j.detail.is_empty() {
+        line = line.str_field("detail", &j.detail);
+    }
+    line.finish()
+}
+
+/// The `result` response: outcome numbers, artifact paths (null until
+/// written), and the full deterministic manifest for byte-comparison.
+fn result_line(j: &Job) -> String {
+    let mut line = ResponseLine::ok("result")
+        .str_field("job", &job_name(j.id))
+        .str_field("name", &j.name)
+        .str_field("state", j.state.name())
+        .int("selected", j.selected as u64)
+        .num("f_value", j.f_value)
+        .num("gamma_sum", j.gamma_sum)
+        .num("epsilon", j.epsilon)
+        .bool_field("warm", j.warm_hit)
+        .opt_str("manifest", j.manifest.as_deref())
+        .opt_str("coreset_csv", j.coreset_csv.as_deref())
+        .opt_str("trace", j.trace.as_deref())
+        .opt_str("manifest_deterministic", j.manifest_deterministic.as_deref());
+    if !j.detail.is_empty() {
+        line = line.str_field("detail", &j.detail);
+    }
+    line.finish()
+}

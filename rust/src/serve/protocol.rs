@@ -1,0 +1,302 @@
+//! The line-delimited JSONL protocol the `craig serve` daemon speaks.
+//!
+//! One request per connection line, one schema'd response line per
+//! request.  Both sides parse **by keys, never by pattern-matching the
+//! line text** — the same contract the run manifest and trace readers
+//! follow — so either side may add fields without breaking the other.
+//! Every response carries `ok`, `kind` and `schema_version`
+//! ([`SERVE_SCHEMA_VERSION`]); failures are typed `error` lines with a
+//! stable `code` (`bad-request`, `queue-full`, `draining`, `admission`,
+//! `unknown-job`, `not-cancellable`, `spec-invalid`, `spec-unreadable`,
+//! `not-finished`).
+//!
+//! Requests are JSON objects dispatched on a `cmd` key:
+//!
+//! | `cmd`      | extra keys                      | response `kind` |
+//! |------------|---------------------------------|-----------------|
+//! | `submit`   | `spec_toml` *or* `spec_path`    | `submit`        |
+//! | `status`   | `job`                           | `status`        |
+//! | `list`     |                                 | `list`          |
+//! | `result`   | `job`                           | `result`        |
+//! | `cancel`   | `job`                           | `cancel`        |
+//! | `metrics`  |                                 | `metrics`       |
+//! | `shutdown` |                                 | `shutdown`      |
+//!
+//! Full field tables: DESIGN.md §14.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::Shutdown;
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::{json_escape, json_num, JsonValue};
+
+/// Schema version stamped on every response line.
+pub const SERVE_SCHEMA_VERSION: u32 = 1;
+
+/// One parsed client request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Enqueue a run: the spec travels inline as TOML text, or as a
+    /// path the daemon reads (path submissions resolve on the daemon's
+    /// filesystem, not the client's).
+    Submit { spec_toml: Option<String>, spec_path: Option<String> },
+    Status { job: usize },
+    List,
+    ResultOf { job: usize },
+    Cancel { job: usize },
+    Metrics,
+    Shutdown,
+}
+
+/// Render a queue index as the public job id (`job-<n>`).
+pub fn job_name(id: usize) -> String {
+    format!("job-{id}")
+}
+
+/// Parse a job id: `job-<n>` or a bare integer string.
+pub fn parse_job_id(s: &str) -> Option<usize> {
+    s.strip_prefix("job-").unwrap_or(s).parse().ok()
+}
+
+/// Parse one request line by keys.  The error is a human-readable
+/// detail the daemon wraps in a `bad-request` error line.
+pub fn parse_request(line: &str) -> std::result::Result<Request, String> {
+    let v = JsonValue::parse(line).map_err(|e| format!("unparseable request: {e}"))?;
+    let cmd = v
+        .get("cmd")
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| "missing string key \"cmd\"".to_string())?;
+    let job = || -> std::result::Result<usize, String> {
+        let j = v.get("job").ok_or_else(|| format!("\"{cmd}\" needs a \"job\" key"))?;
+        match j {
+            JsonValue::Str(s) => {
+                parse_job_id(s).ok_or_else(|| format!("bad job id {s:?} (want \"job-N\" or N)"))
+            }
+            other => other
+                .as_u64()
+                .map(|n| n as usize)
+                .ok_or_else(|| "bad \"job\" value (want \"job-N\" or an integer)".to_string()),
+        }
+    };
+    match cmd {
+        "submit" => {
+            let spec_toml = v.get("spec_toml").and_then(JsonValue::as_str).map(str::to_string);
+            let spec_path = v.get("spec_path").and_then(JsonValue::as_str).map(str::to_string);
+            if spec_toml.is_none() && spec_path.is_none() {
+                return Err("\"submit\" needs \"spec_toml\" or \"spec_path\"".to_string());
+            }
+            Ok(Request::Submit { spec_toml, spec_path })
+        }
+        "status" => Ok(Request::Status { job: job()? }),
+        "list" => Ok(Request::List),
+        "result" => Ok(Request::ResultOf { job: job()? }),
+        "cancel" => Ok(Request::Cancel { job: job()? }),
+        "metrics" => Ok(Request::Metrics),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!("unknown cmd {other:?}")),
+    }
+}
+
+/// Incremental builder for one ok-response line.  Keys keep insertion
+/// order; values are appended as pre-rendered JSON literals so the
+/// builder never re-interprets them (the trace writer's convention).
+pub struct ResponseLine {
+    buf: String,
+}
+
+impl ResponseLine {
+    pub fn ok(kind: &str) -> ResponseLine {
+        ResponseLine {
+            buf: format!(
+                "{{\"ok\": true, \"kind\": \"{}\", \"schema_version\": {SERVE_SCHEMA_VERSION}",
+                json_escape(kind)
+            ),
+        }
+    }
+
+    /// Append `"key": <literal>` with `literal` pre-rendered JSON.
+    pub fn raw(mut self, key: &str, literal: &str) -> ResponseLine {
+        self.buf.push_str(", \"");
+        self.buf.push_str(&json_escape(key));
+        self.buf.push_str("\": ");
+        self.buf.push_str(literal);
+        self
+    }
+
+    pub fn str_field(self, key: &str, val: &str) -> ResponseLine {
+        let lit = format!("\"{}\"", json_escape(val));
+        self.raw(key, &lit)
+    }
+
+    /// A string field that renders `null` when absent.
+    pub fn opt_str(self, key: &str, val: Option<&str>) -> ResponseLine {
+        match val {
+            Some(v) => self.str_field(key, v),
+            None => self.raw(key, "null"),
+        }
+    }
+
+    pub fn int(self, key: &str, val: u64) -> ResponseLine {
+        self.raw(key, &val.to_string())
+    }
+
+    pub fn num(self, key: &str, val: f64) -> ResponseLine {
+        self.raw(key, &json_num(val))
+    }
+
+    pub fn bool_field(self, key: &str, val: bool) -> ResponseLine {
+        self.raw(key, if val { "true" } else { "false" })
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// A typed error response line.
+pub fn error_line(code: &str, detail: &str) -> String {
+    format!(
+        "{{\"ok\": false, \"kind\": \"error\", \"schema_version\": {SERVE_SCHEMA_VERSION}, \
+         \"code\": \"{}\", \"error\": \"{}\"}}",
+        json_escape(code),
+        json_escape(detail)
+    )
+}
+
+/// Build a `submit` request carrying the spec inline as TOML.
+pub fn req_submit_toml(toml: &str) -> String {
+    format!("{{\"cmd\": \"submit\", \"spec_toml\": \"{}\"}}", json_escape(toml))
+}
+
+/// Build a `submit` request referencing a spec file by path.
+pub fn req_submit_path(path: &str) -> String {
+    format!("{{\"cmd\": \"submit\", \"spec_path\": \"{}\"}}", json_escape(path))
+}
+
+/// Build a per-job request (`status` / `result` / `cancel`).
+pub fn req_job(cmd: &str, job: &str) -> String {
+    format!("{{\"cmd\": \"{}\", \"job\": \"{}\"}}", json_escape(cmd), json_escape(job))
+}
+
+/// Build a no-argument request (`list` / `metrics` / `shutdown`).
+pub fn req_simple(cmd: &str) -> String {
+    format!("{{\"cmd\": \"{}\"}}", json_escape(cmd))
+}
+
+/// Send one request line to a daemon socket and read back its one
+/// response line.  The `craig submit` client, the equivalence tests and
+/// the doctor's connect-probe all go through here.
+pub fn request(socket: &Path, line: &str) -> Result<String> {
+    let mut stream = UnixStream::connect(socket)
+        .with_context(|| format!("connect to daemon socket {}", socket.display()))?;
+    stream.write_all(line.as_bytes()).context("send request")?;
+    stream.write_all(b"\n").context("send request")?;
+    // Half-close so the daemon's line reader sees EOF after our line
+    // even if it reads past the newline.
+    stream.shutdown(Shutdown::Write).context("half-close request stream")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).context("read response")?;
+    anyhow::ensure!(!resp.is_empty(), "daemon closed the connection without responding");
+    Ok(resp.trim_end().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_parse_by_keys_in_any_order() {
+        assert_eq!(
+            parse_request("{\"spec_toml\": \"name = \\\"x\\\"\", \"cmd\": \"submit\"}"),
+            Ok(Request::Submit {
+                spec_toml: Some("name = \"x\"".to_string()),
+                spec_path: None
+            })
+        );
+        assert_eq!(
+            parse_request("{\"cmd\": \"status\", \"job\": \"job-3\"}"),
+            Ok(Request::Status { job: 3 })
+        );
+        assert_eq!(
+            parse_request("{\"cmd\": \"cancel\", \"job\": 7, \"extra\": [1, 2]}"),
+            Ok(Request::Cancel { job: 7 }),
+            "unknown keys are ignored, never fatal"
+        );
+        assert_eq!(parse_request("{\"cmd\": \"list\"}"), Ok(Request::List));
+        assert_eq!(parse_request("{\"cmd\": \"metrics\"}"), Ok(Request::Metrics));
+        assert_eq!(parse_request("{\"cmd\": \"shutdown\"}"), Ok(Request::Shutdown));
+    }
+
+    #[test]
+    fn bad_requests_yield_details_not_panics() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("{\"job\": 1}").unwrap_err().contains("cmd"));
+        assert!(parse_request("{\"cmd\": \"submit\"}").unwrap_err().contains("spec_toml"));
+        assert!(parse_request("{\"cmd\": \"status\"}").unwrap_err().contains("job"));
+        assert!(parse_request("{\"cmd\": \"status\", \"job\": \"zebra\"}").is_err());
+        assert!(parse_request("{\"cmd\": \"frobnicate\"}").unwrap_err().contains("unknown"));
+    }
+
+    #[test]
+    fn job_ids_render_and_reparse() {
+        assert_eq!(job_name(4), "job-4");
+        assert_eq!(parse_job_id("job-4"), Some(4));
+        assert_eq!(parse_job_id("4"), Some(4));
+        assert_eq!(parse_job_id("job--1"), None);
+    }
+
+    #[test]
+    fn response_lines_are_wellformed_json() {
+        let line = ResponseLine::ok("status")
+            .str_field("job", "job-0")
+            .opt_str("manifest", None)
+            .int("selected", 40)
+            .num("f_value", 1.25)
+            .bool_field("warm", true)
+            .finish();
+        let v = JsonValue::parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&JsonValue::Bool(true)));
+        assert_eq!(v.get("kind").and_then(JsonValue::as_str), Some("status"));
+        assert_eq!(v.get("schema_version").and_then(JsonValue::as_u64), Some(1));
+        assert_eq!(v.get("job").and_then(JsonValue::as_str), Some("job-0"));
+        assert_eq!(v.get("manifest"), Some(&JsonValue::Null));
+        assert_eq!(v.get("selected").and_then(JsonValue::as_u64), Some(40));
+        assert_eq!(v.get("f_value").and_then(JsonValue::as_f64), Some(1.25));
+        assert_eq!(v.get("warm"), Some(&JsonValue::Bool(true)));
+    }
+
+    #[test]
+    fn error_lines_carry_typed_codes() {
+        let v = JsonValue::parse(&error_line("queue-full", "cap 2 reached")).unwrap();
+        assert_eq!(v.get("ok"), Some(&JsonValue::Bool(false)));
+        assert_eq!(v.get("kind").and_then(JsonValue::as_str), Some("error"));
+        assert_eq!(v.get("code").and_then(JsonValue::as_str), Some("queue-full"));
+        assert_eq!(v.get("error").and_then(JsonValue::as_str), Some("cap 2 reached"));
+    }
+
+    #[test]
+    fn request_builders_round_trip_through_the_parser() {
+        let toml = "name = \"s\"\nseed = 1\n";
+        assert_eq!(
+            parse_request(&req_submit_toml(toml)),
+            Ok(Request::Submit { spec_toml: Some(toml.to_string()), spec_path: None })
+        );
+        assert_eq!(
+            parse_request(&req_submit_path("/tmp/spec.toml")),
+            Ok(Request::Submit {
+                spec_toml: None,
+                spec_path: Some("/tmp/spec.toml".to_string())
+            })
+        );
+        assert_eq!(
+            parse_request(&req_job("result", "job-9")),
+            Ok(Request::ResultOf { job: 9 })
+        );
+        assert_eq!(parse_request(&req_simple("shutdown")), Ok(Request::Shutdown));
+    }
+}

@@ -1,0 +1,417 @@
+//! Bounded FIFO job queue with admission control and graceful drain.
+//!
+//! Submissions append to a FIFO the worker pool drains in order; the
+//! queue is the single source of truth for job state (one `Mutex` +
+//! `Condvar`, no per-job locks).  Three typed rejections guard the
+//! front door: `queue-full` when the FIFO is at capacity, `admission`
+//! when the sum of tier-aware dense estimates over queued + running
+//! jobs would exceed the daemon budget ([`super::mod`]'s
+//! `--mem-budget`), and `draining` once shutdown has begun.  Drain is
+//! graceful: in-flight jobs finish, queued jobs either run (workers
+//! present) or are cancelled (queue-only daemons), and `next_job`
+//! returns `None` to retire each worker.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::metrics::Registry;
+use crate::spec::RunSpec;
+
+use super::protocol::error_line;
+
+/// Lifecycle of one submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether the state can still change.
+    pub fn terminal(self) -> bool {
+        matches!(self, JobState::Completed | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// One job's record.  Cloned out whole for responses — response
+/// rendering never holds the queue lock.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: usize,
+    /// The spec's `name` (not unique; the id is).
+    pub name: String,
+    pub spec: RunSpec,
+    pub state: JobState,
+    /// Failure message / cancellation note; empty otherwise.
+    pub detail: String,
+    /// Tier-aware dense estimate charged against the daemon budget
+    /// while the job is queued or running (0 when not estimable).
+    pub est_bytes: u128,
+    /// Outcome fields, filled on completion.
+    pub selected: usize,
+    pub f_value: f64,
+    pub gamma_sum: f64,
+    pub epsilon: f64,
+    /// Artifact paths (None until completed / when not configured).
+    pub manifest: Option<String>,
+    pub coreset_csv: Option<String>,
+    pub trace: Option<String>,
+    /// The finished run's full deterministic manifest JSON — what the
+    /// equivalence tests compare byte-for-byte against `craig run`.
+    pub manifest_deterministic: Option<String>,
+    /// Whether the worker checked a warm workspace out of the cache.
+    pub warm_hit: bool,
+}
+
+impl Job {
+    fn new(id: usize, spec: RunSpec, est_bytes: u128) -> Job {
+        Job {
+            id,
+            name: spec.name.clone(),
+            spec,
+            state: JobState::Queued,
+            detail: String::new(),
+            est_bytes,
+            selected: 0,
+            f_value: 0.0,
+            gamma_sum: 0.0,
+            epsilon: 0.0,
+            manifest: None,
+            coreset_csv: None,
+            trace: None,
+            manifest_deterministic: None,
+            warm_hit: false,
+        }
+    }
+}
+
+/// Everything a worker reports back about a finished job.
+#[derive(Clone, Debug, Default)]
+pub struct JobOutcome {
+    pub selected: usize,
+    pub f_value: f64,
+    pub gamma_sum: f64,
+    pub epsilon: f64,
+    pub manifest: Option<String>,
+    pub coreset_csv: Option<String>,
+    pub trace: Option<String>,
+    pub manifest_deterministic: Option<String>,
+    pub warm_hit: bool,
+}
+
+/// Typed submission rejections (each maps to one protocol error code).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    Full { cap: usize },
+    Draining,
+    Admission { est: u128, in_flight: u128, budget: u64 },
+}
+
+impl SubmitError {
+    /// The protocol error line this rejection answers with.
+    pub fn response(&self) -> String {
+        match self {
+            SubmitError::Full { cap } => {
+                error_line("queue-full", &format!("job queue is at capacity ({cap})"))
+            }
+            SubmitError::Draining => {
+                error_line("draining", "daemon is draining; new jobs are not accepted")
+            }
+            SubmitError::Admission { est, in_flight, budget } => error_line(
+                "admission",
+                &format!(
+                    "job needs ~{est} B dense with ~{in_flight} B already admitted; \
+                     --mem-budget is {budget} B"
+                ),
+            ),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs: Vec<Job>,
+    /// Indices into `jobs` awaiting a worker, submission order.
+    fifo: VecDeque<usize>,
+    draining: bool,
+}
+
+/// The shared queue (one per daemon).
+pub struct JobQueue {
+    inner: Mutex<Inner>,
+    ready: Condvar,
+    cap: usize,
+    mem_budget: Option<u64>,
+    metrics: Registry,
+}
+
+impl JobQueue {
+    /// A queue holding at most `cap` waiting jobs, admitting against
+    /// `mem_budget` bytes (None disables admission control), counting
+    /// into the daemon's `metrics`.
+    pub fn new(cap: usize, mem_budget: Option<u64>, metrics: Registry) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(Inner::default()),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+            mem_budget,
+            metrics,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Submit a spec (with its precomputed dense estimate); returns the
+    /// new job id or a typed rejection.
+    pub fn submit(&self, spec: RunSpec, est_bytes: u128) -> Result<usize, SubmitError> {
+        let mut inner = self.lock();
+        if inner.draining {
+            return Err(SubmitError::Draining);
+        }
+        if inner.fifo.len() >= self.cap {
+            return Err(SubmitError::Full { cap: self.cap });
+        }
+        if let Some(budget) = self.mem_budget {
+            let in_flight: u128 = inner
+                .jobs
+                .iter()
+                .filter(|j| matches!(j.state, JobState::Queued | JobState::Running))
+                .map(|j| j.est_bytes)
+                .sum();
+            if est_bytes + in_flight > budget as u128 {
+                return Err(SubmitError::Admission { est: est_bytes, in_flight, budget });
+            }
+        }
+        let id = inner.jobs.len();
+        inner.jobs.push(Job::new(id, spec, est_bytes));
+        inner.fifo.push_back(id);
+        self.metrics.serve_jobs_submitted.inc();
+        self.metrics.serve_queue_depth.set(inner.fifo.len() as u64);
+        drop(inner);
+        self.ready.notify_one();
+        Ok(id)
+    }
+
+    /// Block until a job is ready (marking it `Running`) or the queue
+    /// is draining and empty — `None` retires the calling worker.
+    pub fn next_job(&self) -> Option<(usize, RunSpec)> {
+        let mut inner = self.lock();
+        loop {
+            while let Some(id) = inner.fifo.pop_front() {
+                self.metrics.serve_queue_depth.set(inner.fifo.len() as u64);
+                // A job cancelled while queued stays in the FIFO until
+                // here; skip it rather than resurrect it.
+                if inner.jobs[id].state != JobState::Queued {
+                    continue;
+                }
+                inner.jobs[id].state = JobState::Running;
+                return Some((id, inner.jobs[id].spec.clone()));
+            }
+            if inner.draining {
+                return None;
+            }
+            inner = self.ready.wait(inner).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Cancel a queued job.  Running and finished jobs are not
+    /// cancellable; the error carries the state that blocked it.
+    pub fn cancel(&self, id: usize) -> Result<Job, Option<JobState>> {
+        let mut inner = self.lock();
+        let Some(job) = inner.jobs.get_mut(id) else {
+            return Err(None);
+        };
+        if job.state != JobState::Queued {
+            return Err(Some(job.state));
+        }
+        job.state = JobState::Cancelled;
+        job.detail = "cancelled before a worker picked it up".to_string();
+        let snapshot = job.clone();
+        // The FIFO entry stays; next_job skips non-queued ids.
+        self.metrics.serve_jobs_cancelled.inc();
+        Ok(snapshot)
+    }
+
+    /// Record a successful run.
+    pub fn complete(&self, id: usize, outcome: JobOutcome) {
+        let mut inner = self.lock();
+        let job = &mut inner.jobs[id];
+        job.state = JobState::Completed;
+        job.selected = outcome.selected;
+        job.f_value = outcome.f_value;
+        job.gamma_sum = outcome.gamma_sum;
+        job.epsilon = outcome.epsilon;
+        job.manifest = outcome.manifest;
+        job.coreset_csv = outcome.coreset_csv;
+        job.trace = outcome.trace;
+        job.manifest_deterministic = outcome.manifest_deterministic;
+        job.warm_hit = outcome.warm_hit;
+        self.metrics.serve_jobs_completed.inc();
+    }
+
+    /// Record a failed run.
+    pub fn fail(&self, id: usize, detail: &str, trace: Option<String>) {
+        let mut inner = self.lock();
+        let job = &mut inner.jobs[id];
+        job.state = JobState::Failed;
+        job.detail = detail.to_string();
+        job.trace = trace;
+        self.metrics.serve_jobs_failed.inc();
+    }
+
+    /// Snapshot one job.
+    pub fn job(&self, id: usize) -> Option<Job> {
+        self.lock().jobs.get(id).cloned()
+    }
+
+    /// Snapshot every job, submission order.
+    pub fn jobs(&self) -> Vec<Job> {
+        self.lock().jobs.clone()
+    }
+
+    /// Flip into draining: no new submissions, workers retire once the
+    /// FIFO is empty.
+    pub fn begin_drain(&self) {
+        self.lock().draining = true;
+        self.ready.notify_all();
+    }
+
+    /// Cancel every still-queued job (queue-only daemons at shutdown —
+    /// with no workers, queued jobs would otherwise dangle forever).
+    pub fn cancel_queued(&self) {
+        let ids: Vec<usize> = self
+            .lock()
+            .jobs
+            .iter()
+            .filter(|j| j.state == JobState::Queued)
+            .map(|j| j.id)
+            .collect();
+        for id in ids {
+            let _ = self.cancel(id);
+        }
+    }
+
+    /// Whether any job is still queued or running.
+    pub fn has_open_jobs(&self) -> bool {
+        self.lock().jobs.iter().any(|j| !j.state.terminal())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str) -> RunSpec {
+        RunSpec::builder(name).synthetic("covtype", 200).count(10).build().unwrap()
+    }
+
+    #[test]
+    fn fifo_order_and_state_transitions() {
+        let q = JobQueue::new(8, None, Registry::new());
+        let a = q.submit(spec("a"), 100).unwrap();
+        let b = q.submit(spec("b"), 100).unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(q.job(a).unwrap().state, JobState::Queued);
+        let (first, s) = q.next_job().unwrap();
+        assert_eq!(first, a, "FIFO: first submitted runs first");
+        assert_eq!(s.name, "a");
+        assert_eq!(q.job(a).unwrap().state, JobState::Running);
+        q.complete(a, JobOutcome { selected: 10, ..Default::default() });
+        let done = q.job(a).unwrap();
+        assert_eq!(done.state, JobState::Completed);
+        assert!(done.state.terminal());
+        assert_eq!(done.selected, 10);
+        assert_eq!(q.jobs().len(), 2);
+    }
+
+    #[test]
+    fn capacity_budget_and_drain_reject_typed() {
+        let r = Registry::new();
+        let q = JobQueue::new(1, Some(1000), r.clone());
+        q.submit(spec("a"), 600).unwrap();
+        assert_eq!(q.submit(spec("b"), 100), Err(SubmitError::Full { cap: 1 }));
+        let (id, _) = q.next_job().unwrap(); // frees queue space, stays admitted
+        assert_eq!(
+            q.submit(spec("c"), 600),
+            Err(SubmitError::Admission { est: 600, in_flight: 600, budget: 1000 }),
+            "running jobs stay charged against the budget"
+        );
+        q.submit(spec("d"), 300).unwrap();
+        q.complete(id, JobOutcome::default());
+        q.begin_drain();
+        assert_eq!(q.submit(spec("e"), 1), Err(SubmitError::Draining));
+        assert_eq!(r.serve_jobs_submitted.get(), 2);
+        // Each rejection renders a distinct typed code.
+        for (err, code) in [
+            (SubmitError::Full { cap: 1 }, "queue-full"),
+            (SubmitError::Draining, "draining"),
+            (SubmitError::Admission { est: 1, in_flight: 0, budget: 1 }, "admission"),
+        ] {
+            let v = crate::util::JsonValue::parse(&err.response()).unwrap();
+            assert_eq!(v.get("code").and_then(crate::util::JsonValue::as_str), Some(code));
+        }
+    }
+
+    #[test]
+    fn cancel_only_hits_queued_jobs_and_workers_skip_them() {
+        let r = Registry::new();
+        let q = JobQueue::new(8, None, r.clone());
+        let a = q.submit(spec("a"), 0).unwrap();
+        let b = q.submit(spec("b"), 0).unwrap();
+        let cancelled = q.cancel(a).unwrap();
+        assert_eq!(cancelled.state, JobState::Cancelled);
+        assert!(cancelled.detail.contains("cancelled"));
+        assert_eq!(q.cancel(a), Err(Some(JobState::Cancelled)), "cancel is not idempotent");
+        assert_eq!(q.cancel(99), Err(None), "unknown job");
+        let (next, _) = q.next_job().unwrap();
+        assert_eq!(next, b, "the cancelled job is skipped, not resurrected");
+        assert_eq!(q.cancel(b), Err(Some(JobState::Running)));
+        assert_eq!(r.serve_jobs_cancelled.get(), 1);
+    }
+
+    #[test]
+    fn drain_retires_workers_and_cancels_queue_only_leftovers() {
+        let q = JobQueue::new(8, None, Registry::new());
+        q.submit(spec("a"), 0).unwrap();
+        q.begin_drain();
+        let (id, _) = q.next_job().expect("already-queued jobs still run during drain");
+        q.complete(id, JobOutcome::default());
+        assert!(q.next_job().is_none(), "empty + draining retires the worker");
+        // Queue-only shutdown path: queued jobs get cancelled wholesale.
+        let q2 = JobQueue::new(8, None, Registry::new());
+        q2.submit(spec("x"), 0).unwrap();
+        q2.submit(spec("y"), 0).unwrap();
+        q2.begin_drain();
+        q2.cancel_queued();
+        assert!(q2.jobs().iter().all(|j| j.state == JobState::Cancelled));
+        assert!(!q2.has_open_jobs());
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_the_fifo() {
+        let r = Registry::new();
+        let q = JobQueue::new(8, None, r.clone());
+        q.submit(spec("a"), 0).unwrap();
+        q.submit(spec("b"), 0).unwrap();
+        assert_eq!(r.serve_queue_depth.get(), 2);
+        let _ = q.next_job();
+        assert_eq!(r.serve_queue_depth.get(), 1);
+        let _ = q.next_job();
+        assert_eq!(r.serve_queue_depth.get(), 0);
+    }
+}

@@ -1,0 +1,82 @@
+//! The worker pool: each worker drains the queue, executes jobs
+//! through the standard [`Runner::execute`] seam, writes the spec's
+//! artifacts (plus a defaulted manifest when the spec names none, so
+//! every job is `craig replay`-verifiable), and parks the workspace
+//! back in the cache for the next job on the same dataset.
+//!
+//! Determinism posture: the worker adds nothing to the arithmetic —
+//! it is `craig run` with a warm-workspace checkout around it, and the
+//! warm seam is bitwise-invisible by the runner's own tests.
+
+use crate::pipeline::Runner;
+use crate::spec::DataSpec;
+use crate::trace::Trace;
+
+use super::cache::dataset_key;
+use super::protocol::job_name;
+use super::queue::JobOutcome;
+use super::Daemon;
+
+/// One worker's lifetime: pull → execute → report, until the draining
+/// queue retires it.
+pub(crate) fn worker_loop(d: &Daemon) {
+    while let Some((id, mut spec)) = d.queue.next_job() {
+        let key = dataset_key(&spec);
+        let wants_shards = matches!(spec.data, DataSpec::ShardDir { .. });
+        let (selector, shards, warm) = d.cache.checkout(&key, wants_shards);
+        // Every job leaves a replay-verifiable manifest: default the
+        // path into the artifacts dir when the spec names none.  (This
+        // becomes part of the job's effective spec — result responses
+        // report the path that was actually written.)
+        if spec.output.manifest.is_none() {
+            let p = d.artifacts.join(format!("{}.manifest.json", job_name(id)));
+            spec.output.manifest = Some(p.to_string_lossy().into_owned());
+        }
+        let mut runner = Runner::new();
+        runner.warm_selector = Some(selector);
+        runner.shard_cache = shards;
+        let trace_path = if d.cfg.job_traces {
+            let p = d.artifacts.join(format!("{}.trace.jsonl", job_name(id)));
+            match Trace::with_file(&job_name(id), &p) {
+                Ok(t) => {
+                    runner.trace = Some(t);
+                    Some(p.to_string_lossy().into_owned())
+                }
+                // An unwritable trace never blocks the job itself.
+                Err(_) => None,
+            }
+        } else {
+            None
+        };
+        let result = runner.execute(&spec).and_then(|rep| {
+            rep.write_outputs()?;
+            Ok(rep)
+        });
+        // Park the workspace (and any loaded shard manifest) for the
+        // next job on this dataset — after failures too: the buffers
+        // are reusable regardless of how the run ended.
+        d.cache.checkin(&key, runner.warm_selector.take(), runner.shard_cache.take());
+        // Fold the job's registry into the daemon-lifetime totals the
+        // `metrics` request reports.
+        if let Some(reg) = runner.metrics.as_ref() {
+            d.registry.absorb(reg);
+        }
+        match result {
+            Ok(rep) => d.queue.complete(
+                id,
+                JobOutcome {
+                    selected: rep.selected(),
+                    f_value: rep.f_value,
+                    gamma_sum: rep.gamma_sum(),
+                    epsilon: rep.epsilon,
+                    manifest: rep.spec.output.manifest.clone(),
+                    coreset_csv: rep.spec.output.coreset_csv.clone(),
+                    trace: trace_path,
+                    manifest_deterministic: Some(rep.manifest_json_deterministic()),
+                    warm_hit: warm,
+                },
+            ),
+            Err(e) => d.queue.fail(id, &format!("{e:#}"), trace_path),
+        }
+    }
+}

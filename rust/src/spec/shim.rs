@@ -49,7 +49,27 @@ pub fn app() -> App {
             Command::new("doctor", "preflight the environment (and optionally a spec/manifest)")
                 .opt("spec", "spec file to check (or pass it as the positional argument)")
                 .opt("manifest", "run manifest to check (parse + git-rev provenance)")
-                .opt("trace", "intended trace sink: check its parent directory is writable"),
+                .opt("trace", "intended trace sink: check its parent directory is writable")
+                .opt("socket", "serve socket: probe liveness/staleness of a daemon there")
+                .opt("mem-budget", "daemon admission budget to sanity-check the spec against"),
+            Command::new("serve", "run the selection-service daemon on a Unix socket")
+                .opt("socket", "Unix socket path to listen on (required)")
+                .opt_default("workers", "2", "job worker threads (0 = queue-only)")
+                .opt_default("queue-cap", "64", "bounded FIFO capacity for waiting jobs")
+                .opt("mem-budget", "aggregate admission budget in bytes (off when unset)")
+                .opt("artifacts-dir", "per-job manifest/trace directory (default: socket dir)")
+                .flag("no-job-traces", "skip the live per-job JSONL trace files"),
+            Command::new("submit", "client for a running `craig serve` daemon")
+                .opt("socket", "daemon socket path (required)")
+                .opt("spec", "spec file to submit (or pass it as the positional argument)")
+                .flag("by-path", "send the spec path for the daemon to read, not its contents")
+                .flag("wait", "poll until the submitted job finishes, then print its result")
+                .opt("status", "query one job: --status job-3")
+                .opt("result", "fetch a finished job's result: --result job-3")
+                .opt("cancel", "cancel a queued job: --cancel job-3")
+                .flag("list", "list all jobs the daemon knows")
+                .flag("metrics", "dump the daemon-lifetime metrics snapshot")
+                .flag("shutdown", "ask the daemon to drain and stop"),
             Command::new("trace", "inspect run traces: `trace summarize <trace.jsonl>`"),
             Command::new("select", "run CRAIG coreset selection (shim over `run`)")
                 .opt_default("dataset", "covtype", "covtype|ijcnn1|mnist|cifar10|mixture:d:c")
@@ -422,6 +442,28 @@ mod tests {
         assert_eq!(a.opt("heartbeat"), Some("5"));
         let a = args_for("trace", &["summarize", "t.jsonl"]);
         assert_eq!(a.positional, vec!["summarize".to_string(), "t.jsonl".to_string()]);
+    }
+
+    #[test]
+    fn serve_and_submit_commands_parse() {
+        let a = args_for(
+            "serve",
+            &["--socket", "/tmp/c.sock", "--workers", "3", "--mem-budget", "1000000"],
+        );
+        assert_eq!(a.opt("socket"), Some("/tmp/c.sock"));
+        assert_eq!(a.opt("workers"), Some("3"));
+        assert_eq!(a.opt("queue-cap"), Some("64"), "defaulted");
+        assert_eq!(a.opt("mem-budget"), Some("1000000"));
+        assert!(!a.flag("no-job-traces"));
+        let a = args_for("submit", &["--socket", "/tmp/c.sock", "s.toml", "--wait"]);
+        assert_eq!(a.opt("socket"), Some("/tmp/c.sock"));
+        assert_eq!(a.positional, vec!["s.toml".to_string()]);
+        assert!(a.flag("wait") && !a.flag("by-path"));
+        let a = args_for("submit", &["--socket", "/tmp/c.sock", "--status", "job-3"]);
+        assert_eq!(a.opt("status"), Some("job-3"));
+        let a = args_for("doctor", &["--socket", "/tmp/c.sock", "--mem-budget", "4096"]);
+        assert_eq!(a.opt("socket"), Some("/tmp/c.sock"));
+        assert_eq!(a.opt("mem-budget"), Some("4096"));
     }
 
     #[test]

@@ -37,6 +37,20 @@ pub struct PhaseRow {
     pub last_label: String,
 }
 
+impl PhaseRow {
+    /// Events per second for this phase (`count / dur_s`), or `None`
+    /// when the phase is untimed or instantaneous — the renderer shows
+    /// `-` there instead of the `inf`/`NaN` a raw division by a
+    /// zero-duration phase would produce.
+    pub fn rate_per_s(&self) -> Option<f64> {
+        if !self.timed || self.dur_s <= 0.0 {
+            return None;
+        }
+        let r = self.count as f64 / self.dur_s;
+        r.is_finite().then_some(r)
+    }
+}
+
 /// The digest `craig trace summarize` renders.
 #[derive(Clone, Debug, Default)]
 pub struct TraceSummary {
@@ -153,9 +167,15 @@ pub fn summarize_text(text: &str) -> TraceSummary {
         }
     }
     s.complete = s.last_event == "run_end";
+    // Heartbeats from a freshly started (or instantly killed) run carry
+    // `uptime_s: 0` — guard the division so the digest never holds an
+    // `inf`/`NaN` throughput.
     if let (Some(rows), Some(up)) = (hb_rows, hb_uptime) {
         if up > 0.0 && rows > 0.0 {
-            s.rows_per_s = Some(rows / up);
+            let r = rows / up;
+            if r.is_finite() {
+                s.rows_per_s = Some(r);
+            }
         }
     }
     s
@@ -184,11 +204,22 @@ impl TraceSummary {
             self.heartbeats,
             self.skipped_lines,
         );
-        let _ = writeln!(out, "  {:<12} {:>5}  {:>10}  last label", "phase", "count", "total_s");
+        let _ = writeln!(
+            out,
+            "  {:<12} {:>5}  {:>10}  {:>9}  last label",
+            "phase", "count", "total_s", "per_s"
+        );
         for p in &self.phases {
             let dur = if p.timed { format!("{:.4}", p.dur_s) } else { "-".to_string() };
-            let _ =
-                writeln!(out, "  {:<12} {:>5}  {:>10}  {}", p.event, p.count, dur, p.last_label);
+            let rate = match p.rate_per_s() {
+                Some(r) => format!("{r:.1}"),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "  {:<12} {:>5}  {:>10}  {:>9}  {}",
+                p.event, p.count, dur, rate, p.last_label
+            );
         }
         if self.io_s > 0.0 || self.select_s > 0.0 || self.stall_s > 0.0 {
             let _ = writeln!(
@@ -197,12 +228,21 @@ impl TraceSummary {
                 self.io_s, self.select_s, self.stall_s
             );
         }
-        if let Some(r) = self.rows_per_s {
-            let _ = writeln!(out, "  throughput ~{r:.0} rows/s (last heartbeat)");
+        match self.rows_per_s {
+            Some(r) => {
+                let _ = writeln!(out, "  throughput ~{r:.0} rows/s (last heartbeat)");
+            }
+            // Heartbeats arrived but the rate is undefined (zero uptime
+            // or nothing streamed yet): show the cell, not `inf`.
+            None if self.heartbeats > 0 => {
+                let _ = writeln!(out, "  throughput - (last heartbeat predates streaming)");
+            }
+            None => {}
         }
         if self.complete {
             let total = self.total_s.map(|t| format!(" in {t:.4}s")).unwrap_or_default();
-            let _ = writeln!(out, "  last event: run_end ({}) — complete{}", self.last_label, total);
+            let _ =
+                writeln!(out, "  last event: run_end ({}) — complete{}", self.last_label, total);
         } else {
             let _ = writeln!(
                 out,
@@ -271,6 +311,42 @@ mod tests {
         let text = s.render();
         assert!(text.contains("complete"), "{text}");
         assert!(text.contains("throughput ~2000 rows/s"), "{text}");
+    }
+
+    #[test]
+    fn zero_duration_phases_and_zero_uptime_clamp_to_dashes() {
+        // A run killed the instant it started: every phase reports
+        // dur_s 0.0 and the lone heartbeat has uptime_s 0 — raw
+        // divisions would put inf/NaN in the rate cells.
+        let mut t = Trace::new("instant");
+        t.emit("run_start", "instant", None, &[]).unwrap();
+        t.emit("load", "synthetic:covtype", Some(0.0), &[("n", int(10))]).unwrap();
+        t.emit(
+            "heartbeat",
+            "instant",
+            None,
+            &[("uptime_s", num(0.0)), ("stream.rows_streamed", int(0))],
+        )
+        .unwrap();
+        t.emit("run_end", "instant", Some(0.0), &[]).unwrap();
+        let s = summarize_text(&t.to_jsonl());
+        assert_eq!(s.rows_per_s, None, "uptime_s == 0 must not divide");
+        let load = s.phases.iter().find(|p| p.event == "load").unwrap();
+        assert!(load.timed && load.dur_s == 0.0);
+        assert_eq!(load.rate_per_s(), None, "zero-duration phase has no rate");
+        let text = s.render();
+        assert!(!text.contains("inf") && !text.contains("NaN"), "{text}");
+        assert!(text.contains("throughput - "), "{text}");
+    }
+
+    #[test]
+    fn timed_phases_report_finite_rates() {
+        let s = summarize_text(&sample_trace().to_jsonl());
+        let shard = s.phases.iter().find(|p| p.event == "shard").unwrap();
+        let r = shard.rate_per_s().unwrap();
+        assert!((r - 5.0).abs() < 1e-9, "2 shard events / 0.4s = 5/s, got {r}");
+        let embed = s.phases.iter().find(|p| p.event == "embed").unwrap();
+        assert_eq!(embed.rate_per_s(), None, "untimed phases render '-'");
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! Serve ≡ run equivalence: a job submitted to the `craig serve`
+//! daemon must be byte-identical to `craig run` on the same spec —
+//! same coreset CSV bytes, same deterministic manifest JSON — with the
+//! warm-workspace cache visible only in the metrics, never in the
+//! output.  Also covers the cancel-before-start path (typed response,
+//! no artifacts) and graceful shutdown cleanup.
+
+#![cfg(unix)]
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use craig::pipeline::Runner;
+use craig::serve::protocol::{req_job, req_simple, req_submit_toml, request};
+use craig::serve::{pid_file, serve, ServeConfig};
+use craig::spec::RunSpec;
+use craig::util::JsonValue;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("craig-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Start a daemon on `socket` and block until it accepts connections.
+fn start_daemon(
+    socket: &Path,
+    workers: usize,
+    artifacts: &Path,
+) -> std::thread::JoinHandle<anyhow::Result<()>> {
+    let cfg = ServeConfig {
+        socket: socket.to_path_buf(),
+        workers,
+        queue_cap: 16,
+        mem_budget: None,
+        artifacts_dir: Some(artifacts.to_path_buf()),
+        job_traces: true,
+    };
+    let handle = std::thread::spawn(move || serve(cfg));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if socket.exists() && std::os::unix::net::UnixStream::connect(socket).is_ok() {
+            return handle;
+        }
+        assert!(Instant::now() < deadline, "daemon never started listening");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn parse(line: &str) -> JsonValue {
+    JsonValue::parse(line).unwrap_or_else(|e| panic!("bad response line {line:?}: {e}"))
+}
+
+fn str_of<'a>(v: &'a JsonValue, key: &str) -> &'a str {
+    v.get(key).and_then(JsonValue::as_str).unwrap_or_else(|| panic!("no string {key} in {v:?}"))
+}
+
+/// Poll a job until it reaches a terminal state; return that state.
+fn wait_terminal(socket: &Path, job: &str) -> String {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let v = parse(&request(socket, &req_job("status", job)).unwrap());
+        let state = str_of(&v, "state").to_string();
+        if matches!(state.as_str(), "completed" | "failed" | "cancelled") {
+            return state;
+        }
+        assert!(Instant::now() < deadline, "{job} stuck in state {state}");
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+fn shutdown_and_join(socket: &Path, handle: std::thread::JoinHandle<anyhow::Result<()>>) {
+    let v = parse(&request(socket, &req_simple("shutdown")).unwrap());
+    assert_eq!(v.get("ok"), Some(&JsonValue::Bool(true)));
+    handle.join().expect("daemon thread panicked").expect("daemon exited with an error");
+    assert!(!socket.exists(), "socket not removed on shutdown");
+    assert!(!pid_file(socket).exists(), "PID file not removed on shutdown");
+}
+
+#[test]
+fn serve_job_is_bitwise_identical_to_craig_run() {
+    let dir = temp_dir("equiv");
+    let socket = dir.join("d.sock");
+    let csv = dir.join("coreset.csv");
+    let manifest = dir.join("run.manifest.json");
+    // The spec pins every output path so the daemon's effective spec —
+    // embedded in the deterministic manifest — matches the local one.
+    let spec = RunSpec::builder("equiv")
+        .synthetic("covtype", 400)
+        .count(25)
+        .seed(7)
+        .coreset_csv(csv.to_str().unwrap())
+        .manifest(manifest.to_str().unwrap())
+        .build()
+        .unwrap();
+
+    let handle = start_daemon(&socket, 1, &dir);
+    let sub = parse(&request(&socket, &req_submit_toml(&spec.to_toml())).unwrap());
+    assert_eq!(sub.get("ok"), Some(&JsonValue::Bool(true)), "{sub:?}");
+    assert_eq!(str_of(&sub, "state"), "queued");
+    let job = str_of(&sub, "job").to_string();
+
+    assert_eq!(wait_terminal(&socket, &job), "completed");
+    let res = parse(&request(&socket, &req_job("result", &job)).unwrap());
+    assert_eq!(str_of(&res, "kind"), "result");
+    let daemon_manifest = str_of(&res, "manifest_deterministic").to_string();
+    assert_eq!(str_of(&res, "coreset_csv"), csv.to_str().unwrap());
+    let daemon_csv = std::fs::read(&csv).expect("daemon wrote the coreset CSV");
+    shutdown_and_join(&socket, handle);
+
+    // The daemon's written manifest replays bitwise, like any CLI run.
+    let replay = craig::pipeline::replay_manifest(&manifest, &[], None).unwrap();
+    assert!(replay.matched, "serve manifest failed replay: {:?}", replay.diffs);
+
+    // Local `craig run` on the same spec: identical CSV bytes and
+    // identical deterministic manifest JSON.
+    let rep = Runner::new().run(&spec).unwrap();
+    let local_csv = std::fs::read(&csv).unwrap();
+    assert_eq!(daemon_csv, local_csv, "serve CSV diverged from craig run");
+    assert_eq!(
+        daemon_manifest,
+        rep.manifest_json_deterministic(),
+        "serve deterministic manifest diverged from craig run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn repeat_submission_hits_the_warm_cache_without_changing_output() {
+    let dir = temp_dir("warm");
+    let socket = dir.join("d.sock");
+    let handle = start_daemon(&socket, 1, &dir);
+
+    // Two jobs on the same dataset (the cache key ignores the spec
+    // name and output paths): with one worker they run sequentially,
+    // so the second is guaranteed a warm checkout.
+    let mut jobs = Vec::new();
+    for tag in ["a", "b"] {
+        let spec = RunSpec::builder(&format!("warm-{tag}"))
+            .synthetic("covtype", 300)
+            .count(20)
+            .seed(3)
+            .coreset_csv(dir.join(format!("{tag}.csv")).to_str().unwrap())
+            .build()
+            .unwrap();
+        let sub = parse(&request(&socket, &req_submit_toml(&spec.to_toml())).unwrap());
+        assert_eq!(sub.get("ok"), Some(&JsonValue::Bool(true)), "{sub:?}");
+        jobs.push(str_of(&sub, "job").to_string());
+    }
+    for job in &jobs {
+        assert_eq!(wait_terminal(&socket, job), "completed");
+    }
+    let second = parse(&request(&socket, &req_job("result", &jobs[1])).unwrap());
+    assert_eq!(second.get("warm"), Some(&JsonValue::Bool(true)), "{second:?}");
+
+    let m = parse(&request(&socket, &req_simple("metrics")).unwrap());
+    let metrics = m.get("metrics").expect("metrics object");
+    let counter = |name: &str| {
+        metrics.get(name).and_then(JsonValue::as_u64).unwrap_or_else(|| panic!("no {name}"))
+    };
+    assert!(counter("serve.cache_warm_hits") >= 1, "no warm hit recorded");
+    assert_eq!(counter("serve.jobs_submitted"), 2);
+    assert_eq!(counter("serve.jobs_completed"), 2);
+    shutdown_and_join(&socket, handle);
+
+    // Warmth is invisible in the output: both jobs selected the same
+    // coreset, byte for byte.
+    let a = std::fs::read(dir.join("a.csv")).unwrap();
+    let b = std::fs::read(dir.join("b.csv")).unwrap();
+    assert_eq!(a, b, "warm workspace changed the selected coreset");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cancel_before_start_is_typed_and_leaves_no_artifact() {
+    let dir = temp_dir("cancel");
+    let socket = dir.join("d.sock");
+    // Queue-only daemon: no worker ever picks the job up, so the
+    // cancel races nothing.
+    let handle = start_daemon(&socket, 0, &dir);
+    let csv = dir.join("never.csv");
+    let spec = RunSpec::builder("doomed")
+        .synthetic("covtype", 200)
+        .count(10)
+        .coreset_csv(csv.to_str().unwrap())
+        .build()
+        .unwrap();
+    let sub = parse(&request(&socket, &req_submit_toml(&spec.to_toml())).unwrap());
+    let job = str_of(&sub, "job").to_string();
+
+    let c = parse(&request(&socket, &req_job("cancel", &job)).unwrap());
+    assert_eq!(str_of(&c, "kind"), "cancel");
+    assert_eq!(str_of(&c, "state"), "cancelled");
+    // Cancelling again is a typed error, not a panic or a success.
+    let again = parse(&request(&socket, &req_job("cancel", &job)).unwrap());
+    assert_eq!(again.get("ok"), Some(&JsonValue::Bool(false)));
+    assert_eq!(str_of(&again, "code"), "not-cancellable");
+    // The result reflects the cancellation: no outcome, no artifacts.
+    let res = parse(&request(&socket, &req_job("result", &job)).unwrap());
+    assert_eq!(str_of(&res, "state"), "cancelled");
+    assert_eq!(res.get("manifest"), Some(&JsonValue::Null));
+    assert_eq!(res.get("selected").and_then(JsonValue::as_u64), Some(0));
+    assert!(!csv.exists(), "a cancelled job must not write outputs");
+    // Unknown jobs are typed too.
+    let missing = parse(&request(&socket, &req_job("status", "job-99")).unwrap());
+    assert_eq!(str_of(&missing, "code"), "unknown-job");
+    shutdown_and_join(&socket, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
